@@ -1,0 +1,91 @@
+//! Fig. 4 reproduction: detection delay & accuracy vs. the maximum HV
+//! density after thinning (the sparse-HDC hyperparameter).
+//!
+//! ```bash
+//! cargo run --release --example density_sweep
+//! ```
+//!
+//! Thin wrapper over `repro fig4` semantics: sweeps the density grid for
+//! the optimized sparse design over several synthetic patients (lines in
+//! Fig. 4), finds each patient's optimum (the stars), and prints the
+//! dense-HDC reference point. See EXPERIMENTS.md §FIG4 for the
+//! paper-vs-measured discussion.
+
+use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
+use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
+use sparse_hdc_ieeg::pipeline;
+
+fn main() -> anyhow::Result<()> {
+    let densities = [0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.40, 0.50];
+    let synth = SynthConfig {
+        records_per_patient: 4,
+        pre_s: 30.0,
+        ictal_s: 20.0,
+        post_s: 10.0,
+        ..Default::default()
+    };
+    let patients: Vec<SynthPatient> = (1..=6).map(|p| SynthPatient::generate(&synth, p)).collect();
+    let policy = AlarmPolicy { consecutive: 1 };
+
+    println!("max-density   mean-delay-s   detection-acc   FA/h   (sparse-optimized)");
+    let mut best: Vec<(f64, f64)> = vec![(f64::INFINITY, 0.0); patients.len()];
+    for &d in &densities {
+        let mut delays = Vec::new();
+        let mut acc = 0.0;
+        let mut fa = 0.0;
+        for (i, p) in patients.iter().enumerate() {
+            let eval = pipeline::evaluate_patient(
+                Variant::Optimized,
+                &ClassifierConfig::optimized(),
+                p,
+                Some(d),
+                policy,
+            );
+            if eval.summary.mean_delay_s().is_finite() {
+                delays.push(eval.summary.mean_delay_s());
+            }
+            acc += eval.summary.detection_accuracy();
+            fa += eval.summary.false_alarms_per_hour();
+            let (bd, ba) = best[i];
+            let (ed, ea) = (eval.summary.mean_delay_s(), eval.summary.detection_accuracy());
+            if ea > ba || (ea == ba && ed < bd) {
+                best[i] = (ed, ea);
+            }
+        }
+        println!(
+            "{:>9.0}% {:>13.2} {:>14.1}% {:>6.2}",
+            d * 100.0,
+            delays.iter().sum::<f64>() / delays.len().max(1) as f64,
+            acc / patients.len() as f64 * 100.0,
+            fa / patients.len() as f64
+        );
+    }
+
+    let star_d: f64 = best.iter().filter(|(d, _)| d.is_finite()).map(|(d, _)| d).sum::<f64>()
+        / best.iter().filter(|(d, _)| d.is_finite()).count().max(1) as f64;
+    let star_a: f64 = best.iter().map(|(_, a)| a).sum::<f64>() / best.len() as f64;
+    println!("\nper-patient tuned (stars): delay {star_d:.2} s, accuracy {:.1}%", star_a * 100.0);
+
+    let mut delays = Vec::new();
+    let mut acc = 0.0;
+    for p in &patients {
+        let e = pipeline::evaluate_patient(
+            Variant::DenseBaseline,
+            &ClassifierConfig::default(),
+            p,
+            None,
+            policy,
+        );
+        if e.summary.mean_delay_s().is_finite() {
+            delays.push(e.summary.mean_delay_s());
+        }
+        acc += e.summary.detection_accuracy();
+    }
+    println!(
+        "dense HDC baseline:        delay {:.2} s, accuracy {:.1}%",
+        delays.iter().sum::<f64>() / delays.len().max(1) as f64,
+        acc / patients.len() as f64 * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Fig. 1(c) + Fig. 5 reproduction: gate-level area/energy breakdowns of
+//! all four design points under the patient-11 stimulus.
+//!
+//! ```bash
+//! cargo run --release --example hw_breakdown
+//! ```
+
+use sparse_hdc_ieeg::hdc::classifier::ClassifierConfig;
+use sparse_hdc_ieeg::hwmodel::breakdown::{format_breakdown, format_comparison};
+use sparse_hdc_ieeg::hwmodel::designs::analyze_all;
+
+fn main() -> anyhow::Result<()> {
+    let reports = analyze_all(&ClassifierConfig::default(), 4);
+
+    println!("=== Fig. 1(c): naive sparse HDC breakdown ===\n");
+    print!("{}", format_breakdown(&reports[1]));
+    let bind = ["binding", "one-hot-decoder"];
+    println!(
+        "\nbinding+decoder: {:.1}% energy / {:.1}% area (paper 51.3% / 38%); \
+         spatial bundling {:.1}% area (paper 44.9%)\n",
+        reports[1].group_energy_nj(&bind) / reports[1].energy_nj_per_pred() * 100.0,
+        reports[1].group_area_mm2(&bind) / reports[1].area_mm2() * 100.0,
+        reports[1].group_area_mm2(&["spatial-bundling"]) / reports[1].area_mm2() * 100.0,
+    );
+
+    println!("=== Fig. 5: four design points ===\n");
+    print!("{}", format_comparison(&reports));
+
+    let opt = &reports[3];
+    let base = &reports[1];
+    let dense = &reports[0];
+    println!(
+        "\nheadline ratios: vs sparse baseline {:.2}×E {:.2}×A (paper 1.72/2.20); \
+         vs dense {:.2}×E {:.2}×A (paper 7.50/3.24)",
+        base.energy_nj_per_pred() / opt.energy_nj_per_pred(),
+        base.area_mm2() / opt.area_mm2(),
+        dense.energy_nj_per_pred() / opt.energy_nj_per_pred(),
+        dense.area_mm2() / opt.area_mm2(),
+    );
+    println!(
+        "optimized point: {:.4} mm², {:.2} nJ/predict (paper 0.059 mm², 12.5 nJ)",
+        opt.area_mm2(),
+        opt.energy_nj_per_pred()
+    );
+    Ok(())
+}

@@ -1,0 +1,126 @@
+"""AOT lowering: JAX graphs → HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids that the xla_extension 0.5.1 inside the published ``xla`` crate
+rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts (written to ``--out-dir``, default ``../artifacts``):
+
+* ``sparse_window.hlo.txt`` — optimized sparse design, full window:
+  (codes i32[256,64], im_pos i32[64,64,8], elec_pos i32[64,8],
+   am i32[2,1024], thr i32[1]) → (scores i32[2], query i32[1024])
+* ``dense_window.hlo.txt``  — dense baseline:
+  (codes, im_bits i32[64,1024], elec_bits i32[64,1024], tie_s i32[1024],
+   tie_t i32[1024], am) → (scores, query)
+* ``manifest.txt``          — shapes, seeds and the cross-language IM digest.
+
+The item-memory tables are runtime *inputs*, not baked constants: the HLO
+text printer elides large constants (``constant({...})``), so the tables
+must cross the interchange boundary as parameters. The Rust runtime
+regenerates them (digest-checked) and binds them at engine load.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import hdc_params as P
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_sparse(t_frames: int, graph: str = "pallas") -> str:
+    """Lower the sparse window. `graph`:
+
+    * ``pallas`` (default) — the L1 Pallas kernel (interpret-mode) inlined
+      into the L2 graph: the prescribed three-layer artifact.
+    * ``ref`` — the pure-jnp reference graph (bit-identical; measured ~30%
+      faster through the CPU PJRT path of the old xla_extension — see
+      EXPERIMENTS.md §Perf L2-3).
+    """
+    codes, am, thr = model.example_inputs(t_frames)
+    im_pos, elec_pos = model.sparse_table_specs()
+
+    def fn(codes, im_pos, elec_pos, am, thr):
+        return model.sparse_window_core(
+            codes, im_pos, elec_pos, am, thr, use_pallas=(graph == "pallas")
+        )
+
+    return to_hlo_text(jax.jit(fn).lower(codes, im_pos, elec_pos, am, thr))
+
+
+def lower_dense(t_frames: int) -> str:
+    codes, am, _ = model.example_inputs(t_frames)
+    im_bits, elec_bits, tie_s, tie_t = model.dense_table_specs()
+
+    def fn(codes, im_bits, elec_bits, tie_s, tie_t, am):
+        return model.dense_window_core(codes, im_bits, elec_bits, tie_s, tie_t, am)
+
+    return to_hlo_text(
+        jax.jit(fn).lower(codes, im_bits, elec_bits, tie_s, tie_t, am)
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--frames", type=int, default=P.FRAMES_PER_PREDICTION)
+    ap.add_argument("--graph", choices=["pallas", "ref"], default="pallas",
+                    help="sparse-window graph flavour (see lower_sparse)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = [
+        ("sparse_window.hlo.txt", lambda: lower_sparse(args.frames, args.graph)),
+        ("dense_window.hlo.txt", lambda: lower_dense(args.frames)),
+    ]
+    for name, build in jobs:
+        path = os.path.join(args.out_dir, name)
+        text = build()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars to {path}", file=sys.stderr)
+
+    digest = P.im_digest()
+    manifest = "\n".join(
+        [
+            "# sparse-hdc-ieeg AOT manifest",
+            f"frames = {args.frames}",
+            f"channels = {P.CHANNELS}",
+            f"dim = {P.DIM}",
+            f"segments = {P.SEGMENTS}",
+            f"num_classes = {P.NUM_CLASSES}",
+            f"im_seed = {P.IM_SEED:#018x}",
+            f"im_digest = {digest:#018x}",
+            "sparse_window = sparse_window.hlo.txt",
+            "dense_window = dense_window.hlo.txt",
+            "",
+        ]
+    )
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(manifest)
+    print(f"im_digest = {digest:#018x}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

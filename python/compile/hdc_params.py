@@ -1,0 +1,126 @@
+"""Architecture parameters + deterministic item-memory generation.
+
+This file is the Python mirror of ``rust/src/params.rs`` and
+``rust/src/rng.rs`` / ``rust/src/hdc/im.rs``. Every layer of the stack —
+the Rust golden model, these JAX/Pallas kernels and therefore the AOT HLO
+artifacts — must contain *bit-identical* item memories; the generator is
+pinned to SplitMix64 chained hashing (see the Rust doc comments). Change
+one side only ever together with the other; ``im_digest()`` is compared
+against the Rust side by an integration test.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK64 = (1 << 64) - 1
+
+# --- architecture constants (rust/src/params.rs) ---
+DIM = 1024
+SEGMENTS = 8
+SEG_LEN = DIM // SEGMENTS  # 128
+SEG_POS_BITS = 7
+CHANNELS = 64
+LBP_BITS = 6
+LBP_CODES = 1 << LBP_BITS
+FRAMES_PER_PREDICTION = 256
+TEMPORAL_THRESHOLD_DEFAULT = 130
+TEMPORAL_COUNTER_MAX = 255
+NUM_CLASSES = 2
+IM_SEED = 0x5EED_1EE6_0000_0001
+
+# --- domain-separation tags (rust/src/hdc/im.rs) ---
+TAG_SPARSE_IM = 1
+TAG_SPARSE_ELECTRODE = 2
+TAG_DENSE_IM = 3
+TAG_DENSE_ELECTRODE = 4
+TAG_DENSE_TIEBREAK = 5
+
+
+def splitmix64_mix(z: int) -> int:
+    """The SplitMix64 finalizer (rust/src/rng.rs::splitmix64_mix)."""
+    z = (z + 0x9E37_79B9_7F4A_7C15) & MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+    return z ^ (z >> 31)
+
+
+def hash_chain(seed: int, words) -> int:
+    """Domain-separated chained hash (rust/src/rng.rs::hash_chain)."""
+    h = splitmix64_mix(seed)
+    for w in words:
+        h = splitmix64_mix(h ^ w)
+    return h
+
+
+def sparse_im_positions(seed: int = IM_SEED) -> np.ndarray:
+    """[CHANNELS, LBP_CODES, SEGMENTS] uint8 — data-HV 1-bit positions."""
+    out = np.empty((CHANNELS, LBP_CODES, SEGMENTS), dtype=np.uint8)
+    for c in range(CHANNELS):
+        for k in range(LBP_CODES):
+            for s in range(SEGMENTS):
+                out[c, k, s] = hash_chain(seed, (TAG_SPARSE_IM, c, k, s)) % SEG_LEN
+    return out
+
+
+def sparse_electrode_positions(seed: int = IM_SEED) -> np.ndarray:
+    """[CHANNELS, SEGMENTS] uint8 — electrode-HV 1-bit positions."""
+    out = np.empty((CHANNELS, SEGMENTS), dtype=np.uint8)
+    for c in range(CHANNELS):
+        for s in range(SEGMENTS):
+            out[c, s] = hash_chain(seed, (TAG_SPARSE_ELECTRODE, c, s)) % SEG_LEN
+    return out
+
+
+def _words_to_bits(words) -> np.ndarray:
+    """16 u64 words (LSB-first) → [DIM] int32 0/1 array."""
+    bits = np.empty(DIM, dtype=np.int32)
+    for wi, w in enumerate(words):
+        for b in range(64):
+            bits[wi * 64 + b] = (w >> b) & 1
+    return bits
+
+
+def dense_im_bits(seed: int = IM_SEED) -> np.ndarray:
+    """[LBP_CODES, DIM] int32 — dense code HVs."""
+    out = np.empty((LBP_CODES, DIM), dtype=np.int32)
+    for k in range(LBP_CODES):
+        words = [hash_chain(seed, (TAG_DENSE_IM, k, w)) for w in range(DIM // 64)]
+        out[k] = _words_to_bits(words)
+    return out
+
+
+def dense_electrode_bits(seed: int = IM_SEED) -> np.ndarray:
+    """[CHANNELS, DIM] int32 — dense electrode HVs."""
+    out = np.empty((CHANNELS, DIM), dtype=np.int32)
+    for c in range(CHANNELS):
+        words = [hash_chain(seed, (TAG_DENSE_ELECTRODE, c, w)) for w in range(DIM // 64)]
+        out[c] = _words_to_bits(words)
+    return out
+
+
+def dense_tiebreak_bits(seed: int = IM_SEED, stage: int = 0) -> np.ndarray:
+    """[DIM] int32 — tie-break HV for bundling stage (0 spatial, 1 temporal)."""
+    words = [hash_chain(seed, (TAG_DENSE_TIEBREAK, stage, w)) for w in range(DIM // 64)]
+    return _words_to_bits(words)
+
+
+def im_digest(seed: int = IM_SEED) -> int:
+    """Order-sensitive digest over the sparse IM + electrode tables.
+
+    The Rust integration test (rust/tests/cross_language.rs) recomputes
+    this digest from its own tables; equality proves the two languages
+    generate identical item memories.
+    """
+    h = splitmix64_mix(seed)
+    im = sparse_im_positions(seed)
+    el = sparse_electrode_positions(seed)
+    for v in im.reshape(-1):
+        h = splitmix64_mix(h ^ int(v))
+    for v in el.reshape(-1):
+        h = splitmix64_mix(h ^ int(v))
+    return h
+
+
+if __name__ == "__main__":
+    print(f"im_digest(IM_SEED) = {im_digest():#018x}")

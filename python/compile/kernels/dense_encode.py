@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernel: the dense-HDC baseline encoder (Burrello'18).
+
+Same window-grid structure as ``sparse_encode.py`` but with the dense
+operations: XOR binding against the electrode HVs, bit-wise majority
+across channels (+ tie-break HV for the even fan-in), and a plain
+(non-saturating) temporal count. Used by the dense design point of the
+Fig. 4 / Fig. 5 reproductions and as the baseline for the ablation
+benches.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+FRAME_TILE = 16
+
+
+def _pick_tile(t_frames: int) -> int:
+    for tile in range(min(FRAME_TILE, t_frames), 0, -1):
+        if t_frames % tile == 0:
+            return tile
+    return 1
+
+
+def _dense_kernel(codes_ref, im_ref, elec_ref, tie_ref, counts_ref):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    codes = codes_ref[...]  # [TILE, CHANNELS]
+    im = im_ref[...]  # [LBP_CODES, DIM]
+    elec = elec_ref[...]  # [CHANNELS, DIM]
+    tie = tie_ref[...]  # [DIM]
+
+    tile, channels = codes.shape
+    # One-hot contraction instead of a gather (old-XLA HLO-text path, see
+    # ref.py): data = onehot(codes) @ im — an MXU matmul on real TPUs.
+    lbp_codes = im.shape[0]
+    onehot_codes = (codes[:, :, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (tile, channels, lbp_codes), 2
+    )).astype(jnp.int32)
+    data = jnp.einsum("tck,kd->tcd", onehot_codes, im)
+    bound = jnp.bitwise_xor(data, elec[None, :, :])
+    counts = bound.sum(axis=1) + tie[None, :]  # implicit (n+1)-th input
+    half = (channels + 1) // 2
+    spatial = (counts > half).astype(jnp.int32)  # [TILE, DIM]
+    counts_ref[...] = counts_ref[...] + spatial.sum(axis=0)
+
+
+def dense_encode_window(codes, im_bits, elec_bits, tie_bits, *, interpret: bool = True):
+    """codes: [T, CHANNELS] int32 → [DIM] int32 temporal counts."""
+    t_frames, channels = codes.shape
+    dim = im_bits.shape[1]
+    tile = _pick_tile(t_frames)
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=(t_frames // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, channels), lambda t: (t, 0)),
+            pl.BlockSpec(im_bits.shape, lambda t: (0, 0)),
+            pl.BlockSpec(elec_bits.shape, lambda t: (0, 0)),
+            pl.BlockSpec((dim,), lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((dim,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((dim,), jnp.int32),
+        interpret=interpret,
+    )(
+        codes.astype(jnp.int32),
+        im_bits.astype(jnp.int32),
+        elec_bits.astype(jnp.int32),
+        tie_bits.astype(jnp.int32),
+    )
+
+
+def dense_thin_and_search(counts, am, tie_temporal, n_frames: int, *, interpret: bool = True):
+    """Temporal majority + Hamming search, scores as DIM - hamming."""
+
+    def _kernel(counts_ref, am_ref, tie_ref, scores_ref, query_ref):
+        counts = counts_ref[...]
+        am = am_ref[...]
+        tie = tie_ref[...]
+        half = (n_frames + 1) // 2
+        query = ((counts + tie) > half).astype(jnp.int32)
+        query_ref[...] = query
+        dim = counts.shape[0]
+        hamming = jnp.abs(query[None, :] - am).sum(axis=1)
+        scores_ref[...] = (dim - hamming).astype(jnp.int32)
+
+    dim = counts.shape[0]
+    classes = am.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec(am.shape, lambda i: (0, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((classes,), lambda i: (0,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((classes,), jnp.int32),
+            jax.ShapeDtypeStruct((dim,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(counts.astype(jnp.int32), am.astype(jnp.int32), tie_temporal.astype(jnp.int32))

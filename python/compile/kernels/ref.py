@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness references: the Pallas kernels
+(sparse_encode.py, dense_encode.py, similarity.py) must agree with these
+functions *exactly* (integer semantics, no tolerance), and these in turn
+mirror the Rust golden model (rust/src/hdc/), which the cross-language
+digest test ties to the same item memory.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .. import hdc_params as P
+
+
+# ---------------------------------------------------------------------
+# Sparse pipeline (position space, CompIM semantics)
+# ---------------------------------------------------------------------
+
+def bind_positions(elec_pos, data_pos):
+    """Segmented-shift binding: (e + d) mod SEG_LEN.
+
+    elec_pos: [..., SEGMENTS] int32, data_pos: [..., SEGMENTS] int32.
+    """
+    return (elec_pos + data_pos) % P.SEG_LEN
+
+
+def positions_to_hv(pos):
+    """[..., SEGMENTS] positions → [..., DIM] one-hot-per-segment 0/1.
+
+    Segment s occupies elements [s*SEG_LEN, (s+1)*SEG_LEN); the one-hot
+    compare is segment-local ([..., SEG, SEG_LEN] instead of [..., SEG,
+    DIM] — 8× less work) and the row-major reshape lands each segment in
+    its slice.
+    """
+    iota = jnp.arange(P.SEG_LEN, dtype=jnp.int32)
+    onehot = (pos.astype(jnp.int32)[..., :, None] == iota).astype(jnp.int32)
+    return onehot.reshape(*pos.shape[:-1], P.DIM)
+
+
+def sparse_spatial_frame(codes, im_pos, elec_pos, threshold=1):
+    """One frame of the sparse spatial encoder.
+
+    codes: [CHANNELS] int32 LBP codes;
+    im_pos: [CHANNELS, LBP_CODES, SEGMENTS]; elec_pos: [CHANNELS, SEGMENTS].
+    Returns [DIM] int32 0/1 — the bundled + thinned spatial HV.
+    threshold=1 is the OR tree (optimized design §III-B).
+    """
+    # Table lookup as a one-hot contraction rather than a gather: this is
+    # literally what the IM ROM does in hardware, and it sidesteps a
+    # gather-semantics mismatch between jax≥0.5's StableHLO and the
+    # xla_extension 0.5.1 compiler behind the Rust runtime (jax's newer
+    # gather lowering miscompiles through the HLO-text round-trip; one-hot
+    # contractions round-trip exactly).
+    onehot_codes = (codes[:, None] == jnp.arange(P.LBP_CODES, dtype=jnp.int32)).astype(
+        jnp.int32
+    )  # [CHANNELS, LBP_CODES]
+    data = (onehot_codes[:, :, None] * im_pos).sum(axis=1)  # [CHANNELS, SEGMENTS]
+    bound = bind_positions(elec_pos.astype(jnp.int32), data)
+    hvs = positions_to_hv(bound)  # [CHANNELS, DIM]
+    counts = hvs.sum(axis=0)
+    return (counts >= threshold).astype(jnp.int32)
+
+
+def sparse_window_counts(codes, im_pos, elec_pos, threshold=1):
+    """Temporal counter plane over a full prediction window.
+
+    codes: [T, CHANNELS]; returns [DIM] int32 counts (saturating at 255,
+    like the 8-bit hardware counters).
+    """
+    def frame_fn(carry, frame_codes):
+        spatial = sparse_spatial_frame(frame_codes, im_pos, elec_pos, threshold)
+        carry = jnp.minimum(carry + spatial, P.TEMPORAL_COUNTER_MAX)
+        return carry, None
+
+    import jax
+    init = jnp.zeros(P.DIM, dtype=jnp.int32)
+    counts, _ = jax.lax.scan(frame_fn, init, codes)
+    return counts
+
+
+def thin(counts, threshold):
+    """Temporal thinning: counts >= threshold → binary query HV."""
+    return (counts >= threshold).astype(jnp.int32)
+
+
+def similarity_scores(query, am):
+    """AND-popcount similarity (paper §II-D).
+
+    query: [DIM] 0/1; am: [NUM_CLASSES, DIM] 0/1 → [NUM_CLASSES] int32.
+    """
+    return (query[None, :] * am).sum(axis=1).astype(jnp.int32)
+
+
+def sparse_window(codes, am, threshold, im_pos, elec_pos, spatial_threshold=1):
+    """Full sparse pipeline: codes → (scores[2], query[DIM])."""
+    counts = sparse_window_counts(codes, im_pos, elec_pos, spatial_threshold)
+    query = thin(counts, threshold)
+    return similarity_scores(query, am), query
+
+
+# ---------------------------------------------------------------------
+# Dense pipeline (Burrello'18 baseline)
+# ---------------------------------------------------------------------
+
+def dense_spatial_frame(codes, im_bits, elec_bits, tie_bits):
+    """One frame of the dense spatial encoder: XOR bind + majority(+tie).
+
+    codes: [CHANNELS]; im_bits: [LBP_CODES, DIM]; elec_bits: [CHANNELS, DIM];
+    tie_bits: [DIM]. Returns [DIM] 0/1.
+    """
+    # One-hot contraction instead of a gather (see sparse_spatial_frame).
+    onehot_codes = (codes[:, None] == jnp.arange(im_bits.shape[0], dtype=jnp.int32)).astype(
+        jnp.int32
+    )
+    data = onehot_codes @ im_bits  # [CHANNELS, DIM]
+    bound = jnp.bitwise_xor(data, elec_bits)
+    counts = bound.sum(axis=0) + tie_bits  # implicit 65th input
+    half = (P.CHANNELS + 1) // 2
+    return (counts > half).astype(jnp.int32)
+
+
+def dense_window(codes, am, im_bits, elec_bits, tie_spatial, tie_temporal):
+    """Full dense pipeline: codes[T, CHANNELS] → (scores[2], query[DIM]).
+
+    Scores are `DIM - hamming` so that "bigger = more similar" matches the
+    sparse contract (rust/src/hdc/classifier.rs::Classifier::search).
+    """
+    import jax
+
+    def frame_fn(carry, frame_codes):
+        spatial = dense_spatial_frame(frame_codes, im_bits, elec_bits, tie_spatial)
+        return carry + spatial, None
+
+    init = jnp.zeros(P.DIM, dtype=jnp.int32)
+    counts, _ = jax.lax.scan(frame_fn, init, codes)
+    n = codes.shape[0]
+    half = (n + 1) // 2
+    query = ((counts + tie_temporal) > half).astype(jnp.int32)
+    hamming = jnp.abs(query[None, :] - am).sum(axis=1)
+    scores = (P.DIM - hamming).astype(jnp.int32)
+    return scores, query

@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: temporal thinning + AND-popcount similarity.
+
+Implements the back half of the accelerator (paper §II-C/D): the counter
+plane is thinned with the (patient-tuned) temporal threshold and the
+resulting query HV is compared against the two class HVs of the
+associative memory. The threshold arrives as a runtime input — it is the
+paper's max-density hyperparameter knob — so one compiled artifact serves
+every operating point.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sim_kernel(counts_ref, am_ref, thr_ref, scores_ref, query_ref):
+    counts = counts_ref[...]  # [DIM]
+    am = am_ref[...]  # [NUM_CLASSES, DIM]
+    thr = thr_ref[0]
+    query = (counts >= thr).astype(jnp.int32)
+    query_ref[...] = query
+    # AND + popcount per class (only 1-bits carry information, §II-D).
+    scores_ref[...] = (query[None, :] * am).sum(axis=1).astype(jnp.int32)
+
+
+def thin_and_search(counts, am, threshold, *, interpret: bool = True):
+    """counts: [DIM] int32, am: [C, DIM] int32, threshold: [1] int32
+    → (scores [C] int32, query [DIM] int32)."""
+    dim = counts.shape[0]
+    classes = am.shape[0]
+    return pl.pallas_call(
+        _sim_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec(am.shape, lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((classes,), lambda i: (0,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((classes,), jnp.int32),
+            jax.ShapeDtypeStruct((dim,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(counts.astype(jnp.int32), am.astype(jnp.int32), threshold.astype(jnp.int32))

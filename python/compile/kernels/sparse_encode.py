@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernel: the sparse HDC spatial + temporal encoder.
+
+This is the compute hot-spot of the paper's accelerator, expressed for a
+TPU-shaped machine (DESIGN.md §3 Hardware-Adaptation):
+
+* HVs stay in **position space** (the CompIM insight, §III-A) until the
+  bundling boundary — binding is a vectorised mod-128 add on an
+  ``[TILE, CHANNELS, SEGMENTS]`` int32 block, not a 1024-bit shift
+  network;
+* the one-hot expansion compares positions only **within their segment**
+  (``[..., SEGMENTS, SEG_LEN]`` iota-compare, 8× less work than a naive
+  ``[..., DIM]`` compare) and reshapes to the 1024-element layout —
+  segment-locality is exactly what the segmented representation buys;
+* the grid walks the prediction window in **frame tiles** (16 frames per
+  program): per-element temporal increments are non-negative and the
+  8-bit saturation is an absorbing clamp, so
+  ``min(c + Σ_tile spatial, 255)`` is bit-exact equal to 256 sequential
+  saturating adds — one clamp per tile instead of per cycle (§Perf L1-2);
+* the temporal counter plane lives in the output block across the whole
+  window (the hardware's "large 8192-bit register" in VMEM).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .. import hdc_params as P
+
+#: Frames processed per grid step (divisor of FRAMES_PER_PREDICTION).
+FRAME_TILE = 16
+
+
+def _encode_kernel(codes_ref, impos_ref, elec_ref, counts_ref, *, spatial_threshold: int):
+    """One grid step = one tile of frames."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    codes = codes_ref[...]  # [TILE, CHANNELS] int32
+    impos = impos_ref[...]  # [CHANNELS, LBP_CODES, SEGMENTS]
+    elec = elec_ref[...]  # [CHANNELS, SEGMENTS]
+
+    tile, channels = codes.shape
+    lbp_codes = impos.shape[1]
+    segments = impos.shape[2]
+    dim = counts_ref.shape[0]
+    seg_len = dim // segments
+
+    # CompIM lookup as a one-hot contraction (the ROM read itself; gathers
+    # miscompile through the old-XLA HLO-text path — see ref.py).
+    onehot_codes = (
+        codes[:, :, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (tile, channels, lbp_codes), 2)
+    ).astype(jnp.int32)
+    # [TILE, CH, SEG]
+    data = jnp.einsum("tck,cks->tcs", onehot_codes, impos.astype(jnp.int32))
+
+    # Binding: eight 7-bit modular adds per channel (§III-A).
+    bound = (elec[None, :, :] + data) % seg_len  # [TILE, CH, SEG]
+
+    # Per-segment one-hot expansion + channel bundling (VPU-friendly,
+    # segment-local: positions only ever compare against their own
+    # segment's 128 slots).
+    onehot_pos = (
+        bound[:, :, :, None]
+        == jax.lax.broadcasted_iota(jnp.int32, (tile, channels, segments, seg_len), 3)
+    )
+    element_counts = onehot_pos.astype(jnp.int32).sum(axis=1)  # [TILE, SEG, SEG_LEN]
+
+    # Spatial thinning (threshold 1 == OR tree, the optimized design).
+    spatial = (element_counts >= spatial_threshold).astype(jnp.int32)
+    spatial = spatial.reshape(tile, dim)
+
+    # Temporal accumulation; one absorbing clamp per tile is exact.
+    counts_ref[...] = jnp.minimum(
+        counts_ref[...] + spatial.sum(axis=0), P.TEMPORAL_COUNTER_MAX
+    )
+
+
+def _pick_tile(t_frames: int) -> int:
+    """Largest divisor of t_frames not exceeding FRAME_TILE."""
+    for tile in range(min(FRAME_TILE, t_frames), 0, -1):
+        if t_frames % tile == 0:
+            return tile
+    return 1
+
+
+def sparse_encode_window(codes, im_pos, elec_pos, *, spatial_threshold: int = 1,
+                         interpret: bool = True):
+    """Temporal counter plane for one prediction window.
+
+    codes: [T, CHANNELS] int32; im_pos: [CHANNELS, LBP_CODES, SEGMENTS]
+    int32; elec_pos: [CHANNELS, SEGMENTS] int32 → [DIM] int32 counts.
+    """
+    t_frames, channels = codes.shape
+    assert im_pos.shape[0] == channels and elec_pos.shape[0] == channels
+    segments = im_pos.shape[2]
+    dim = segments * P.SEG_LEN
+    tile = _pick_tile(t_frames)
+
+    kernel = functools.partial(_encode_kernel, spatial_threshold=spatial_threshold)
+    return pl.pallas_call(
+        kernel,
+        grid=(t_frames // tile,),
+        in_specs=[
+            # One tile of frames per grid step.
+            pl.BlockSpec((tile, channels), lambda t: (t, 0)),
+            # The CompIM tables stay resident in VMEM across the window.
+            pl.BlockSpec(im_pos.shape, lambda t: (0, 0, 0)),
+            pl.BlockSpec(elec_pos.shape, lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((dim,), lambda t: (0,)),
+        out_shape=jax.ShapeDtypeStruct((dim,), jnp.int32),
+        interpret=interpret,
+    )(codes.astype(jnp.int32), im_pos.astype(jnp.int32), elec_pos.astype(jnp.int32))

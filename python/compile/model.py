@@ -1,0 +1,130 @@
+"""Layer-2 JAX model: the full classifier compute graph per design point.
+
+Each ``*_window_fn`` consumes one prediction window of LBP codes plus the
+runtime state (trained AM, temporal threshold) and emits the class scores
+and the query HV. The item-memory tables are baked in as constants —
+exactly like the ROMs of the accelerator — so the HLO artifact is
+self-contained and the Rust hot path only ships codes + AM + threshold.
+
+Lowered once by ``aot.py`` to HLO text; loaded by ``rust/src/runtime``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import hdc_params as P
+from .kernels import dense_encode, ref, similarity, sparse_encode
+
+
+@functools.lru_cache(maxsize=None)
+def _sparse_tables_np(seed: int):
+    # Cache as numpy (never cache tracers/jnp values created under a jit).
+    import numpy as np
+    return (
+        np.asarray(P.sparse_im_positions(seed), dtype=np.int32),
+        np.asarray(P.sparse_electrode_positions(seed), dtype=np.int32),
+    )
+
+
+def sparse_tables(seed: int = P.IM_SEED):
+    """CompIM contents as jnp constants."""
+    im_pos, elec_pos = _sparse_tables_np(seed)
+    return jnp.asarray(im_pos), jnp.asarray(elec_pos)
+
+
+@functools.lru_cache(maxsize=None)
+def _dense_tables_np(seed: int):
+    import numpy as np
+    return (
+        np.asarray(P.dense_im_bits(seed), dtype=np.int32),
+        np.asarray(P.dense_electrode_bits(seed), dtype=np.int32),
+        np.asarray(P.dense_tiebreak_bits(seed, 0), dtype=np.int32),
+        np.asarray(P.dense_tiebreak_bits(seed, 1), dtype=np.int32),
+    )
+
+
+def dense_tables(seed: int = P.IM_SEED):
+    im_bits, elec_bits, tie_s, tie_t = _dense_tables_np(seed)
+    return jnp.asarray(im_bits), jnp.asarray(elec_bits), jnp.asarray(tie_s), jnp.asarray(tie_t)
+
+
+def sparse_window_core(codes, im_pos, elec_pos, am, threshold, *,
+                       spatial_threshold: int = 1, use_pallas: bool = True):
+    """Optimized sparse design (CompIM + OR bundling), tables as inputs.
+
+    The item-memory tables arrive as *runtime inputs*, not baked
+    constants: the HLO text printer elides large constants
+    (``constant({...})``), so anything bigger than a scalar must cross the
+    AOT boundary as a parameter. The Rust runtime regenerates the tables
+    bit-identically (digest-checked) and feeds them at engine load.
+
+    codes: [T, CHANNELS] int32; im_pos: [CHANNELS, LBP_CODES, SEGMENTS];
+    elec_pos: [CHANNELS, SEGMENTS]; am: [NUM_CLASSES, DIM] int32;
+    threshold: [1] int32 → (scores [NUM_CLASSES] int32, query [DIM] int32).
+    """
+    if use_pallas:
+        counts = sparse_encode.sparse_encode_window(
+            codes, im_pos, elec_pos, spatial_threshold=spatial_threshold
+        )
+        scores, query = similarity.thin_and_search(counts, am, threshold)
+    else:
+        counts = ref.sparse_window_counts(codes, im_pos, elec_pos, spatial_threshold)
+        query = ref.thin(counts, threshold[0])
+        scores = ref.similarity_scores(query, am)
+    return scores, query
+
+
+def sparse_window_fn(codes, am, threshold, *, seed: int = P.IM_SEED,
+                     spatial_threshold: int = 1, use_pallas: bool = True):
+    """Convenience wrapper with the default tables (tests / exploration)."""
+    im_pos, elec_pos = sparse_tables(seed)
+    return sparse_window_core(codes, im_pos, elec_pos, am, threshold,
+                              spatial_threshold=spatial_threshold,
+                              use_pallas=use_pallas)
+
+
+def dense_window_core(codes, im_bits, elec_bits, tie_s, tie_t, am, *,
+                      use_pallas: bool = True):
+    """Dense baseline design (Burrello'18), tables as inputs."""
+    if use_pallas:
+        counts = dense_encode.dense_encode_window(codes, im_bits, elec_bits, tie_s)
+        scores, query = dense_encode.dense_thin_and_search(
+            counts, am, tie_t, n_frames=codes.shape[0]
+        )
+        return scores, query
+    return ref.dense_window(codes, am, im_bits, elec_bits, tie_s, tie_t)
+
+
+def dense_window_fn(codes, am, *, seed: int = P.IM_SEED, use_pallas: bool = True):
+    """Convenience wrapper with the default tables (tests / exploration)."""
+    im_bits, elec_bits, tie_s, tie_t = dense_tables(seed)
+    return dense_window_core(codes, im_bits, elec_bits, tie_s, tie_t, am,
+                             use_pallas=use_pallas)
+
+
+def example_inputs(t_frames: int = P.FRAMES_PER_PREDICTION):
+    """Shape specs used by the AOT lowering."""
+    codes = jax.ShapeDtypeStruct((t_frames, P.CHANNELS), jnp.int32)
+    am = jax.ShapeDtypeStruct((P.NUM_CLASSES, P.DIM), jnp.int32)
+    threshold = jax.ShapeDtypeStruct((1,), jnp.int32)
+    return codes, am, threshold
+
+
+def sparse_table_specs():
+    return (
+        jax.ShapeDtypeStruct((P.CHANNELS, P.LBP_CODES, P.SEGMENTS), jnp.int32),
+        jax.ShapeDtypeStruct((P.CHANNELS, P.SEGMENTS), jnp.int32),
+    )
+
+
+def dense_table_specs():
+    return (
+        jax.ShapeDtypeStruct((P.LBP_CODES, P.DIM), jnp.int32),
+        jax.ShapeDtypeStruct((P.CHANNELS, P.DIM), jnp.int32),
+        jax.ShapeDtypeStruct((P.DIM,), jnp.int32),
+        jax.ShapeDtypeStruct((P.DIM,), jnp.int32),
+    )

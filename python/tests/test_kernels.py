@@ -1,0 +1,136 @@
+"""Pallas kernels vs pure-jnp oracles — exact integer equality.
+
+Hypothesis drives the input space (window lengths, code patterns,
+thresholds, AM densities); the kernels run under ``interpret=True`` so
+these tests are the numerics gate for the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import hdc_params as P
+from compile import model
+from compile.kernels import dense_encode, ref, similarity, sparse_encode
+
+IM_POS = jnp.asarray(P.sparse_im_positions(), dtype=jnp.int32)
+ELEC_POS = jnp.asarray(P.sparse_electrode_positions(), dtype=jnp.int32)
+DENSE_IM = jnp.asarray(P.dense_im_bits(), dtype=jnp.int32)
+DENSE_ELEC = jnp.asarray(P.dense_electrode_bits(), dtype=jnp.int32)
+TIE_S = jnp.asarray(P.dense_tiebreak_bits(stage=0), dtype=jnp.int32)
+TIE_T = jnp.asarray(P.dense_tiebreak_bits(stage=1), dtype=jnp.int32)
+
+HYP = dict(deadline=None, max_examples=12)
+
+
+def codes_strategy(max_t=10):
+    return st.integers(1, max_t).flatmap(
+        lambda t: st.lists(
+            st.lists(st.integers(0, P.LBP_CODES - 1), min_size=P.CHANNELS, max_size=P.CHANNELS),
+            min_size=t,
+            max_size=t,
+        )
+    )
+
+
+@settings(**HYP)
+@given(codes=codes_strategy(), spatial_threshold=st.integers(1, 4))
+def test_sparse_encode_matches_ref(codes, spatial_threshold):
+    codes = jnp.asarray(np.array(codes, dtype=np.int32))
+    got = sparse_encode.sparse_encode_window(
+        codes, IM_POS, ELEC_POS, spatial_threshold=spatial_threshold
+    )
+    want = ref.sparse_window_counts(codes, IM_POS, ELEC_POS, spatial_threshold)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**HYP)
+@given(
+    counts=st.lists(st.integers(0, 255), min_size=P.DIM, max_size=P.DIM),
+    threshold=st.integers(1, 256),
+    am_seed=st.integers(0, 2**31 - 1),
+)
+def test_similarity_matches_ref(counts, threshold, am_seed):
+    rng = np.random.default_rng(am_seed)
+    am = jnp.asarray(rng.integers(0, 2, size=(P.NUM_CLASSES, P.DIM)), dtype=jnp.int32)
+    counts = jnp.asarray(np.array(counts, dtype=np.int32))
+    thr = jnp.asarray(np.array([threshold], dtype=np.int32))
+    scores, query = similarity.thin_and_search(counts, am, thr)
+    want_query = ref.thin(counts, threshold)
+    want_scores = ref.similarity_scores(want_query, am)
+    np.testing.assert_array_equal(np.asarray(query), np.asarray(want_query))
+    np.testing.assert_array_equal(np.asarray(scores), np.asarray(want_scores))
+
+
+@settings(**HYP)
+@given(codes=codes_strategy(max_t=6))
+def test_dense_encode_matches_ref(codes):
+    codes = jnp.asarray(np.array(codes, dtype=np.int32))
+    got = dense_encode.dense_encode_window(codes, DENSE_IM, DENSE_ELEC, TIE_S)
+    # Reference: scan of dense_spatial_frame sums.
+    import jax
+
+    def frame_fn(carry, fc):
+        return carry + ref.dense_spatial_frame(fc, DENSE_IM, DENSE_ELEC, TIE_S), None
+
+    want, _ = jax.lax.scan(frame_fn, jnp.zeros(P.DIM, dtype=jnp.int32), codes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_temporal_counters_saturate_at_255():
+    # Constant codes → the same spatial HV every frame → counters must
+    # clamp at 255 even over 300 frames (8-bit hardware registers).
+    codes = jnp.zeros((300, P.CHANNELS), dtype=jnp.int32)
+    counts = np.asarray(
+        sparse_encode.sparse_encode_window(codes, IM_POS, ELEC_POS, spatial_threshold=1)
+    )
+    assert counts.max() == 255
+    on = counts[counts > 0]
+    assert (on == 255).all(), "every active element hits the clamp"
+
+
+def test_sparse_full_window_pipeline():
+    rng = np.random.default_rng(7)
+    codes = jnp.asarray(
+        rng.integers(0, P.LBP_CODES, size=(P.FRAMES_PER_PREDICTION, P.CHANNELS)),
+        dtype=jnp.int32,
+    )
+    am = jnp.asarray(rng.integers(0, 2, size=(P.NUM_CLASSES, P.DIM)), dtype=jnp.int32)
+    thr = jnp.asarray(np.array([P.TEMPORAL_THRESHOLD_DEFAULT], dtype=np.int32))
+    s_pallas, q_pallas = model.sparse_window_fn(codes, am, thr)
+    s_ref, q_ref = model.sparse_window_fn(codes, am, thr, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(s_pallas), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(q_pallas), np.asarray(q_ref))
+    # Query density must respect the 50% cap of the OR bundling.
+    assert 0.0 <= np.asarray(q_pallas).mean() <= 0.5
+
+
+def test_dense_full_window_pipeline():
+    rng = np.random.default_rng(8)
+    codes = jnp.asarray(
+        rng.integers(0, P.LBP_CODES, size=(64, P.CHANNELS)), dtype=jnp.int32
+    )
+    am = jnp.asarray(rng.integers(0, 2, size=(P.NUM_CLASSES, P.DIM)), dtype=jnp.int32)
+    s_pallas, q_pallas = model.dense_window_fn(codes, am)
+    s_ref, q_ref = model.dense_window_fn(codes, am, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(s_pallas), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(q_pallas), np.asarray(q_ref))
+
+
+def test_bound_positions_preserve_sparsity():
+    # Every bound HV has exactly SEGMENTS ones (one per segment).
+    codes = jnp.asarray(np.arange(P.CHANNELS, dtype=np.int32) % P.LBP_CODES)
+    spatial = ref.sparse_spatial_frame(codes, IM_POS, ELEC_POS, threshold=1)
+    total = int(np.asarray(spatial).sum())
+    assert total <= P.CHANNELS * P.SEGMENTS
+    assert total >= P.SEGMENTS  # at least one channel's worth survives ORing
+
+
+@pytest.mark.parametrize("threshold,expect_subset", [(2, True), (3, True)])
+def test_thinning_is_subset_of_or(threshold, expect_subset):
+    rng = np.random.default_rng(9)
+    codes = jnp.asarray(rng.integers(0, P.LBP_CODES, size=(P.CHANNELS,)), dtype=jnp.int32)
+    or_out = np.asarray(ref.sparse_spatial_frame(codes, IM_POS, ELEC_POS, 1))
+    thin_out = np.asarray(ref.sparse_spatial_frame(codes, IM_POS, ELEC_POS, threshold))
+    assert ((thin_out <= or_out).all()) == expect_subset

@@ -1,0 +1,73 @@
+"""Cross-language contract tests for the parameter/RNG mirror."""
+
+import numpy as np
+import pytest
+
+from compile import hdc_params as P
+
+
+def test_splitmix_reference_vectors():
+    # Same pinned vectors as rust/src/rng.rs::tests::mix_known_value.
+    assert P.splitmix64_mix(0) == 0xE220_A839_7B1D_CDAF
+    assert P.splitmix64_mix(1) == 0x910A_2DEC_8902_5CC1
+
+
+def test_hash_chain_order_sensitive():
+    assert P.hash_chain(42, (2, 0)) != P.hash_chain(42, (0, 2))
+
+
+def test_architecture_constants():
+    assert P.DIM == 1024
+    assert P.SEGMENTS == 8
+    assert P.SEG_LEN == 128
+    assert P.CHANNELS == 64
+    assert P.LBP_CODES == 64
+    assert P.FRAMES_PER_PREDICTION == 256
+
+
+def test_sparse_tables_shape_and_range():
+    im = P.sparse_im_positions()
+    el = P.sparse_electrode_positions()
+    assert im.shape == (P.CHANNELS, P.LBP_CODES, P.SEGMENTS)
+    assert el.shape == (P.CHANNELS, P.SEGMENTS)
+    assert im.max() < P.SEG_LEN
+    assert el.max() < P.SEG_LEN
+
+
+def test_tables_deterministic():
+    a = P.sparse_im_positions(123)
+    b = P.sparse_im_positions(123)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, P.sparse_im_positions(124))
+
+
+def test_positions_roughly_uniform():
+    im = P.sparse_im_positions()
+    hist = np.bincount(im.reshape(-1), minlength=P.SEG_LEN)
+    expected = im.size / P.SEG_LEN
+    assert hist.min() > expected * 0.5
+    assert hist.max() < expected * 1.5
+
+
+def test_dense_tables_density():
+    im = P.dense_im_bits()
+    assert im.shape == (P.LBP_CODES, P.DIM)
+    dens = im.mean(axis=1)
+    assert (dens > 0.38).all() and (dens < 0.62).all()
+    el = P.dense_electrode_bits()
+    assert el.shape == (P.CHANNELS, P.DIM)
+    tie0 = P.dense_tiebreak_bits(stage=0)
+    tie1 = P.dense_tiebreak_bits(stage=1)
+    assert not np.array_equal(tie0, tie1)
+
+
+def test_im_digest_pinned():
+    # The frozen cross-language digest. rust/tests/cross_language.rs and
+    # artifacts/manifest.txt carry the same value; a mismatch means the
+    # generator diverged between languages.
+    assert P.im_digest() == 0xF7CD_F969_F2B3_3A13
+
+
+@pytest.mark.parametrize("seed", [1, 2, 0xDEADBEEF])
+def test_digest_varies_with_seed(seed):
+    assert P.im_digest(seed) != P.im_digest(seed + 1)

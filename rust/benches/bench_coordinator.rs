@@ -1,0 +1,98 @@
+//! Coordinator benchmarks: end-to-end streaming throughput (native
+//! backend), router dispatch, session assembly, detector.
+//!
+//! `cargo bench --bench bench_coordinator`
+
+use sparse_hdc_ieeg::benchkit::{black_box, Bench};
+use sparse_hdc_ieeg::config::SystemConfig;
+use sparse_hdc_ieeg::coordinator::detector::Detector;
+use sparse_hdc_ieeg::coordinator::router::{Router, SampleChunk};
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec};
+use sparse_hdc_ieeg::coordinator::session::Session;
+use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::params::CHANNELS;
+use sparse_hdc_ieeg::pipeline;
+use sparse_hdc_ieeg::rng::Xoshiro256;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256::new(5);
+
+    // --- session sample path (LBP + window assembly) ---
+    let mut session = Session::new(1, 1, AssociativeMemory::new(Hv::zero(), Hv::ones()), 130, 1);
+    let mut sample = [0f32; CHANNELS];
+    b.bench_throughput("session/push-sample", 1.0, || {
+        for (i, s) in sample.iter_mut().enumerate() {
+            *s = ((rng.next_u64() >> 40) as f32) * (i as f32 * 1e-6 + 1e-4);
+        }
+        session.push_sample(black_box(&sample)).is_some()
+    });
+
+    // --- router dispatch ---
+    let mut router = Router::new();
+    for id in 1..=8u64 {
+        router.add_session(Session::new(
+            id,
+            id as u32,
+            AssociativeMemory::new(Hv::zero(), Hv::ones()),
+            130,
+            1,
+        ));
+    }
+    let chunk = SampleChunk {
+        session_id: 4,
+        samples: vec![0.25; 64 * CHANNELS],
+    };
+    let mut out = Vec::new();
+    b.bench_throughput("router/route-64-sample-chunk", 64.0, || {
+        out.clear();
+        router.route(black_box(&chunk), &mut out).unwrap();
+        out.len()
+    });
+
+    // --- detector ---
+    let mut det = Detector::new(2);
+    let mut w = 0u64;
+    b.bench("detector/push", || {
+        w += 1;
+        det.push(w, w % 7 < 3, 1)
+    });
+
+    // --- end-to-end streaming (native backend, 2 patients) ---
+    let synth = SynthConfig {
+        records_per_patient: 2,
+        pre_s: 3.0,
+        ictal_s: 2.0,
+        post_s: 1.0,
+        ..Default::default()
+    };
+    let cfg = ClassifierConfig::optimized();
+    let specs: Vec<(u32, AssociativeMemory, sparse_hdc_ieeg::data::synth::Record)> = (1..=2u32)
+        .map(|pid| {
+            let p = SynthPatient::generate(&synth, pid);
+            let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+            let am = pipeline::train_on_record(&mut enc, p.train_record(), cfg.train_density);
+            (pid, am, p.records[1].clone())
+        })
+        .collect();
+    let samples_per_run: f64 = specs.iter().map(|(_, _, r)| r.num_samples() as f64).sum();
+    b.bench_throughput("coordinator/stream-2-patients (samples/s)", samples_per_run, || {
+        let streams: Vec<StreamSpec> = specs
+            .iter()
+            .map(|(pid, am, rec)| StreamSpec {
+                session_id: *pid as u64,
+                patient_id: *pid,
+                record: rec.clone(),
+                am: am.clone(),
+                threshold: cfg.temporal_threshold,
+            })
+            .collect();
+        let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+        coordinator.run(streams).unwrap().metrics.windows_completed
+    });
+
+    b.finish();
+}

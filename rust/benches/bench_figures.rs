@@ -1,0 +1,91 @@
+//! Figure/table regeneration benches — one bench per paper artifact
+//! (DESIGN.md §4 experiment index). Each bench times the full regeneration
+//! AND prints the regenerated numbers, so `cargo bench --bench
+//! bench_figures` doubles as the reproduction harness.
+
+use sparse_hdc_ieeg::benchkit::Bench;
+use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
+use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
+use sparse_hdc_ieeg::hwmodel::breakdown::{format_comparison, format_table1};
+use sparse_hdc_ieeg::hwmodel::designs::{analyze, analyze_all, patient11_stimulus};
+use sparse_hdc_ieeg::pipeline;
+
+fn main() {
+    let mut b = Bench::new();
+
+    // FIG1C + FIG5: the four-design analysis under patient-11 stimulus.
+    b.bench("fig1c+fig5/analyze-all-designs", || {
+        analyze_all(&ClassifierConfig::default(), 2).len()
+    });
+    let reports = analyze_all(&ClassifierConfig::default(), 4);
+    println!("\n{}", format_comparison(&reports));
+
+    // TAB1: ours row from the optimized design.
+    b.bench("table1/analyze-optimized", || {
+        let frames = patient11_stimulus(2);
+        analyze(
+            Variant::Optimized,
+            &ClassifierConfig {
+                spatial_threshold: 1,
+                ..ClassifierConfig::optimized()
+            },
+            &frames,
+        )
+        .energy_nj_per_pred()
+    });
+    println!("\n{}", format_table1(&reports[3]));
+
+    // FIG4 (reduced grid so the bench stays minutes-scale): delay/accuracy
+    // at three densities over two patients.
+    let synth = SynthConfig {
+        records_per_patient: 3,
+        pre_s: 12.0,
+        ictal_s: 8.0,
+        post_s: 4.0,
+        ..Default::default()
+    };
+    let patients: Vec<SynthPatient> = (1..=2).map(|p| SynthPatient::generate(&synth, p)).collect();
+    b.bench("fig4/one-density-point (2 patients)", || {
+        let mut acc = 0.0;
+        for p in &patients {
+            acc += pipeline::evaluate_patient(
+                Variant::Optimized,
+                &ClassifierConfig::optimized(),
+                p,
+                Some(0.25),
+                AlarmPolicy::default(),
+            )
+            .summary
+            .detection_accuracy();
+        }
+        acc
+    });
+    println!("\nfig4 sample points (full grid: `repro fig4` / examples/density_sweep):");
+    println!("{:>9} {:>10} {:>9}", "max-dens", "delay s", "acc %");
+    for d in [0.1, 0.25, 0.5] {
+        let mut delays = Vec::new();
+        let mut acc = 0.0;
+        for p in &patients {
+            let e = pipeline::evaluate_patient(
+                Variant::Optimized,
+                &ClassifierConfig::optimized(),
+                p,
+                Some(d),
+                AlarmPolicy::default(),
+            );
+            if e.summary.mean_delay_s().is_finite() {
+                delays.push(e.summary.mean_delay_s());
+            }
+            acc += e.summary.detection_accuracy();
+        }
+        println!(
+            "{:>8.0}% {:>10.2} {:>8.1}%",
+            d * 100.0,
+            delays.iter().sum::<f64>() / delays.len().max(1) as f64,
+            acc / patients.len() as f64 * 100.0
+        );
+    }
+
+    b.finish();
+}

@@ -1,0 +1,129 @@
+//! Core HDC operation benchmarks + the paper's design-choice ablations in
+//! software terms (CompIM vs decode+shift binding, OR vs adder bundling).
+//!
+//! `cargo bench --bench bench_hdc` (filter: `cargo bench --bench bench_hdc -- bind`)
+
+use sparse_hdc_ieeg::benchkit::{black_box, Bench};
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::bundling;
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Encoder, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::compim::CompIm;
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::im::{DenseItemMemory, ItemMemory};
+use sparse_hdc_ieeg::hdc::sparse::{bind_bitdomain, SparseHv};
+use sparse_hdc_ieeg::hdc::temporal::TemporalAccumulator;
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, LBP_CODES};
+use sparse_hdc_ieeg::rng::Xoshiro256;
+
+fn random_frames(n: usize, seed: u64) -> Vec<[u8; CHANNELS]> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut f = [0u8; CHANNELS];
+            for c in f.iter_mut() {
+                *c = rng.next_below(LBP_CODES as u64) as u8;
+            }
+            f
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256::new(1);
+
+    // --- binding: the paper's §III-A ablation in software ---
+    let im = ItemMemory::default_im();
+    let compim = CompIm::default_im();
+    let mut code = 0u8;
+    b.bench("bind/baseline-decode+shift (64ch)", || {
+        code = code.wrapping_add(1) % LBP_CODES as u8;
+        let mut acc = 0u32;
+        for c in 0..CHANNELS {
+            let bound = bind_bitdomain(&im.electrode_hv(c), &im.lookup_hv(c, code)).unwrap();
+            acc ^= bound.popcount();
+        }
+        acc
+    });
+    b.bench("bind/compim-7bit-add (64ch)", || {
+        code = code.wrapping_add(1) % LBP_CODES as u8;
+        let mut acc = 0u32;
+        for c in 0..CHANNELS {
+            acc ^= compim.bind(c, code).pos[0] as u32;
+        }
+        acc
+    });
+
+    // --- spatial bundling: §III-B ablation ---
+    let bound_pos: Vec<SparseHv> = (0..CHANNELS).map(|_| SparseHv::random(&mut rng)).collect();
+    let bound_bits: Vec<Hv> = bound_pos.iter().map(|p| p.to_hv()).collect();
+    b.bench("bundle/adder-tree+thin (bit domain)", || {
+        bundling::bundle_adder_thin(black_box(&bound_bits), 2)
+    });
+    b.bench("bundle/or-tree (bit domain)", || {
+        bundling::bundle_or(black_box(&bound_bits))
+    });
+    b.bench("bundle/or-tree (position domain)", || {
+        bundling::bundle_or_pos(black_box(&bound_pos))
+    });
+
+    // --- temporal + AM ---
+    let spatial = bundling::bundle_or_pos(&bound_pos);
+    b.bench("temporal/accumulate-frame", || {
+        let mut acc = TemporalAccumulator::new();
+        acc.add(black_box(&spatial));
+        acc.frames()
+    });
+    let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+    let query = Hv::random(&mut rng, 0.25);
+    b.bench("am/search (2 classes)", || am.search(black_box(&query)));
+
+    // --- full-frame spatial encode per sparse variant ---
+    let frames = random_frames(FRAMES_PER_PREDICTION, 2);
+    for variant in [
+        Variant::SparseBaseline,
+        Variant::SparseCompIm,
+        Variant::Optimized,
+    ] {
+        let cfg = ClassifierConfig {
+            spatial_threshold: 1,
+            ..ClassifierConfig::optimized()
+        };
+        let mut enc = SparseEncoder::new(variant, cfg);
+        let mut i = 0;
+        b.bench(&format!("frame-encode/{}", variant.name()), || {
+            i = (i + 1) % frames.len();
+            enc.spatial_encode(black_box(&frames[i]))
+        });
+    }
+
+    // --- full window (256 frames) per variant, throughput in frames/s ---
+    for variant in Variant::ALL {
+        let cfg = if variant.is_sparse() {
+            ClassifierConfig {
+                spatial_threshold: 1,
+                ..ClassifierConfig::optimized()
+            }
+        } else {
+            ClassifierConfig::default()
+        };
+        let mut enc = sparse_hdc_ieeg::hdc::classifier::make_encoder(variant, cfg);
+        b.bench_throughput(
+            &format!("window-encode/{}", variant.name()),
+            FRAMES_PER_PREDICTION as f64,
+            || {
+                let mut q = None;
+                for f in &frames {
+                    q = q.or(enc.push_frame(f));
+                }
+                q
+            },
+        );
+    }
+
+    // IM generation cost (one-time, for context).
+    b.bench("im/generate-sparse", || ItemMemory::generate(black_box(7)));
+    b.bench("im/generate-dense", || DenseItemMemory::generate(black_box(7)));
+
+    b.finish();
+}

@@ -1,0 +1,215 @@
+//! Micro-benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §2). Used by the `cargo bench` targets via `harness = false`.
+//!
+//! Methodology (criterion-like, simplified):
+//! * warm-up phase to stabilise caches/branch predictors,
+//! * timed batches sized so one batch ≥ ~1 ms (amortises timer overhead),
+//! * reports min / median / mean / p95 per-iteration time and derived
+//!   throughput,
+//! * a [`black_box`] to defeat constant folding.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of the standard black box for benchmark bodies.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark's collected statistics (per-iteration seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+}
+
+impl Stats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.2} ms", s * 1e3)
+    } else {
+        format!("{:8.3} s ", s)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per benchmark.
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    results: Vec<Stats>,
+    filter: Option<String>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // honour `cargo bench -- <filter>` and a fast mode for CI
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        let filter = args.iter().find(|a| !a.starts_with('-')).cloned();
+        let fast = std::env::var("BENCH_FAST").is_ok() || args.iter().any(|a| a == "--test");
+        Bench {
+            warmup: if fast {
+                Duration::from_millis(20)
+            } else {
+                Duration::from_millis(300)
+            },
+            measure: if fast {
+                Duration::from_millis(80)
+            } else {
+                Duration::from_millis(1500)
+            },
+            results: Vec::new(),
+            filter,
+        }
+    }
+
+    /// Run one benchmark. `f` is called once per iteration.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> Option<&Stats> {
+        if let Some(filt) = &self.filter {
+            if !name.contains(filt.as_str()) {
+                return None;
+            }
+        }
+        // Warm-up + estimate batch size.
+        let mut iters_done: u64 = 0;
+        let warm_start = Instant::now();
+        while warm_start.elapsed() < self.warmup {
+            std_black_box(f());
+            iters_done += 1;
+        }
+        let est_per_iter = warm_start.elapsed().as_secs_f64() / iters_done.max(1) as f64;
+        let batch = ((1e-3 / est_per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        // Measured batches.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let meas_start = Instant::now();
+        while meas_start.elapsed() < self.measure || samples.len() < 10 {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std_black_box(f());
+            }
+            let dt = t0.elapsed().as_secs_f64() / batch as f64;
+            samples.push(dt);
+            total_iters += batch;
+            if samples.len() >= 2000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let min_s = samples[0];
+        let median_s = samples[samples.len() / 2];
+        let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95_s = samples[(samples.len() as f64 * 0.95) as usize % samples.len()];
+        let stats = Stats {
+            name: name.to_string(),
+            iters: total_iters,
+            min_s,
+            median_s,
+            mean_s,
+            p95_s,
+        };
+        println!(
+            "{:<48} min {} med {} mean {} p95 {}",
+            stats.name,
+            fmt_time(min_s),
+            fmt_time(median_s),
+            fmt_time(mean_s),
+            fmt_time(p95_s)
+        );
+        self.results.push(stats);
+        self.results.last()
+    }
+
+    /// Like [`Self::bench`] but annotates throughput in items/s.
+    pub fn bench_throughput<R>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        f: impl FnMut() -> R,
+    ) -> Option<&Stats> {
+        let before = self.results.len();
+        self.bench(name, f)?;
+        let s = &self.results[before];
+        println!(
+            "{:<48} throughput {:>12.0} items/s",
+            format!("  ({name})"),
+            s.throughput(items_per_iter)
+        );
+        Some(&self.results[before])
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Final summary table (call at the end of a bench binary).
+    pub fn finish(&self) {
+        println!("\n=== {} benchmarks run ===", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.filter = None;
+        let mut acc = 0u64;
+        let s = b
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(black_box(1));
+                acc
+            })
+            .unwrap()
+            .clone();
+        assert!(s.min_s <= s.median_s);
+        assert!(s.median_s <= s.p95_s * 1.0001);
+        assert!(s.iters > 0);
+        assert!(s.mean_s > 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.filter = Some("match-me".to_string());
+        assert!(b.bench("other", || 1).is_none());
+        assert!(b.bench("match-me-please", || 1).is_some());
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "x".into(),
+            iters: 1,
+            min_s: 1.0,
+            median_s: 1.0,
+            mean_s: 0.5,
+            p95_s: 1.0,
+        };
+        assert!((s.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+}

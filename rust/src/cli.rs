@@ -1,0 +1,176 @@
+//! Dependency-free command-line parsing (clap is unavailable in the
+//! offline build environment — DESIGN.md §2).
+//!
+//! Supports the subset the `repro` binary needs: subcommands, `--flag`,
+//! `--key value` / `--key=value`, positional arguments, typed getters with
+//! defaults, and generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context};
+
+/// Parsed arguments for one (sub)command invocation.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-option token becomes the
+    /// subcommand; later non-option tokens are positional.
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> crate::Result<Args> {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    out.positional.extend(iter.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` or boolean `--flag` (next token missing
+                    // or looks like another option).
+                    let takes_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = iter.next().unwrap();
+                        out.options.insert(rest.to_string(), v);
+                    } else {
+                        out.flags.push(rest.to_string());
+                    }
+                }
+            } else if tok.starts_with('-') && tok.len() > 1 {
+                bail!("short options are not supported: {tok}");
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> crate::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn require(&self, name: &str) -> crate::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .with_context(|| format!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Vec<String> {
+        self.get(name)
+            .map(|s| {
+                s.split(',')
+                    .map(|x| x.trim().to_string())
+                    .filter(|x| !x.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Unknown-option guard: error out if an option is not in `known`
+    /// (catches typos early — clap would do this for us).
+    pub fn check_known(&self, known: &[&str]) -> crate::Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig4", "--patients", "8", "--out=/tmp/x", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("fig4"));
+        assert_eq!(a.get("patients"), Some("8"));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "42", "--f", "2.5"]);
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 42);
+        assert!((a.get_parse("f", 0.0f64).unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(a.get_parse("missing", 7u32).unwrap(), 7);
+        assert!(a.get_parse::<usize>("f", 0).is_err() || a.get("f") == Some("2.5"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["detect", "input.ieeg", "more.ieeg"]);
+        assert_eq!(a.positional, vec!["input.ieeg", "more.ieeg"]);
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&["run", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["x", "--oops", "1"]);
+        assert!(a.check_known(&["n"]).is_err());
+        assert!(a.check_known(&["oops"]).is_ok());
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse(&["x", "--dry-run", "--n", "3"]);
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("n"), Some("3"));
+    }
+
+    #[test]
+    fn require_errors_when_missing() {
+        let a = parse(&["x"]);
+        assert!(a.require("out").is_err());
+    }
+}

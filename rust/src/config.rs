@@ -1,0 +1,214 @@
+//! Minimal configuration system (serde/toml are unavailable offline —
+//! DESIGN.md §2).
+//!
+//! Parses a TOML subset sufficient for deployment configs: `[section]`
+//! headers, `key = value` with string / integer / float / boolean values,
+//! `#` comments. Lookup is by `"section.key"`. A typed view
+//! ([`SystemConfig`]) maps the file onto the coordinator/classifier
+//! options, layered as defaults → file → CLI overrides.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::hdc::classifier::{ClassifierConfig, Variant};
+use crate::params::IM_SEED;
+
+/// A parsed flat config: `"section.key" → raw string value`.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> crate::Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: malformed section header {raw:?}", lineno + 1);
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected key = value, got {raw:?}", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            // Strip matching quotes.
+            if (val.starts_with('"') && val.ends_with('"') && val.len() >= 2)
+                || (val.starts_with('\'') && val.ends_with('\'') && val.len() >= 2)
+            {
+                val = val[1..val.len() - 1].to_string();
+            }
+            values.insert(key, val);
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .with_context(|| format!("config key {key}: invalid value {s:?}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// Typed system configuration used by the `repro` binary and the
+/// coordinator.
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Design point to deploy.
+    pub variant: Variant,
+    pub classifier: ClassifierConfig,
+    /// Alarm policy: consecutive ictal windows required.
+    pub alarm_consecutive: usize,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Serve the encode hot path through the PJRT runtime (vs. the native
+    /// golden model).
+    pub use_pjrt: bool,
+    /// Worker threads for the coordinator.
+    pub workers: usize,
+    /// Bounded queue depth per session (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            variant: Variant::Optimized,
+            classifier: ClassifierConfig::optimized(),
+            alarm_consecutive: 1,
+            artifacts_dir: "artifacts".to_string(),
+            use_pjrt: false,
+            workers: 2,
+            queue_depth: 64,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Layer file values over the defaults.
+    pub fn from_file(file: &ConfigFile) -> crate::Result<Self> {
+        let mut cfg = SystemConfig::default();
+        if let Some(v) = file.get("system.variant") {
+            cfg.variant = Variant::from_name(v)
+                .ok_or_else(|| anyhow::anyhow!("unknown variant {v:?}"))?;
+        }
+        cfg.classifier.seed = file.get_parse("classifier.seed", IM_SEED)?;
+        cfg.classifier.spatial_threshold =
+            file.get_parse("classifier.spatial_threshold", cfg.classifier.spatial_threshold)?;
+        cfg.classifier.temporal_threshold = file.get_parse(
+            "classifier.temporal_threshold",
+            cfg.classifier.temporal_threshold,
+        )?;
+        cfg.classifier.train_density =
+            file.get_parse("classifier.train_density", cfg.classifier.train_density)?;
+        cfg.alarm_consecutive = file.get_parse("detector.consecutive", cfg.alarm_consecutive)?;
+        cfg.artifacts_dir = file
+            .get("runtime.artifacts_dir")
+            .unwrap_or(&cfg.artifacts_dir)
+            .to_string();
+        cfg.use_pjrt = file.get_parse("runtime.use_pjrt", cfg.use_pjrt)?;
+        cfg.workers = file.get_parse("coordinator.workers", cfg.workers)?;
+        cfg.queue_depth = file.get_parse("coordinator.queue_depth", cfg.queue_depth)?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# deployment config
+[system]
+variant = "sparse-optimized"
+
+[classifier]
+temporal_threshold = 120
+train_density = 0.4     # inline comment
+
+[coordinator]
+workers = 4
+queue_depth = 128
+
+[runtime]
+use_pjrt = true
+artifacts_dir = "artifacts"
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(f.get("system.variant"), Some("sparse-optimized"));
+        assert_eq!(f.get_parse("classifier.temporal_threshold", 0u16).unwrap(), 120);
+        assert!((f.get_parse("classifier.train_density", 0.0).unwrap() - 0.4) < 1e-12);
+        assert_eq!(f.get_parse("coordinator.workers", 0usize).unwrap(), 4);
+        assert!(f.get_parse("runtime.use_pjrt", false).unwrap());
+    }
+
+    #[test]
+    fn system_config_layering() {
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        let cfg = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(cfg.variant, Variant::Optimized);
+        assert_eq!(cfg.classifier.temporal_threshold, 120);
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.queue_depth, 128);
+        assert!(cfg.use_pjrt);
+        // untouched default
+        assert_eq!(cfg.alarm_consecutive, 1);
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(ConfigFile::parse("[unclosed").is_err());
+        assert!(ConfigFile::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let f = ConfigFile::parse("[system]\nvariant = \"bogus\"").unwrap();
+        assert!(SystemConfig::from_file(&f).is_err());
+    }
+
+    #[test]
+    fn empty_config_gives_defaults() {
+        let f = ConfigFile::parse("").unwrap();
+        let cfg = SystemConfig::from_file(&f).unwrap();
+        assert_eq!(cfg.variant, Variant::Optimized);
+        assert_eq!(cfg.classifier.temporal_threshold, 130);
+    }
+}

@@ -1,0 +1,108 @@
+//! Alarm post-processing: K-consecutive smoothing and onset events.
+//!
+//! The raw classifier emits one ictal/interictal decision per 0.5 s
+//! window; an implant alerts only after `consecutive` ictal windows in a
+//! row (reducing false alarms at the cost of added delay — the same
+//! policy [`crate::data::metrics::AlarmPolicy`] scores offline).
+
+use crate::params::{FRAMES_PER_PREDICTION, SAMPLE_RATE_HZ};
+
+/// A raised alarm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AlarmEvent {
+    /// Window index whose prediction completed the run.
+    pub window_idx: u64,
+    /// Stream time of the alarm (seconds since stream start).
+    pub time_s: f64,
+    /// Decision margin of the triggering window.
+    pub margin: i64,
+}
+
+/// Streaming K-consecutive detector.
+#[derive(Clone, Debug)]
+pub struct Detector {
+    consecutive: usize,
+    run: usize,
+    /// Alarm latched until a interictal window resets it (prevents one
+    /// seizure from raising a flood of events).
+    latched: bool,
+    pub events: Vec<AlarmEvent>,
+}
+
+impl Detector {
+    pub fn new(consecutive: usize) -> Self {
+        Detector {
+            consecutive: consecutive.max(1),
+            run: 0,
+            latched: false,
+            events: Vec::new(),
+        }
+    }
+
+    /// Feed one window decision; returns an event when an alarm fires.
+    pub fn push(&mut self, window_idx: u64, is_ictal: bool, margin: i64) -> Option<AlarmEvent> {
+        if !is_ictal {
+            self.run = 0;
+            self.latched = false;
+            return None;
+        }
+        self.run += 1;
+        if self.run >= self.consecutive && !self.latched {
+            self.latched = true;
+            let event = AlarmEvent {
+                window_idx,
+                time_s: (window_idx + 1) as f64 * FRAMES_PER_PREDICTION as f64 / SAMPLE_RATE_HZ,
+                margin,
+            };
+            self.events.push(event);
+            return Some(event);
+        }
+        None
+    }
+
+    pub fn reset(&mut self) {
+        self.run = 0;
+        self.latched = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_after_k_consecutive() {
+        let mut d = Detector::new(2);
+        assert!(d.push(0, true, 1).is_none());
+        let e = d.push(1, true, 2).expect("second consecutive fires");
+        assert_eq!(e.window_idx, 1);
+        assert!((e.time_s - 2.0 * 0.5).abs() < 1e-12);
+        // Latched: further ictal windows do not re-fire.
+        assert!(d.push(2, true, 3).is_none());
+        // Reset on interictal, then fire again.
+        assert!(d.push(3, false, -1).is_none());
+        assert!(d.push(4, true, 1).is_none());
+        assert!(d.push(5, true, 1).is_some());
+        assert_eq!(d.events.len(), 2);
+    }
+
+    #[test]
+    fn k1_fires_immediately_once() {
+        let mut d = Detector::new(1);
+        assert!(d.push(0, true, 5).is_some());
+        assert!(d.push(1, true, 5).is_none());
+        assert_eq!(d.events.len(), 1);
+    }
+
+    #[test]
+    fn interictal_resets_run() {
+        let mut d = Detector::new(3);
+        d.push(0, true, 1);
+        d.push(1, true, 1);
+        d.push(2, false, -1);
+        d.push(3, true, 1);
+        d.push(4, true, 1);
+        assert!(d.events.is_empty());
+        assert!(d.push(5, true, 1).is_some());
+    }
+}

@@ -1,0 +1,193 @@
+//! Serving metrics: ingest counters, latency distribution, throughput.
+
+use std::time::Instant;
+
+/// Fixed-bucket latency histogram (µs buckets, log-spaced).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum_s: f64,
+    n: u64,
+    max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1 µs .. ~16 s, ×2 per bucket.
+        let bounds: Vec<f64> = (0..25).map(|i| 1e-6 * 2f64.powi(i)).collect();
+        let counts = vec![0; bounds.len() + 1];
+        LatencyHistogram {
+            bounds,
+            counts,
+            sum_s: 0.0,
+            n: 0,
+            max_s: 0.0,
+        }
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum_s += seconds;
+        self.n += 1;
+        if seconds > self.max_s {
+            self.max_s = seconds;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        self.sum_s / self.n as f64
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate quantile from the histogram (upper bound of the bucket
+    /// containing the q-quantile).
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                // Bucket upper bound, clamped to the observed max so
+                // quantiles never exceed the true maximum.
+                return if i < self.bounds.len() {
+                    self.bounds[i].min(self.max_s)
+                } else {
+                    self.max_s
+                };
+            }
+        }
+        self.max_s
+    }
+}
+
+/// Aggregated serving metrics.
+#[derive(Clone, Debug)]
+pub struct ServingMetrics {
+    pub started: Instant,
+    pub samples_in: u64,
+    pub frames_in: u64,
+    pub windows_submitted: u64,
+    pub windows_completed: u64,
+    pub windows_failed: u64,
+    pub alarms: u64,
+    pub backpressure_stalls: u64,
+    pub latency: LatencyHistogram,
+}
+
+impl Default for ServingMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        ServingMetrics {
+            started: Instant::now(),
+            samples_in: 0,
+            frames_in: 0,
+            windows_submitted: 0,
+            windows_completed: 0,
+            windows_failed: 0,
+            alarms: 0,
+            backpressure_stalls: 0,
+            latency: LatencyHistogram::new(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    pub fn windows_per_s(&self) -> f64 {
+        self.windows_completed as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn samples_per_s(&self) -> f64 {
+        self.samples_in as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "samples {} | windows {}/{} ({} failed) | alarms {} | stalls {} | \
+             window latency mean {:.2} ms p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms max {:.2} ms | \
+             {:.0} windows/s, {:.0} samples/s",
+            self.samples_in,
+            self.windows_completed,
+            self.windows_submitted,
+            self.windows_failed,
+            self.alarms,
+            self.backpressure_stalls,
+            self.latency.mean_s() * 1e3,
+            self.latency.quantile_s(0.50) * 1e3,
+            self.latency.quantile_s(0.95) * 1e3,
+            self.latency.quantile_s(0.99) * 1e3,
+            self.latency.max_s() * 1e3,
+            self.windows_per_s(),
+            self.samples_per_s(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5); // 10 µs .. 10 ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.5);
+        let p95 = h.quantile_s(0.95);
+        let p99 = h.quantile_s(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(h.mean_s() > 0.0);
+        assert!(h.max_s() >= p99 * 0.5);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan() {
+        let h = LatencyHistogram::new();
+        assert!(h.mean_s().is_nan());
+        assert!(h.quantile_s(0.5).is_nan());
+    }
+
+    #[test]
+    fn metrics_summary_smoke() {
+        let mut m = ServingMetrics::new();
+        m.samples_in = 100;
+        m.windows_completed = 2;
+        m.latency.record(0.001);
+        let s = m.summary();
+        assert!(s.contains("windows 2/0"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Layer-3 streaming coordinator — the serving system around the
+//! accelerator.
+//!
+//! A deployment looks like Fig. 1(a): electrode streams arrive per
+//! patient, are LBP-encoded, windowed, classified (either through the
+//! PJRT-compiled artifacts or the native golden model) and post-processed
+//! into alarm events. The coordinator owns:
+//!
+//! * [`session`] — per-patient state: LBP front-end, window assembly,
+//!   trained AM + threshold, detector state;
+//! * [`router`] — routes interleaved sample chunks to sessions;
+//! * [`runtime::engine_pool`](crate::runtime::engine_pool) — the engine
+//!   worker threads with bounded queues (backpressure);
+//! * [`detector`] — K-of-N alarm smoothing and onset events;
+//! * [`metrics`] — ingest/latency/throughput counters;
+//! * [`server`] — the orchestration loop gluing sources → sessions →
+//!   engines → events, with real-time pacing or max-speed replay.
+
+pub mod detector;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod session;
+
+pub use server::{serve_command, Coordinator, StreamReport};

@@ -1,0 +1,161 @@
+//! Routing: interleaved multi-patient sample chunks → sessions.
+//!
+//! Sources (file replay, network front-ends, generators) emit
+//! [`SampleChunk`]s tagged with a session id; the router owns the session
+//! table and dispatches chunk-by-chunk, preserving per-session sample
+//! order (chunks from one session must arrive in order; chunks from
+//! different sessions interleave freely — exactly the multi-implant
+//! serving scenario).
+
+use std::collections::BTreeMap;
+
+use crate::params::CHANNELS;
+
+use super::session::{ReadyWindow, Session};
+
+/// A contiguous run of multichannel samples for one session.
+pub struct SampleChunk {
+    pub session_id: u64,
+    /// Time-major `[n * CHANNELS]`.
+    pub samples: Vec<f32>,
+}
+
+impl SampleChunk {
+    pub fn num_samples(&self) -> usize {
+        self.samples.len() / CHANNELS
+    }
+}
+
+/// Session table + dispatch.
+pub struct Router {
+    sessions: BTreeMap<u64, Session>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router {
+            sessions: BTreeMap::new(),
+        }
+    }
+
+    pub fn add_session(&mut self, session: Session) {
+        self.sessions.insert(session.id, session);
+    }
+
+    pub fn session(&self, id: u64) -> Option<&Session> {
+        self.sessions.get(&id)
+    }
+
+    pub fn session_mut(&mut self, id: u64) -> Option<&mut Session> {
+        self.sessions.get_mut(&id)
+    }
+
+    pub fn sessions(&self) -> impl Iterator<Item = &Session> {
+        self.sessions.values()
+    }
+
+    pub fn sessions_mut(&mut self) -> impl Iterator<Item = &mut Session> {
+        self.sessions.values_mut()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Route one chunk; collected windows are appended to `out`.
+    /// Unknown session ids are an error (a production system would 404).
+    pub fn route(&mut self, chunk: &SampleChunk, out: &mut Vec<ReadyWindow>) -> crate::Result<()> {
+        let session = self
+            .sessions
+            .get_mut(&chunk.session_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown session {}", chunk.session_id))?;
+        let mut sample = [0f32; CHANNELS];
+        for t in 0..chunk.num_samples() {
+            sample.copy_from_slice(&chunk.samples[t * CHANNELS..(t + 1) * CHANNELS]);
+            if let Some(w) = session.push_sample(&sample) {
+                out.push(w);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::am::AssociativeMemory;
+    use crate::hdc::hv::Hv;
+    use crate::params::FRAMES_PER_PREDICTION;
+
+    fn router_with(ids: &[u64]) -> Router {
+        let mut r = Router::new();
+        for &id in ids {
+            r.add_session(Session::new(
+                id,
+                id as u32,
+                AssociativeMemory::new(Hv::zero(), Hv::ones()),
+                130,
+                1,
+            ));
+        }
+        r
+    }
+
+    #[test]
+    fn interleaved_sessions_window_independently() {
+        let mut r = router_with(&[1, 2]);
+        let mut out = Vec::new();
+        let half = FRAMES_PER_PREDICTION / 2;
+        let chunk = |id| SampleChunk {
+            session_id: id,
+            samples: vec![0.0; half * CHANNELS],
+        };
+        r.route(&chunk(1), &mut out).unwrap();
+        r.route(&chunk(2), &mut out).unwrap();
+        assert!(out.is_empty());
+        r.route(&chunk(1), &mut out).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].session_id, 1);
+        r.route(&chunk(2), &mut out).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[1].session_id, 2);
+    }
+
+    #[test]
+    fn unknown_session_rejected() {
+        let mut r = router_with(&[1]);
+        let mut out = Vec::new();
+        let chunk = SampleChunk {
+            session_id: 99,
+            samples: vec![0.0; CHANNELS],
+        };
+        assert!(r.route(&chunk, &mut out).is_err());
+    }
+
+    #[test]
+    fn partial_chunks_accumulate() {
+        let mut r = router_with(&[7]);
+        let mut out = Vec::new();
+        for _ in 0..FRAMES_PER_PREDICTION {
+            r.route(
+                &SampleChunk {
+                    session_id: 7,
+                    samples: vec![0.0; CHANNELS],
+                },
+                &mut out,
+            )
+            .unwrap();
+        }
+        assert_eq!(out.len(), 1);
+    }
+}

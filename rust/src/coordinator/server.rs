@@ -1,0 +1,577 @@
+//! The streaming orchestrator: sources → router/sessions → engine
+//! workers → detector events, with backpressure and metrics.
+//!
+//! Two interchangeable window backends:
+//! * **native** — the bit-accurate Rust golden model (no artifacts
+//!   needed);
+//! * **pjrt**  — the AOT-compiled HLO artifacts executed through the
+//!   `xla` PJRT client ([`crate::runtime`]), i.e. the full three-layer
+//!   stack on the request path.
+//!
+//! Both run on dedicated worker threads behind bounded queues, so a slow
+//! engine stalls the sources (backpressure) instead of ballooning memory.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::cli::Args;
+use crate::config::{ConfigFile, SystemConfig};
+use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::router::{Router, SampleChunk};
+use crate::coordinator::session::Session;
+use crate::data::metrics::{evaluate_record, AlarmPolicy, EvalSummary};
+use crate::data::synth::Record;
+use crate::hdc::am::AssociativeMemory;
+use crate::hdc::hv::Hv;
+use crate::hdc::classifier::{ClassifierConfig, Encoder, Frame, SparseEncoder, Variant};
+use crate::params::{CHANNELS, CLASS_ICTAL, CLASS_INTERICTAL, SAMPLE_RATE_HZ};
+use crate::pipeline;
+use crate::runtime::engine_pool::{Completion, EngineHost, Job};
+use crate::runtime::{EngineKind, WindowOutput};
+
+/// Window-backend selection.
+#[derive(Clone, Debug)]
+pub enum Backend {
+    /// Golden-model encoder on a worker thread.
+    Native,
+    /// PJRT-compiled artifact from this directory.
+    Pjrt { artifacts_dir: PathBuf },
+}
+
+/// A worker host that accepts [`Job`]s and emits [`Completion`]s —
+/// either the PJRT engine host or a native equivalent.
+enum Host {
+    Pjrt(EngineHost),
+    Native {
+        tx: SyncSender<Job>,
+        completions: Receiver<Completion>,
+        handle: Option<std::thread::JoinHandle<()>>,
+    },
+}
+
+impl Host {
+    fn spawn(backend: &Backend, cfg: &ClassifierConfig, queue_depth: usize) -> crate::Result<Host> {
+        match backend {
+            Backend::Pjrt { artifacts_dir } => Ok(Host::Pjrt(EngineHost::spawn(
+                artifacts_dir.clone(),
+                EngineKind::SparseWindow,
+                queue_depth,
+            )?)),
+            Backend::Native => {
+                let (tx, rx) = sync_channel::<Job>(queue_depth);
+                let (done_tx, done_rx) = sync_channel::<Completion>(queue_depth.max(1) * 2);
+                let cfg = cfg.clone();
+                let handle = std::thread::Builder::new()
+                    .name("engine-native".into())
+                    .spawn(move || {
+                        let mut encoder = SparseEncoder::new(Variant::Optimized, cfg);
+                        while let Ok(job) = rx.recv() {
+                            let output = run_native(&mut encoder, &job);
+                            let completion = Completion {
+                                tag: job.tag,
+                                seq: job.seq,
+                                output: Ok(output),
+                                submitted: job.submitted,
+                                finished: Instant::now(),
+                            };
+                            if done_tx.send(completion).is_err() {
+                                break;
+                            }
+                        }
+                    })?;
+                Ok(Host::Native {
+                    tx,
+                    completions: done_rx,
+                    handle: Some(handle),
+                })
+            }
+        }
+    }
+
+    fn submit(&self, job: Job) -> crate::Result<()> {
+        match self {
+            Host::Pjrt(h) => h.submit(job),
+            Host::Native { tx, .. } => tx
+                .send(job)
+                .map_err(|_| anyhow::anyhow!("native engine worker has shut down")),
+        }
+    }
+
+    fn try_submit(&self, job: Job) -> Result<(), Job> {
+        match self {
+            Host::Pjrt(h) => h.try_submit(job),
+            Host::Native { tx, .. } => match tx.try_send(job) {
+                Ok(()) => Ok(()),
+                Err(std::sync::mpsc::TrySendError::Full(j))
+                | Err(std::sync::mpsc::TrySendError::Disconnected(j)) => Err(j),
+            },
+        }
+    }
+
+    fn completions(&self) -> &Receiver<Completion> {
+        match self {
+            Host::Pjrt(h) => &h.completions,
+            Host::Native { completions, .. } => completions,
+        }
+    }
+}
+
+impl Drop for Host {
+    fn drop(&mut self) {
+        if let Host::Native { tx, handle, .. } = self {
+            let (dead, _) = sync_channel::<Job>(1);
+            drop(std::mem::replace(tx, dead));
+            if let Some(h) = handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Native execution of one window job (mirrors the HLO semantics).
+fn run_native(encoder: &mut SparseEncoder, job: &Job) -> WindowOutput {
+    encoder.reset();
+    let mut frame = [0u8; CHANNELS];
+    let mut query = None;
+    for chunk in job.codes.chunks_exact(CHANNELS) {
+        frame.copy_from_slice(chunk);
+        let f: Frame = frame;
+        if let Some(q) = encoder.push_frame(&f) {
+            query = Some(q);
+        }
+    }
+    let query = query.expect("job carries exactly one window");
+    // Rebuild the class HVs once and score with packed popcount-AND
+    // (64 word ops per class instead of 1024 multiplies — §Perf L3-3).
+    let mut scores = [0i32; 2];
+    for class in 0..2 {
+        let plane = &job.am[class * crate::params::DIM..(class + 1) * crate::params::DIM];
+        let class_hv = Hv::from_fn(|i| plane[i] != 0);
+        scores[class] = query.overlap(&class_hv) as i32;
+    }
+    WindowOutput {
+        scores,
+        query: query.to_i32s(),
+    }
+}
+
+/// One patient stream to serve: the session's trained model plus the
+/// record to replay.
+pub struct StreamSpec {
+    pub session_id: u64,
+    pub patient_id: u32,
+    pub record: Record,
+    pub am: AssociativeMemory,
+    pub threshold: u16,
+}
+
+/// Per-session outcome of a serving run.
+pub struct SessionReport {
+    pub session_id: u64,
+    pub patient_id: u32,
+    pub windows: u64,
+    pub alarms: Vec<crate::coordinator::detector::AlarmEvent>,
+    pub eval: crate::data::metrics::RecordOutcome,
+}
+
+/// Full report of one serving run.
+pub struct StreamReport {
+    pub sessions: Vec<SessionReport>,
+    pub metrics: ServingMetrics,
+    pub summary: EvalSummary,
+}
+
+/// The coordinator: owns the router and the engine host.
+pub struct Coordinator {
+    system: SystemConfig,
+    backend: Backend,
+    /// Samples per source chunk (smaller → finer interleaving, more
+    /// routing overhead).
+    pub chunk_samples: usize,
+    /// Pace sources at the iEEG sample rate (wall-clock realtime).
+    pub realtime: bool,
+}
+
+impl Coordinator {
+    pub fn new(system: SystemConfig, backend: Backend) -> Self {
+        Coordinator {
+            system,
+            backend,
+            chunk_samples: 64,
+            realtime: false,
+        }
+    }
+
+    /// Serve a set of patient streams to completion and score the
+    /// detections against the records' annotations.
+    pub fn run(&self, streams: Vec<StreamSpec>) -> crate::Result<StreamReport> {
+        anyhow::ensure!(!streams.is_empty(), "no streams to serve");
+        let mut metrics = ServingMetrics::new();
+        let host = Host::spawn(
+            &self.backend,
+            &self.system.classifier,
+            self.system.queue_depth,
+        )?;
+
+        // Build sessions + retain records for scoring/pacing.
+        let mut router = Router::new();
+        let mut records: std::collections::BTreeMap<u64, Record> = Default::default();
+        for s in &streams {
+            let mut cfg_threshold = s.threshold;
+            if cfg_threshold == 0 {
+                cfg_threshold = self.system.classifier.temporal_threshold;
+            }
+            router.add_session(Session::new(
+                s.session_id,
+                s.patient_id,
+                s.am.clone(),
+                cfg_threshold,
+                self.system.alarm_consecutive,
+            ));
+            records.insert(s.session_id, s.record.clone());
+        }
+
+        // Source cursors.
+        struct Cursor {
+            session_id: u64,
+            pos: usize,
+            len: usize,
+        }
+        let mut cursors: Vec<Cursor> = streams
+            .iter()
+            .map(|s| Cursor {
+                session_id: s.session_id,
+                pos: 0,
+                len: s.record.num_samples(),
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let mut ready = Vec::new();
+        let mut pending_jobs: Vec<Job> = Vec::new();
+        let mut in_flight: u64 = 0;
+
+        loop {
+            let mut any_active = false;
+            for cur in cursors.iter_mut() {
+                if cur.pos >= cur.len {
+                    continue;
+                }
+                any_active = true;
+                let n = self.chunk_samples.min(cur.len - cur.pos);
+                if self.realtime {
+                    // Pace: this chunk's last sample becomes due at
+                    // (pos + n) / fs seconds after stream start.
+                    let due = (cur.pos + n) as f64 / SAMPLE_RATE_HZ;
+                    let elapsed = t0.elapsed().as_secs_f64();
+                    if due > elapsed {
+                        std::thread::sleep(Duration::from_secs_f64(due - elapsed));
+                    }
+                }
+                let rec = &records[&cur.session_id];
+                let chunk = SampleChunk {
+                    session_id: cur.session_id,
+                    samples: rec.samples[cur.pos * CHANNELS..(cur.pos + n) * CHANNELS].to_vec(),
+                };
+                cur.pos += n;
+                metrics.samples_in += n as u64;
+                metrics.frames_in += n as u64;
+                ready.clear();
+                router.route(&chunk, &mut ready)?;
+                for w in ready.drain(..) {
+                    let session = router.session(w.session_id).expect("routed");
+                    pending_jobs.push(Job {
+                        tag: w.session_id,
+                        seq: w.seq,
+                        codes: w.codes,
+                        am: session.am.clone(),
+                        threshold: session.threshold as i32,
+                        submitted: Instant::now(),
+                    });
+                }
+                // Submit with backpressure accounting.
+                while let Some(job) = pending_jobs.pop() {
+                    match host.try_submit(job) {
+                        Ok(()) => {
+                            metrics.windows_submitted += 1;
+                            in_flight += 1;
+                        }
+                        Err(job) => {
+                            metrics.backpressure_stalls += 1;
+                            host.submit(job)?; // blocking
+                            metrics.windows_submitted += 1;
+                            in_flight += 1;
+                        }
+                    }
+                }
+                // Opportunistically drain completions.
+                while let Ok(c) = host.completions().try_recv() {
+                    in_flight -= 1;
+                    Self::finish(&mut router, &mut metrics, c);
+                }
+            }
+            if !any_active {
+                break;
+            }
+        }
+
+        // Drain the tail.
+        while in_flight > 0 {
+            let c = host
+                .completions()
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine worker dropped completions"))?;
+            in_flight -= 1;
+            Self::finish(&mut router, &mut metrics, c);
+        }
+
+        // Score each session against its record's annotation.
+        let policy = AlarmPolicy {
+            consecutive: self.system.alarm_consecutive,
+        };
+        let mut summary = EvalSummary::default();
+        let mut sessions = Vec::new();
+        for s in router.sessions() {
+            let rec = &records[&s.id];
+            let eval = evaluate_record(rec, &s.predictions, policy, pipeline::DETECT_GRACE_S);
+            summary.add(&eval);
+            sessions.push(SessionReport {
+                session_id: s.id,
+                patient_id: s.patient_id,
+                windows: s.windows(),
+                alarms: s.detector.events.clone(),
+                eval,
+            });
+        }
+        Ok(StreamReport {
+            sessions,
+            metrics,
+            summary,
+        })
+    }
+
+    fn finish(router: &mut Router, metrics: &mut ServingMetrics, c: Completion) {
+        let latency = c.latency_s();
+        match c.output {
+            Ok(out) => {
+                metrics.windows_completed += 1;
+                metrics.latency.record(latency);
+                let is_ictal = out.scores[CLASS_ICTAL] > out.scores[CLASS_INTERICTAL];
+                let margin = out.margin();
+                if let Some(session) = router.session_mut(c.tag) {
+                    if session.complete(c.seq, is_ictal, margin).is_some() {
+                        metrics.alarms += 1;
+                    }
+                }
+            }
+            Err(e) => {
+                metrics.windows_failed += 1;
+                log::error!("window failed (session {}, seq {}): {e:#}", c.tag, c.seq);
+            }
+        }
+    }
+}
+
+/// `repro serve --data DIR [--patients LIST] [--use-pjrt] [--realtime]
+/// [--config FILE] [--record K]`
+pub fn serve_command(args: &Args) -> crate::Result<()> {
+    args.check_known(&[
+        "data",
+        "patients",
+        "use-pjrt",
+        "realtime",
+        "config",
+        "record",
+        "artifacts",
+        "chunk",
+    ])?;
+    let data = PathBuf::from(args.require("data")?);
+    let mut system = match args.get("config") {
+        Some(path) => SystemConfig::from_file(&ConfigFile::load(std::path::Path::new(path))?)?,
+        None => SystemConfig::default(),
+    };
+    system.classifier.spatial_threshold = 1;
+    if args.flag("use-pjrt") {
+        system.use_pjrt = true;
+    }
+    let artifacts = args.get_str("artifacts", &system.artifacts_dir);
+    let record_idx: usize = args.get_parse("record", 1usize)?;
+
+    let patient_ids: Vec<u32> = {
+        let list = args.get_list("patients");
+        if list.is_empty() {
+            vec![1, 2, 3, 4]
+        } else {
+            list.iter()
+                .map(|s| s.parse::<u32>())
+                .collect::<Result<_, _>>()?
+        }
+    };
+
+    // Train per patient (one-shot on record 0), then stream `record_idx`.
+    let mut streams = Vec::new();
+    for (i, &pid) in patient_ids.iter().enumerate() {
+        let records = crate::data::dataset::load_patient(&data, pid)
+            .with_context(|| format!("load patient {pid}"))?;
+        anyhow::ensure!(
+            records.len() > record_idx,
+            "patient {pid} has {} records, need index {record_idx}",
+            records.len()
+        );
+        let mut enc = SparseEncoder::new(Variant::Optimized, system.classifier.clone());
+        let am = pipeline::train_on_record(&mut enc, &records[0], system.classifier.train_density);
+        println!(
+            "patient {pid}: trained (class densities {:.1}% / {:.1}%), streaming record {record_idx}",
+            am.classes[0].density() * 100.0,
+            am.classes[1].density() * 100.0
+        );
+        streams.push(StreamSpec {
+            session_id: i as u64 + 1,
+            patient_id: pid,
+            record: records[record_idx].clone(),
+            am,
+            threshold: system.classifier.temporal_threshold,
+        });
+    }
+
+    let backend = if system.use_pjrt {
+        Backend::Pjrt {
+            artifacts_dir: PathBuf::from(artifacts),
+        }
+    } else {
+        Backend::Native
+    };
+    let mut coordinator = Coordinator::new(system, backend);
+    coordinator.realtime = args.flag("realtime");
+    coordinator.chunk_samples = args.get_parse("chunk", 64usize)?;
+
+    println!(
+        "serving {} sessions ({} backend, {}, chunk {} samples)…",
+        streams.len(),
+        if coordinator_is_pjrt(&coordinator) { "pjrt" } else { "native" },
+        if coordinator.realtime { "realtime pacing" } else { "max speed" },
+        coordinator.chunk_samples
+    );
+    let report = coordinator.run(streams)?;
+
+    for s in &report.sessions {
+        let delay = s
+            .eval
+            .delay_s
+            .map(|d| format!("{d:.2} s"))
+            .unwrap_or_else(|| "—".into());
+        println!(
+            "session {} (patient {}): {} windows, {} alarms, detected={:?}, delay {}, FA {}",
+            s.session_id,
+            s.patient_id,
+            s.windows,
+            s.alarms.len(),
+            s.eval.detected,
+            delay,
+            s.eval.false_alarms
+        );
+    }
+    println!(
+        "\ndetection: {}/{} seizures, mean delay {:.2} s",
+        report.summary.detected,
+        report.summary.seizures,
+        report.summary.mean_delay_s()
+    );
+    println!("serving:   {}", report.metrics.summary());
+    println!(
+        "note: accelerator-model latency per window is {:.1} µs @10 MHz (Table I); the numbers\n\
+         above are host-serving latencies of this coordinator, not the ASIC estimate.",
+        crate::params::PREDICT_LATENCY_S * 1e6
+    );
+    Ok(())
+}
+
+fn coordinator_is_pjrt(c: &Coordinator) -> bool {
+    matches!(c.backend, Backend::Pjrt { .. })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthPatient};
+    use crate::params::FRAMES_PER_PREDICTION;
+
+    fn tiny_streams(n: usize) -> Vec<StreamSpec> {
+        let synth = SynthConfig {
+            records_per_patient: 2,
+            pre_s: 4.0,
+            ictal_s: 3.0,
+            post_s: 1.0,
+            ..Default::default()
+        };
+        (0..n)
+            .map(|i| {
+                let p = SynthPatient::generate(&synth, i as u32 + 1);
+                let cfg = ClassifierConfig::optimized();
+                let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+                let am = pipeline::train_on_record(&mut enc, &p.records[0], cfg.train_density);
+                StreamSpec {
+                    session_id: i as u64 + 1,
+                    patient_id: i as u32 + 1,
+                    record: p.records[1].clone(),
+                    am,
+                    threshold: cfg.temporal_threshold,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn native_streaming_end_to_end() {
+        let streams = tiny_streams(2);
+        let expected_windows: u64 = streams
+            .iter()
+            .map(|s| (s.record.num_samples() / FRAMES_PER_PREDICTION) as u64)
+            .sum();
+        let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+        let report = coordinator.run(streams).unwrap();
+        assert_eq!(report.metrics.windows_completed, expected_windows);
+        assert_eq!(report.metrics.windows_failed, 0);
+        assert_eq!(report.sessions.len(), 2);
+        assert_eq!(report.summary.seizures, 2);
+        // The synthetic seizures are strong; the native path must detect.
+        assert!(report.summary.detected >= 1);
+        for s in &report.sessions {
+            assert!(s.windows > 0);
+        }
+    }
+
+    #[test]
+    fn native_matches_offline_pipeline() {
+        // The streaming path must produce exactly the predictions the
+        // offline pipeline produces for the same record + model.
+        let streams = tiny_streams(1);
+        let record = streams[0].record.clone();
+        let am = streams[0].am.clone();
+        let cfg = ClassifierConfig::optimized();
+
+        let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+        let report = coordinator.run(streams).unwrap();
+
+        let mut clf = crate::hdc::classifier::Classifier::new(
+            Variant::Optimized,
+            cfg,
+            am,
+        );
+        let offline = pipeline::run_on_record(&mut clf, &record);
+        let streamed = &report.sessions[0];
+        assert_eq!(streamed.windows as usize, offline.len());
+        // Re-evaluate: detection outcome must agree.
+        let offline_eval = evaluate_record(
+            &record,
+            &offline,
+            AlarmPolicy { consecutive: 1 },
+            pipeline::DETECT_GRACE_S,
+        );
+        assert_eq!(streamed.eval.detected, offline_eval.detected);
+        assert_eq!(streamed.eval.delay_s, offline_eval.delay_s);
+    }
+}

@@ -1,0 +1,165 @@
+//! Per-patient session state: LBP front-end → frame assembly → window
+//! submission, plus the trained model (AM + threshold) and detector.
+
+use std::sync::Arc;
+
+use crate::coordinator::detector::Detector;
+use crate::data::metrics::WindowPrediction;
+use crate::hdc::am::AssociativeMemory;
+use crate::lbp::LbpFrontend;
+use crate::params::{CHANNELS, FRAMES_PER_PREDICTION};
+
+/// A fully-assembled prediction window ready for an engine.
+pub struct ReadyWindow {
+    pub session_id: u64,
+    pub seq: u64,
+    /// Frame-major codes `[FRAMES_PER_PREDICTION * CHANNELS]`.
+    pub codes: Vec<u8>,
+}
+
+/// Per-patient streaming session.
+pub struct Session {
+    pub id: u64,
+    pub patient_id: u32,
+    lbp: LbpFrontend,
+    window: Vec<u8>,
+    frames_in_window: usize,
+    next_seq: u64,
+    /// Trained model deployed on this session.
+    pub am: Arc<Vec<i32>>,
+    pub am_native: AssociativeMemory,
+    pub threshold: u16,
+    pub detector: Detector,
+    /// Collected predictions (for offline scoring after the stream ends).
+    pub predictions: Vec<WindowPrediction>,
+}
+
+impl Session {
+    pub fn new(
+        id: u64,
+        patient_id: u32,
+        am: AssociativeMemory,
+        threshold: u16,
+        consecutive: usize,
+    ) -> Self {
+        Session {
+            id,
+            patient_id,
+            lbp: LbpFrontend::new(),
+            window: Vec::with_capacity(FRAMES_PER_PREDICTION * CHANNELS),
+            frames_in_window: 0,
+            next_seq: 0,
+            am: Arc::new(am.to_i32s()),
+            am_native: am,
+            threshold,
+            detector: Detector::new(consecutive),
+            predictions: Vec::new(),
+        }
+    }
+
+    /// Feed one multichannel sample; returns a window when 256 frames have
+    /// been assembled.
+    pub fn push_sample(&mut self, sample: &[f32; CHANNELS]) -> Option<ReadyWindow> {
+        let codes = self.lbp.push(sample);
+        self.window.extend_from_slice(&codes);
+        self.frames_in_window += 1;
+        if self.frames_in_window < FRAMES_PER_PREDICTION {
+            return None;
+        }
+        let codes = std::mem::replace(
+            &mut self.window,
+            Vec::with_capacity(FRAMES_PER_PREDICTION * CHANNELS),
+        );
+        self.frames_in_window = 0;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Some(ReadyWindow {
+            session_id: self.id,
+            seq,
+            codes,
+        })
+    }
+
+    /// Record a completed prediction and run the detector.
+    /// Returns `Some(event)` when an alarm fires.
+    pub fn complete(
+        &mut self,
+        seq: u64,
+        is_ictal: bool,
+        margin: i64,
+    ) -> Option<crate::coordinator::detector::AlarmEvent> {
+        self.predictions.push(WindowPrediction {
+            idx: seq as usize,
+            is_ictal,
+            margin,
+        });
+        self.detector.push(seq, is_ictal, margin)
+    }
+
+    /// Windows emitted so far.
+    pub fn windows(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Reset stream state (new record), keeping the trained model.
+    pub fn reset_stream(&mut self) {
+        self.lbp.reset();
+        self.window.clear();
+        self.frames_in_window = 0;
+        self.next_seq = 0;
+        self.detector.reset();
+        self.predictions.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::hv::Hv;
+
+    fn session() -> Session {
+        Session::new(1, 11, AssociativeMemory::new(Hv::zero(), Hv::ones()), 130, 1)
+    }
+
+    #[test]
+    fn emits_window_every_256_samples() {
+        let mut s = session();
+        let sample = [0f32; CHANNELS];
+        for i in 0..FRAMES_PER_PREDICTION * 2 {
+            let w = s.push_sample(&sample);
+            if (i + 1) % FRAMES_PER_PREDICTION == 0 {
+                let w = w.expect("window boundary");
+                assert_eq!(w.codes.len(), FRAMES_PER_PREDICTION * CHANNELS);
+                assert_eq!(w.seq, (i / FRAMES_PER_PREDICTION) as u64);
+            } else {
+                assert!(w.is_none());
+            }
+        }
+        assert_eq!(s.windows(), 2);
+    }
+
+    #[test]
+    fn complete_collects_predictions_and_alarms() {
+        let mut s = session();
+        assert!(s.complete(0, false, -3).is_none());
+        let e = s.complete(1, true, 7).expect("alarm");
+        assert_eq!(e.window_idx, 1);
+        assert_eq!(s.predictions.len(), 2);
+        assert!(s.predictions[1].is_ictal);
+    }
+
+    #[test]
+    fn reset_stream_keeps_model() {
+        let mut s = session();
+        let sample = [1f32; CHANNELS];
+        for _ in 0..100 {
+            s.push_sample(&sample);
+        }
+        s.complete(0, true, 1);
+        let am = s.am.clone();
+        s.reset_stream();
+        assert_eq!(s.windows(), 0);
+        assert!(s.predictions.is_empty());
+        assert!(Arc::ptr_eq(&am, &s.am));
+    }
+}

@@ -1,0 +1,194 @@
+//! Dataset containers and a simple binary on-disk format.
+//!
+//! Records are stored in a dependency-free little-endian binary format
+//! (`.ieeg`): the coordinator's file source streams these, and `repro
+//! gen-data` writes them. Layout:
+//!
+//! ```text
+//! magic  u32  = 0x1EEC_0DA7
+//! version u32 = 1
+//! channels u32, fs_mhz u32 (fs * 1000)
+//! n_samples u64
+//! has_seizure u8; if 1: onset u64, offset u64
+//! samples: n_samples * channels * f32 (time-major)
+//! ```
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use crate::params::CHANNELS;
+
+use super::synth::{Record, Seizure};
+
+const MAGIC: u32 = 0x1EEC_0DA7;
+const VERSION: u32 = 1;
+
+/// Write one record to `path`.
+pub fn save_record(record: &Record, path: &Path) -> crate::Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(&MAGIC.to_le_bytes())?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(CHANNELS as u32).to_le_bytes())?;
+    w.write_all(&((record.fs * 1000.0) as u32).to_le_bytes())?;
+    w.write_all(&(record.num_samples() as u64).to_le_bytes())?;
+    match record.seizure {
+        Some(s) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&(s.onset as u64).to_le_bytes())?;
+            w.write_all(&(s.offset as u64).to_le_bytes())?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
+    for &x in &record.samples {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load one record from `path`.
+pub fn load_record(path: &Path) -> crate::Result<Record> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+
+    let mut u32buf = [0u8; 4];
+    let mut u64buf = [0u8; 8];
+    let mut read_u32 = |r: &mut BufReader<File>| -> crate::Result<u32> {
+        r.read_exact(&mut u32buf)?;
+        Ok(u32::from_le_bytes(u32buf))
+    };
+
+    let magic = read_u32(&mut r)?;
+    if magic != MAGIC {
+        bail!("bad magic {magic:#x} in {}", path.display());
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported version {version}");
+    }
+    let channels = read_u32(&mut r)? as usize;
+    if channels != CHANNELS {
+        bail!("record has {channels} channels, build expects {CHANNELS}");
+    }
+    let fs = read_u32(&mut r)? as f64 / 1000.0;
+
+    r.read_exact(&mut u64buf)?;
+    let n_samples = u64::from_le_bytes(u64buf) as usize;
+
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let seizure = if flag[0] == 1 {
+        r.read_exact(&mut u64buf)?;
+        let onset = u64::from_le_bytes(u64buf) as usize;
+        r.read_exact(&mut u64buf)?;
+        let offset = u64::from_le_bytes(u64buf) as usize;
+        Some(Seizure { onset, offset })
+    } else {
+        None
+    };
+
+    let mut bytes = vec![0u8; n_samples * CHANNELS * 4];
+    r.read_exact(&mut bytes)
+        .with_context(|| format!("truncated sample payload in {}", path.display()))?;
+    let samples = bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+        .collect();
+
+    Ok(Record {
+        samples,
+        seizure,
+        fs,
+    })
+}
+
+/// A patient directory: `patient_<id>/record_<k>.ieeg`.
+pub fn save_patient(
+    records: &[Record],
+    dir: &Path,
+    patient_id: u32,
+) -> crate::Result<Vec<std::path::PathBuf>> {
+    let pdir = dir.join(format!("patient_{patient_id:02}"));
+    std::fs::create_dir_all(&pdir)?;
+    let mut paths = Vec::new();
+    for (k, rec) in records.iter().enumerate() {
+        let path = pdir.join(format!("record_{k:02}.ieeg"));
+        save_record(rec, &path)?;
+        paths.push(path);
+    }
+    Ok(paths)
+}
+
+/// Load all records of a patient directory, sorted by record index.
+pub fn load_patient(dir: &Path, patient_id: u32) -> crate::Result<Vec<Record>> {
+    let pdir = dir.join(format!("patient_{patient_id:02}"));
+    let mut entries: Vec<_> = std::fs::read_dir(&pdir)
+        .with_context(|| format!("read {}", pdir.display()))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|e| e == "ieeg").unwrap_or(false))
+        .collect();
+    entries.sort();
+    entries.iter().map(|p| load_record(p)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthConfig, SynthPatient};
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = SynthConfig {
+            pre_s: 1.0,
+            ictal_s: 1.0,
+            post_s: 0.5,
+            records_per_patient: 1,
+            ..Default::default()
+        };
+        let p = SynthPatient::generate(&cfg, 1);
+        let dir = std::env::temp_dir().join(format!("hdc_ds_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.ieeg");
+        save_record(&p.records[0], &path).unwrap();
+        let loaded = load_record(&path).unwrap();
+        assert_eq!(loaded.samples, p.records[0].samples);
+        assert_eq!(loaded.seizure, p.records[0].seizure);
+        assert_eq!(loaded.fs, p.records[0].fs);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn patient_roundtrip_and_ordering() {
+        let cfg = SynthConfig {
+            pre_s: 0.5,
+            ictal_s: 0.5,
+            post_s: 0.2,
+            records_per_patient: 3,
+            ..Default::default()
+        };
+        let p = SynthPatient::generate(&cfg, 2);
+        let dir = std::env::temp_dir().join(format!("hdc_pat_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        save_patient(&p.records, &dir, 2).unwrap();
+        let loaded = load_patient(&dir, 2).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for (a, b) in loaded.iter().zip(&p.records) {
+            assert_eq!(a.samples, b.samples);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hdc_bad_{}.ieeg", std::process::id()));
+        std::fs::write(&path, [0u8; 64]).unwrap();
+        assert!(load_record(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

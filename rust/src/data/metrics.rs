@@ -1,0 +1,351 @@
+//! Detection metrics — paper §IV-A.
+//!
+//! * **detection delay**: time from the expert-marked electrographic onset
+//!   to the moment the detector first raises an alarm (prediction windows
+//!   are emitted at their *end*, so the minimum achievable delay is up to
+//!   one window period after onset).
+//! * **detection accuracy**: fraction of test seizures detected (an alarm
+//!   inside `[onset, offset + grace]`).
+//! * **false alarms**: alarm events (runs of consecutive ictal windows)
+//!   entirely before the onset, normalised per hour.
+//! * **window accuracy**: per-window classification accuracy (diagnostic).
+
+use crate::params::{FRAMES_PER_PREDICTION, SAMPLE_RATE_HZ};
+
+use super::synth::Record;
+
+/// One classifier output for one prediction window.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowPrediction {
+    /// Window index: covers samples `[idx * W, (idx+1) * W)`.
+    pub idx: usize,
+    pub is_ictal: bool,
+    /// Decision margin (ictal score − interictal score).
+    pub margin: i64,
+}
+
+/// Alarm policy: raise after `consecutive` ictal windows in a row.
+#[derive(Clone, Copy, Debug)]
+pub struct AlarmPolicy {
+    pub consecutive: usize,
+}
+
+impl Default for AlarmPolicy {
+    fn default() -> Self {
+        AlarmPolicy { consecutive: 1 }
+    }
+}
+
+/// Outcome of evaluating one record.
+#[derive(Clone, Debug)]
+pub struct RecordOutcome {
+    /// Detected within the grace interval (None when the record has no
+    /// seizure).
+    pub detected: Option<bool>,
+    /// Delay in seconds from onset to the first alarm (only when detected).
+    pub delay_s: Option<f64>,
+    /// Alarm events entirely pre-onset (or any alarms in seizure-free
+    /// records).
+    pub false_alarms: usize,
+    /// Record duration (for FA/h normalisation).
+    pub duration_s: f64,
+    /// Fraction of windows classified correctly against the annotation.
+    pub window_accuracy: f64,
+}
+
+/// Sample index at which a window's prediction is emitted.
+#[inline]
+pub fn window_end_sample(idx: usize) -> usize {
+    (idx + 1) * FRAMES_PER_PREDICTION
+}
+
+/// True window label: majority of the window's samples inside the ictal
+/// interval (consistent with `hdc::train`).
+pub fn window_label(record: &Record, idx: usize) -> bool {
+    let start = idx * FRAMES_PER_PREDICTION;
+    let end = window_end_sample(idx).min(record.num_samples());
+    if start >= end {
+        return false;
+    }
+    let ictal = (start..end).filter(|&t| record.is_ictal(t)).count();
+    ictal * 2 > end - start
+}
+
+/// Evaluate window predictions against a record's annotation.
+///
+/// `grace_s`: a seizure counts as detected if the alarm fires between the
+/// onset and `offset + grace_s`.
+pub fn evaluate_record(
+    record: &Record,
+    predictions: &[WindowPrediction],
+    policy: AlarmPolicy,
+    grace_s: f64,
+) -> RecordOutcome {
+    let fs = record.fs;
+    // Build alarm events: runs of >= policy.consecutive ictal windows.
+    // An alarm fires at the end sample of the `consecutive`-th window of
+    // the run.
+    let mut alarms: Vec<usize> = Vec::new(); // alarm sample indices
+    let mut run = 0usize;
+    for p in predictions {
+        if p.is_ictal {
+            run += 1;
+            if run == policy.consecutive {
+                alarms.push(window_end_sample(p.idx));
+            }
+        } else {
+            run = 0;
+        }
+    }
+
+    // Window-level accuracy.
+    let mut correct = 0usize;
+    for p in predictions {
+        if p.is_ictal == window_label(record, p.idx) {
+            correct += 1;
+        }
+    }
+    let window_accuracy = if predictions.is_empty() {
+        1.0
+    } else {
+        correct as f64 / predictions.len() as f64
+    };
+
+    let duration_s = record.duration_s();
+
+    match record.seizure {
+        Some(s) => {
+            let grace_end = s.offset + (grace_s * fs) as usize;
+            let mut detected = false;
+            let mut delay_s = None;
+            let mut false_alarms = 0usize;
+            for &a in &alarms {
+                if a < s.onset {
+                    false_alarms += 1;
+                } else if a <= grace_end && !detected {
+                    detected = true;
+                    delay_s = Some((a - s.onset) as f64 / fs);
+                }
+            }
+            RecordOutcome {
+                detected: Some(detected),
+                delay_s,
+                false_alarms,
+                duration_s,
+                window_accuracy,
+            }
+        }
+        None => RecordOutcome {
+            detected: None,
+            delay_s: None,
+            false_alarms: alarms.len(),
+            duration_s,
+            window_accuracy,
+        },
+    }
+}
+
+/// Aggregate over records / patients.
+#[derive(Clone, Debug, Default)]
+pub struct EvalSummary {
+    pub seizures: usize,
+    pub detected: usize,
+    pub delays_s: Vec<f64>,
+    pub false_alarms: usize,
+    pub total_hours: f64,
+    pub window_accuracy_sum: f64,
+    pub records: usize,
+}
+
+impl EvalSummary {
+    pub fn add(&mut self, o: &RecordOutcome) {
+        if let Some(det) = o.detected {
+            self.seizures += 1;
+            if det {
+                self.detected += 1;
+                if let Some(d) = o.delay_s {
+                    self.delays_s.push(d);
+                }
+            }
+        }
+        self.false_alarms += o.false_alarms;
+        self.total_hours += o.duration_s / 3600.0;
+        self.window_accuracy_sum += o.window_accuracy;
+        self.records += 1;
+    }
+
+    pub fn merge(&mut self, other: &EvalSummary) {
+        self.seizures += other.seizures;
+        self.detected += other.detected;
+        self.delays_s.extend_from_slice(&other.delays_s);
+        self.false_alarms += other.false_alarms;
+        self.total_hours += other.total_hours;
+        self.window_accuracy_sum += other.window_accuracy_sum;
+        self.records += other.records;
+    }
+
+    /// Fraction of seizures detected — the paper's "detection accuracy".
+    pub fn detection_accuracy(&self) -> f64 {
+        if self.seizures == 0 {
+            return 0.0;
+        }
+        self.detected as f64 / self.seizures as f64
+    }
+
+    /// Mean detection delay over detected seizures (s). Undetected
+    /// seizures are *excluded* (the accuracy metric captures them).
+    pub fn mean_delay_s(&self) -> f64 {
+        if self.delays_s.is_empty() {
+            return f64::NAN;
+        }
+        self.delays_s.iter().sum::<f64>() / self.delays_s.len() as f64
+    }
+
+    pub fn false_alarms_per_hour(&self) -> f64 {
+        if self.total_hours <= 0.0 {
+            return 0.0;
+        }
+        self.false_alarms as f64 / self.total_hours
+    }
+
+    pub fn mean_window_accuracy(&self) -> f64 {
+        if self.records == 0 {
+            return 0.0;
+        }
+        self.window_accuracy_sum / self.records as f64
+    }
+}
+
+/// Convenience: seconds per prediction window.
+pub fn window_period_s() -> f64 {
+    FRAMES_PER_PREDICTION as f64 / SAMPLE_RATE_HZ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::Seizure;
+    use crate::params::CHANNELS;
+
+    fn record_with_seizure(n_windows: usize, onset_window: usize, offset_window: usize) -> Record {
+        let n = n_windows * FRAMES_PER_PREDICTION;
+        Record {
+            samples: vec![0f32; n * CHANNELS],
+            seizure: Some(Seizure {
+                onset: onset_window * FRAMES_PER_PREDICTION,
+                offset: offset_window * FRAMES_PER_PREDICTION,
+            }),
+            fs: SAMPLE_RATE_HZ,
+        }
+    }
+
+    fn preds(labels: &[bool]) -> Vec<WindowPrediction> {
+        labels
+            .iter()
+            .enumerate()
+            .map(|(idx, &is_ictal)| WindowPrediction {
+                idx,
+                is_ictal,
+                margin: if is_ictal { 1 } else { -1 },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn perfect_detection_has_one_window_delay() {
+        let rec = record_with_seizure(10, 4, 8);
+        // Ictal predicted exactly on the ictal windows 4..8.
+        let p = preds(&[false, false, false, false, true, true, true, true, false, false]);
+        let o = evaluate_record(&rec, &p, AlarmPolicy::default(), 10.0);
+        assert_eq!(o.detected, Some(true));
+        // First alarm at end of window 4 = sample 5*256; onset = 4*256 →
+        // delay = 256 samples = 0.5 s.
+        assert!((o.delay_s.unwrap() - 0.5).abs() < 1e-9);
+        assert_eq!(o.false_alarms, 0);
+        assert!((o.window_accuracy - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn late_detection_increases_delay() {
+        let rec = record_with_seizure(10, 4, 8);
+        let p = preds(&[false, false, false, false, false, false, true, true, false, false]);
+        let o = evaluate_record(&rec, &p, AlarmPolicy::default(), 10.0);
+        assert_eq!(o.detected, Some(true));
+        assert!((o.delay_s.unwrap() - 1.5).abs() < 1e-9); // window 6 ends 3 windows after onset
+    }
+
+    #[test]
+    fn missed_seizure() {
+        let rec = record_with_seizure(10, 4, 8);
+        let p = preds(&[false; 10]);
+        let o = evaluate_record(&rec, &p, AlarmPolicy::default(), 10.0);
+        assert_eq!(o.detected, Some(false));
+        assert!(o.delay_s.is_none());
+    }
+
+    #[test]
+    fn pre_onset_alarms_are_false_alarms() {
+        let rec = record_with_seizure(10, 4, 8);
+        let p = preds(&[true, false, false, false, true, true, true, true, false, false]);
+        let o = evaluate_record(&rec, &p, AlarmPolicy::default(), 10.0);
+        assert_eq!(o.false_alarms, 1);
+        assert_eq!(o.detected, Some(true));
+    }
+
+    #[test]
+    fn consecutive_policy_suppresses_singletons() {
+        let rec = record_with_seizure(10, 4, 8);
+        let p = preds(&[true, false, true, false, true, true, true, true, false, false]);
+        let o = evaluate_record(
+            &rec,
+            &p,
+            AlarmPolicy { consecutive: 2 },
+            10.0,
+        );
+        assert_eq!(o.false_alarms, 0, "isolated pre-onset windows filtered");
+        assert_eq!(o.detected, Some(true));
+        // Alarm fires at end of window 5 (second consecutive) → delay 1.0 s.
+        assert!((o.delay_s.unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seizure_free_record_counts_all_alarms_false() {
+        let rec = Record {
+            samples: vec![0f32; 10 * FRAMES_PER_PREDICTION * CHANNELS],
+            seizure: None,
+            fs: SAMPLE_RATE_HZ,
+        };
+        let p = preds(&[false, true, false, false, true, true, false, false, false, false]);
+        let o = evaluate_record(&rec, &p, AlarmPolicy::default(), 10.0);
+        assert_eq!(o.detected, None);
+        assert_eq!(o.false_alarms, 2); // two runs
+    }
+
+    #[test]
+    fn summary_aggregation() {
+        let rec = record_with_seizure(10, 4, 8);
+        let hit = evaluate_record(
+            &rec,
+            &preds(&[false, false, false, false, true, true, true, true, false, false]),
+            AlarmPolicy::default(),
+            10.0,
+        );
+        let miss = evaluate_record(&rec, &preds(&[false; 10]), AlarmPolicy::default(), 10.0);
+        let mut sum = EvalSummary::default();
+        sum.add(&hit);
+        sum.add(&miss);
+        assert_eq!(sum.seizures, 2);
+        assert_eq!(sum.detected, 1);
+        assert!((sum.detection_accuracy() - 0.5).abs() < 1e-9);
+        assert!((sum.mean_delay_s() - 0.5).abs() < 1e-9);
+        assert!(sum.false_alarms_per_hour() == 0.0);
+    }
+
+    #[test]
+    fn window_label_majority() {
+        let rec = record_with_seizure(4, 1, 2);
+        assert!(!window_label(&rec, 0));
+        assert!(window_label(&rec, 1));
+        assert!(!window_label(&rec, 2));
+    }
+}

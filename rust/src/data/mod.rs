@@ -1,0 +1,12 @@
+//! Data substrate: synthetic iEEG generation, dataset containers and
+//! detection metrics.
+//!
+//! The paper evaluates on the one-shot-learning subset of the SWEC-ETHZ
+//! iEEG dataset (via Burrello'18), which is not redistributable; DESIGN.md
+//! §2 documents the substitution: [`synth`] generates per-patient iEEG-like
+//! records whose *LBP statistics* (the only thing the classifier sees)
+//! mirror the interictal/ictal contrast of the real data.
+
+pub mod synth;
+pub mod dataset;
+pub mod metrics;

@@ -1,0 +1,400 @@
+//! Synthetic iEEG generator — the dataset substitution (DESIGN.md §2).
+//!
+//! Each *patient* has a stable electrographic signature drawn from a
+//! patient-seeded RNG: a set of seizure-focus electrodes, a dominant ictal
+//! rhythm (3–12 Hz, drifting), a propagation pattern to non-focus
+//! electrodes and an onset build-up time. Each *record* holds one seizure
+//! flanked by interictal background, mirroring the one-shot-learning
+//! protocol of Burrello'18 (train on seizure 1, test on the others).
+//!
+//! Background activity is AR(1)-filtered noise (a serviceable stand-in for
+//! the 1/f iEEG spectrum as seen by a *sign-of-difference* front-end);
+//! seizures superimpose a rhythmic oscillation with an amplitude ramp.
+//! What must be faithful for the reproduction is the **LBP code
+//! statistics**: near-uniform code usage interictally versus strongly
+//! concentrated run-length codes (long monotone stretches) ictally, focused
+//! on a patient-specific electrode subset — exactly the contrast the HDC
+//! classifier exploits.
+
+use crate::params::{CHANNELS, SAMPLE_RATE_HZ};
+use crate::rng::Xoshiro256;
+
+/// Seizure annotation, in samples (expert-marked electrographic onset;
+/// paper §IV-A measures detection delay from this point).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Seizure {
+    pub onset: usize,
+    pub offset: usize,
+}
+
+impl Seizure {
+    pub fn contains(&self, sample: usize) -> bool {
+        (self.onset..self.offset).contains(&sample)
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        (self.offset - self.onset) as f64 / SAMPLE_RATE_HZ
+    }
+}
+
+/// One continuous multichannel recording with (at most) one seizure.
+#[derive(Clone)]
+pub struct Record {
+    /// Samples, time-major: `samples[t * CHANNELS + c]`.
+    pub samples: Vec<f32>,
+    pub seizure: Option<Seizure>,
+    pub fs: f64,
+}
+
+impl Record {
+    pub fn num_samples(&self) -> usize {
+        self.samples.len() / CHANNELS
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.num_samples() as f64 / self.fs
+    }
+
+    /// Multichannel sample at time `t`.
+    #[inline]
+    pub fn sample(&self, t: usize) -> &[f32] {
+        &self.samples[t * CHANNELS..(t + 1) * CHANNELS]
+    }
+
+    #[inline]
+    pub fn sample_array(&self, t: usize) -> [f32; CHANNELS] {
+        let mut out = [0f32; CHANNELS];
+        out.copy_from_slice(self.sample(t));
+        out
+    }
+
+    /// Is sample `t` inside the annotated ictal interval?
+    #[inline]
+    pub fn is_ictal(&self, t: usize) -> bool {
+        self.seizure.map(|s| s.contains(t)).unwrap_or(false)
+    }
+}
+
+/// Generator configuration (defaults follow DESIGN.md §2).
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    /// Records (one seizure each) per patient. One-shot protocol: record 0
+    /// trains, records 1.. test.
+    pub records_per_patient: usize,
+    /// Interictal lead-in before the seizure (seconds).
+    pub pre_s: f64,
+    /// Seizure duration (seconds).
+    pub ictal_s: f64,
+    /// Interictal tail after the seizure (seconds).
+    pub post_s: f64,
+    /// Background noise scale.
+    pub noise: f64,
+    /// Peak ictal oscillation amplitude (relative to noise).
+    pub ictal_gain: f64,
+    /// Seconds for the ictal amplitude to ramp from 0 to peak.
+    pub buildup_s: f64,
+    /// Number of focus electrodes (others receive attenuated spread).
+    pub focus_channels: usize,
+    /// Attenuation of the rhythm on non-focus electrodes.
+    pub spread: f64,
+    /// Master seed (combined with the patient id).
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            records_per_patient: 5,
+            pre_s: 60.0,
+            ictal_s: 30.0,
+            post_s: 30.0,
+            noise: 1.0,
+            ictal_gain: 14.0,
+            buildup_s: 4.0,
+            focus_channels: 12,
+            spread: 0.25,
+            seed: 0xDA7A_5EED,
+        }
+    }
+}
+
+impl SynthConfig {
+    /// A short configuration for fast tests.
+    pub fn tiny() -> Self {
+        SynthConfig {
+            records_per_patient: 2,
+            pre_s: 6.0,
+            ictal_s: 4.0,
+            post_s: 2.0,
+            ..Default::default()
+        }
+    }
+}
+
+/// Patient-level signature (stable across that patient's records).
+#[derive(Clone, Debug)]
+pub struct PatientProfile {
+    pub id: u32,
+    pub focus: Vec<usize>,
+    /// Dominant ictal rhythm in Hz.
+    pub rhythm_hz: f64,
+    /// Per-channel phase offsets of the rhythm.
+    pub phase: Vec<f64>,
+    /// Patient-specific detectability scale (harder/easier patients —
+    /// drives the per-patient optimal density of Fig. 4).
+    pub severity: f64,
+}
+
+impl PatientProfile {
+    pub fn derive(cfg: &SynthConfig, id: u32) -> Self {
+        let mut rng = Xoshiro256::new(crate::rng::hash_chain(cfg.seed, &[0x9A71E17, id as u64]));
+        // Choose focus electrodes without replacement.
+        let mut all: Vec<usize> = (0..CHANNELS).collect();
+        let mut focus = Vec::with_capacity(cfg.focus_channels);
+        for _ in 0..cfg.focus_channels.min(CHANNELS) {
+            let i = rng.next_below(all.len() as u64) as usize;
+            focus.push(all.swap_remove(i));
+        }
+        focus.sort_unstable();
+        let rhythm_hz = 3.0 + rng.next_f64() * 9.0; // 3–12 Hz
+        let phase = (0..CHANNELS)
+            .map(|_| rng.next_f64() * std::f64::consts::TAU)
+            .collect();
+        let severity = 0.6 + rng.next_f64() * 0.8; // 0.6–1.4
+        PatientProfile {
+            id,
+            focus,
+            rhythm_hz,
+            phase,
+            severity,
+        }
+    }
+}
+
+/// A synthetic patient: profile + generated records.
+pub struct SynthPatient {
+    pub profile: PatientProfile,
+    pub records: Vec<Record>,
+}
+
+impl SynthPatient {
+    /// Generate all records for patient `id`.
+    pub fn generate(cfg: &SynthConfig, id: u32) -> Self {
+        let profile = PatientProfile::derive(cfg, id);
+        let records = (0..cfg.records_per_patient)
+            .map(|r| generate_record(cfg, &profile, r as u32))
+            .collect();
+        SynthPatient { profile, records }
+    }
+
+    /// One-shot protocol: the training record.
+    pub fn train_record(&self) -> &Record {
+        &self.records[0]
+    }
+
+    /// One-shot protocol: the test records.
+    pub fn test_records(&self) -> &[Record] {
+        &self.records[1..]
+    }
+}
+
+/// Generate a single record for a patient.
+pub fn generate_record(cfg: &SynthConfig, profile: &PatientProfile, record_idx: u32) -> Record {
+    let fs = SAMPLE_RATE_HZ;
+    let mut rng = Xoshiro256::new(crate::rng::hash_chain(
+        cfg.seed,
+        &[0x5E12, profile.id as u64, record_idx as u64],
+    ));
+    let n_pre = (cfg.pre_s * fs) as usize;
+    let n_ictal = (cfg.ictal_s * fs) as usize;
+    let n_post = (cfg.post_s * fs) as usize;
+    let n = n_pre + n_ictal + n_post;
+    let onset = n_pre;
+    let offset = n_pre + n_ictal;
+
+    let mut samples = vec![0f32; n * CHANNELS];
+    // AR(1) state per channel.
+    let mut ar = vec![0f64; CHANNELS];
+    let is_focus: Vec<bool> = {
+        let mut v = vec![false; CHANNELS];
+        for &f in &profile.focus {
+            v[f] = true;
+        }
+        v
+    };
+    // Per-record rhythm drift (seizures differ between records).
+    let rhythm = profile.rhythm_hz * (0.9 + 0.2 * rng.next_f64());
+    let drift = (rng.next_f64() - 0.5) * 0.02; // Hz per second
+    let peak = cfg.noise * cfg.ictal_gain * profile.severity;
+
+    let mut phase_acc = 0.0f64;
+    for t in 0..n {
+        let time_s = t as f64 / fs;
+        // Instantaneous rhythm frequency with slow drift.
+        let f_inst = (rhythm + drift * (time_s - cfg.pre_s)).max(1.0);
+        phase_acc += std::f64::consts::TAU * f_inst / fs;
+
+        // Ictal envelope: ramp over buildup_s, then sustain with slow
+        // waxing, then cut off at the annotated offset.
+        let env = if t >= onset && t < offset {
+            let since = (t - onset) as f64 / fs;
+            let ramp = (since / cfg.buildup_s).min(1.0);
+            let wax = 0.85 + 0.15 * (std::f64::consts::TAU * since / 7.0).sin();
+            ramp * wax
+        } else {
+            0.0
+        };
+
+        for c in 0..CHANNELS {
+            // Background: AR(1) low-passed white noise.
+            ar[c] = 0.97 * ar[c] + rng.next_gaussian() * cfg.noise * 0.35;
+            let mut x = ar[c];
+            if env > 0.0 {
+                let gain = if is_focus[c] { 1.0 } else { cfg.spread };
+                // Rhythm plus a first harmonic for sharper (spike-wave-ish)
+                // morphology; per-channel phase offsets model propagation.
+                let ph = phase_acc + profile.phase[c];
+                let osc = ph.sin() + 0.35 * (2.0 * ph).sin();
+                x += env * peak * gain * osc;
+                // Ictal state also raises broadband power.
+                x += env * rng.next_gaussian() * cfg.noise * 0.15 * gain;
+            }
+            samples[t * CHANNELS + c] = x as f32;
+        }
+    }
+
+    Record {
+        samples,
+        seizure: Some(Seizure { onset, offset }),
+        fs,
+    }
+}
+
+/// Generate a seizure-free interictal record (for false-alarm testing).
+pub fn generate_interictal(cfg: &SynthConfig, profile: &PatientProfile, seconds: f64) -> Record {
+    let fs = SAMPLE_RATE_HZ;
+    let mut rng = Xoshiro256::new(crate::rng::hash_chain(
+        cfg.seed,
+        &[0x1D1E, profile.id as u64],
+    ));
+    let n = (seconds * fs) as usize;
+    let mut samples = vec![0f32; n * CHANNELS];
+    let mut ar = vec![0f64; CHANNELS];
+    for t in 0..n {
+        for c in 0..CHANNELS {
+            ar[c] = 0.97 * ar[c] + rng.next_gaussian() * cfg.noise * 0.35;
+            samples[t * CHANNELS + c] = ar[c] as f32;
+        }
+    }
+    Record {
+        samples,
+        seizure: None,
+        fs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lbp::LbpFrontend;
+
+    #[test]
+    fn record_shape_and_annotation() {
+        let cfg = SynthConfig::tiny();
+        let p = SynthPatient::generate(&cfg, 1);
+        assert_eq!(p.records.len(), cfg.records_per_patient);
+        let r = &p.records[0];
+        let expect_n = ((cfg.pre_s + cfg.ictal_s + cfg.post_s) * SAMPLE_RATE_HZ) as usize;
+        assert_eq!(r.num_samples(), expect_n);
+        let s = r.seizure.unwrap();
+        assert_eq!(s.onset, (cfg.pre_s * SAMPLE_RATE_HZ) as usize);
+        assert!((s.duration_s() - cfg.ictal_s).abs() < 0.01);
+        assert!(!r.is_ictal(0));
+        assert!(r.is_ictal(s.onset));
+        assert!(!r.is_ictal(s.offset));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let cfg = SynthConfig::tiny();
+        let a = SynthPatient::generate(&cfg, 3);
+        let b = SynthPatient::generate(&cfg, 3);
+        assert_eq!(a.records[1].samples, b.records[1].samples);
+        assert_eq!(a.profile.focus, b.profile.focus);
+    }
+
+    #[test]
+    fn patients_differ() {
+        let cfg = SynthConfig::tiny();
+        let a = SynthPatient::generate(&cfg, 1);
+        let b = SynthPatient::generate(&cfg, 2);
+        assert_ne!(a.profile.focus, b.profile.focus);
+        assert_ne!(a.records[0].samples, b.records[0].samples);
+    }
+
+    #[test]
+    fn ictal_amplitude_rises_on_focus_channels() {
+        let cfg = SynthConfig::tiny();
+        let p = SynthPatient::generate(&cfg, 5);
+        let r = &p.records[0];
+        let s = r.seizure.unwrap();
+        let focus = p.profile.focus[0];
+        let rms = |range: std::ops::Range<usize>| {
+            let mut acc = 0.0f64;
+            for t in range.clone() {
+                let v = r.sample(t)[focus] as f64;
+                acc += v * v;
+            }
+            (acc / range.len() as f64).sqrt()
+        };
+        let pre = rms(s.onset / 2..s.onset);
+        let mid = rms(s.onset + (s.offset - s.onset) / 2..s.offset);
+        assert!(
+            mid > pre * 3.0,
+            "ictal RMS {mid} should dominate interictal {pre}"
+        );
+    }
+
+    #[test]
+    fn lbp_statistics_shift_during_seizure() {
+        // The property the classifier depends on: ictal LBP codes
+        // concentrate (long monotone runs), interictal codes spread out.
+        let cfg = SynthConfig::tiny();
+        let p = SynthPatient::generate(&cfg, 7);
+        let r = &p.records[0];
+        let s = r.seizure.unwrap();
+        let mut fe = LbpFrontend::new();
+        let mut inter_hist = [0u32; 64];
+        let mut ictal_hist = [0u32; 64];
+        for t in 0..r.num_samples() {
+            let codes = fe.push(&r.sample_array(t));
+            // Use a focus channel, skip ramp-up.
+            let code = codes[p.profile.focus[0]] as usize;
+            if t > 64 && t < s.onset {
+                inter_hist[code] += 1;
+            } else if t >= s.onset + (2.0 * SAMPLE_RATE_HZ) as usize && t < s.offset {
+                ictal_hist[code] += 1;
+            }
+        }
+        let concentration = |h: &[u32; 64]| {
+            let total: u32 = h.iter().sum();
+            // Fraction in the two monotone-run codes {0, 63}.
+            (h[0] + h[63]) as f64 / total.max(1) as f64
+        };
+        let ci = concentration(&inter_hist);
+        let cs = concentration(&ictal_hist);
+        assert!(
+            cs > 2.5 * ci && cs > ci + 0.08,
+            "ictal monotone-code fraction {cs} should clearly exceed interictal {ci}"
+        );
+    }
+
+    #[test]
+    fn interictal_record_has_no_seizure() {
+        let cfg = SynthConfig::tiny();
+        let profile = PatientProfile::derive(&cfg, 1);
+        let r = generate_interictal(&cfg, &profile, 3.0);
+        assert!(r.seizure.is_none());
+        assert_eq!(r.num_samples(), (3.0 * SAMPLE_RATE_HZ) as usize);
+    }
+}

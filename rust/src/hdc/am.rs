@@ -1,0 +1,123 @@
+//! Associative memory and similarity search — paper §II-D.
+//!
+//! The AM stores one class-representing HV per class (interictal, ictal).
+//! Sparse-HDC similarity is the overlap `popcount(query AND class)` —
+//! "there is no information in the 0-bits". The hardware computes the two
+//! class scores sequentially over two cycles with one AND-gate array +
+//! adder tree; the model exposes both scores plus the argmax.
+
+use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, NUM_CLASSES};
+
+use super::hv::Hv;
+
+/// The associative memory for the 2-class seizure detector.
+#[derive(Clone, Debug)]
+pub struct AssociativeMemory {
+    /// `classes[CLASS_INTERICTAL]`, `classes[CLASS_ICTAL]`.
+    pub classes: [Hv; NUM_CLASSES],
+}
+
+/// Result of one similarity search.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SearchResult {
+    /// Winning class index (ties break toward interictal, i.e. a strict
+    /// `ictal > interictal` comparator — conservative for false alarms).
+    pub class: usize,
+    /// Overlap scores per class.
+    pub scores: [u32; NUM_CLASSES],
+}
+
+impl SearchResult {
+    pub fn is_ictal(&self) -> bool {
+        self.class == CLASS_ICTAL
+    }
+
+    /// Signed margin `ictal - interictal` (decision confidence).
+    pub fn margin(&self) -> i64 {
+        self.scores[CLASS_ICTAL] as i64 - self.scores[CLASS_INTERICTAL] as i64
+    }
+}
+
+impl AssociativeMemory {
+    pub fn new(interictal: Hv, ictal: Hv) -> Self {
+        let mut classes = [Hv::zero(); NUM_CLASSES];
+        classes[CLASS_INTERICTAL] = interictal;
+        classes[CLASS_ICTAL] = ictal;
+        AssociativeMemory { classes }
+    }
+
+    /// Sparse similarity search: AND + popcount per class, argmax.
+    pub fn search(&self, query: &Hv) -> SearchResult {
+        let mut scores = [0u32; NUM_CLASSES];
+        for (i, class) in self.classes.iter().enumerate() {
+            scores[i] = query.overlap(class);
+        }
+        let class = if scores[CLASS_ICTAL] > scores[CLASS_INTERICTAL] {
+            CLASS_ICTAL
+        } else {
+            CLASS_INTERICTAL
+        };
+        SearchResult { class, scores }
+    }
+
+    /// Serialize to i32 planes for the PJRT artifacts (`int32[2,1024]`).
+    pub fn to_i32s(&self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(NUM_CLASSES * crate::params::DIM);
+        for c in &self.classes {
+            out.extend(c.to_i32s());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn search_prefers_overlapping_class() {
+        let mut rng = Xoshiro256::new(1);
+        let inter = Hv::random(&mut rng, 0.25);
+        let ictal = Hv::random(&mut rng, 0.25);
+        let am = AssociativeMemory::new(inter, ictal);
+        // Query = subset of ictal bits → ictal must win.
+        let query = ictal.and(&Hv::random(&mut rng, 0.8));
+        let r = am.search(&query);
+        assert!(r.is_ictal());
+        assert_eq!(r.scores[CLASS_ICTAL], query.overlap(&ictal));
+        assert!(r.margin() > 0);
+    }
+
+    #[test]
+    fn tie_breaks_interictal() {
+        let am = AssociativeMemory::new(Hv::zero(), Hv::zero());
+        let mut q = Hv::zero();
+        q.set(5, true);
+        let r = am.search(&q);
+        assert_eq!(r.class, CLASS_INTERICTAL);
+        assert_eq!(r.scores, [0, 0]);
+        assert_eq!(r.margin(), 0);
+    }
+
+    #[test]
+    fn scores_match_manual_overlap() {
+        let mut rng = Xoshiro256::new(2);
+        let inter = Hv::random(&mut rng, 0.3);
+        let ictal = Hv::random(&mut rng, 0.3);
+        let q = Hv::random(&mut rng, 0.25);
+        let am = AssociativeMemory::new(inter, ictal);
+        let r = am.search(&q);
+        assert_eq!(r.scores[0], q.overlap(&inter));
+        assert_eq!(r.scores[1], q.overlap(&ictal));
+    }
+
+    #[test]
+    fn i32_serialization_shape() {
+        let am = AssociativeMemory::new(Hv::zero(), Hv::ones());
+        let v = am.to_i32s();
+        assert_eq!(v.len(), NUM_CLASSES * crate::params::DIM);
+        assert!(v[..crate::params::DIM].iter().all(|&x| x == 0));
+        assert!(v[crate::params::DIM..].iter().all(|&x| x == 1));
+    }
+}

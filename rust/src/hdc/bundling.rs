@@ -1,0 +1,178 @@
+//! Spatial bundling — paper §II-C and §III-B.
+//!
+//! The spatial encoder combines the 64 bound HVs of one frame:
+//!
+//! * **baseline**: a per-element adder tree over the 64 inputs followed by
+//!   a thinning threshold (`count >= threshold` → 1),
+//! * **optimized**: the thinning is removed (64 HVs of density 0.78% can
+//!   reach at most 50% density, so the HV can never saturate) and the adder
+//!   trees collapse into OR trees.
+//!
+//! `OR == threshold 1` exactly; the baseline design point uses a
+//! configurable threshold ≥ 1 (the hyperparameter trades density against
+//! algorithmic performance, §II-C). Both implementations are provided in
+//! the bit domain (as the hardware computes) and in the position domain
+//! (as the CompIM-fed optimized datapath computes); equivalence is tested.
+
+use crate::params::{CHANNELS, DIM, SEG_LEN};
+
+use super::hv::Hv;
+use super::sparse::SparseHv;
+
+/// Per-element counts of 1-bits across a set of HVs (the adder-tree
+/// outputs). Max count = number of inputs (64 → fits u16 easily).
+pub fn element_counts(bound: &[Hv]) -> Box<[u16; DIM]> {
+    let mut counts = Box::new([0u16; DIM]);
+    for hv in bound {
+        for (w, &word) in hv.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                counts[w * 64 + b] += 1;
+                bits &= bits - 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Position-domain counts: scatter each bound HV's 8 positions.
+pub fn element_counts_pos(bound: &[SparseHv]) -> Box<[u16; DIM]> {
+    let mut counts = Box::new([0u16; DIM]);
+    for hv in bound {
+        for (s, &p) in hv.pos.iter().enumerate() {
+            counts[s * SEG_LEN + p as usize] += 1;
+        }
+    }
+    counts
+}
+
+/// Thinning: threshold the counts back to a binary HV.
+pub fn thin(counts: &[u16; DIM], threshold: u16) -> Hv {
+    Hv::from_fn(|i| counts[i] >= threshold)
+}
+
+/// Baseline spatial bundling: adder tree + thinning.
+pub fn bundle_adder_thin(bound: &[Hv], threshold: u16) -> Hv {
+    thin(&element_counts(bound), threshold)
+}
+
+/// Optimized spatial bundling: OR tree (no thinning), bit domain.
+pub fn bundle_or(bound: &[Hv]) -> Hv {
+    let mut out = Hv::zero();
+    for hv in bound {
+        out.or_assign(hv);
+    }
+    out
+}
+
+/// Optimized spatial bundling fed directly from position space (the
+/// CompIM datapath: 7→128 decode + OR tree).
+pub fn bundle_or_pos(bound: &[SparseHv]) -> Hv {
+    let mut out = Hv::zero();
+    for hv in bound {
+        for (s, &p) in hv.pos.iter().enumerate() {
+            out.set(s * SEG_LEN + p as usize, true);
+        }
+    }
+    out
+}
+
+/// Maximum possible density after bundling `n` sparse HVs (no-overlap
+/// bound) — the §III-B argument that thinning is unnecessary: for
+/// n = 64 channels this is 64·8/1024 = 50%.
+pub fn max_density_after_bundling(n: usize) -> f64 {
+    (n * crate::params::SEGMENTS) as f64 / DIM as f64
+}
+
+/// Expected density after bundling `n` independent random sparse HVs
+/// (birthday-style overlap): `1 - (1 - 1/SEG_LEN)^n` per element.
+pub fn expected_density_after_bundling(n: usize) -> f64 {
+    1.0 - (1.0 - 1.0 / SEG_LEN as f64).powi(n as i32)
+}
+
+/// Sanity helper: all-channels bundle width used by the hardware model.
+pub fn fan_in() -> usize {
+    CHANNELS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn random_bound(rng: &mut Xoshiro256, n: usize) -> (Vec<SparseHv>, Vec<Hv>) {
+        let pos: Vec<SparseHv> = (0..n).map(|_| SparseHv::random(rng)).collect();
+        let bits: Vec<Hv> = pos.iter().map(|p| p.to_hv()).collect();
+        (pos, bits)
+    }
+
+    #[test]
+    fn or_equals_threshold_one() {
+        let mut rng = Xoshiro256::new(1);
+        let (_, bits) = random_bound(&mut rng, CHANNELS);
+        assert_eq!(bundle_or(&bits), bundle_adder_thin(&bits, 1));
+    }
+
+    #[test]
+    fn position_and_bit_domain_agree() {
+        let mut rng = Xoshiro256::new(2);
+        let (pos, bits) = random_bound(&mut rng, CHANNELS);
+        assert_eq!(bundle_or_pos(&pos), bundle_or(&bits));
+        assert_eq!(*element_counts_pos(&pos), *element_counts(&bits));
+    }
+
+    #[test]
+    fn counts_sum_equals_total_ones() {
+        let mut rng = Xoshiro256::new(3);
+        let (_, bits) = random_bound(&mut rng, 10);
+        let counts = element_counts(&bits);
+        let total: u32 = counts.iter().map(|&c| c as u32).sum();
+        assert_eq!(total, 10 * crate::params::SEGMENTS as u32);
+    }
+
+    #[test]
+    fn higher_threshold_is_sparser() {
+        let mut rng = Xoshiro256::new(4);
+        let (_, bits) = random_bound(&mut rng, CHANNELS);
+        let d1 = bundle_adder_thin(&bits, 1).density();
+        let d2 = bundle_adder_thin(&bits, 2).density();
+        let d3 = bundle_adder_thin(&bits, 3).density();
+        assert!(d1 >= d2 && d2 >= d3);
+        assert!(d1 > 0.0);
+    }
+
+    #[test]
+    fn density_never_exceeds_max_bound() {
+        let mut rng = Xoshiro256::new(5);
+        for _ in 0..20 {
+            let (_, bits) = random_bound(&mut rng, CHANNELS);
+            let d = bundle_or(&bits).density();
+            assert!(d <= max_density_after_bundling(CHANNELS) + 1e-12);
+        }
+        assert!((max_density_after_bundling(CHANNELS) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_density_matches_simulation() {
+        let mut rng = Xoshiro256::new(6);
+        let n_trials = 200;
+        let mut acc = 0.0;
+        for _ in 0..n_trials {
+            let (_, bits) = random_bound(&mut rng, CHANNELS);
+            acc += bundle_or(&bits).density();
+        }
+        let sim = acc / n_trials as f64;
+        let expect = expected_density_after_bundling(CHANNELS);
+        assert!(
+            (sim - expect).abs() < 0.01,
+            "simulated {sim} vs analytic {expect}"
+        );
+    }
+
+    #[test]
+    fn empty_bundle_is_zero() {
+        assert_eq!(bundle_or(&[]), Hv::zero());
+        assert_eq!(bundle_adder_thin(&[], 1), Hv::zero());
+    }
+}

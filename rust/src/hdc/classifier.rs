@@ -1,0 +1,524 @@
+//! Assembled classifier pipelines for every design point of the paper.
+//!
+//! | [`Variant`]          | IM       | binding                | spatial bundling    | paper |
+//! |----------------------|----------|------------------------|---------------------|-------|
+//! | `DenseBaseline`      | dense    | XOR                    | majority            | [1]   |
+//! | `SparseBaseline`     | 1024-bit | decode + barrel shift  | adder tree + thin   | §II   |
+//! | `SparseCompIm`       | CompIM   | 7-bit add              | adder tree + thin   | §III-A|
+//! | `Optimized`          | CompIM   | 7-bit add              | OR tree (no thin)   | §III  |
+//!
+//! All sparse variants share the temporal encoder (8-bit counters +
+//! threshold) and the AND-popcount AM; the dense variant uses the majority
+//! temporal encoder and Hamming AM. `SparseBaseline`, `SparseCompIm` and
+//! `Optimized` with `spatial_threshold == 1` are bit-exact equal by
+//! construction — the tests pin this, because it is the paper's §III
+//! correctness claim.
+
+use crate::params::{
+    CHANNELS, DIM, IM_SEED, NUM_CLASSES, TEMPORAL_THRESHOLD_DEFAULT,
+};
+
+use super::am::{AssociativeMemory, SearchResult};
+use super::bundling;
+use super::compim::CompIm;
+use super::dense::{self, DenseTemporal};
+use super::hv::Hv;
+use super::im::{DenseItemMemory, ItemMemory};
+use super::sparse::{bind_bitdomain, SparseHv};
+use super::temporal::TemporalAccumulator;
+
+/// One frame of preprocessed input: the LBP code of every channel.
+pub type Frame = [u8; CHANNELS];
+
+/// The four hardware design points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    DenseBaseline,
+    SparseBaseline,
+    SparseCompIm,
+    Optimized,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 4] = [
+        Variant::DenseBaseline,
+        Variant::SparseBaseline,
+        Variant::SparseCompIm,
+        Variant::Optimized,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Variant::DenseBaseline => "dense-baseline",
+            Variant::SparseBaseline => "sparse-baseline",
+            Variant::SparseCompIm => "sparse-compim",
+            Variant::Optimized => "sparse-optimized",
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        !matches!(self, Variant::DenseBaseline)
+    }
+
+    pub fn from_name(s: &str) -> Option<Variant> {
+        Variant::ALL.iter().copied().find(|v| v.name() == s)
+    }
+}
+
+/// Tunable parameters of the classifier (hardware-fixed values live in
+/// [`crate::params`]).
+#[derive(Clone, Debug)]
+pub struct ClassifierConfig {
+    /// IM generation seed (shared with the Python compile path).
+    pub seed: u64,
+    /// Spatial thinning threshold for the adder-tree variants. `1` makes
+    /// the adder tree equivalent to the OR tree.
+    pub spatial_threshold: u16,
+    /// Temporal thinning threshold (paper operating point: 130 → query
+    /// density 20–30%).
+    pub temporal_threshold: u16,
+    /// Density target for the class HVs built during one-shot training.
+    pub train_density: f64,
+}
+
+impl Default for ClassifierConfig {
+    fn default() -> Self {
+        ClassifierConfig {
+            seed: IM_SEED,
+            spatial_threshold: 2,
+            temporal_threshold: TEMPORAL_THRESHOLD_DEFAULT,
+            train_density: 0.5,
+        }
+    }
+}
+
+impl ClassifierConfig {
+    /// The paper's optimized operating point (§IV-B).
+    pub fn optimized() -> Self {
+        ClassifierConfig {
+            spatial_threshold: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// Streaming encoder trait: feed one frame of LBP codes per clock cycle,
+/// receive a query HV every [`crate::params::FRAMES_PER_PREDICTION`]
+/// frames.
+pub trait Encoder {
+    /// Process one frame; returns the query HV when a prediction window
+    /// completes.
+    fn push_frame(&mut self, codes: &Frame) -> Option<Hv>;
+    /// Spatial encoding of a single frame (exposed for training and the
+    /// activity model).
+    fn spatial_encode(&mut self, codes: &Frame) -> Hv;
+    /// Drop any partial window.
+    fn reset(&mut self);
+    fn variant(&self) -> Variant;
+}
+
+/// The sparse encoder, covering `SparseBaseline`, `SparseCompIm` and
+/// `Optimized` (selected by [`Variant`]).
+pub struct SparseEncoder {
+    variant: Variant,
+    cfg: ClassifierConfig,
+    im: ItemMemory,
+    compim: CompIm,
+    temporal: TemporalAccumulator,
+    /// Scratch for the per-frame bound HVs (avoids 64 allocations/frame).
+    bound_bits: Vec<Hv>,
+    bound_pos: Vec<SparseHv>,
+}
+
+impl SparseEncoder {
+    pub fn new(variant: Variant, cfg: ClassifierConfig) -> Self {
+        assert!(variant.is_sparse(), "use DenseEncoder for the dense design");
+        let im = ItemMemory::generate(cfg.seed);
+        let compim = CompIm::from_item_memory(&im);
+        SparseEncoder {
+            variant,
+            cfg,
+            im,
+            compim,
+            temporal: TemporalAccumulator::new(),
+            bound_bits: Vec::with_capacity(CHANNELS),
+            bound_pos: Vec::with_capacity(CHANNELS),
+        }
+    }
+
+    pub fn config(&self) -> &ClassifierConfig {
+        &self.cfg
+    }
+
+    pub fn set_temporal_threshold(&mut self, t: u16) {
+        self.cfg.temporal_threshold = t;
+    }
+
+    pub fn item_memory(&self) -> &ItemMemory {
+        &self.im
+    }
+
+    pub fn comp_im(&self) -> &CompIm {
+        &self.compim
+    }
+
+    pub fn temporal(&self) -> &TemporalAccumulator {
+        &self.temporal
+    }
+
+    /// Bind all channels of one frame in the representation the variant's
+    /// hardware uses, then bundle spatially.
+    fn spatial_encode_inner(&mut self, codes: &Frame) -> Hv {
+        match self.variant {
+            Variant::SparseBaseline => {
+                // Baseline datapath: IM 1024-bit read → one-hot decode →
+                // barrel shift → adder tree + thinning.
+                self.bound_bits.clear();
+                for (c, &code) in codes.iter().enumerate() {
+                    let data = self.im.lookup_hv(c, code);
+                    let bound = bind_bitdomain(&self.im.electrode_hv(c), &data)
+                        .expect("IM entries are sparse by construction");
+                    self.bound_bits.push(bound);
+                }
+                bundling::bundle_adder_thin(&self.bound_bits, self.cfg.spatial_threshold)
+            }
+            Variant::SparseCompIm => {
+                // CompIM binding, but the baseline adder-tree bundling.
+                self.bound_pos.clear();
+                for (c, &code) in codes.iter().enumerate() {
+                    self.bound_pos.push(self.compim.bind(c, code));
+                }
+                let counts = bundling::element_counts_pos(&self.bound_pos);
+                bundling::thin(&counts, self.cfg.spatial_threshold)
+            }
+            Variant::Optimized => {
+                // CompIM binding + OR-tree bundling (no thinning).
+                self.bound_pos.clear();
+                for (c, &code) in codes.iter().enumerate() {
+                    self.bound_pos.push(self.compim.bind(c, code));
+                }
+                bundling::bundle_or_pos(&self.bound_pos)
+            }
+            Variant::DenseBaseline => unreachable!(),
+        }
+    }
+}
+
+impl SparseEncoder {
+    /// Like [`Encoder::push_frame`] but invokes `inspect` with the full
+    /// temporal accumulator right before a window is thinned — used by the
+    /// threshold-tuning pass (`pipeline::tune_temporal_threshold`).
+    pub fn push_frame_inspect(
+        &mut self,
+        codes: &Frame,
+        inspect: &mut dyn FnMut(&TemporalAccumulator),
+    ) -> Option<Hv> {
+        let spatial = self.spatial_encode_inner(codes);
+        self.temporal.add(&spatial);
+        if self.temporal.is_full() {
+            inspect(&self.temporal);
+            Some(self.temporal.finish(self.cfg.temporal_threshold))
+        } else {
+            None
+        }
+    }
+}
+
+impl Encoder for SparseEncoder {
+    fn push_frame(&mut self, codes: &Frame) -> Option<Hv> {
+        let spatial = self.spatial_encode_inner(codes);
+        self.temporal.add(&spatial);
+        if self.temporal.is_full() {
+            Some(self.temporal.finish(self.cfg.temporal_threshold))
+        } else {
+            None
+        }
+    }
+
+    fn spatial_encode(&mut self, codes: &Frame) -> Hv {
+        self.spatial_encode_inner(codes)
+    }
+
+    fn reset(&mut self) {
+        self.temporal.reset();
+    }
+
+    fn variant(&self) -> Variant {
+        self.variant
+    }
+}
+
+/// The dense encoder (Burrello'18 design point).
+pub struct DenseEncoder {
+    cfg: ClassifierConfig,
+    im: DenseItemMemory,
+    temporal: DenseTemporal,
+}
+
+impl DenseEncoder {
+    pub fn new(cfg: ClassifierConfig) -> Self {
+        DenseEncoder {
+            im: DenseItemMemory::generate(cfg.seed),
+            cfg,
+            temporal: DenseTemporal::new(),
+        }
+    }
+
+    pub fn item_memory(&self) -> &DenseItemMemory {
+        &self.im
+    }
+
+    pub fn config(&self) -> &ClassifierConfig {
+        &self.cfg
+    }
+}
+
+impl Encoder for DenseEncoder {
+    fn push_frame(&mut self, codes: &Frame) -> Option<Hv> {
+        let (spatial, _) = dense::dense_spatial_encode(&self.im, codes);
+        self.temporal.add(&spatial);
+        if self.temporal.is_full() {
+            let tie = *self.im.tiebreak(1);
+            Some(self.temporal.finish(&tie))
+        } else {
+            None
+        }
+    }
+
+    fn spatial_encode(&mut self, codes: &Frame) -> Hv {
+        dense::dense_spatial_encode(&self.im, codes).0
+    }
+
+    fn reset(&mut self) {
+        self.temporal.reset();
+    }
+
+    fn variant(&self) -> Variant {
+        Variant::DenseBaseline
+    }
+}
+
+/// Construct the encoder for a design point.
+pub fn make_encoder(variant: Variant, cfg: ClassifierConfig) -> Box<dyn Encoder + Send> {
+    match variant {
+        Variant::DenseBaseline => Box::new(DenseEncoder::new(cfg)),
+        _ => Box::new(SparseEncoder::new(variant, cfg)),
+    }
+}
+
+/// A full classifier: encoder + trained associative memory.
+pub struct Classifier {
+    pub encoder: Box<dyn Encoder + Send>,
+    pub am: AssociativeMemory,
+    variant: Variant,
+}
+
+impl Classifier {
+    pub fn new(variant: Variant, cfg: ClassifierConfig, am: AssociativeMemory) -> Self {
+        Classifier {
+            encoder: make_encoder(variant, cfg),
+            am,
+            variant,
+        }
+    }
+
+    pub fn from_encoder(encoder: Box<dyn Encoder + Send>, am: AssociativeMemory) -> Self {
+        let variant = encoder.variant();
+        Classifier {
+            encoder,
+            am,
+            variant,
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    /// Feed one frame; emits a classification every prediction window.
+    pub fn push_frame(&mut self, codes: &Frame) -> Option<SearchResult> {
+        let query = self.encoder.push_frame(codes)?;
+        Some(self.search(&query))
+    }
+
+    /// Similarity search appropriate to the variant: AND-popcount overlap
+    /// for sparse, Hamming for dense. Scores are normalized to
+    /// "bigger = more similar" (dense scores are `DIM - hamming`) so the
+    /// [`SearchResult`] contract is uniform.
+    pub fn search(&self, query: &Hv) -> SearchResult {
+        if self.variant.is_sparse() {
+            self.am.search(query)
+        } else {
+            let mut scores = [0u32; NUM_CLASSES];
+            for (i, class) in self.am.classes.iter().enumerate() {
+                scores[i] = DIM as u32 - query.hamming(class);
+            }
+            let class = if scores[crate::params::CLASS_ICTAL]
+                > scores[crate::params::CLASS_INTERICTAL]
+            {
+                crate::params::CLASS_ICTAL
+            } else {
+                crate::params::CLASS_INTERICTAL
+            };
+            SearchResult { class, scores }
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.encoder.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::FRAMES_PER_PREDICTION;
+    use crate::rng::Xoshiro256;
+
+    fn random_frames(n: usize, seed: u64) -> Vec<Frame> {
+        let mut rng = Xoshiro256::new(seed);
+        (0..n)
+            .map(|_| {
+                let mut f = [0u8; CHANNELS];
+                for c in f.iter_mut() {
+                    *c = rng.next_below(crate::params::LBP_CODES as u64) as u8;
+                }
+                f
+            })
+            .collect()
+    }
+
+    #[test]
+    fn emits_query_every_window() {
+        let mut enc = SparseEncoder::new(Variant::Optimized, ClassifierConfig::optimized());
+        let frames = random_frames(FRAMES_PER_PREDICTION * 2, 1);
+        let mut outputs = 0;
+        for (i, f) in frames.iter().enumerate() {
+            let out = enc.push_frame(f);
+            if (i + 1) % FRAMES_PER_PREDICTION == 0 {
+                assert!(out.is_some(), "frame {i}");
+                outputs += 1;
+            } else {
+                assert!(out.is_none(), "frame {i}");
+            }
+        }
+        assert_eq!(outputs, 2);
+    }
+
+    #[test]
+    fn three_sparse_variants_agree_at_threshold_one() {
+        // The paper's §III claim: CompIM and thinning removal change the
+        // hardware, not the function (for spatial_threshold == 1).
+        let cfg = ClassifierConfig {
+            spatial_threshold: 1,
+            ..Default::default()
+        };
+        let mut base = SparseEncoder::new(Variant::SparseBaseline, cfg.clone());
+        let mut comp = SparseEncoder::new(Variant::SparseCompIm, cfg.clone());
+        let mut opt = SparseEncoder::new(Variant::Optimized, cfg);
+        for f in random_frames(FRAMES_PER_PREDICTION, 2) {
+            let a = base.push_frame(&f);
+            let b = comp.push_frame(&f);
+            let c = opt.push_frame(&f);
+            assert_eq!(a, b);
+            assert_eq!(b, c);
+        }
+    }
+
+    #[test]
+    fn spatial_threshold_changes_baseline_only() {
+        let cfg2 = ClassifierConfig {
+            spatial_threshold: 2,
+            ..Default::default()
+        };
+        let mut base = SparseEncoder::new(Variant::SparseBaseline, cfg2.clone());
+        let mut comp = SparseEncoder::new(Variant::SparseCompIm, cfg2.clone());
+        let mut opt = SparseEncoder::new(Variant::Optimized, cfg2);
+        let frames = random_frames(8, 3);
+        for f in &frames {
+            // Baseline and CompIM honour the threshold identically...
+            assert_eq!(base.spatial_encode(f), comp.spatial_encode(f));
+            // ...while the OR tree is threshold-1 by construction, so it is
+            // a superset of the threshold-2 output.
+            let t2 = base.spatial_encode(f);
+            let or = opt.spatial_encode(f);
+            assert_eq!(t2.and(&or), t2, "thinned output must be subset of OR");
+            assert!(or.popcount() >= t2.popcount());
+        }
+    }
+
+    #[test]
+    fn spatial_density_bounded_by_half() {
+        let mut opt = SparseEncoder::new(Variant::Optimized, ClassifierConfig::optimized());
+        for f in random_frames(32, 4) {
+            let d = opt.spatial_encode(&f).density();
+            assert!(d <= 0.5 + 1e-12, "{d}");
+            assert!(d > 0.1, "plausible lower bound, got {d}");
+        }
+    }
+
+    #[test]
+    fn query_density_in_paper_band_for_default_threshold() {
+        // With threshold 130 over varied frames the paper reports 20–30%
+        // query density; random codes give a looser but bounded band.
+        let mut opt = SparseEncoder::new(Variant::Optimized, ClassifierConfig::optimized());
+        let mut got = None;
+        for f in random_frames(FRAMES_PER_PREDICTION, 5) {
+            if let Some(q) = opt.push_frame(&f) {
+                got = Some(q.density());
+            }
+        }
+        let d = got.expect("one window completes");
+        assert!((0.0..=0.5).contains(&d));
+    }
+
+    #[test]
+    fn dense_encoder_window() {
+        let mut enc = DenseEncoder::new(ClassifierConfig::default());
+        let frames = random_frames(FRAMES_PER_PREDICTION, 6);
+        let mut out = None;
+        for f in &frames {
+            out = out.or(enc.push_frame(f));
+        }
+        let q = out.expect("window completes");
+        // Element-wise temporal majority of ~50%-density frames: each
+        // element's per-frame probability p_i hovers around 0.5 (set by the
+        // fixed IM), so the majority is near-deterministic per element and
+        // only the *fraction* of elements with p_i > 0.5 is ~50% — allow a
+        // wide statistical band.
+        assert!((0.2..0.8).contains(&q.density()), "density {}", q.density());
+    }
+
+    #[test]
+    fn classifier_search_dense_vs_sparse_contract() {
+        let mut rng = Xoshiro256::new(7);
+        let a = Hv::random(&mut rng, 0.25);
+        let b = Hv::random(&mut rng, 0.25);
+        let am = AssociativeMemory::new(a, b);
+        let sparse_clf = Classifier::new(
+            Variant::Optimized,
+            ClassifierConfig::optimized(),
+            am.clone(),
+        );
+        let dense_clf = Classifier::new(Variant::DenseBaseline, ClassifierConfig::default(), am);
+        // Query equal to class-1 HV: both metrics must pick class 1.
+        assert_eq!(sparse_clf.search(&b).class, crate::params::CLASS_ICTAL);
+        assert_eq!(dense_clf.search(&b).class, crate::params::CLASS_ICTAL);
+    }
+
+    #[test]
+    fn reset_drops_partial_window() {
+        let mut enc = SparseEncoder::new(Variant::Optimized, ClassifierConfig::optimized());
+        for f in random_frames(100, 8) {
+            enc.push_frame(&f);
+        }
+        enc.reset();
+        assert_eq!(enc.temporal().frames(), 0);
+        // A full window after reset still emits exactly at frame 256.
+        let frames = random_frames(FRAMES_PER_PREDICTION, 9);
+        for (i, f) in frames.iter().enumerate() {
+            let out = enc.push_frame(f);
+            assert_eq!(out.is_some(), i == FRAMES_PER_PREDICTION - 1);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Compressed item memory (CompIM) — paper §III-A.
+//!
+//! The key observation: a sparse HV carries information only in the
+//! *positions* of its 8 one-bits, so the one-hot→binary decoder that the
+//! baseline binder needs can be folded into the IM. The CompIM stores each
+//! HV as 8 × 7 = 56 bits instead of 1024, and binding degenerates to eight
+//! 7-bit modular adders.
+//!
+//! This module is a faithful model of that datapath: it stores *packed*
+//! 56-bit words (as the hardware would) and exposes the position-domain
+//! bind. Its contents are proven equal to [`super::im::ItemMemory`] by
+//! construction tests, and the full binding path is proven equal to the
+//! baseline bit-domain path in `sparse.rs` equivalence tests.
+
+use crate::params::{CHANNELS, LBP_CODES, SEGMENTS, SEG_POS_BITS};
+
+use super::im::ItemMemory;
+use super::sparse::SparseHv;
+
+/// Packed CompIM word: 8 positions × 7 bits = 56 bits, position `s` at bit
+/// offset `s * 7` (LSB first) — the exact memory word of the optimized IM.
+pub type PackedEntry = u64;
+
+/// Pack a sparse HV into a 56-bit CompIM word.
+#[inline]
+pub fn pack(hv: &SparseHv) -> PackedEntry {
+    let mut w = 0u64;
+    for (s, &p) in hv.pos.iter().enumerate() {
+        debug_assert!((p as usize) < (1 << SEG_POS_BITS));
+        w |= (p as u64) << (s * SEG_POS_BITS);
+    }
+    w
+}
+
+/// Unpack a 56-bit CompIM word into position space.
+#[inline]
+pub fn unpack(w: PackedEntry) -> SparseHv {
+    let mut pos = [0u8; SEGMENTS];
+    for (s, p) in pos.iter_mut().enumerate() {
+        *p = ((w >> (s * SEG_POS_BITS)) & ((1 << SEG_POS_BITS) - 1)) as u8;
+    }
+    SparseHv::new(pos)
+}
+
+/// The compressed item memory: per-channel LUTs of packed 56-bit entries
+/// plus packed electrode words.
+#[derive(Clone)]
+pub struct CompIm {
+    pub seed: u64,
+    /// `table[channel][code]` packed data HVs.
+    table: Vec<[PackedEntry; LBP_CODES]>,
+    /// Packed electrode HVs.
+    electrodes: Vec<PackedEntry>,
+}
+
+impl CompIm {
+    /// Compress an existing item memory (design-time transformation — this
+    /// is what "integrating the one-hot decoder with the IM" means).
+    pub fn from_item_memory(im: &ItemMemory) -> Self {
+        let mut table = Vec::with_capacity(CHANNELS);
+        for c in 0..CHANNELS {
+            let mut row = [0u64; LBP_CODES];
+            for (k, e) in row.iter_mut().enumerate() {
+                *e = pack(&im.lookup(c, k as u8));
+            }
+            table.push(row);
+        }
+        let electrodes = (0..CHANNELS).map(|c| pack(&im.electrode(c))).collect();
+        CompIm {
+            seed: im.seed,
+            table,
+            electrodes,
+        }
+    }
+
+    pub fn generate(seed: u64) -> Self {
+        Self::from_item_memory(&ItemMemory::generate(seed))
+    }
+
+    pub fn default_im() -> Self {
+        Self::from_item_memory(&ItemMemory::default_im())
+    }
+
+    /// Raw 56-bit word (hardware read port).
+    #[inline]
+    pub fn lookup_packed(&self, channel: usize, code: u8) -> PackedEntry {
+        self.table[channel][code as usize]
+    }
+
+    #[inline]
+    pub fn lookup(&self, channel: usize, code: u8) -> SparseHv {
+        unpack(self.table[channel][code as usize])
+    }
+
+    #[inline]
+    pub fn electrode(&self, channel: usize) -> SparseHv {
+        unpack(self.electrodes[channel])
+    }
+
+    /// The optimized binder: CompIM lookup + eight 7-bit modular adds,
+    /// producing the bound HV directly in position space.
+    #[inline]
+    pub fn bind(&self, channel: usize, code: u8) -> SparseHv {
+        self.electrode(channel).bind(&self.lookup(channel, code))
+    }
+
+    /// Storage bits of one entry (8 × 7 = 56) — the paper's headline
+    /// compression from 1024 bits.
+    pub const ENTRY_BITS: usize = SEGMENTS * SEG_POS_BITS;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::IM_SEED;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..200 {
+            let s = SparseHv::random(&mut rng);
+            assert_eq!(unpack(pack(&s)), s);
+        }
+    }
+
+    #[test]
+    fn entry_is_56_bits() {
+        assert_eq!(CompIm::ENTRY_BITS, 56);
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..100 {
+            let w = pack(&SparseHv::random(&mut rng));
+            assert_eq!(w >> 56, 0, "no bits above 56");
+        }
+    }
+
+    #[test]
+    fn matches_item_memory() {
+        let im = ItemMemory::default_im();
+        let cim = CompIm::default_im();
+        for c in 0..CHANNELS {
+            assert_eq!(cim.electrode(c), im.electrode(c));
+            for k in 0..LBP_CODES {
+                assert_eq!(cim.lookup(c, k as u8), im.lookup(c, k as u8));
+            }
+        }
+    }
+
+    #[test]
+    fn bind_matches_baseline_bit_domain_path() {
+        // End-to-end CompIM equivalence: CompIM bind (7-bit adds) must equal
+        // baseline IM read → one-hot decode → barrel shift.
+        use super::super::sparse::bind_bitdomain;
+        let im = ItemMemory::generate(IM_SEED);
+        let cim = CompIm::from_item_memory(&im);
+        for c in (0..CHANNELS).step_by(7) {
+            for k in 0..LBP_CODES {
+                let optimized = cim.bind(c, k as u8).to_hv();
+                let baseline =
+                    bind_bitdomain(&im.electrode_hv(c), &im.lookup_hv(c, k as u8)).unwrap();
+                assert_eq!(optimized, baseline, "channel {c} code {k}");
+            }
+        }
+    }
+}

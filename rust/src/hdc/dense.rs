@@ -1,0 +1,251 @@
+//! Dense HDC operations — the Burrello'18 baseline the paper compares
+//! against (its §II: "adapted from the dense HDC classification system …
+//! by changing the dense HDC operations to their sparse equivalents";
+//! we implement the original dense ops for the dense design point).
+//!
+//! * binding: bit-wise XOR,
+//! * spatial bundling: bit-wise majority over the 64 bound HVs,
+//! * temporal bundling: per-element counters over 256 frames + majority,
+//! * similarity: Hamming distance (smaller = more similar).
+
+use crate::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION};
+
+use super::hv::Hv;
+use super::im::DenseItemMemory;
+
+/// XOR binding (dense HDC).
+#[inline]
+pub fn bind(a: &Hv, b: &Hv) -> Hv {
+    a.xor(b)
+}
+
+/// Bit-wise majority bundling of `n` HVs given per-element counts.
+/// Ties (count == n/2 for even n) break toward 0, matching a strict
+/// `count > n/2` comparator in hardware.
+pub fn majority_from_counts(counts: &[u16; DIM], n: usize) -> Hv {
+    let half = (n / 2) as u16;
+    Hv::from_fn(|i| counts[i] > half)
+}
+
+/// Majority of `n` HVs plus a fixed tie-break HV (an implicit (n+1)-th
+/// input making the fan-in odd). For even `n`, a strict majority is biased
+/// low — the count lands exactly on n/2 with probability ≈ C(n,n/2)/2^n —
+/// so dense HDC bundles an odd number of items; the tie HV realises that
+/// without changing the adder tree.
+pub fn majority_with_tie(counts: &[u16; DIM], n: usize, tie: &Hv) -> Hv {
+    let half = ((n + 1) / 2) as u16;
+    Hv::from_fn(|i| counts[i] + tie.get(i) as u16 > half)
+}
+
+/// Spatial encoder of the dense baseline: per-channel IM⊕electrode binding
+/// followed by a bit-wise majority across channels (+ tie-break HV, since
+/// the 64-channel fan-in is even). Also returns the raw per-element counts
+/// (needed by the switching-activity model).
+pub fn dense_spatial_encode(im: &DenseItemMemory, codes: &[u8; CHANNELS]) -> (Hv, Box<[u16; DIM]>) {
+    let mut counts = Box::new([0u16; DIM]);
+    for (c, &code) in codes.iter().enumerate() {
+        let bound = bind(im.lookup(code), im.electrode(c));
+        for (w, &word) in bound.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                counts[w * 64 + b] += 1;
+                bits &= bits - 1;
+            }
+        }
+    }
+    (
+        majority_with_tie(&counts, CHANNELS, im.tiebreak(0)),
+        counts,
+    )
+}
+
+/// Temporal accumulator of the dense baseline: counts 1-bits over
+/// [`FRAMES_PER_PREDICTION`] spatial outputs, then takes the majority.
+#[derive(Clone)]
+pub struct DenseTemporal {
+    counts: Box<[u16; DIM]>,
+    frames: usize,
+}
+
+impl Default for DenseTemporal {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DenseTemporal {
+    pub fn new() -> Self {
+        DenseTemporal {
+            counts: Box::new([0u16; DIM]),
+            frames: 0,
+        }
+    }
+
+    pub fn add(&mut self, hv: &Hv) {
+        for (w, &word) in hv.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                self.counts[w * 64 + b] += 1;
+                bits &= bits - 1;
+            }
+        }
+        self.frames += 1;
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.frames >= FRAMES_PER_PREDICTION
+    }
+
+    /// Majority over the accumulated frames (+ tie-break HV for the even
+    /// 256-frame fan-in); resets the accumulator.
+    pub fn finish(&mut self, tie: &Hv) -> Hv {
+        let out = majority_with_tie(&self.counts, self.frames, tie);
+        self.reset();
+        out
+    }
+
+    pub fn counts(&self) -> &[u16; DIM] {
+        &self.counts
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.frames = 0;
+    }
+}
+
+/// Hamming-distance similarity search over dense class HVs.
+/// Returns `(best_class, distances)` — *smallest* distance wins.
+pub fn dense_classify(query: &Hv, classes: &[Hv]) -> (usize, Vec<u32>) {
+    let dists: Vec<u32> = classes.iter().map(|c| query.hamming(c)).collect();
+    let best = dists
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &d)| d)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    (best, dists)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn xor_bind_is_involution() {
+        let mut rng = Xoshiro256::new(1);
+        let a = Hv::random_half(&mut rng);
+        let b = Hv::random_half(&mut rng);
+        assert_eq!(bind(&bind(&a, &b), &b), a);
+    }
+
+    #[test]
+    fn xor_bind_preserves_half_density_statistically() {
+        let mut rng = Xoshiro256::new(2);
+        let a = Hv::random_half(&mut rng);
+        let b = Hv::random_half(&mut rng);
+        let d = bind(&a, &b).density();
+        assert!((0.4..0.6).contains(&d), "density {d}");
+    }
+
+    #[test]
+    fn majority_basic() {
+        let mut counts = [0u16; DIM];
+        counts[0] = 33; // > 32 → 1
+        counts[1] = 32; // == n/2 → 0 (strict majority)
+        counts[2] = 64;
+        let hv = majority_from_counts(&counts, 64);
+        assert!(hv.get(0));
+        assert!(!hv.get(1));
+        assert!(hv.get(2));
+        assert!(!hv.get(3));
+    }
+
+    #[test]
+    fn spatial_encode_counts_sum() {
+        let im = DenseItemMemory::default_im();
+        let codes = [7u8; CHANNELS];
+        let (_, counts) = dense_spatial_encode(&im, &codes);
+        let total: u64 = counts.iter().map(|&c| c as u64).sum();
+        // Every channel contributes ~512 one-bits (density 0.5).
+        let per_channel = total as f64 / CHANNELS as f64 / DIM as f64;
+        assert!((0.4..0.6).contains(&per_channel), "{per_channel}");
+    }
+
+    #[test]
+    fn temporal_majority_of_identical_frames_is_frame() {
+        let mut rng = Xoshiro256::new(3);
+        let hv = Hv::random_half(&mut rng);
+        let tie = Hv::random_half(&mut rng);
+        let mut t = DenseTemporal::new();
+        for _ in 0..FRAMES_PER_PREDICTION {
+            t.add(&hv);
+        }
+        assert!(t.is_full());
+        // 256 identical votes swamp the single tie-break vote.
+        assert_eq!(t.finish(&tie), hv);
+        assert_eq!(t.frames(), 0); // reset
+    }
+
+    #[test]
+    fn tie_break_decides_exact_ties() {
+        let mut rng = Xoshiro256::new(5);
+        let tie = Hv::random_half(&mut rng);
+        let mut counts = [0u16; DIM];
+        counts[0] = 32; // exactly half of 64
+        counts[1] = 32;
+        let out = majority_with_tie(&counts, 64, &tie);
+        assert_eq!(out.get(0), tie.get(0));
+        assert_eq!(out.get(1), tie.get(1));
+        // Clear majorities are unaffected by the tie bit.
+        counts[2] = 40;
+        counts[3] = 20;
+        let out = majority_with_tie(&counts, 64, &tie);
+        assert!(out.get(2));
+        assert!(!out.get(3));
+    }
+
+    #[test]
+    fn tie_break_removes_downward_bias() {
+        // Without the tie HV, majority over an even number of fair coins is
+        // biased low; with it, density is centred at 0.5.
+        let mut rng = Xoshiro256::new(6);
+        let im = DenseItemMemory::default_im();
+        let mut acc = 0.0;
+        let trials = 50;
+        for _ in 0..trials {
+            let mut counts = [0u16; DIM];
+            for _ in 0..CHANNELS {
+                let hv = Hv::random_half(&mut rng);
+                for i in 0..DIM {
+                    counts[i] += hv.get(i) as u16;
+                }
+            }
+            acc += majority_with_tie(&counts, CHANNELS, im.tiebreak(0)).density();
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 0.5).abs() < 0.03, "mean density {mean}");
+    }
+
+    #[test]
+    fn classify_prefers_similar() {
+        let mut rng = Xoshiro256::new(4);
+        let proto = Hv::random_half(&mut rng);
+        let other = Hv::random_half(&mut rng);
+        // Query = prototype with a few flipped bits.
+        let mut query = proto;
+        for i in 0..20 {
+            query.set(i * 13, !query.get(i * 13));
+        }
+        let (best, dists) = dense_classify(&query, &[other, proto]);
+        assert_eq!(best, 1);
+        assert!(dists[1] < dists[0]);
+    }
+}

@@ -1,0 +1,347 @@
+//! 1024-bit packed hypervector.
+//!
+//! The HV is stored as 16 × u64 words, least-significant-bit first: bit
+//! index `i` of the HV lives at word `i / 64`, bit `i % 64`. Segment `s`
+//! (for the segmented-shift binding) covers bit indices
+//! `[s * SEG_LEN, (s+1) * SEG_LEN)`; with `SEG_LEN = 128` each segment is
+//! exactly two words, which the segment ops exploit.
+
+use crate::params::{DIM, SEGMENTS, SEG_LEN};
+use crate::rng::Xoshiro256;
+
+/// Number of u64 words backing one HV.
+pub const WORDS: usize = DIM / 64;
+/// Words per segment (SEG_LEN = 128 → 2 words).
+pub const WORDS_PER_SEG: usize = SEG_LEN / 64;
+
+/// A 1024-bit binary hypervector.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Hv {
+    pub words: [u64; WORDS],
+}
+
+impl Default for Hv {
+    fn default() -> Self {
+        Self::zero()
+    }
+}
+
+impl Hv {
+    /// The all-zeros HV.
+    #[inline]
+    pub const fn zero() -> Self {
+        Hv { words: [0; WORDS] }
+    }
+
+    /// The all-ones HV.
+    #[inline]
+    pub const fn ones() -> Self {
+        Hv {
+            words: [u64::MAX; WORDS],
+        }
+    }
+
+    /// Build from a closure over bit indices.
+    pub fn from_fn(mut f: impl FnMut(usize) -> bool) -> Self {
+        let mut hv = Hv::zero();
+        for i in 0..DIM {
+            if f(i) {
+                hv.set(i, true);
+            }
+        }
+        hv
+    }
+
+    /// Random dense HV where each bit is 1 with probability `p`.
+    pub fn random(rng: &mut Xoshiro256, p: f64) -> Self {
+        Hv::from_fn(|_| rng.next_bool(p))
+    }
+
+    /// Random 50%-density HV drawn word-wise (fast path for dense HDC).
+    pub fn random_half(rng: &mut Xoshiro256) -> Self {
+        let mut hv = Hv::zero();
+        for w in hv.words.iter_mut() {
+            *w = rng.next_u64();
+        }
+        hv
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < DIM);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < DIM);
+        let mask = 1u64 << (i % 64);
+        if v {
+            self.words[i / 64] |= mask;
+        } else {
+            self.words[i / 64] &= !mask;
+        }
+    }
+
+    /// Number of 1-bits.
+    #[inline]
+    pub fn popcount(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Fraction of 1-bits.
+    #[inline]
+    pub fn density(&self) -> f64 {
+        self.popcount() as f64 / DIM as f64
+    }
+
+    #[inline]
+    pub fn and(&self, other: &Hv) -> Hv {
+        let mut out = Hv::zero();
+        for i in 0..WORDS {
+            out.words[i] = self.words[i] & other.words[i];
+        }
+        out
+    }
+
+    #[inline]
+    pub fn or(&self, other: &Hv) -> Hv {
+        let mut out = Hv::zero();
+        for i in 0..WORDS {
+            out.words[i] = self.words[i] | other.words[i];
+        }
+        out
+    }
+
+    #[inline]
+    pub fn xor(&self, other: &Hv) -> Hv {
+        let mut out = Hv::zero();
+        for i in 0..WORDS {
+            out.words[i] = self.words[i] ^ other.words[i];
+        }
+        out
+    }
+
+    #[inline]
+    pub fn or_assign(&mut self, other: &Hv) {
+        for i in 0..WORDS {
+            self.words[i] |= other.words[i];
+        }
+    }
+
+    /// `popcount(self AND other)` — the sparse-HDC similarity metric
+    /// (paper §II-D: only 1-bits carry information).
+    #[inline]
+    pub fn overlap(&self, other: &Hv) -> u32 {
+        let mut acc = 0;
+        for i in 0..WORDS {
+            acc += (self.words[i] & other.words[i]).count_ones();
+        }
+        acc
+    }
+
+    /// Hamming distance — the dense-HDC similarity metric.
+    #[inline]
+    pub fn hamming(&self, other: &Hv) -> u32 {
+        let mut acc = 0;
+        for i in 0..WORDS {
+            acc += (self.words[i] ^ other.words[i]).count_ones();
+        }
+        acc
+    }
+
+    /// Extract segment `s` as two u64 words (bits `[0, SEG_LEN)` of the
+    /// returned pair are the segment, LSB first).
+    #[inline]
+    pub fn segment(&self, s: usize) -> [u64; WORDS_PER_SEG] {
+        debug_assert!(s < SEGMENTS);
+        let base = s * WORDS_PER_SEG;
+        [self.words[base], self.words[base + 1]]
+    }
+
+    #[inline]
+    pub fn set_segment(&mut self, s: usize, seg: [u64; WORDS_PER_SEG]) {
+        debug_assert!(s < SEGMENTS);
+        let base = s * WORDS_PER_SEG;
+        self.words[base] = seg[0];
+        self.words[base + 1] = seg[1];
+    }
+
+    /// Circularly left-shift one 128-bit segment by `sh` positions.
+    /// "Left" means a 1-bit at position `p` moves to `(p + sh) % SEG_LEN`,
+    /// matching the position-domain binding `(e + d) mod 128`.
+    #[inline]
+    pub fn rotate_segment(seg: [u64; WORDS_PER_SEG], sh: u32) -> [u64; WORDS_PER_SEG] {
+        let sh = (sh as usize) % SEG_LEN;
+        if sh == 0 {
+            return seg;
+        }
+        let v = (seg[0] as u128) | ((seg[1] as u128) << 64);
+        let r = v.rotate_left(sh as u32);
+        [r as u64, (r >> 64) as u64]
+    }
+
+    /// Indices of all 1-bits, ascending.
+    pub fn one_positions(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.popcount() as usize);
+        for (wi, &w) in self.words.iter().enumerate() {
+            let mut bits = w;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                out.push(wi * 64 + b);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Pack to little-endian bytes (for dataset files / PJRT marshalling).
+    pub fn to_bytes(&self) -> [u8; DIM / 8] {
+        let mut out = [0u8; DIM / 8];
+        for (i, w) in self.words.iter().enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8; DIM / 8]) -> Self {
+        let mut hv = Hv::zero();
+        for i in 0..WORDS {
+            hv.words[i] = u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap());
+        }
+        hv
+    }
+
+    /// Expand to one i32 per element (the layout the HLO artifacts use:
+    /// JAX-side HVs are `int32[1024]` 0/1 tensors).
+    pub fn to_i32s(&self) -> Vec<i32> {
+        (0..DIM).map(|i| self.get(i) as i32).collect()
+    }
+
+    pub fn from_i32s(v: &[i32]) -> Self {
+        assert_eq!(v.len(), DIM);
+        Hv::from_fn(|i| v[i] != 0)
+    }
+}
+
+impl std::fmt::Debug for Hv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Hv(popcount={}, density={:.2}%)",
+            self.popcount(),
+            self.density() * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_and_ones() {
+        assert_eq!(Hv::zero().popcount(), 0);
+        assert_eq!(Hv::ones().popcount(), DIM as u32);
+    }
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut hv = Hv::zero();
+        for i in [0usize, 1, 63, 64, 127, 128, 511, 1023] {
+            hv.set(i, true);
+            assert!(hv.get(i), "bit {i}");
+        }
+        assert_eq!(hv.popcount(), 8);
+        hv.set(63, false);
+        assert!(!hv.get(63));
+        assert_eq!(hv.popcount(), 7);
+    }
+
+    #[test]
+    fn one_positions_matches_get() {
+        let mut rng = Xoshiro256::new(5);
+        let hv = Hv::random(&mut rng, 0.1);
+        let pos = hv.one_positions();
+        assert_eq!(pos.len(), hv.popcount() as usize);
+        for &p in &pos {
+            assert!(hv.get(p));
+        }
+        // sorted ascending
+        assert!(pos.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn overlap_and_hamming() {
+        let mut a = Hv::zero();
+        let mut b = Hv::zero();
+        a.set(3, true);
+        a.set(100, true);
+        b.set(100, true);
+        b.set(500, true);
+        assert_eq!(a.overlap(&b), 1);
+        assert_eq!(a.hamming(&b), 2);
+        assert_eq!(a.hamming(&a), 0);
+    }
+
+    #[test]
+    fn rotate_segment_matches_position_arithmetic() {
+        for s in 0..SEGMENTS {
+            for p in [0usize, 1, 63, 64, 100, 127] {
+                for sh in [0u32, 1, 27, 63, 64, 65, 127] {
+                    let mut hv = Hv::zero();
+                    hv.set(s * SEG_LEN + p, true);
+                    let rot = Hv::rotate_segment(hv.segment(s), sh);
+                    let mut out = Hv::zero();
+                    out.set_segment(s, rot);
+                    let expect = (p + sh as usize) % SEG_LEN;
+                    assert_eq!(
+                        out.one_positions(),
+                        vec![s * SEG_LEN + expect],
+                        "seg {s} pos {p} shift {sh}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rotate_full_circle_is_identity() {
+        let mut rng = Xoshiro256::new(11);
+        let hv = Hv::random(&mut rng, 0.3);
+        for s in 0..SEGMENTS {
+            let seg = hv.segment(s);
+            let mut acc = seg;
+            for _ in 0..SEG_LEN {
+                acc = Hv::rotate_segment(acc, 1);
+            }
+            assert_eq!(acc, seg);
+            assert_eq!(Hv::rotate_segment(seg, SEG_LEN as u32), seg);
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut rng = Xoshiro256::new(17);
+        let hv = Hv::random_half(&mut rng);
+        assert_eq!(Hv::from_bytes(&hv.to_bytes()), hv);
+    }
+
+    #[test]
+    fn i32s_roundtrip() {
+        let mut rng = Xoshiro256::new(23);
+        let hv = Hv::random(&mut rng, 0.25);
+        assert_eq!(Hv::from_i32s(&hv.to_i32s()), hv);
+    }
+
+    #[test]
+    fn random_density_statistics() {
+        let mut rng = Xoshiro256::new(31);
+        let mut total = 0u32;
+        for _ in 0..50 {
+            total += Hv::random(&mut rng, 0.5).popcount();
+        }
+        let mean = total as f64 / 50.0 / DIM as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean density {mean}");
+    }
+}

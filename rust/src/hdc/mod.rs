@@ -1,0 +1,28 @@
+//! Bit-accurate golden models of the dense and sparse HDC classifiers.
+//!
+//! Module map (paper Fig. 1(b)):
+//!
+//! * [`hv`] — the 1024-bit packed hypervector type and bit-level ops.
+//! * [`sparse`] — sparse HVs in *position space* (8 × 7-bit) and the
+//!   segmented-shift binding (paper Fig. 2(a)) in both the bit domain
+//!   (baseline hardware) and the position domain (CompIM hardware).
+//! * [`dense`] — dense-HDC ops of the Burrello'18 baseline: XOR binding,
+//!   bit-wise majority bundling, Hamming-distance similarity.
+//! * [`im`] / [`compim`] — item memory and compressed item memory.
+//! * [`bundling`] — spatial bundling: adder trees + thinning (baseline) and
+//!   OR trees (optimized, §III-B).
+//! * [`temporal`] — the 256-frame temporal encoder with 8-bit counters.
+//! * [`am`] — associative memory and AND-popcount similarity search.
+//! * [`train`] — offline one-shot training (§II-D).
+//! * [`classifier`] — the assembled pipelines for every design variant.
+
+pub mod hv;
+pub mod sparse;
+pub mod dense;
+pub mod im;
+pub mod compim;
+pub mod bundling;
+pub mod temporal;
+pub mod am;
+pub mod train;
+pub mod classifier;

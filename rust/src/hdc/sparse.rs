@@ -1,0 +1,240 @@
+//! Sparse hypervectors in position space and the segmented-shift binding.
+//!
+//! A *sparse* HV in this system has exactly one 1-bit per 128-bit segment
+//! (density 8/1024 ≈ 0.78%). It is fully described by eight 7-bit
+//! positions — the representation the CompIM stores (paper §III-A,
+//! 8 × 7 = 56 bits instead of 1024).
+//!
+//! The segmented-shift binding (paper Fig. 2(a)) circularly shifts each
+//! segment of the electrode HV by the position of the 1-bit in the
+//! corresponding segment of the data HV. For single-1-bit segments this is
+//! exactly a modular add of positions:
+//!
+//! ```text
+//! bound.pos[s] = (electrode.pos[s] + data.pos[s]) mod 128
+//! ```
+//!
+//! Both the bit-domain implementation (what the baseline hardware does:
+//! one-hot decode + barrel shift) and the position-domain implementation
+//! (what the CompIM hardware does: 7-bit add) are provided and tested for
+//! equivalence — that equivalence *is* the CompIM correctness argument.
+
+use crate::params::{SEGMENTS, SEG_LEN};
+use crate::rng::Xoshiro256;
+
+use super::hv::Hv;
+
+/// A sparse HV: one 1-bit position per segment.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct SparseHv {
+    /// `pos[s]` ∈ [0, SEG_LEN) is the index of the 1-bit within segment `s`.
+    pub pos: [u8; SEGMENTS],
+}
+
+impl SparseHv {
+    pub const fn new(pos: [u8; SEGMENTS]) -> Self {
+        SparseHv { pos }
+    }
+
+    /// Uniformly random sparse HV.
+    pub fn random(rng: &mut Xoshiro256) -> Self {
+        let mut pos = [0u8; SEGMENTS];
+        for p in pos.iter_mut() {
+            *p = rng.next_below(SEG_LEN as u64) as u8;
+        }
+        SparseHv { pos }
+    }
+
+    /// Expand to the 1024-bit domain (one-hot per segment).
+    pub fn to_hv(&self) -> Hv {
+        let mut hv = Hv::zero();
+        for (s, &p) in self.pos.iter().enumerate() {
+            hv.set(s * SEG_LEN + p as usize, true);
+        }
+        hv
+    }
+
+    /// Compress a bit-domain HV that has exactly one 1-bit per segment.
+    /// Returns `None` if any segment's popcount ≠ 1 (the one-hot decoder in
+    /// the baseline hardware would produce garbage for such inputs).
+    pub fn from_hv(hv: &Hv) -> Option<Self> {
+        let mut pos = [0u8; SEGMENTS];
+        for s in 0..SEGMENTS {
+            let seg = hv.segment(s);
+            let count = seg[0].count_ones() + seg[1].count_ones();
+            if count != 1 {
+                return None;
+            }
+            let p = if seg[0] != 0 {
+                seg[0].trailing_zeros()
+            } else {
+                64 + seg[1].trailing_zeros()
+            };
+            pos[s] = p as u8;
+        }
+        Some(SparseHv { pos })
+    }
+
+    /// Position-domain segmented-shift binding: 8 parallel 7-bit modular
+    /// adds. This is the operation the CompIM datapath performs.
+    #[inline]
+    pub fn bind(&self, data: &SparseHv) -> SparseHv {
+        let mut pos = [0u8; SEGMENTS];
+        for s in 0..SEGMENTS {
+            pos[s] = ((self.pos[s] as usize + data.pos[s] as usize) % SEG_LEN) as u8;
+        }
+        SparseHv { pos }
+    }
+
+    /// Inverse binding (for unbinding / diagnostics): subtract positions.
+    #[inline]
+    pub fn unbind(&self, data: &SparseHv) -> SparseHv {
+        let mut pos = [0u8; SEGMENTS];
+        for s in 0..SEGMENTS {
+            pos[s] = ((self.pos[s] as usize + SEG_LEN - data.pos[s] as usize) % SEG_LEN) as u8;
+        }
+        SparseHv { pos }
+    }
+
+    /// Density of the expanded HV (constant: SEGMENTS / DIM).
+    pub fn density() -> f64 {
+        SEGMENTS as f64 / (SEGMENTS * SEG_LEN) as f64
+    }
+}
+
+/// Bit-domain segmented-shift binding, exactly as the *baseline* hardware
+/// implements it (paper Fig. 3(a)):
+///
+/// 1. a one-hot→binary decoder extracts, per segment, the position of the
+///    1-bit in the data HV;
+/// 2. a barrel shifter circularly shifts the corresponding segment of the
+///    electrode HV by that amount.
+///
+/// `electrode` may be *any* 1024-bit HV (the shift is well defined even for
+/// non-sparse inputs); `data` must be sparse (one 1-bit per segment).
+pub fn bind_bitdomain(electrode: &Hv, data: &Hv) -> Option<Hv> {
+    let data_pos = SparseHv::from_hv(data)?;
+    let mut out = Hv::zero();
+    for s in 0..SEGMENTS {
+        let rotated = Hv::rotate_segment(electrode.segment(s), data_pos.pos[s] as u32);
+        out.set_segment(s, rotated);
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_from_hv_roundtrip() {
+        let mut rng = Xoshiro256::new(1);
+        for _ in 0..100 {
+            let s = SparseHv::random(&mut rng);
+            let hv = s.to_hv();
+            assert_eq!(hv.popcount(), SEGMENTS as u32);
+            assert_eq!(SparseHv::from_hv(&hv), Some(s));
+        }
+    }
+
+    #[test]
+    fn from_hv_rejects_non_sparse() {
+        let mut hv = Hv::zero();
+        assert_eq!(SparseHv::from_hv(&hv), None); // empty segment
+        hv.set(0, true);
+        hv.set(1, true); // two bits in segment 0
+        for s in 1..SEGMENTS {
+            hv.set(s * SEG_LEN, true);
+        }
+        assert_eq!(SparseHv::from_hv(&hv), None);
+    }
+
+    #[test]
+    fn bind_position_vs_bit_domain_equivalence() {
+        // The CompIM correctness argument: position-domain modular add ==
+        // one-hot decode + barrel shift in the bit domain.
+        let mut rng = Xoshiro256::new(2);
+        for _ in 0..500 {
+            let e = SparseHv::random(&mut rng);
+            let d = SparseHv::random(&mut rng);
+            let pos_domain = e.bind(&d).to_hv();
+            let bit_domain = bind_bitdomain(&e.to_hv(), &d.to_hv()).unwrap();
+            assert_eq!(pos_domain, bit_domain);
+        }
+    }
+
+    #[test]
+    fn bind_unbind_inverse() {
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..100 {
+            let e = SparseHv::random(&mut rng);
+            let d = SparseHv::random(&mut rng);
+            assert_eq!(e.bind(&d).unbind(&d), e);
+        }
+    }
+
+    #[test]
+    fn bind_preserves_sparsity() {
+        let mut rng = Xoshiro256::new(4);
+        let e = SparseHv::random(&mut rng);
+        let d = SparseHv::random(&mut rng);
+        assert_eq!(e.bind(&d).to_hv().popcount(), SEGMENTS as u32);
+    }
+
+    #[test]
+    fn bind_zero_is_identity() {
+        let mut rng = Xoshiro256::new(5);
+        let e = SparseHv::random(&mut rng);
+        let zero = SparseHv::new([0; SEGMENTS]);
+        assert_eq!(e.bind(&zero), e);
+    }
+
+    #[test]
+    fn bind_is_commutative_in_position_sum() {
+        // (e + d) mod 128 == (d + e) mod 128 — segmented shift binding of
+        // two sparse HVs is commutative.
+        let mut rng = Xoshiro256::new(6);
+        for _ in 0..50 {
+            let a = SparseHv::random(&mut rng);
+            let b = SparseHv::random(&mut rng);
+            assert_eq!(a.bind(&b), b.bind(&a));
+        }
+    }
+
+    #[test]
+    fn bind_distributes_quasi_orthogonally() {
+        // Binding with different data HVs should produce (near-)orthogonal
+        // outputs: expected overlap of two random sparse HVs is
+        // SEGMENTS * 1/SEG_LEN = 8/128 = 0.0625 bits.
+        let mut rng = Xoshiro256::new(7);
+        let e = SparseHv::random(&mut rng);
+        let mut total_overlap = 0u32;
+        let n = 2000;
+        for _ in 0..n {
+            let d1 = SparseHv::random(&mut rng);
+            let d2 = SparseHv::random(&mut rng);
+            total_overlap += e.bind(&d1).to_hv().overlap(&e.bind(&d2).to_hv());
+        }
+        let mean = total_overlap as f64 / n as f64;
+        assert!(mean < 0.2, "bound HVs should be near-orthogonal, got {mean}");
+    }
+
+    #[test]
+    fn bitdomain_bind_supports_dense_electrode() {
+        // The barrel shifter shifts whatever electrode pattern it is given —
+        // check against a manual rotation for a dense electrode HV.
+        let mut rng = Xoshiro256::new(8);
+        let e = Hv::random(&mut rng, 0.5);
+        let d = SparseHv::random(&mut rng);
+        let out = bind_bitdomain(&e, &d.to_hv()).unwrap();
+        for s in 0..SEGMENTS {
+            let sh = d.pos[s] as usize;
+            for p in 0..SEG_LEN {
+                assert_eq!(
+                    out.get(s * SEG_LEN + (p + sh) % SEG_LEN),
+                    e.get(s * SEG_LEN + p)
+                );
+            }
+        }
+    }
+}

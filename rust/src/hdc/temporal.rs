@@ -1,0 +1,200 @@
+//! Temporal bundling — paper §II-C (second half).
+//!
+//! The temporal encoder accumulates the 256 sequential spatial-encoder
+//! outputs of one prediction window into per-element counters (8 bits per
+//! element in hardware → the "large 8192-bit register"), then thins with a
+//! threshold to produce the query HV. The paper's operating point is
+//! threshold 130, keeping the query density in 20–30%.
+
+use crate::params::{DIM, FRAMES_PER_PREDICTION, TEMPORAL_COUNTER_MAX};
+
+use super::hv::Hv;
+
+/// Streaming temporal accumulator with hardware-faithful 8-bit saturating
+/// counters.
+#[derive(Clone)]
+pub struct TemporalAccumulator {
+    counts: Box<[u16; DIM]>,
+    frames: usize,
+}
+
+impl Default for TemporalAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TemporalAccumulator {
+    pub fn new() -> Self {
+        TemporalAccumulator {
+            counts: Box::new([0u16; DIM]),
+            frames: 0,
+        }
+    }
+
+    /// Add one spatial-encoder output frame. Counters saturate at 255
+    /// exactly like the 8-bit hardware registers. Word-iterated without
+    /// intermediate allocation — this runs once per clock cycle on the
+    /// serving hot path (§Perf L3-1).
+    pub fn add(&mut self, frame: &Hv) {
+        for (w, &word) in frame.words.iter().enumerate() {
+            let mut bits = word;
+            while bits != 0 {
+                let b = bits.trailing_zeros() as usize;
+                let c = &mut self.counts[w * 64 + b];
+                *c += (*c < TEMPORAL_COUNTER_MAX) as u16;
+                bits &= bits - 1;
+            }
+        }
+        self.frames += 1;
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// One prediction window's worth of frames accumulated?
+    pub fn is_full(&self) -> bool {
+        self.frames >= FRAMES_PER_PREDICTION
+    }
+
+    pub fn counts(&self) -> &[u16; DIM] {
+        &self.counts
+    }
+
+    /// Thin to a binary query HV (`count >= threshold`) and reset for the
+    /// next window.
+    pub fn finish(&mut self, threshold: u16) -> Hv {
+        let out = self.peek(threshold);
+        self.reset();
+        out
+    }
+
+    /// Thin without resetting (used by training, which inspects several
+    /// candidate thresholds over the same window). Word-wise assembly —
+    /// this is on the per-window hot path (§Perf L3-2).
+    pub fn peek(&self, threshold: u16) -> Hv {
+        let mut hv = Hv::zero();
+        for (w, word) in hv.words.iter_mut().enumerate() {
+            let base = w * 64;
+            let mut bits = 0u64;
+            for b in 0..64 {
+                bits |= ((self.counts[base + b] >= threshold) as u64) << b;
+            }
+            *word = bits;
+        }
+        hv
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.frames = 0;
+    }
+}
+
+/// Find the smallest threshold such that the thinned density of `counts`
+/// does not exceed `max_density`. This is how the max-HV-density
+/// hyperparameter (paper Fig. 4's x-axis) maps to a hardware threshold:
+/// sweep the count histogram from above.
+pub fn threshold_for_max_density(counts: &[u16; DIM], max_density: f64) -> u16 {
+    let max_ones = (max_density * DIM as f64).floor() as usize;
+    // Histogram of counter values (bounded by TEMPORAL_COUNTER_MAX).
+    let mut hist = [0usize; TEMPORAL_COUNTER_MAX as usize + 1];
+    for &c in counts.iter() {
+        hist[c as usize] += 1;
+    }
+    // Walk thresholds downward from max+1; ones(t) = #elements with count >= t.
+    let mut ones = 0usize;
+    let mut t = TEMPORAL_COUNTER_MAX as usize + 1;
+    while t > 1 {
+        let next_ones = ones + hist[t - 1];
+        if next_ones > max_ones {
+            break;
+        }
+        ones = next_ones;
+        t -= 1;
+    }
+    t as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn accumulate_and_thin() {
+        let mut acc = TemporalAccumulator::new();
+        let mut frame = Hv::zero();
+        frame.set(10, true);
+        frame.set(20, true);
+        for _ in 0..100 {
+            acc.add(&frame);
+        }
+        let mut frame2 = Hv::zero();
+        frame2.set(20, true);
+        frame2.set(30, true);
+        for _ in 0..50 {
+            acc.add(&frame2);
+        }
+        assert_eq!(acc.counts()[10], 100);
+        assert_eq!(acc.counts()[20], 150);
+        assert_eq!(acc.counts()[30], 50);
+        let hv = acc.peek(100);
+        assert!(hv.get(10) && hv.get(20) && !hv.get(30));
+        let hv = acc.finish(130);
+        assert!(!hv.get(10) && hv.get(20) && !hv.get(30));
+        assert_eq!(acc.frames(), 0);
+        assert_eq!(acc.counts()[20], 0);
+    }
+
+    #[test]
+    fn counters_saturate_at_8_bits() {
+        let mut acc = TemporalAccumulator::new();
+        let mut frame = Hv::zero();
+        frame.set(0, true);
+        for _ in 0..300 {
+            acc.add(&frame);
+        }
+        assert_eq!(acc.counts()[0], TEMPORAL_COUNTER_MAX);
+    }
+
+    #[test]
+    fn is_full_after_window() {
+        let mut acc = TemporalAccumulator::new();
+        let frame = Hv::zero();
+        for _ in 0..FRAMES_PER_PREDICTION - 1 {
+            acc.add(&frame);
+            assert!(!acc.is_full());
+        }
+        acc.add(&frame);
+        assert!(acc.is_full());
+    }
+
+    #[test]
+    fn threshold_for_max_density_respects_bound() {
+        let mut rng = Xoshiro256::new(9);
+        let mut acc = TemporalAccumulator::new();
+        // Random-ish frames with ~40% density to emulate spatial outputs.
+        for _ in 0..FRAMES_PER_PREDICTION {
+            acc.add(&Hv::random(&mut rng, 0.4));
+        }
+        for max_d in [0.05, 0.1, 0.2, 0.3, 0.5] {
+            let t = threshold_for_max_density(acc.counts(), max_d);
+            let d = acc.peek(t).density();
+            assert!(d <= max_d + 1e-12, "max_d {max_d}: got {d} at t {t}");
+            // And it is the *smallest* such threshold (t-1 would overflow
+            // the bound), unless t == 1 already.
+            if t > 1 {
+                let d_prev = acc.peek(t - 1).density();
+                assert!(d_prev > max_d, "t {t} not minimal for {max_d}");
+            }
+        }
+    }
+
+    #[test]
+    fn threshold_one_when_everything_fits() {
+        let counts = Box::new([0u16; DIM]);
+        assert_eq!(threshold_for_max_density(&counts, 0.5), 1);
+    }
+}

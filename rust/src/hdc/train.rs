@@ -1,0 +1,256 @@
+//! Offline one-shot training — paper §II-D.
+//!
+//! Class-representing HVs are computed "through the same sparse HDC
+//! classifier as the inference but with labeled data from one seizure":
+//! every prediction-window query HV of the training record is accumulated
+//! into a per-class counter plane, and each class plane is thinned to the
+//! configured density (50% in the paper) to form the AM entry. The dense
+//! design point bundles with a bit-wise majority instead.
+//!
+//! Training runs offline (design-/fit-time); only the resulting AM is
+//! deployed on the accelerator.
+
+use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, DIM, NUM_CLASSES};
+
+use super::am::AssociativeMemory;
+use super::classifier::{Encoder, Frame, Variant};
+use super::dense::majority_from_counts;
+use super::hv::Hv;
+
+/// A labelled frame stream: the LBP codes of one frame plus whether the
+/// frame lies inside the expert-annotated ictal interval.
+pub type LabelledFrame = (Frame, bool);
+
+/// Accumulates query HVs per class and produces the AM.
+pub struct Trainer {
+    counts: [Box<[u32; DIM]>; NUM_CLASSES],
+    windows: [usize; NUM_CLASSES],
+    /// Density target for the thinned class HVs (sparse variants).
+    pub train_density: f64,
+}
+
+impl Trainer {
+    pub fn new(train_density: f64) -> Self {
+        Trainer {
+            counts: [Box::new([0u32; DIM]), Box::new([0u32; DIM])],
+            windows: [0; NUM_CLASSES],
+            train_density,
+        }
+    }
+
+    /// Add one query HV with its window label.
+    pub fn add_window(&mut self, query: &Hv, ictal: bool) {
+        let class = if ictal { CLASS_ICTAL } else { CLASS_INTERICTAL };
+        let plane = &mut self.counts[class];
+        for p in query.one_positions() {
+            plane[p] += 1;
+        }
+        self.windows[class] += 1;
+    }
+
+    pub fn windows(&self) -> [usize; NUM_CLASSES] {
+        self.windows
+    }
+
+    /// Thin one class plane to at most `train_density` (sparse bundling
+    /// with thinning, §II-D).
+    fn thin_class(&self, class: usize) -> Hv {
+        let plane = &self.counts[class];
+        let max_ones = (self.train_density * DIM as f64).floor() as usize;
+        // Count histogram over window counts (bounded by windows seen).
+        let max_count = self.windows[class] as u32;
+        if max_count == 0 {
+            return Hv::zero();
+        }
+        let mut hist = vec![0usize; max_count as usize + 2];
+        for &c in plane.iter() {
+            hist[c as usize] += 1;
+        }
+        // Smallest threshold t >= 1 with |{i : plane[i] >= t}| <= max_ones.
+        let mut ones = 0usize;
+        let mut t = max_count as usize + 1;
+        while t > 1 {
+            let next = ones + hist[t - 1];
+            if next > max_ones {
+                break;
+            }
+            ones = next;
+            t -= 1;
+        }
+        Hv::from_fn(|i| plane[i] >= t as u32)
+    }
+
+    /// Majority bundling for the dense design point.
+    fn majority_class(&self, class: usize) -> Hv {
+        let n = self.windows[class];
+        if n == 0 {
+            return Hv::zero();
+        }
+        let mut c16 = [0u16; DIM];
+        for (i, &c) in self.counts[class].iter().enumerate() {
+            c16[i] = c.min(u16::MAX as u32) as u16;
+        }
+        majority_from_counts(&c16, n)
+    }
+
+    /// Produce the associative memory for the given design variant.
+    pub fn finish(&self, variant: Variant) -> AssociativeMemory {
+        let (inter, ictal) = if variant.is_sparse() {
+            (
+                self.thin_class(CLASS_INTERICTAL),
+                self.thin_class(CLASS_ICTAL),
+            )
+        } else {
+            (
+                self.majority_class(CLASS_INTERICTAL),
+                self.majority_class(CLASS_ICTAL),
+            )
+        };
+        AssociativeMemory::new(inter, ictal)
+    }
+}
+
+/// One-shot training over a labelled frame stream.
+///
+/// Windows are labelled by *majority of frame labels* within the window
+/// (an expert-marked onset mid-window labels that window ictal only if
+/// most of it is ictal — conservative, mirrors [1]'s windowing).
+pub fn train_from_frames(
+    encoder: &mut dyn Encoder,
+    frames: impl IntoIterator<Item = LabelledFrame>,
+    train_density: f64,
+) -> AssociativeMemory {
+    let variant = encoder.variant();
+    let mut trainer = Trainer::new(train_density);
+    encoder.reset();
+    let mut ictal_frames = 0usize;
+    let mut total_frames = 0usize;
+    for (codes, ictal) in frames {
+        ictal_frames += ictal as usize;
+        total_frames += 1;
+        if let Some(query) = encoder.push_frame(&codes) {
+            trainer.add_window(&query, ictal_frames * 2 > total_frames);
+            ictal_frames = 0;
+            total_frames = 0;
+        }
+    }
+    encoder.reset();
+    trainer.finish(variant)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::classifier::{ClassifierConfig, SparseEncoder};
+    use crate::params::{CHANNELS, FRAMES_PER_PREDICTION, LBP_CODES};
+    use crate::rng::Xoshiro256;
+
+    /// Synthetic frame streams where ictal frames draw codes from a biased
+    /// alphabet — a stand-in for the LBP statistics shift of a seizure.
+    fn frame(rng: &mut Xoshiro256, ictal: bool) -> Frame {
+        let mut f = [0u8; CHANNELS];
+        for c in f.iter_mut() {
+            *c = if ictal {
+                // seizures: rhythmic, concentrated codes
+                rng.next_below(8) as u8
+            } else {
+                // background: broad alphabet, disjoint from the ictal one so
+                // the toy problem is cleanly separable
+                8 + rng.next_below(LBP_CODES as u64 - 8) as u8
+            };
+        }
+        f
+    }
+
+    #[test]
+    fn trained_am_separates_classes() {
+        let mut rng = Xoshiro256::new(42);
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+
+        // Train: 8 interictal windows then 8 ictal windows.
+        let mut frames = Vec::new();
+        for _ in 0..8 * FRAMES_PER_PREDICTION {
+            frames.push((frame(&mut rng, false), false));
+        }
+        for _ in 0..8 * FRAMES_PER_PREDICTION {
+            frames.push((frame(&mut rng, true), true));
+        }
+        let am = train_from_frames(&mut enc, frames, cfg.train_density);
+
+        // Class HVs should be near the density target and distinct.
+        let d0 = am.classes[CLASS_INTERICTAL].density();
+        let d1 = am.classes[CLASS_ICTAL].density();
+        assert!(d0 > 0.05 && d0 <= 0.5 + 1e-9, "interictal density {d0}");
+        assert!(d1 > 0.05 && d1 <= 0.5 + 1e-9, "ictal density {d1}");
+        assert_ne!(am.classes[0], am.classes[1]);
+
+        // Test: fresh windows classify correctly.
+        let mut correct = 0;
+        for &ictal in &[false, true, false, true] {
+            enc.reset();
+            let mut out = None;
+            for _ in 0..FRAMES_PER_PREDICTION {
+                out = out.or(enc.push_frame(&frame(&mut rng, ictal)));
+            }
+            let q = out.unwrap();
+            let r = am.search(&q);
+            if r.is_ictal() == ictal {
+                correct += 1;
+            }
+        }
+        assert_eq!(correct, 4, "one-shot training should separate the toy classes");
+    }
+
+    #[test]
+    fn empty_class_yields_zero_hv() {
+        let trainer = Trainer::new(0.5);
+        let am = trainer.finish(Variant::Optimized);
+        assert_eq!(am.classes[0].popcount(), 0);
+        assert_eq!(am.classes[1].popcount(), 0);
+    }
+
+    #[test]
+    fn thinning_respects_density_target() {
+        let mut rng = Xoshiro256::new(7);
+        let mut trainer = Trainer::new(0.3);
+        for _ in 0..20 {
+            trainer.add_window(&Hv::random(&mut rng, 0.25), true);
+        }
+        let am = trainer.finish(Variant::Optimized);
+        assert!(am.classes[CLASS_ICTAL].density() <= 0.3 + 1e-12);
+        assert!(am.classes[CLASS_ICTAL].density() > 0.0);
+    }
+
+    #[test]
+    fn window_labels_use_majority() {
+        // A window with less than half ictal frames counts interictal.
+        let mut rng = Xoshiro256::new(8);
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+        let mut frames = Vec::new();
+        for i in 0..FRAMES_PER_PREDICTION {
+            // 25% of frames labelled ictal.
+            frames.push((frame(&mut rng, false), i % 4 == 0));
+        }
+        let am = train_from_frames(&mut enc, frames, cfg.train_density);
+        // Everything went to interictal; the ictal class stays empty.
+        assert_eq!(am.classes[CLASS_ICTAL].popcount(), 0);
+        assert!(am.classes[CLASS_INTERICTAL].popcount() > 0);
+    }
+
+    #[test]
+    fn dense_training_majority() {
+        let mut rng = Xoshiro256::new(9);
+        let mut trainer = Trainer::new(0.5);
+        let proto = Hv::random_half(&mut rng);
+        for _ in 0..9 {
+            trainer.add_window(&proto, true);
+        }
+        // one dissenting window
+        trainer.add_window(&Hv::random_half(&mut rng), true);
+        let am = trainer.finish(Variant::DenseBaseline);
+        // Majority of 10 windows, 9 identical → equals proto.
+        assert_eq!(am.classes[CLASS_ICTAL], proto);
+    }
+}

@@ -1,0 +1,255 @@
+//! Report formatting: the textual reproductions of Fig. 1(c), Fig. 5 and
+//! Table I.
+
+use crate::hdc::classifier::Variant;
+use crate::params::CHANNELS;
+
+use super::designs::DesignReport;
+
+fn bar(frac: f64, width: usize) -> String {
+    let filled = (frac * width as f64).round() as usize;
+    let mut s = String::new();
+    for i in 0..width {
+        s.push(if i < filled { '█' } else { '·' });
+    }
+    s
+}
+
+/// Fig. 1(c): per-module area and energy breakdown of one design.
+pub fn format_breakdown(rep: &DesignReport) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "design: {:<18} area {:.4} mm²  energy/predict {:.2} nJ  (dyn {:.2} + leak {:.2})\n",
+        rep.variant.name(),
+        rep.area_mm2(),
+        rep.energy_nj_per_pred(),
+        rep.dyn_nj_per_pred(),
+        rep.leak_nj_per_pred(),
+    ));
+    out.push_str(&format!(
+        "{:<18} {:>8}  {:<26} {:>8}  {:<26}\n",
+        "module", "area%", "", "energy%", ""
+    ));
+    for (name, a, e) in rep.shares() {
+        out.push_str(&format!(
+            "{:<18} {:>7.1}%  {:<26} {:>7.1}%  {:<26}\n",
+            name,
+            a * 100.0,
+            bar(a, 26),
+            e * 100.0,
+            bar(e, 26)
+        ));
+    }
+    out
+}
+
+/// Fig. 5: the four designs side by side with ratios vs. the optimized
+/// design.
+pub fn format_comparison(reports: &[DesignReport]) -> String {
+    let opt = reports
+        .iter()
+        .find(|r| r.variant == Variant::Optimized)
+        .expect("optimized design present");
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<18} {:>10} {:>12} {:>10} {:>10} {:>10}\n",
+        "design", "area mm²", "energy nJ", "power µW", "area ×", "energy ×"
+    ));
+    for r in reports {
+        out.push_str(&format!(
+            "{:<18} {:>10.4} {:>12.2} {:>10.1} {:>9.2}x {:>9.2}x\n",
+            r.variant.name(),
+            r.area_mm2(),
+            r.energy_nj_per_pred(),
+            r.power_uw(),
+            r.area_mm2() / opt.area_mm2(),
+            r.energy_nj_per_pred() / opt.energy_nj_per_pred(),
+        ));
+    }
+    out.push('\n');
+    for r in reports {
+        out.push_str(&format_breakdown(r));
+        out.push('\n');
+    }
+    out
+}
+
+/// One row of Table I.
+#[derive(Clone, Debug)]
+pub struct SotaRow {
+    pub label: &'static str,
+    pub application: &'static str,
+    pub kind: &'static str,
+    pub tech_nm: u32,
+    pub voltage_v: Option<f64>,
+    pub freq_mhz: Option<f64>,
+    pub hv_dim: Option<u32>,
+    pub channels: u32,
+    pub area_mm2: f64,
+    pub latency: &'static str,
+    pub energy_per_predict_nj: f64,
+}
+
+impl SotaRow {
+    pub fn energy_per_channel_nj(&self) -> f64 {
+        self.energy_per_predict_nj / self.channels as f64
+    }
+}
+
+/// Literature rows of Table I ([10] Elhosary'19 SVM, [11] O'Leary'20
+/// decision tree, [3] Menon'22 dense HDC) — published numbers, reproduced
+/// verbatim from the paper's table.
+pub fn literature_rows() -> Vec<SotaRow> {
+    vec![
+        SotaRow {
+            label: "[10] SVM",
+            application: "EEG seizure det.",
+            kind: "SVM",
+            tech_nm: 65,
+            voltage_v: None,
+            freq_mhz: Some(100.0),
+            hv_dim: None,
+            channels: 23,
+            area_mm2: 0.09,
+            latency: "160 ns",
+            energy_per_predict_nj: 841.6,
+        },
+        SotaRow {
+            label: "[11] DT",
+            application: "iEEG brain state",
+            kind: "Decision Tree",
+            tech_nm: 65,
+            voltage_v: Some(1.2),
+            freq_mhz: None,
+            hv_dim: None,
+            channels: 8,
+            area_mm2: 1.95,
+            latency: "-",
+            energy_per_predict_nj: 36.0,
+        },
+        SotaRow {
+            label: "[3] dense HDC",
+            application: "Emotion recog.",
+            kind: "Dense HDC",
+            tech_nm: 28,
+            voltage_v: Some(0.8),
+            freq_mhz: Some(0.909),
+            hv_dim: Some(2000),
+            channels: 214,
+            area_mm2: 0.068,
+            latency: "1 ms",
+            energy_per_predict_nj: 39.1,
+        },
+    ]
+}
+
+/// Our measured row from the optimized design report.
+pub fn ours_row(rep: &DesignReport) -> SotaRow {
+    assert_eq!(rep.variant, Variant::Optimized);
+    SotaRow {
+        label: "Ours*",
+        application: "iEEG seizure det.",
+        kind: "Sparse HDC",
+        tech_nm: 16,
+        voltage_v: Some(rep.tech.vdd),
+        freq_mhz: Some(rep.clock_mhz()),
+        hv_dim: Some(crate::params::DIM as u32),
+        channels: CHANNELS as u32,
+        area_mm2: rep.area_mm2(),
+        latency: "25.6 µs",
+        energy_per_predict_nj: rep.energy_nj_per_pred(),
+    }
+}
+
+/// Table I, formatted.
+pub fn format_table1(rep: &DesignReport) -> String {
+    let mut rows = vec![ours_row(rep)];
+    rows.extend(literature_rows());
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14} {:<18} {:<14} {:>5} {:>6} {:>8} {:>6} {:>4} {:>9} {:>10} {:>10} {:>8}\n",
+        "spec",
+        "application",
+        "type",
+        "tech",
+        "V",
+        "f MHz",
+        "D",
+        "ch",
+        "area mm²",
+        "latency",
+        "E/pred nJ",
+        "E/ch nJ"
+    ));
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<14} {:<18} {:<14} {:>5} {:>6} {:>8} {:>6} {:>4} {:>9.3} {:>10} {:>10.1} {:>8.3}\n",
+            r.label,
+            r.application,
+            r.kind,
+            r.tech_nm,
+            r.voltage_v.map(|v| format!("{v:.2}")).unwrap_or("-".into()),
+            r.freq_mhz.map(|f| format!("{f}")).unwrap_or("-".into()),
+            r.hv_dim.map(|d| d.to_string()).unwrap_or("-".into()),
+            r.channels,
+            r.area_mm2,
+            r.latency,
+            r.energy_per_predict_nj,
+            r.energy_per_channel_nj(),
+        ));
+    }
+    out.push_str("* synthesized-model results (gate-level cost model, see DESIGN.md)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::classifier::ClassifierConfig;
+    use crate::hwmodel::designs::analyze_all;
+
+    #[test]
+    fn formatting_smoke() {
+        let reports = analyze_all(&ClassifierConfig::default(), 1);
+        let cmp = format_comparison(&reports);
+        assert!(cmp.contains("sparse-optimized"));
+        assert!(cmp.contains("dense-baseline"));
+        let t1 = format_table1(&reports[3]);
+        assert!(t1.contains("Ours*"));
+        assert!(t1.contains("[10] SVM"));
+        assert!(t1.contains("[3] dense HDC"));
+    }
+
+    #[test]
+    fn ours_beats_sota_on_energy_per_predict() {
+        // Table I claim: most energy-efficient per prediction.
+        let reports = analyze_all(&ClassifierConfig::default(), 1);
+        let ours = ours_row(&reports[3]);
+        for r in literature_rows() {
+            assert!(
+                ours.energy_per_predict_nj < r.energy_per_predict_nj,
+                "ours {} vs {} {}",
+                ours.energy_per_predict_nj,
+                r.label,
+                r.energy_per_predict_nj
+            );
+        }
+    }
+
+    #[test]
+    fn literature_rows_pin_paper_values() {
+        let rows = literature_rows();
+        assert_eq!(rows[0].energy_per_predict_nj, 841.6);
+        assert_eq!(rows[1].area_mm2, 1.95);
+        assert_eq!(rows[2].channels, 214);
+        assert!((rows[2].energy_per_channel_nj() - 0.183).abs() < 0.01);
+        assert!((rows[0].energy_per_channel_nj() - 36.59).abs() < 0.05);
+    }
+
+    #[test]
+    fn bar_rendering() {
+        assert_eq!(bar(0.0, 4), "····");
+        assert_eq!(bar(1.0, 4), "████");
+        assert_eq!(bar(0.5, 4), "██··");
+    }
+}

@@ -1,0 +1,303 @@
+//! The four design points and their full cost reports.
+
+use crate::data::synth::{SynthConfig, SynthPatient};
+use crate::hdc::classifier::{ClassifierConfig, Frame, Variant};
+use crate::params::{CLOCK_HZ, FRAMES_PER_PREDICTION, PREDICT_LATENCY_S};
+use crate::pipeline::record_frames;
+
+use super::activity::{collect_activity, Activity};
+use super::gates::{Tech, TSMC16};
+use super::modules::{self, ModuleCost};
+
+/// A complete area/energy report for one design point.
+#[derive(Clone, Debug)]
+pub struct DesignReport {
+    pub variant: Variant,
+    pub tech: Tech,
+    pub modules: Vec<ModuleCost>,
+    pub activity: Activity,
+}
+
+impl DesignReport {
+    pub fn area_ge(&self) -> f64 {
+        self.modules.iter().map(|m| m.area_ge).sum()
+    }
+
+    pub fn area_mm2(&self) -> f64 {
+        self.area_ge() * self.tech.ge_area_um2 * 1e-6
+    }
+
+    /// Dynamic energy per prediction (nJ).
+    pub fn dyn_nj_per_pred(&self) -> f64 {
+        self.modules.iter().map(|m| m.dyn_fj_per_pred).sum::<f64>() * 1e-6
+    }
+
+    /// Leakage energy per prediction (nJ): leak power × 25.6 µs.
+    pub fn leak_nj_per_pred(&self) -> f64 {
+        self.area_ge() * self.tech.leak_nw_per_ge * 1e-9 * PREDICT_LATENCY_S * 1e9
+    }
+
+    /// Total energy per prediction (nJ) — the paper's "Energy per predict".
+    pub fn energy_nj_per_pred(&self) -> f64 {
+        self.dyn_nj_per_pred() + self.leak_nj_per_pred()
+    }
+
+    /// Average power at the paper's duty (one prediction per 256 cycles,
+    /// µW).
+    pub fn power_uw(&self) -> f64 {
+        self.energy_nj_per_pred() * 1e-9 / PREDICT_LATENCY_S * 1e6
+    }
+
+    pub fn energy_per_channel_nj(&self) -> f64 {
+        self.energy_nj_per_pred() / crate::params::CHANNELS as f64
+    }
+
+    pub fn latency_us(&self) -> f64 {
+        PREDICT_LATENCY_S * 1e6
+    }
+
+    pub fn clock_mhz(&self) -> f64 {
+        CLOCK_HZ / 1e6
+    }
+
+    /// Per-module (name, area share, energy share) with leakage folded
+    /// into each module proportionally to its area.
+    pub fn shares(&self) -> Vec<(&'static str, f64, f64)> {
+        let total_area = self.area_ge();
+        let leak_total_fj = self.leak_nj_per_pred() * 1e6;
+        let total_energy_fj: f64 =
+            self.modules.iter().map(|m| m.dyn_fj_per_pred).sum::<f64>() + leak_total_fj;
+        self.modules
+            .iter()
+            .map(|m| {
+                let module_leak = leak_total_fj * m.area_ge / total_area;
+                (
+                    m.name,
+                    m.area_ge / total_area,
+                    (m.dyn_fj_per_pred + module_leak) / total_energy_fj,
+                )
+            })
+            .collect()
+    }
+
+    /// Energy (nJ, leakage included) of one module group by names.
+    pub fn group_energy_nj(&self, names: &[&str]) -> f64 {
+        let total = self.energy_nj_per_pred();
+        self.shares()
+            .iter()
+            .filter(|(n, _, _)| names.contains(n))
+            .map(|(_, _, e)| e * total)
+            .sum()
+    }
+
+    pub fn group_area_mm2(&self, names: &[&str]) -> f64 {
+        let total = self.area_mm2();
+        self.shares()
+            .iter()
+            .filter(|(n, _, _)| names.contains(n))
+            .map(|(_, a, _)| a * total)
+            .sum()
+    }
+}
+
+/// Analyze one design point under the given stimulus frames.
+pub fn analyze(variant: Variant, cfg: &ClassifierConfig, frames: &[Frame]) -> DesignReport {
+    let tech = TSMC16.clone();
+    let act = collect_activity(variant, cfg, frames);
+    let modules: Vec<ModuleCost> = match variant {
+        Variant::SparseBaseline => vec![
+            modules::im_baseline(&tech, &act),
+            modules::onehot_decoder(&tech, &act),
+            modules::binding_baseline(&tech, &act),
+            modules::spatial_adder(&tech, &act),
+            modules::temporal(&tech, &act),
+            modules::am_sparse(&tech, &act),
+        ],
+        Variant::SparseCompIm => vec![
+            modules::im_compressed(&tech, &act),
+            modules::binding_compim(&tech, &act),
+            modules::spatial_adder(&tech, &act),
+            modules::temporal(&tech, &act),
+            modules::am_sparse(&tech, &act),
+        ],
+        Variant::Optimized => vec![
+            modules::im_compressed(&tech, &act),
+            modules::binding_compim(&tech, &act),
+            modules::spatial_or(&tech, &act),
+            modules::temporal(&tech, &act),
+            modules::am_sparse(&tech, &act),
+        ],
+        Variant::DenseBaseline => vec![
+            modules::im_dense(&tech, &act),
+            modules::binding_dense(&tech, &act),
+            modules::spatial_dense(&tech, &act),
+            modules::temporal_dense(&tech, &act),
+            modules::am_dense(&tech, &act),
+        ],
+    };
+    DesignReport {
+        variant,
+        tech,
+        modules,
+        activity: act,
+    }
+}
+
+/// The paper's stimulus: "energy and area analysis were carried out on
+/// seizure data from patient 11" (§IV). We use the synthetic patient 11's
+/// seizure record.
+pub fn patient11_stimulus(windows: usize) -> Vec<Frame> {
+    let synth = SynthConfig {
+        records_per_patient: 1,
+        // Center the stimulus on the seizure: lead-in + ictal covering the
+        // requested number of prediction windows.
+        pre_s: 8.0,
+        ictal_s: (windows as f64) * FRAMES_PER_PREDICTION as f64
+            / crate::params::SAMPLE_RATE_HZ,
+        post_s: 2.0,
+        ..Default::default()
+    };
+    let patient = SynthPatient::generate(&synth, 11);
+    let rec = &patient.records[0];
+    let frames: Vec<Frame> = record_frames(rec).into_iter().map(|(f, _)| f).collect();
+    // Skip the interictal lead-in so the windows cover seizure activity,
+    // keeping one pre-ictal window for realistic bus-toggle warm-up.
+    let start = ((8.0 - 0.5) * crate::params::SAMPLE_RATE_HZ) as usize
+        / FRAMES_PER_PREDICTION
+        * FRAMES_PER_PREDICTION;
+    frames[start..].to_vec()
+}
+
+/// Analyze every design point under the same stimulus.
+pub fn analyze_all(cfg_sparse_baseline: &ClassifierConfig, windows: usize) -> Vec<DesignReport> {
+    let frames = patient11_stimulus(windows);
+    // All designs are evaluated with spatial threshold 1, i.e. with the
+    // function the paper shows to be equivalent across the design points
+    // (§III-B: removing the thinning is lossless), so the Fig. 5 deltas
+    // isolate *hardware* differences.
+    let cfg = ClassifierConfig {
+        spatial_threshold: 1,
+        ..cfg_sparse_baseline.clone()
+    };
+    vec![
+        analyze(Variant::DenseBaseline, &cfg, &frames),
+        analyze(Variant::SparseBaseline, &cfg, &frames),
+        analyze(Variant::SparseCompIm, &cfg, &frames),
+        analyze(Variant::Optimized, &cfg, &frames),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reports() -> Vec<DesignReport> {
+        analyze_all(&ClassifierConfig::default(), 2)
+    }
+
+    #[test]
+    fn headline_ratios_have_paper_shape() {
+        let r = reports();
+        let dense = &r[0];
+        let base = &r[1];
+        let opt = &r[3];
+
+        let e_ratio_base = base.energy_nj_per_pred() / opt.energy_nj_per_pred();
+        let a_ratio_base = base.area_mm2() / opt.area_mm2();
+        let e_ratio_dense = dense.energy_nj_per_pred() / opt.energy_nj_per_pred();
+        let a_ratio_dense = dense.area_mm2() / opt.area_mm2();
+
+        // Paper: 1.72× / 2.20× vs sparse baseline, 7.50× / 3.24× vs dense.
+        // The reproduction must preserve the *shape*: optimized wins on
+        // both axes against both baselines, with dense-energy the largest
+        // gap.
+        assert!(
+            (1.4..2.1).contains(&e_ratio_base),
+            "energy vs sparse baseline {e_ratio_base} (paper 1.72)"
+        );
+        assert!(
+            (1.8..2.9).contains(&a_ratio_base),
+            "area vs sparse baseline {a_ratio_base} (paper 2.20)"
+        );
+        assert!(
+            (5.5..11.0).contains(&e_ratio_dense),
+            "energy vs dense {e_ratio_dense} (paper 7.50)"
+        );
+        assert!(
+            (2.4..4.8).contains(&a_ratio_dense),
+            "area vs dense {a_ratio_dense} (paper 3.24)"
+        );
+        assert!(
+            e_ratio_dense > e_ratio_base,
+            "dense energy gap must exceed sparse-baseline gap"
+        );
+    }
+
+    #[test]
+    fn optimized_absolute_point_near_paper() {
+        let r = reports();
+        let opt = &r[3];
+        let area = opt.area_mm2();
+        let energy = opt.energy_nj_per_pred();
+        // Paper: 0.059 mm², 12.5 nJ. Calibration tolerance: ±40%.
+        assert!(
+            (0.035..0.095).contains(&area),
+            "optimized area {area} mm² too far from 0.059"
+        );
+        assert!(
+            (7.0..20.0).contains(&energy),
+            "optimized energy {energy} nJ too far from 12.5"
+        );
+    }
+
+    #[test]
+    fn baseline_breakdown_matches_fig1c_shape() {
+        let r = reports();
+        let base = &r[1];
+        let shares = base.shares();
+        let share = |name: &str| -> (f64, f64) {
+            shares
+                .iter()
+                .find(|(n, _, _)| *n == name)
+                .map(|(_, a, e)| (*a, *e))
+                .unwrap()
+        };
+        let (a_bind, e_bind) = share("binding");
+        let (a_dec, e_dec) = share("one-hot-decoder");
+        let (a_spatial, _) = share("spatial-bundling");
+        // Fig 1(c): binding + decoder ≈ 51.3% energy / 38% area; spatial
+        // bundling ≈ 44.9% area. Accept generous bands.
+        let bind_energy = e_bind + e_dec;
+        let bind_area = a_bind + a_dec;
+        assert!(
+            (0.30..0.70).contains(&bind_energy),
+            "binding+decoder energy share {bind_energy}"
+        );
+        assert!(
+            (0.20..0.55).contains(&bind_area),
+            "binding+decoder area share {bind_area}"
+        );
+        assert!(
+            (0.25..0.60).contains(&a_spatial),
+            "spatial bundling area share {a_spatial}"
+        );
+    }
+
+    #[test]
+    fn latency_is_25_6_us() {
+        let r = reports();
+        assert!((r[3].latency_us() - 25.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shares_sum_to_one() {
+        for rep in reports() {
+            let (a, e): (f64, f64) = rep
+                .shares()
+                .iter()
+                .fold((0.0, 0.0), |(a, e), (_, sa, se)| (a + sa, e + se));
+            assert!((a - 1.0).abs() < 1e-9, "{:?} area shares {a}", rep.variant);
+            assert!((e - 1.0).abs() < 1e-9, "{:?} energy shares {e}", rep.variant);
+        }
+    }
+}

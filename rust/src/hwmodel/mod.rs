@@ -1,0 +1,28 @@
+//! Gate-level hardware cost model — the synthesis-flow substitution
+//! (DESIGN.md §2).
+//!
+//! The paper reports synthesis results (TSMC 16nm FinFET, Synopsys DC +
+//! PrimeTime PX with switching annotations). We cannot run that flow, so
+//! this module rebuilds its two ingredients in the Accelergy/CACTI
+//! tradition:
+//!
+//! 1. **Structural area model** ([`gates`], [`modules`]): every datapath
+//!    block of every design point is decomposed into standard-cell
+//!    primitives (ROM bits, decoders, one-hot encoders, adders, barrel
+//!    muxes, OR/adder trees, flip-flops) with 16nm-class gate-equivalent
+//!    counts.
+//! 2. **Switching-activity-annotated energy model** ([`activity`]): the
+//!    bit-accurate simulators from [`crate::hdc`] run real (synthetic-
+//!    patient) stimuli through each design and count actual bit toggles on
+//!    every bus and tree; per-toggle energies then produce nJ/prediction.
+//!    This preserves the paper's central mechanism — sparse HVs toggle ~2%
+//!    of the bits dense HVs do — rather than assuming it.
+//!
+//! [`designs`] assembles the four design points and [`breakdown`] formats
+//! the Fig. 1(c) / Fig. 5 / Table I reproductions.
+
+pub mod gates;
+pub mod activity;
+pub mod modules;
+pub mod designs;
+pub mod breakdown;

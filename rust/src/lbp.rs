@@ -1,0 +1,193 @@
+//! Local binary pattern (LBP) preprocessing — the front-end of the
+//! Burrello'18 pipeline the paper inherits (§II: "the electrode data is
+//! preprocessed into 6-bit local binary pattern codes, which capture the
+//! relation between consecutive values").
+//!
+//! For channel samples `x[t]`, the 6-bit code at time `t` is
+//!
+//! ```text
+//! bit i = 1  iff  x[t - 5 + i] > x[t - 6 + i],   i = 0..5
+//! ```
+//!
+//! i.e. the signs of the last six first-order differences, oldest
+//! difference in the LSB. Until six differences are available the encoder
+//! emits code 0 (hardware reset state).
+
+use crate::params::{CHANNELS, LBP_BITS};
+
+/// Streaming LBP encoder for a single channel.
+#[derive(Clone, Debug)]
+pub struct LbpChannel {
+    last: Option<f32>,
+    code: u8,
+    diffs_seen: u32,
+}
+
+impl Default for LbpChannel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LbpChannel {
+    pub fn new() -> Self {
+        LbpChannel {
+            last: None,
+            code: 0,
+            diffs_seen: 0,
+        }
+    }
+
+    /// Push one sample, get the current 6-bit code.
+    #[inline]
+    pub fn push(&mut self, x: f32) -> u8 {
+        if let Some(prev) = self.last {
+            let up = (x > prev) as u8;
+            // Shift the new difference sign into the MSB of the 6-bit code;
+            // the oldest sign falls off the LSB side.
+            self.code = (self.code >> 1) | (up << (LBP_BITS - 1));
+            self.diffs_seen = self.diffs_seen.saturating_add(1);
+        }
+        self.last = Some(x);
+        self.current()
+    }
+
+    /// Current code (0 during warm-up).
+    #[inline]
+    pub fn current(&self) -> u8 {
+        if self.diffs_seen >= LBP_BITS as u32 {
+            self.code
+        } else {
+            0
+        }
+    }
+
+    /// Warm-up complete (six differences observed)?
+    pub fn ready(&self) -> bool {
+        self.diffs_seen >= LBP_BITS as u32
+    }
+
+    pub fn reset(&mut self) {
+        *self = LbpChannel::new();
+    }
+}
+
+/// Streaming LBP encoder for the full 64-channel array.
+#[derive(Clone, Debug)]
+pub struct LbpFrontend {
+    channels: Vec<LbpChannel>,
+}
+
+impl Default for LbpFrontend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LbpFrontend {
+    pub fn new() -> Self {
+        LbpFrontend {
+            channels: vec![LbpChannel::new(); CHANNELS],
+        }
+    }
+
+    /// Push one multichannel sample, get the frame of codes.
+    pub fn push(&mut self, samples: &[f32; CHANNELS]) -> [u8; CHANNELS] {
+        let mut codes = [0u8; CHANNELS];
+        for (c, (enc, &x)) in self.channels.iter_mut().zip(samples.iter()).enumerate() {
+            codes[c] = enc.push(x);
+        }
+        codes
+    }
+
+    pub fn ready(&self) -> bool {
+        self.channels.iter().all(|c| c.ready())
+    }
+
+    pub fn reset(&mut self) {
+        for c in &mut self.channels {
+            c.reset();
+        }
+    }
+}
+
+/// Batch helper: LBP codes for a whole single-channel signal.
+pub fn lbp_codes(signal: &[f32]) -> Vec<u8> {
+    let mut enc = LbpChannel::new();
+    signal.iter().map(|&x| enc.push(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotonic_rising_gives_all_ones() {
+        let signal: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let codes = lbp_codes(&signal);
+        // After warm-up (6 diffs = 7 samples) the code is 0b111111 = 63.
+        assert_eq!(codes[19], 0b11_1111);
+        assert!(codes[..6].iter().all(|&c| c == 0), "warm-up emits 0");
+    }
+
+    #[test]
+    fn monotonic_falling_gives_zero() {
+        let signal: Vec<f32> = (0..20).map(|i| -(i as f32)).collect();
+        let codes = lbp_codes(&signal);
+        assert_eq!(codes[19], 0);
+    }
+
+    #[test]
+    fn alternating_signal_alternates_codes() {
+        // x = +1, -1, +1, ... → diffs alternate down/up.
+        let signal: Vec<f32> = (0..30).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let codes = lbp_codes(&signal);
+        let a = codes[20];
+        let b = codes[21];
+        assert_ne!(a, b);
+        assert_eq!(codes[22], a, "period-2 signal gives period-2 codes");
+        // Exactly 3 ups in any window of 6 alternating diffs.
+        assert_eq!(a.count_ones(), 3);
+        assert_eq!(b.count_ones(), 3);
+    }
+
+    #[test]
+    fn newest_diff_in_msb() {
+        // Five falling samples then one rise → only the MSB set.
+        let signal = [10.0, 9.0, 8.0, 7.0, 6.0, 5.0, 6.0];
+        let codes = lbp_codes(&signal);
+        assert_eq!(*codes.last().unwrap(), 1 << (LBP_BITS - 1));
+    }
+
+    #[test]
+    fn codes_fit_six_bits() {
+        let signal: Vec<f32> = (0..200).map(|i| ((i * 37) % 17) as f32).collect();
+        for c in lbp_codes(&signal) {
+            assert!(c < 64);
+        }
+    }
+
+    #[test]
+    fn equal_samples_count_as_not_greater() {
+        let signal = [1.0f32; 20];
+        let codes = lbp_codes(&signal);
+        assert_eq!(codes[19], 0);
+    }
+
+    #[test]
+    fn frontend_matches_per_channel() {
+        let mut fe = LbpFrontend::new();
+        let mut per_channel: Vec<LbpChannel> = vec![LbpChannel::new(); CHANNELS];
+        for t in 0..50 {
+            let mut sample = [0f32; CHANNELS];
+            for (c, s) in sample.iter_mut().enumerate() {
+                *s = ((t * (c + 1)) % 7) as f32;
+            }
+            let frame = fe.push(&sample);
+            for c in 0..CHANNELS {
+                assert_eq!(frame[c], per_channel[c].push(sample[c]));
+            }
+        }
+        assert!(fe.ready());
+    }
+}

@@ -1,0 +1,66 @@
+//! # sparse-hdc-ieeg
+//!
+//! Full-system reproduction of *"iEEG Seizure Detection with a Sparse
+//! Hyperdimensional Computing Accelerator"* (Cuyckens et al., PRIME 2025).
+//!
+//! The crate is organised as the Layer-3 (Rust) half of a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`hdc`] — bit-accurate golden-model simulators of the dense and sparse
+//!   HDC classifiers (item memory, segmented-shift binding, bundling with and
+//!   without thinning, temporal encoding, associative memory, one-shot
+//!   training). These are the reference semantics every other layer
+//!   (Pallas kernels, JAX graphs, the PJRT-loaded HLO executables and the
+//!   hardware cost model) must agree with bit-exactly.
+//! * [`lbp`] — the 6-bit local-binary-pattern front-end (Burrello'18).
+//! * [`data`] — the synthetic iEEG substrate (patients, seizures,
+//!   annotations), dataset containers and detection metrics.
+//! * [`hwmodel`] — the gate-level area/energy cost model (16nm-class
+//!   constants + switching-activity annotation from the simulators) that
+//!   regenerates the paper's Fig. 1(c), Fig. 5 and Table I.
+//! * [`runtime`] — the PJRT client wrapper that loads the AOT-compiled
+//!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py` and executes
+//!   them on the request path.
+//! * [`coordinator`] — the streaming serving layer: per-patient sessions,
+//!   frame batching, routing, detector post-processing, metrics and
+//!   backpressure.
+//! * [`bench`]-support ([`benchkit`]) and property-testing ([`testkit`])
+//!   substrates, plus a dependency-free CLI parser ([`cli`]) and config
+//!   system ([`config`]) — the offline build environment has no criterion /
+//!   proptest / clap / serde, so these are built in-repo (see DESIGN.md §2).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
+//! use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+//! use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
+//! use sparse_hdc_ieeg::pipeline;
+//!
+//! let patient = SynthPatient::generate(&SynthConfig::default(), 11);
+//! let eval = pipeline::evaluate_patient(
+//!     Variant::Optimized,
+//!     &ClassifierConfig::optimized(),
+//!     &patient,
+//!     Some(0.25), // max HV density after thinning (Fig. 4 hyperparameter)
+//!     AlarmPolicy::default(),
+//! );
+//! println!("detected {}/{}", eval.summary.detected, eval.summary.seizures);
+//! ```
+
+pub mod params;
+pub mod rng;
+pub mod hdc;
+pub mod lbp;
+pub mod pipeline;
+pub mod data;
+pub mod hwmodel;
+pub mod runtime;
+pub mod coordinator;
+pub mod cli;
+pub mod config;
+pub mod benchkit;
+pub mod testkit;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,75 @@
+//! `repro` — the leader binary of the sparse-HDC iEEG reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §4):
+//!
+//! * `gen-data`  — write synthetic patient datasets to disk
+//! * `train`     — one-shot-train a patient, store the AM
+//! * `detect`    — run a trained classifier over records
+//! * `serve`     — start the streaming coordinator (end-to-end system)
+//! * `fig1c`     — naive-sparse area/energy breakdown (paper Fig. 1(c))
+//! * `fig4`      — delay/accuracy vs max-density sweep (paper Fig. 4)
+//! * `fig5`      — four-design breakdown comparison (paper Fig. 5)
+//! * `table1`    — SotA comparison (paper Table I)
+
+use anyhow::bail;
+
+use sparse_hdc_ieeg::cli::Args;
+
+mod commands;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_deref() {
+        Some("gen-data") => commands::gen_data(args),
+        Some("train") => commands::train(args),
+        Some("detect") => commands::detect(args),
+        Some("serve") => commands::serve(args),
+        Some("fig1c") => commands::fig1c(args),
+        Some("fig4") => commands::fig4(args),
+        Some("fig5") => commands::fig5(args),
+        Some("table1") => commands::table1(args),
+        Some("ablate-thinning") => commands::ablate_thinning(args),
+        Some("help") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?} (try `repro help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        r#"repro — sparse-HDC iEEG seizure detection (PRIME'25 reproduction)
+
+USAGE: repro <subcommand> [options]
+
+data / model:
+  gen-data  --out DIR [--patients N] [--records N] [--seed S]
+  train     --data DIR --patient ID [--variant V] [--max-density D] [--out FILE]
+  detect    --data DIR --patient ID [--variant V] [--max-density D]
+  serve     --data DIR [--config FILE] [--patients LIST] [--use-pjrt] [--realtime]
+
+paper experiments:
+  fig1c     [--windows N]                 naive sparse breakdown (Fig. 1c)
+  fig4      [--patients N] [--densities LIST] [--variant V]  (Fig. 4)
+  fig5      [--windows N]                 design comparison (Fig. 5)
+  table1    [--windows N]                 SotA comparison (Table I)
+  ablate-thinning [--patients N] [--max-density D]   §III-B ablation
+
+variants: dense-baseline | sparse-baseline | sparse-compim | sparse-optimized
+"#
+    );
+}

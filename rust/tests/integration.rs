@@ -1,0 +1,238 @@
+//! Cross-module integration tests: dataset round-trips through the full
+//! one-shot workflow, native-vs-PJRT serving equality, config layering,
+//! and failure injection (corrupt artifacts, corrupt datasets, bad
+//! sessions, tiny queues).
+
+use std::path::PathBuf;
+
+use sparse_hdc_ieeg::config::{ConfigFile, SystemConfig};
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec};
+use sparse_hdc_ieeg::data::dataset;
+use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
+use sparse_hdc_ieeg::data::synth::{PatientProfile, SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
+use sparse_hdc_ieeg::pipeline;
+use sparse_hdc_ieeg::runtime::engine_pool::EngineHost;
+use sparse_hdc_ieeg::runtime::EngineKind;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("hdc_it_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn tiny_synth() -> SynthConfig {
+    SynthConfig {
+        records_per_patient: 2,
+        pre_s: 4.0,
+        ictal_s: 3.0,
+        post_s: 1.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn one_shot_workflow_through_disk() {
+    // gen-data → save → load → train → detect, entirely via public API.
+    let dir = tmpdir("workflow");
+    let cfg = tiny_synth();
+    let patient = SynthPatient::generate(&cfg, 5);
+    dataset::save_patient(&patient.records, &dir, 5).unwrap();
+
+    let records = dataset::load_patient(&dir, 5).unwrap();
+    assert_eq!(records.len(), 2);
+    let loaded = SynthPatient {
+        profile: PatientProfile::derive(&cfg, 5),
+        records,
+    };
+    let eval = pipeline::evaluate_patient(
+        Variant::Optimized,
+        &ClassifierConfig::optimized(),
+        &loaded,
+        Some(0.25),
+        AlarmPolicy::default(),
+    );
+    assert_eq!(eval.summary.seizures, 1);
+    // Must match the in-memory evaluation exactly (float round-trip safe:
+    // the format stores f32 verbatim).
+    let eval_mem = pipeline::evaluate_patient(
+        Variant::Optimized,
+        &ClassifierConfig::optimized(),
+        &patient,
+        Some(0.25),
+        AlarmPolicy::default(),
+    );
+    assert_eq!(eval.summary.detected, eval_mem.summary.detected);
+    assert_eq!(eval.temporal_threshold, eval_mem.temporal_threshold);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pjrt_and_native_serving_agree() {
+    // The same streams through both backends must yield identical
+    // per-window predictions (cross_language.rs proves single windows;
+    // this proves the full serving path incl. session state).
+    if !PathBuf::from("artifacts/manifest.txt").exists() {
+        panic!("artifacts/ missing — run `make artifacts`");
+    }
+    let cfg = ClassifierConfig::optimized();
+    let patient = SynthPatient::generate(&tiny_synth(), 9);
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+    let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+    let spec = |sid| StreamSpec {
+        session_id: sid,
+        patient_id: 9,
+        record: patient.records[1].clone(),
+        am: am.clone(),
+        threshold: cfg.temporal_threshold,
+    };
+
+    let native = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![spec(1)])
+        .unwrap();
+    let pjrt = Coordinator::new(
+        SystemConfig::default(),
+        Backend::Pjrt {
+            artifacts_dir: "artifacts".into(),
+        },
+    )
+    .run(vec![spec(1)])
+    .unwrap();
+
+    assert_eq!(native.sessions[0].windows, pjrt.sessions[0].windows);
+    assert_eq!(native.sessions[0].eval.detected, pjrt.sessions[0].eval.detected);
+    assert_eq!(native.sessions[0].eval.delay_s, pjrt.sessions[0].eval.delay_s);
+    assert_eq!(
+        native.sessions[0].alarms.len(),
+        pjrt.sessions[0].alarms.len()
+    );
+}
+
+#[test]
+fn backpressure_with_depth_one_queue_completes() {
+    let mut system = SystemConfig::default();
+    system.queue_depth = 1;
+    let cfg = ClassifierConfig::optimized();
+    let patient = SynthPatient::generate(&tiny_synth(), 3);
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+    let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+    let report = Coordinator::new(system, Backend::Native)
+        .run(vec![StreamSpec {
+            session_id: 1,
+            patient_id: 3,
+            record: patient.records[1].clone(),
+            am,
+            threshold: cfg.temporal_threshold,
+        }])
+        .unwrap();
+    assert_eq!(report.metrics.windows_failed, 0);
+    assert!(report.metrics.windows_completed > 0);
+}
+
+#[test]
+fn corrupt_artifact_fails_cleanly() {
+    let dir = tmpdir("corrupt");
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "frames = 256\nchannels = 64\ndim = 1024\nnum_classes = 2\n\
+         im_seed = 0x5eed1ee600000001\nim_digest = 0xf7cdf969f2b33a13\n\
+         sparse_window = sparse_window.hlo.txt\ndense_window = dense_window.hlo.txt\n",
+    )
+    .unwrap();
+    std::fs::write(dir.join("sparse_window.hlo.txt"), "this is not HLO").unwrap();
+    let err = EngineHost::spawn(dir.clone(), EngineKind::SparseWindow, 2);
+    assert!(err.is_err(), "corrupt HLO must fail at spawn, not at runtime");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_dataset_fails_cleanly() {
+    let dir = tmpdir("badds");
+    let pdir = dir.join("patient_07");
+    std::fs::create_dir_all(&pdir).unwrap();
+    std::fs::write(pdir.join("record_00.ieeg"), vec![0u8; 100]).unwrap();
+    assert!(dataset::load_patient(&dir, 7).is_err());
+    // Truncated payload: valid header, short samples.
+    let cfg = tiny_synth();
+    let p = SynthPatient::generate(&cfg, 7);
+    let path = pdir.join("record_01.ieeg");
+    dataset::save_record(&p.records[0], &path).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    assert!(dataset::load_record(&path).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_drives_coordinator_behaviour() {
+    let file = ConfigFile::parse(
+        "[system]\nvariant = \"sparse-optimized\"\n\
+         [classifier]\ntemporal_threshold = 90\n\
+         [detector]\nconsecutive = 3\n\
+         [coordinator]\nqueue_depth = 2\n",
+    )
+    .unwrap();
+    let system = SystemConfig::from_file(&file).unwrap();
+    assert_eq!(system.classifier.temporal_threshold, 90);
+    assert_eq!(system.alarm_consecutive, 3);
+
+    // consecutive=3 suppresses short runs end-to-end.
+    let cfg = ClassifierConfig {
+        temporal_threshold: 90,
+        ..ClassifierConfig::optimized()
+    };
+    let patient = SynthPatient::generate(&tiny_synth(), 4);
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+    let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+    let report = Coordinator::new(system, Backend::Native)
+        .run(vec![StreamSpec {
+            session_id: 1,
+            patient_id: 4,
+            record: patient.records[1].clone(),
+            am,
+            threshold: 90,
+        }])
+        .unwrap();
+    // All alarms obey the 3-consecutive policy: the detector fired at most
+    // once per ictal run and never in the first two windows.
+    for alarm in &report.sessions[0].alarms {
+        assert!(alarm.window_idx >= 2);
+    }
+}
+
+#[test]
+fn multi_patient_interleaving_isolated() {
+    // Sessions must not leak state into each other: serving P1+P2 together
+    // must give each the same result as serving it alone.
+    let cfg = ClassifierConfig::optimized();
+    let mk = |pid: u32| {
+        let p = SynthPatient::generate(&tiny_synth(), pid);
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+        let am = pipeline::train_on_record(&mut enc, p.train_record(), cfg.train_density);
+        StreamSpec {
+            session_id: pid as u64,
+            patient_id: pid,
+            record: p.records[1].clone(),
+            am,
+            threshold: cfg.temporal_threshold,
+        }
+    };
+    let solo1 = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![mk(1)])
+        .unwrap();
+    let solo2 = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![mk(2)])
+        .unwrap();
+    let both = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![mk(1), mk(2)])
+        .unwrap();
+    let find = |r: &sparse_hdc_ieeg::coordinator::server::StreamReport, id: u64| {
+        r.sessions
+            .iter()
+            .find(|s| s.session_id == id)
+            .map(|s| (s.windows, s.eval.detected, s.eval.delay_s))
+            .unwrap()
+    };
+    assert_eq!(find(&both, 1), find(&solo1, 1));
+    assert_eq!(find(&both, 2), find(&solo2, 2));
+}

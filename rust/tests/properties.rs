@@ -1,0 +1,359 @@
+//! Property-based tests (testkit runner — proptest substitute, see
+//! DESIGN.md §2) over the HDC algebra, the encoder pipelines, the
+//! hardware-model invariants and the coordinator.
+//!
+//! Reproduce a failing case with `HDC_PROPTEST_SEED=<seed> cargo test`.
+
+use sparse_hdc_ieeg::coordinator::detector::Detector;
+use sparse_hdc_ieeg::data::metrics::{evaluate_record, AlarmPolicy, WindowPrediction};
+use sparse_hdc_ieeg::data::synth::{Record, Seizure};
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::bundling;
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Encoder, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::compim::{pack, unpack};
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::sparse::{bind_bitdomain, SparseHv};
+use sparse_hdc_ieeg::hdc::temporal::{threshold_for_max_density, TemporalAccumulator};
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, SAMPLE_RATE_HZ, SEGMENTS};
+use sparse_hdc_ieeg::testkit::{property, Gen};
+
+// ---------------------------------------------------------------------
+// HDC algebra
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_bind_unbind_roundtrip() {
+    property("bind-unbind = id", 300, |g: &mut Gen| {
+        let a = g.sparse_hv();
+        let b = g.sparse_hv();
+        assert_eq!(a.bind(&b).unbind(&b), a);
+        assert_eq!(a.unbind(&b).bind(&b), a);
+    });
+}
+
+#[test]
+fn prop_bind_commutative_and_associative() {
+    property("bind commutes/associates (position adds)", 300, |g| {
+        let a = g.sparse_hv();
+        let b = g.sparse_hv();
+        let c = g.sparse_hv();
+        assert_eq!(a.bind(&b), b.bind(&a));
+        assert_eq!(a.bind(&b).bind(&c), a.bind(&c).bind(&b));
+    });
+}
+
+#[test]
+fn prop_position_vs_bit_domain_binding() {
+    property("CompIM bind == decode+shift bind", 300, |g| {
+        let e = g.sparse_hv();
+        let d = g.sparse_hv();
+        let pos = e.bind(&d).to_hv();
+        let bits = bind_bitdomain(&e.to_hv(), &d.to_hv()).unwrap();
+        assert_eq!(pos, bits);
+    });
+}
+
+#[test]
+fn prop_pack_unpack_identity() {
+    property("CompIM 56-bit packing is lossless", 300, |g| {
+        let s = g.sparse_hv();
+        let w = pack(&s);
+        assert_eq!(w >> 56, 0);
+        assert_eq!(unpack(w), s);
+    });
+}
+
+#[test]
+fn prop_overlap_symmetric_and_bounded() {
+    property("overlap symmetric, <= min popcount", 200, |g| {
+        let da = g.f64() * 0.5 + 0.01;
+        let db = g.f64() * 0.5 + 0.01;
+        let a = g.hv(da);
+        let b = g.hv(db);
+        assert_eq!(a.overlap(&b), b.overlap(&a));
+        assert!(a.overlap(&b) <= a.popcount().min(b.popcount()));
+        assert_eq!(a.overlap(&a), a.popcount());
+    });
+}
+
+#[test]
+fn prop_hamming_triangle_inequality() {
+    property("hamming is a metric", 100, |g| {
+        let a = g.hv_half();
+        let b = g.hv_half();
+        let c = g.hv_half();
+        assert!(a.hamming(&c) <= a.hamming(&b) + b.hamming(&c));
+        assert_eq!(a.hamming(&b), b.hamming(&a));
+        assert_eq!(a.hamming(&a), 0);
+    });
+}
+
+// ---------------------------------------------------------------------
+// Bundling / temporal invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_or_bundle_is_union_and_monotone() {
+    property("OR bundle = union; more inputs never lose bits", 150, |g| {
+        let n = g.range(1, CHANNELS);
+        let hvs: Vec<SparseHv> = g.vec(n, |g| g.sparse_hv());
+        let bits: Vec<Hv> = hvs.iter().map(|h| h.to_hv()).collect();
+        let bundled = bundling::bundle_or_pos(&hvs);
+        assert_eq!(bundled, bundling::bundle_or(&bits));
+        for hv in &bits {
+            assert_eq!(hv.and(&bundled), *hv);
+        }
+        let more = bundling::bundle_or_pos(&{
+            let mut v = hvs.clone();
+            v.push(g.sparse_hv());
+            v
+        });
+        assert_eq!(bundled.and(&more), bundled);
+    });
+}
+
+#[test]
+fn prop_thinning_monotone_in_threshold() {
+    property("higher threshold subset of lower threshold", 150, |g| {
+        let n = g.range(2, CHANNELS);
+        let hvs: Vec<Hv> = g.vec(n, |g| g.sparse_hv().to_hv());
+        let counts = bundling::element_counts(&hvs);
+        let t = g.range(1, n - 1) as u16;
+        let lo = bundling::thin(&counts, t);
+        let hi = bundling::thin(&counts, t + 1);
+        assert_eq!(hi.and(&lo), hi, "threshold {t}");
+        assert!(hi.popcount() <= lo.popcount());
+    });
+}
+
+#[test]
+fn prop_temporal_threshold_tuner_is_minimal() {
+    property("threshold_for_max_density minimal & respects bound", 60, |g| {
+        let mut acc = TemporalAccumulator::new();
+        let frames = g.range(10, FRAMES_PER_PREDICTION);
+        for _ in 0..frames {
+            let d = g.f64() * 0.5;
+            acc.add(&g.hv(d));
+        }
+        let max_d = 0.05 + g.f64() * 0.45;
+        let t = threshold_for_max_density(acc.counts(), max_d);
+        assert!(acc.peek(t).density() <= max_d + 1e-12);
+        if t > 1 {
+            assert!(acc.peek(t - 1).density() > max_d);
+        }
+    });
+}
+
+#[test]
+fn prop_encoder_deterministic_and_reset_safe() {
+    property("same frames -> same query; reset forgets", 8, |g| {
+        let cfg = ClassifierConfig::optimized();
+        let frames = g.frames(FRAMES_PER_PREDICTION);
+        let run = |frames: &[[u8; CHANNELS]]| {
+            let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+            let mut q = None;
+            for f in frames {
+                q = q.or(enc.push_frame(f));
+            }
+            q.unwrap()
+        };
+        let q1 = run(&frames);
+        let q2 = run(&frames);
+        assert_eq!(q1, q2);
+
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+        for f in frames.iter().take(g.range(1, 200)) {
+            enc.push_frame(f);
+        }
+        enc.reset();
+        let mut q3 = None;
+        for f in &frames {
+            q3 = q3.or(enc.push_frame(f));
+        }
+        assert_eq!(q3.unwrap(), q1);
+    });
+}
+
+#[test]
+fn prop_sparse_variants_equivalent_at_threshold_one() {
+    property("3 sparse designs are one function (spatial_threshold=1)", 4, |g| {
+        let cfg = ClassifierConfig {
+            spatial_threshold: 1,
+            ..ClassifierConfig::optimized()
+        };
+        let frames = g.frames(FRAMES_PER_PREDICTION);
+        let mut queries = Vec::new();
+        for v in [Variant::SparseBaseline, Variant::SparseCompIm, Variant::Optimized] {
+            let mut enc = SparseEncoder::new(v, cfg.clone());
+            let mut q = None;
+            for f in &frames {
+                q = q.or(enc.push_frame(f));
+            }
+            queries.push(q.unwrap());
+        }
+        assert_eq!(queries[0], queries[1]);
+        assert_eq!(queries[1], queries[2]);
+    });
+}
+
+// ---------------------------------------------------------------------
+// AM / metrics / detector invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_am_search_picks_argmax() {
+    property("AM search returns argmax with interictal ties", 200, |g| {
+        let am = AssociativeMemory::new(g.hv(0.3), g.hv(0.3));
+        let q = g.hv(0.25);
+        let r = am.search(&q);
+        let s0 = q.overlap(&am.classes[0]);
+        let s1 = q.overlap(&am.classes[1]);
+        assert_eq!(r.scores, [s0, s1]);
+        assert_eq!(r.is_ictal(), s1 > s0);
+    });
+}
+
+#[test]
+fn prop_detector_never_fires_without_k_run() {
+    property("K-consecutive detector correctness", 100, |g| {
+        let k = g.range(1, 4);
+        let mut det = Detector::new(k);
+        let n = g.range(10, 60);
+        let decisions: Vec<bool> = g.vec(n, |g| g.bool(0.4));
+        let mut run = 0usize;
+        let mut latched = false;
+        for (i, &ictal) in decisions.iter().enumerate() {
+            let fired = det.push(i as u64, ictal, 1).is_some();
+            if ictal {
+                run += 1;
+            } else {
+                run = 0;
+                latched = false;
+            }
+            let should_fire = ictal && run == k && !latched;
+            if fired {
+                latched = true;
+            }
+            assert_eq!(fired, should_fire, "step {i} (k={k})");
+        }
+    });
+}
+
+#[test]
+fn prop_detection_delay_nonnegative_and_window_quantized() {
+    property("delay >= 0 and a multiple of the window period", 100, |g| {
+        let windows = g.range(6, 24);
+        let onset_w = g.range(1, windows - 2);
+        let record = Record {
+            samples: vec![0f32; windows * FRAMES_PER_PREDICTION * CHANNELS],
+            seizure: Some(Seizure {
+                onset: onset_w * FRAMES_PER_PREDICTION,
+                offset: (onset_w + 2) * FRAMES_PER_PREDICTION,
+            }),
+            fs: SAMPLE_RATE_HZ,
+        };
+        let preds: Vec<WindowPrediction> = (0..windows)
+            .map(|idx| WindowPrediction {
+                idx,
+                is_ictal: g.bool(0.3) || idx == onset_w + 1,
+                margin: 0,
+            })
+            .collect();
+        let out = evaluate_record(&record, &preds, AlarmPolicy::default(), 10.0);
+        if let Some(d) = out.delay_s {
+            assert!(d >= 0.0);
+            let w = FRAMES_PER_PREDICTION as f64 / SAMPLE_RATE_HZ;
+            let ratio = d / w;
+            assert!((ratio - ratio.round()).abs() < 1e-9, "delay {d} not quantized");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Hardware-model / encoder invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_hwmodel_stimulus_length_stable() {
+    use sparse_hdc_ieeg::hwmodel::designs::{analyze, patient11_stimulus};
+    let cfg = ClassifierConfig {
+        spatial_threshold: 1,
+        ..ClassifierConfig::optimized()
+    };
+    let short = analyze(Variant::Optimized, &cfg, &patient11_stimulus(1));
+    let long = analyze(Variant::Optimized, &cfg, &patient11_stimulus(3));
+    assert_eq!(short.area_mm2(), long.area_mm2());
+    let e_s = short.energy_nj_per_pred();
+    let e_l = long.energy_nj_per_pred();
+    assert!(
+        (e_s - e_l).abs() / e_l < 0.25,
+        "per-prediction energy unstable: {e_s} vs {e_l}"
+    );
+}
+
+#[test]
+fn prop_bound_hv_always_sparse() {
+    property("binding preserves one 1-bit per segment", 200, |g| {
+        let e = g.sparse_hv();
+        let d = g.sparse_hv();
+        let hv = e.bind(&d).to_hv();
+        assert_eq!(hv.popcount(), SEGMENTS as u32);
+        for s in 0..SEGMENTS {
+            let seg = hv.segment(s);
+            assert_eq!(seg[0].count_ones() + seg[1].count_ones(), 1);
+        }
+    });
+}
+
+#[test]
+fn prop_spatial_density_bounded_query_monotone() {
+    // The 50% bound (paper §III-B) applies to the *spatial* bundling (64
+    // HVs × 8 ones / 1024 elements); the temporal union can exceed it —
+    // which is exactly why the temporal thinning threshold exists. The
+    // query must instead be monotone in the threshold and ⊆ the union.
+    property("spatial <= 50%; query monotone in threshold", 4, |g| {
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+        let frames = g.frames(FRAMES_PER_PREDICTION);
+        for f in frames.iter().take(16) {
+            assert!(enc.spatial_encode(f).density() <= 0.5 + 1e-12);
+        }
+        let run = |thr: u16| {
+            let mut enc = SparseEncoder::new(
+                Variant::Optimized,
+                ClassifierConfig {
+                    temporal_threshold: thr,
+                    ..cfg.clone()
+                },
+            );
+            let mut q = None;
+            for f in &frames {
+                q = q.or(enc.push_frame(f));
+            }
+            q.unwrap()
+        };
+        let t = g.range(1, 254) as u16;
+        let lo = run(t);
+        let hi = run(t + 1);
+        assert_eq!(hi.and(&lo), hi, "threshold {t}: higher must be subset");
+        // Paper's operating point keeps the query in the 20–30% band on
+        // patient data; on arbitrary random codes we only check ≤ union.
+        let union = run(1);
+        assert_eq!(lo.and(&union), lo);
+    });
+}
+
+#[test]
+fn prop_hv_bitops_identities() {
+    property("boolean algebra on HVs", 200, |g| {
+        let a = g.hv_half();
+        let b = g.hv_half();
+        assert_eq!(a.xor(&b).xor(&b), a);
+        assert_eq!(a.and(&b).or(&a), a); // absorption
+        assert_eq!(
+            a.or(&b).popcount() + a.and(&b).popcount(),
+            a.popcount() + b.popcount()
+        );
+        assert_eq!(a.hamming(&b), a.or(&b).popcount() - a.and(&b).popcount());
+    });
+}
