@@ -16,7 +16,7 @@ use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::pipeline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparse_hdc_ieeg::Result<()> {
     let densities = [0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.40, 0.50];
     let synth = SynthConfig {
         records_per_patient: 4,

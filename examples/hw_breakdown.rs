@@ -9,7 +9,7 @@ use sparse_hdc_ieeg::hdc::classifier::ClassifierConfig;
 use sparse_hdc_ieeg::hwmodel::breakdown::{format_breakdown, format_comparison};
 use sparse_hdc_ieeg::hwmodel::designs::analyze_all;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparse_hdc_ieeg::Result<()> {
     let reports = analyze_all(&ClassifierConfig::default(), 4);
 
     println!("=== Fig. 1(c): naive sparse HDC breakdown ===\n");

@@ -14,7 +14,7 @@ use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::pipeline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparse_hdc_ieeg::Result<()> {
     // 1. Synthetic patient: 4 records, one seizure each (record 0 trains).
     let synth = SynthConfig {
         records_per_patient: 4,

@@ -13,7 +13,7 @@ use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::hwmodel::breakdown::{format_table1, literature_rows, ours_row};
 use sparse_hdc_ieeg::hwmodel::designs::{analyze, patient11_stimulus};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparse_hdc_ieeg::Result<()> {
     let frames = patient11_stimulus(4);
     let cfg = ClassifierConfig {
         spatial_threshold: 1,

@@ -19,7 +19,7 @@ use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
 use sparse_hdc_ieeg::pipeline;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> sparse_hdc_ieeg::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let use_pjrt = args.iter().any(|a| a == "--pjrt");
     let realtime = args.iter().any(|a| a == "--realtime");
@@ -100,11 +100,11 @@ fn main() -> anyhow::Result<()> {
         report.metrics.samples_in as f64 / 4.0 / 512.0,
         report.metrics.samples_in as f64 / 4.0 / 512.0 / wall
     );
-    anyhow::ensure!(
+    sparse_hdc_ieeg::ensure!(
         report.metrics.windows_failed == 0,
         "windows failed during serving"
     );
-    anyhow::ensure!(
+    sparse_hdc_ieeg::ensure!(
         report.summary.detected > 0,
         "end-to-end run detected no seizures"
     );

@@ -1,7 +1,11 @@
 """L2 model + AOT lowering tests."""
 
 import numpy as np
-import jax
+import pytest
+
+jax = pytest.importorskip(
+    "jax", reason="JAX unavailable - model tests need jax", exc_type=ImportError
+)
 import jax.numpy as jnp
 
 from compile import aot, hdc_params as P, model

@@ -1,26 +1,65 @@
-//! PJRT runtime benchmarks: artifact compile time and per-window execute
-//! latency of the AOT-compiled HLO, vs. the native golden model.
+//! Window-engine benchmarks: per-window execute latency of the native
+//! golden-model engine, and — with `--features pjrt` plus `make
+//! artifacts` — artifact compile time and the PJRT engines for
+//! comparison.
 //!
-//! Requires `make artifacts`. `cargo bench --bench bench_runtime`
-
-use std::path::PathBuf;
+//! `cargo bench --bench bench_runtime`
 
 use sparse_hdc_ieeg::benchkit::{black_box, Bench};
 use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
-use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Encoder, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::classifier::ClassifierConfig;
 use sparse_hdc_ieeg::hdc::hv::Hv;
 use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, LBP_CODES};
 use sparse_hdc_ieeg::rng::Xoshiro256;
-use sparse_hdc_ieeg::runtime::Runtime;
+use sparse_hdc_ieeg::runtime::native::NativeWindowEngine;
+use sparse_hdc_ieeg::runtime::EngineKind;
 
 fn main() {
-    let artifacts = PathBuf::from("artifacts");
-    if !artifacts.join("manifest.txt").exists() {
-        eprintln!("bench_runtime: artifacts/ missing — run `make artifacts` first; skipping");
-        return;
-    }
     let mut b = Bench::new();
     let mut rng = Xoshiro256::new(3);
+
+    let codes: Vec<u8> = (0..FRAMES_PER_PREDICTION * CHANNELS)
+        .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+        .collect();
+    let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+    let am_i32 = am.to_i32s();
+
+    // Native golden-model engines (always available, no artifacts).
+    let mut sparse = NativeWindowEngine::new(
+        EngineKind::SparseWindow,
+        ClassifierConfig::optimized(),
+    );
+    b.bench_throughput(
+        "runtime/native-sparse-window-execute",
+        FRAMES_PER_PREDICTION as f64,
+        || sparse.run(black_box(&codes), &am_i32, 130).unwrap(),
+    );
+    let mut dense = NativeWindowEngine::new(EngineKind::DenseWindow, ClassifierConfig::default());
+    b.bench_throughput(
+        "runtime/native-dense-window-execute",
+        FRAMES_PER_PREDICTION as f64,
+        || dense.run(black_box(&codes), &am_i32, 0).unwrap(),
+    );
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&mut b, &codes, &am_i32);
+    #[cfg(not(feature = "pjrt"))]
+    eprintln!("bench_runtime: PJRT engines not built (enable with --features pjrt); native only");
+
+    b.finish();
+}
+
+/// PJRT engine benchmarks — need `--features pjrt` and `make artifacts`.
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(b: &mut Bench, codes: &[u8], am_i32: &[i32]) {
+    use sparse_hdc_ieeg::runtime::Runtime;
+    use std::path::PathBuf;
+
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("bench_runtime: artifacts/ missing — run `make artifacts`; skipping PJRT");
+        return;
+    }
 
     b.bench("runtime/client+manifest", || {
         Runtime::new(black_box(&artifacts)).unwrap().platform()
@@ -30,39 +69,14 @@ fn main() {
     let engine = rt.load_sparse().unwrap();
     let dense_engine = rt.load_dense().unwrap();
 
-    let codes: Vec<u8> = (0..FRAMES_PER_PREDICTION * CHANNELS)
-        .map(|_| rng.next_below(LBP_CODES as u64) as u8)
-        .collect();
-    let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
-    let am_i32 = am.to_i32s();
-
     b.bench_throughput(
-        "runtime/sparse-window-execute",
+        "runtime/pjrt-sparse-window-execute",
         FRAMES_PER_PREDICTION as f64,
-        || engine.run(black_box(&codes), &am_i32, 130).unwrap(),
+        || engine.run(black_box(codes), am_i32, 130).unwrap(),
     );
     b.bench_throughput(
-        "runtime/dense-window-execute",
+        "runtime/pjrt-dense-window-execute",
         FRAMES_PER_PREDICTION as f64,
-        || dense_engine.run(black_box(&codes), &am_i32, 0).unwrap(),
+        || dense_engine.run(black_box(codes), am_i32, 0).unwrap(),
     );
-
-    // Native golden model for comparison (same window semantics).
-    let cfg = ClassifierConfig::optimized();
-    let mut enc = SparseEncoder::new(Variant::Optimized, cfg);
-    b.bench_throughput(
-        "runtime/native-window (reference)",
-        FRAMES_PER_PREDICTION as f64,
-        || {
-            let mut frame = [0u8; CHANNELS];
-            let mut q = None;
-            for chunk in codes.chunks_exact(CHANNELS) {
-                frame.copy_from_slice(chunk);
-                q = q.or(enc.push_frame(&frame));
-            }
-            q
-        },
-    );
-
-    b.finish();
 }

@@ -7,7 +7,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Context};
+use crate::error::Context;
+use crate::{bail, err};
 
 /// Parsed arguments for one (sub)command invocation.
 #[derive(Debug, Default, Clone)]
@@ -76,7 +77,7 @@ impl Args {
 
     pub fn require(&self, name: &str) -> crate::Result<&str> {
         self.get(name)
-            .ok_or_else(|| anyhow!("missing required option --{name}"))
+            .ok_or_else(|| err!("missing required option --{name}"))
     }
 
     pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> crate::Result<T>

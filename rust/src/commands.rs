@@ -2,9 +2,9 @@
 
 use std::path::PathBuf;
 
-use anyhow::Context;
-
 use sparse_hdc_ieeg::cli::Args;
+use sparse_hdc_ieeg::ensure;
+use sparse_hdc_ieeg::error::Context;
 use sparse_hdc_ieeg::data::dataset;
 use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
 use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
@@ -13,12 +13,12 @@ use sparse_hdc_ieeg::hwmodel::breakdown::{format_breakdown, format_comparison, f
 use sparse_hdc_ieeg::hwmodel::designs::{analyze, analyze_all, patient11_stimulus};
 use sparse_hdc_ieeg::pipeline;
 
-fn parse_variant(args: &Args) -> anyhow::Result<Variant> {
+fn parse_variant(args: &Args) -> sparse_hdc_ieeg::Result<Variant> {
     let name = args.get_str("variant", "sparse-optimized");
     Variant::from_name(&name).with_context(|| format!("unknown variant {name:?}"))
 }
 
-fn classifier_config(args: &Args, variant: Variant) -> anyhow::Result<ClassifierConfig> {
+fn classifier_config(args: &Args, variant: Variant) -> sparse_hdc_ieeg::Result<ClassifierConfig> {
     let mut cfg = if variant == Variant::Optimized {
         ClassifierConfig::optimized()
     } else {
@@ -31,7 +31,7 @@ fn classifier_config(args: &Args, variant: Variant) -> anyhow::Result<Classifier
 }
 
 /// `repro gen-data --out DIR [--patients N] [--records N] [--seed S]`
-pub fn gen_data(args: &Args) -> anyhow::Result<()> {
+pub fn gen_data(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["out", "patients", "records", "seed"])?;
     let out = PathBuf::from(args.require("out")?);
     let patients: u32 = args.get_parse("patients", 8u32)?;
@@ -58,7 +58,7 @@ pub fn gen_data(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `repro train --data DIR --patient ID [--variant V] [--max-density D]`
-pub fn train(args: &Args) -> anyhow::Result<()> {
+pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&[
         "data",
         "patient",
@@ -74,7 +74,7 @@ pub fn train(args: &Args) -> anyhow::Result<()> {
     let variant = parse_variant(args)?;
     let mut cfg = classifier_config(args, variant)?;
     let records = dataset::load_patient(&data, pid)?;
-    anyhow::ensure!(!records.is_empty(), "patient {pid} has no records");
+    ensure!(!records.is_empty(), "patient {pid} has no records");
 
     if let Some(d) = args.get("max-density") {
         let d: f64 = d.parse()?;
@@ -102,7 +102,7 @@ pub fn train(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `repro detect --data DIR --patient ID [--variant V] [--max-density D]`
-pub fn detect(args: &Args) -> anyhow::Result<()> {
+pub fn detect(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&[
         "data",
         "patient",
@@ -123,7 +123,7 @@ pub fn detect(args: &Args) -> anyhow::Result<()> {
     };
 
     let records = dataset::load_patient(&data, pid)?;
-    anyhow::ensure!(records.len() >= 2, "one-shot protocol needs ≥ 2 records");
+    ensure!(records.len() >= 2, "one-shot protocol needs ≥ 2 records");
     let patient = SynthPatient {
         profile: sparse_hdc_ieeg::data::synth::PatientProfile::derive(
             &SynthConfig::default(),
@@ -148,12 +148,12 @@ pub fn detect(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `repro serve ...` — streaming coordinator (see `coordinator` module).
-pub fn serve(args: &Args) -> anyhow::Result<()> {
+pub fn serve(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     sparse_hdc_ieeg::coordinator::serve_command(args)
 }
 
 /// `repro fig1c [--windows N]` — Fig. 1(c): naive sparse breakdown.
-pub fn fig1c(args: &Args) -> anyhow::Result<()> {
+pub fn fig1c(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["windows"])?;
     let windows: usize = args.get_parse("windows", 4usize)?;
     let frames = patient11_stimulus(windows);
@@ -178,7 +178,7 @@ pub fn fig1c(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `repro fig5 [--windows N]` — Fig. 5: four-design comparison.
-pub fn fig5(args: &Args) -> anyhow::Result<()> {
+pub fn fig5(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["windows"])?;
     let windows: usize = args.get_parse("windows", 4usize)?;
     let reports = analyze_all(&ClassifierConfig::default(), windows);
@@ -201,7 +201,7 @@ pub fn fig5(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `repro table1 [--windows N]` — Table I: SotA comparison.
-pub fn table1(args: &Args) -> anyhow::Result<()> {
+pub fn table1(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["windows"])?;
     let windows: usize = args.get_parse("windows", 4usize)?;
     let frames = patient11_stimulus(windows);
@@ -215,7 +215,7 @@ pub fn table1(args: &Args) -> anyhow::Result<()> {
 /// thinning (adder tree + threshold → OR tree) costs no algorithmic
 /// performance. Sweeps the spatial threshold on the adder-tree design and
 /// compares against the OR-tree design at the same operating point.
-pub fn ablate_thinning(args: &Args) -> anyhow::Result<()> {
+pub fn ablate_thinning(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["patients", "records", "max-density"])?;
     let n_patients: u32 = args.get_parse("patients", 4u32)?;
     let records: usize = args.get_parse("records", 3usize)?;
@@ -278,7 +278,7 @@ pub fn ablate_thinning(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `repro fig4` — Fig. 4: delay & accuracy vs max HV density.
-pub fn fig4(args: &Args) -> anyhow::Result<()> {
+pub fn fig4(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["patients", "densities", "variant", "records", "consecutive"])?;
     let n_patients: u32 = args.get_parse("patients", 6u32)?;
     let records: usize = args.get_parse("records", 4usize)?;

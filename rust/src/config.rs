@@ -10,7 +10,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context};
+use crate::error::Context;
+use crate::{bail, err};
 
 use crate::hdc::classifier::{ClassifierConfig, Variant};
 use crate::params::IM_SEED;
@@ -124,7 +125,7 @@ impl SystemConfig {
         let mut cfg = SystemConfig::default();
         if let Some(v) = file.get("system.variant") {
             cfg.variant = Variant::from_name(v)
-                .ok_or_else(|| anyhow::anyhow!("unknown variant {v:?}"))?;
+                .ok_or_else(|| err!("unknown variant {v:?}"))?;
         }
         cfg.classifier.seed = file.get_parse("classifier.seed", IM_SEED)?;
         cfg.classifier.spatial_threshold =

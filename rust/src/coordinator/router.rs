@@ -78,7 +78,7 @@ impl Router {
         let session = self
             .sessions
             .get_mut(&chunk.session_id)
-            .ok_or_else(|| anyhow::anyhow!("unknown session {}", chunk.session_id))?;
+            .ok_or_else(|| crate::err!("unknown session {}", chunk.session_id))?;
         let mut sample = [0f32; CHANNELS];
         for t in 0..chunk.num_samples() {
             sample.copy_from_slice(&chunk.samples[t * CHANNELS..(t + 1) * CHANNELS]);

@@ -1,21 +1,19 @@
 //! The streaming orchestrator: sources → router/sessions → engine
 //! workers → detector events, with backpressure and metrics.
 //!
-//! Two interchangeable window backends:
+//! Two interchangeable window backends behind one [`EngineHost`]:
 //! * **native** — the bit-accurate Rust golden model (no artifacts
-//!   needed);
+//!   needed; the default build's serving path);
 //! * **pjrt**  — the AOT-compiled HLO artifacts executed through the
-//!   `xla` PJRT client ([`crate::runtime`]), i.e. the full three-layer
-//!   stack on the request path.
+//!   `xla` PJRT client (cargo feature `pjrt`), i.e. the full three-layer
+//!   stack on the request path. Without the feature, selecting
+//!   [`Backend::Pjrt`] fails fast with an actionable error.
 //!
 //! Both run on dedicated worker threads behind bounded queues, so a slow
 //! engine stalls the sources (backpressure) instead of ballooning memory.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
-
-use anyhow::Context;
 
 use crate::cli::Args;
 use crate::config::{ConfigFile, SystemConfig};
@@ -24,137 +22,52 @@ use crate::coordinator::router::{Router, SampleChunk};
 use crate::coordinator::session::Session;
 use crate::data::metrics::{evaluate_record, AlarmPolicy, EvalSummary};
 use crate::data::synth::Record;
+use crate::ensure;
+use crate::err;
+use crate::error::Context;
 use crate::hdc::am::AssociativeMemory;
-use crate::hdc::hv::Hv;
-use crate::hdc::classifier::{ClassifierConfig, Encoder, Frame, SparseEncoder, Variant};
+use crate::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
 use crate::params::{CHANNELS, CLASS_ICTAL, CLASS_INTERICTAL, SAMPLE_RATE_HZ};
 use crate::pipeline;
-use crate::runtime::engine_pool::{Completion, EngineHost, Job};
-use crate::runtime::{EngineKind, WindowOutput};
+use crate::runtime::engine_pool::{Completion, EngineHost, EngineSpec, Job};
+use crate::runtime::EngineKind;
 
 /// Window-backend selection.
 #[derive(Clone, Debug)]
 pub enum Backend {
-    /// Golden-model encoder on a worker thread.
+    /// Golden-model engine ([`crate::runtime::native`]) on a worker thread.
     Native,
-    /// PJRT-compiled artifact from this directory.
+    /// PJRT-compiled artifact from this directory (`--features pjrt`).
     Pjrt { artifacts_dir: PathBuf },
 }
 
-/// A worker host that accepts [`Job`]s and emits [`Completion`]s —
-/// either the PJRT engine host or a native equivalent.
-enum Host {
-    Pjrt(EngineHost),
-    Native {
-        tx: SyncSender<Job>,
-        completions: Receiver<Completion>,
-        handle: Option<std::thread::JoinHandle<()>>,
-    },
-}
-
-impl Host {
-    fn spawn(backend: &Backend, cfg: &ClassifierConfig, queue_depth: usize) -> crate::Result<Host> {
-        match backend {
-            Backend::Pjrt { artifacts_dir } => Ok(Host::Pjrt(EngineHost::spawn(
-                artifacts_dir.clone(),
-                EngineKind::SparseWindow,
-                queue_depth,
-            )?)),
-            Backend::Native => {
-                let (tx, rx) = sync_channel::<Job>(queue_depth);
-                let (done_tx, done_rx) = sync_channel::<Completion>(queue_depth.max(1) * 2);
-                let cfg = cfg.clone();
-                let handle = std::thread::Builder::new()
-                    .name("engine-native".into())
-                    .spawn(move || {
-                        let mut encoder = SparseEncoder::new(Variant::Optimized, cfg);
-                        while let Ok(job) = rx.recv() {
-                            let output = run_native(&mut encoder, &job);
-                            let completion = Completion {
-                                tag: job.tag,
-                                seq: job.seq,
-                                output: Ok(output),
-                                submitted: job.submitted,
-                                finished: Instant::now(),
-                            };
-                            if done_tx.send(completion).is_err() {
-                                break;
-                            }
-                        }
-                    })?;
-                Ok(Host::Native {
-                    tx,
-                    completions: done_rx,
-                    handle: Some(handle),
-                })
-            }
-        }
-    }
-
-    fn submit(&self, job: Job) -> crate::Result<()> {
-        match self {
-            Host::Pjrt(h) => h.submit(job),
-            Host::Native { tx, .. } => tx
-                .send(job)
-                .map_err(|_| anyhow::anyhow!("native engine worker has shut down")),
-        }
-    }
-
-    fn try_submit(&self, job: Job) -> Result<(), Job> {
-        match self {
-            Host::Pjrt(h) => h.try_submit(job),
-            Host::Native { tx, .. } => match tx.try_send(job) {
-                Ok(()) => Ok(()),
-                Err(std::sync::mpsc::TrySendError::Full(j))
-                | Err(std::sync::mpsc::TrySendError::Disconnected(j)) => Err(j),
+/// Spawn the engine host for the selected backend.
+fn spawn_host(
+    backend: &Backend,
+    cfg: &ClassifierConfig,
+    queue_depth: usize,
+) -> crate::Result<EngineHost> {
+    match backend {
+        Backend::Native => EngineHost::spawn(
+            EngineSpec::Native { cfg: cfg.clone() },
+            EngineKind::SparseWindow,
+            queue_depth,
+        ),
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt { artifacts_dir } => EngineHost::spawn(
+            EngineSpec::Pjrt {
+                artifacts_dir: artifacts_dir.clone(),
             },
-        }
-    }
-
-    fn completions(&self) -> &Receiver<Completion> {
-        match self {
-            Host::Pjrt(h) => &h.completions,
-            Host::Native { completions, .. } => completions,
-        }
-    }
-}
-
-impl Drop for Host {
-    fn drop(&mut self) {
-        if let Host::Native { tx, handle, .. } = self {
-            let (dead, _) = sync_channel::<Job>(1);
-            drop(std::mem::replace(tx, dead));
-            if let Some(h) = handle.take() {
-                let _ = h.join();
-            }
-        }
-    }
-}
-
-/// Native execution of one window job (mirrors the HLO semantics).
-fn run_native(encoder: &mut SparseEncoder, job: &Job) -> WindowOutput {
-    encoder.reset();
-    let mut frame = [0u8; CHANNELS];
-    let mut query = None;
-    for chunk in job.codes.chunks_exact(CHANNELS) {
-        frame.copy_from_slice(chunk);
-        let f: Frame = frame;
-        if let Some(q) = encoder.push_frame(&f) {
-            query = Some(q);
-        }
-    }
-    let query = query.expect("job carries exactly one window");
-    // Rebuild the class HVs once and score with packed popcount-AND
-    // (64 word ops per class instead of 1024 multiplies — §Perf L3-3).
-    let mut scores = [0i32; 2];
-    for class in 0..2 {
-        let plane = &job.am[class * crate::params::DIM..(class + 1) * crate::params::DIM];
-        let class_hv = Hv::from_fn(|i| plane[i] != 0);
-        scores[class] = query.overlap(&class_hv) as i32;
-    }
-    WindowOutput {
-        scores,
-        query: query.to_i32s(),
+            EngineKind::SparseWindow,
+            queue_depth,
+        ),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt { artifacts_dir } => crate::bail!(
+            "backend 'pjrt' (artifacts dir {}) is not compiled into this binary — \
+             rebuild with `cargo build --features pjrt`, or use the native backend \
+             (drop --use-pjrt / set runtime.use_pjrt = false)",
+            artifacts_dir.display()
+        ),
     }
 }
 
@@ -208,9 +121,9 @@ impl Coordinator {
     /// Serve a set of patient streams to completion and score the
     /// detections against the records' annotations.
     pub fn run(&self, streams: Vec<StreamSpec>) -> crate::Result<StreamReport> {
-        anyhow::ensure!(!streams.is_empty(), "no streams to serve");
+        ensure!(!streams.is_empty(), "no streams to serve");
         let mut metrics = ServingMetrics::new();
-        let host = Host::spawn(
+        let host = spawn_host(
             &self.backend,
             &self.system.classifier,
             self.system.queue_depth,
@@ -308,7 +221,7 @@ impl Coordinator {
                     }
                 }
                 // Opportunistically drain completions.
-                while let Ok(c) = host.completions().try_recv() {
+                while let Ok(c) = host.completions.try_recv() {
                     in_flight -= 1;
                     Self::finish(&mut router, &mut metrics, c);
                 }
@@ -321,9 +234,9 @@ impl Coordinator {
         // Drain the tail.
         while in_flight > 0 {
             let c = host
-                .completions()
+                .completions
                 .recv()
-                .map_err(|_| anyhow::anyhow!("engine worker dropped completions"))?;
+                .map_err(|_| err!("engine worker dropped completions"))?;
             in_flight -= 1;
             Self::finish(&mut router, &mut metrics, c);
         }
@@ -369,7 +282,7 @@ impl Coordinator {
             }
             Err(e) => {
                 metrics.windows_failed += 1;
-                log::error!("window failed (session {}, seq {}): {e:#}", c.tag, c.seq);
+                eprintln!("window failed (session {}, seq {}): {e:#}", c.tag, c.seq);
             }
         }
     }
@@ -416,7 +329,7 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     for (i, &pid) in patient_ids.iter().enumerate() {
         let records = crate::data::dataset::load_patient(&data, pid)
             .with_context(|| format!("load patient {pid}"))?;
-        anyhow::ensure!(
+        ensure!(
             records.len() > record_idx,
             "patient {pid} has {} records, need index {record_idx}",
             records.len()
@@ -573,5 +486,27 @@ mod tests {
         );
         assert_eq!(streamed.eval.detected, offline_eval.detected);
         assert_eq!(streamed.eval.delay_s, offline_eval.delay_s);
+    }
+
+    /// Satellite contract for the default build: `Backend::Pjrt` must fail
+    /// fast with a message that tells the operator exactly what to do,
+    /// while `Backend::Native` (above) serves full synthetic records.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_backend_without_feature_fails_actionably() {
+        let streams = tiny_streams(1);
+        let coordinator = Coordinator::new(
+            SystemConfig::default(),
+            Backend::Pjrt {
+                artifacts_dir: "artifacts".into(),
+            },
+        );
+        let err = match coordinator.run(streams) {
+            Err(e) => e,
+            Ok(_) => panic!("pjrt backend must not serve without the feature"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--features pjrt"), "unactionable error: {msg}");
+        assert!(msg.contains("native"), "should point at the fallback: {msg}");
     }
 }

@@ -17,7 +17,8 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context};
+use crate::bail;
+use crate::error::Context;
 
 use crate::params::CHANNELS;
 

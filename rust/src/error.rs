@@ -1,0 +1,276 @@
+//! Dependency-free error type (anyhow is unavailable in the offline build
+//! environment — DESIGN.md §2).
+//!
+//! Mirrors the small slice of the `anyhow` idiom the crate actually uses,
+//! so call sites keep their shape:
+//!
+//! * [`Error`] — an erased error holding a context chain (outermost
+//!   context first, root cause last);
+//! * [`Context`] — `.context(..)` / `.with_context(|| ..)` on both
+//!   `Result` and `Option`;
+//! * [`err!`](crate::err), [`bail!`](crate::bail),
+//!   [`ensure!`](crate::ensure) — `format!`-style constructors.
+//!
+//! `Display` prints the outermost message; the alternate form (`{:#}`)
+//! prints the whole chain separated by `": "` (what `main` uses for
+//! one-line error output); `Debug` prints an `anyhow`-style multi-line
+//! "Caused by" report (what `unwrap`/`expect` show).
+//!
+//! Unlike `anyhow`, the chain is flattened to strings at construction
+//! time — nothing in this crate downcasts errors, and flattening keeps
+//! the type trivially `Send + Sync` for the engine-worker channels.
+
+use std::fmt;
+
+/// Crate-wide boxed error with context chaining.
+pub struct Error {
+    /// `chain[0]` is the outermost context, `chain[last]` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (the root cause).
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain on one line, like anyhow.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any standard error converts via `?`, flattening its `source()` chain.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `.context(..)` / `.with_context(|| ..)` for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> crate::Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> crate::Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> crate::Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> crate::Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> crate::Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> crate::Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` shim).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::error::Error::msg(::std::concat!(
+                "condition failed: `",
+                ::std::stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn msg_and_display() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        assert_eq!(e.root_cause(), "boom");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e: Error = io_err().into();
+        let e = e.context("reading dataset").context("loading patient 3");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(
+            chain,
+            vec!["loading patient 3", "reading dataset", "file missing"]
+        );
+        assert_eq!(format!("{e}"), "loading patient 3");
+        assert_eq!(
+            format!("{e:#}"),
+            "loading patient 3: reading dataset: file missing"
+        );
+        assert_eq!(e.root_cause(), "file missing");
+    }
+
+    #[test]
+    fn debug_prints_caused_by() {
+        let e = Error::msg("root").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+    }
+
+    #[test]
+    fn result_context_trait() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening config").unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening config: file missing");
+
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("opening {}", "x.toml")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "opening x.toml: file missing");
+    }
+
+    #[test]
+    fn option_context_trait() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(format!("{e:#}"), "missing key");
+        let v: Option<u32> = Some(7);
+        assert_eq!(v.context("missing key").unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        let e = parse("nope").unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn err_bail_ensure_formatting() {
+        fn check(n: usize) -> crate::Result<usize> {
+            ensure!(n != 3, "n must not be 3, got {n}");
+            if n > 10 {
+                bail!("n too large: {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(check(5).unwrap(), 5);
+        assert_eq!(format!("{}", check(3).unwrap_err()), "n must not be 3, got 3");
+        assert_eq!(format!("{}", check(11).unwrap_err()), "n too large: 11");
+
+        let e = err!("code {:#04x}", 7);
+        assert_eq!(format!("{e}"), "code 0x07");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn check(n: usize) -> crate::Result<()> {
+            ensure!(n < 2);
+            Ok(())
+        }
+        let e = check(5).unwrap_err();
+        assert_eq!(format!("{e}"), "condition failed: `n < 2`");
+    }
+
+    #[test]
+    fn source_chain_is_flattened() {
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer failed")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e: Error = Outer(io_err()).into();
+        assert_eq!(format!("{e:#}"), "outer failed: file missing");
+    }
+
+    #[test]
+    fn error_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}

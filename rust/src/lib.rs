@@ -25,9 +25,24 @@
 //!   frame batching, routing, detector post-processing, metrics and
 //!   backpressure.
 //! * [`bench`]-support ([`benchkit`]) and property-testing ([`testkit`])
-//!   substrates, plus a dependency-free CLI parser ([`cli`]) and config
-//!   system ([`config`]) — the offline build environment has no criterion /
-//!   proptest / clap / serde, so these are built in-repo (see DESIGN.md §2).
+//!   substrates, plus a dependency-free CLI parser ([`cli`]), config
+//!   system ([`config`]) and error type ([`error`]) — the offline build
+//!   environment has no criterion / proptest / clap / serde / anyhow, so
+//!   these are built in-repo (see DESIGN.md §2).
+//!
+//! ## Feature matrix
+//!
+//! | feature   | default | effect                                          |
+//! |-----------|---------|-------------------------------------------------|
+//! | *(none)*  | yes     | everything above with the **native** window     |
+//! |           |         | engine (golden model) on the serving path —     |
+//! |           |         | no artifacts, no external crates                |
+//! | `pjrt`    | no      | compiles [`runtime`]'s PJRT path (`Runtime`,    |
+//! |           |         | `WindowEngine`) against the `xla` crate; needs  |
+//! |           |         | `artifacts/` from `python/compile/aot.py`       |
+//!
+//! The default build is what the tier-1 verify exercises:
+//! `cargo build --release && cargo test -q`.
 //!
 //! ## Quick start
 //!
@@ -48,6 +63,7 @@
 //! println!("detected {}/{}", eval.summary.detected, eval.summary.seizures);
 //! ```
 
+pub mod error;
 pub mod params;
 pub mod rng;
 pub mod hdc;
@@ -62,5 +78,7 @@ pub mod config;
 pub mod benchkit;
 pub mod testkit;
 
+pub use error::{Context, Error};
+
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = std::result::Result<T, Error>;

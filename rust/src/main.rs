@@ -11,8 +11,7 @@
 //! * `fig5`      — four-design breakdown comparison (paper Fig. 5)
 //! * `table1`    — SotA comparison (paper Table I)
 
-use anyhow::bail;
-
+use sparse_hdc_ieeg::bail;
 use sparse_hdc_ieeg::cli::Args;
 
 mod commands;
@@ -31,7 +30,7 @@ fn main() {
     }
 }
 
-fn dispatch(args: &Args) -> anyhow::Result<()> {
+fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     match args.subcommand.as_deref() {
         Some("gen-data") => commands::gen_data(args),
         Some("train") => commands::train(args),

@@ -1,20 +1,69 @@
-//! Engine host: a dedicated worker thread that owns a PJRT executable.
+//! Engine host: a dedicated worker thread that owns a window engine.
 //!
-//! PJRT objects wrap raw pointers and are neither `Send` nor `Sync`, so
-//! the host *constructs* the runtime inside its thread and communicates
-//! over bounded channels — which doubles as the coordinator's
-//! backpressure boundary (a full queue blocks the producing session, the
-//! streaming analogue of the accelerator's fixed 256-cycle cadence).
+//! One [`EngineHost`] serves one engine — native golden model or, with the
+//! `pjrt` feature, a PJRT executable. The engine is *constructed inside*
+//! the worker thread (PJRT objects wrap raw pointers and are neither
+//! `Send` nor `Sync`; the native engine simply follows the same
+//! discipline) and communicates over bounded channels — which doubles as
+//! the coordinator's backpressure boundary (a full queue blocks the
+//! producing session, the streaming analogue of the accelerator's fixed
+//! 256-cycle cadence).
 
-use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::params::CHANNELS;
+use crate::err;
+use crate::hdc::classifier::ClassifierConfig;
 
-use super::{EngineKind, Runtime, WindowOutput};
+use super::native::NativeWindowEngine;
+use super::{EngineKind, WindowOutput};
+
+/// Which engine the worker thread should construct.
+///
+/// The spec (unlike the engine itself) is `Send`, so the host can ship it
+/// into the worker and surface construction errors synchronously from
+/// [`EngineHost::spawn`].
+pub enum EngineSpec {
+    /// Bit-accurate golden model — always available, no artifacts.
+    Native { cfg: ClassifierConfig },
+    /// AOT HLO artifacts through the PJRT client (`--features pjrt`).
+    #[cfg(feature = "pjrt")]
+    Pjrt { artifacts_dir: std::path::PathBuf },
+}
+
+/// The engine actually owned by the worker thread.
+enum Executor {
+    Native(NativeWindowEngine),
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::WindowEngine),
+}
+
+impl Executor {
+    fn build(spec: EngineSpec, kind: EngineKind) -> crate::Result<Executor> {
+        match spec {
+            EngineSpec::Native { cfg } => Ok(Executor::Native(NativeWindowEngine::new(kind, cfg))),
+            #[cfg(feature = "pjrt")]
+            EngineSpec::Pjrt { artifacts_dir } => {
+                let rt = super::pjrt::Runtime::new(&artifacts_dir)?;
+                let engine = match kind {
+                    EngineKind::SparseWindow => rt.load_sparse()?,
+                    EngineKind::DenseWindow => rt.load_dense()?,
+                };
+                Ok(Executor::Pjrt(engine))
+            }
+        }
+    }
+
+    fn run(&mut self, codes: &[u8], am: &[i32], threshold: i32) -> crate::Result<WindowOutput> {
+        match self {
+            Executor::Native(engine) => engine.run(codes, am, threshold),
+            #[cfg(feature = "pjrt")]
+            Executor::Pjrt(engine) => engine.run(codes, am, threshold),
+        }
+    }
+}
 
 /// One prediction-window job.
 pub struct Job {
@@ -53,12 +102,13 @@ pub struct EngineHost {
 }
 
 impl EngineHost {
-    /// Spawn a worker owning a freshly-compiled engine for `kind`.
+    /// Spawn a worker owning a freshly-constructed engine for `kind`.
     ///
-    /// `queue_depth` bounds the in-flight jobs (backpressure). Compile
-    /// errors surface through the returned channel's first receive.
+    /// `queue_depth` bounds the in-flight jobs (backpressure).
+    /// Construction errors (missing/corrupt artifacts, stub PJRT, …)
+    /// surface synchronously from this call.
     pub fn spawn(
-        artifacts_dir: PathBuf,
+        spec: EngineSpec,
         kind: EngineKind,
         queue_depth: usize,
     ) -> crate::Result<EngineHost> {
@@ -70,10 +120,7 @@ impl EngineHost {
         let handle = std::thread::Builder::new()
             .name(format!("engine-{kind:?}"))
             .spawn(move || {
-                let engine = match Runtime::new(&artifacts_dir).and_then(|rt| match kind {
-                    EngineKind::SparseWindow => rt.load_sparse(),
-                    EngineKind::DenseWindow => rt.load_dense(),
-                }) {
+                let mut engine = match Executor::build(spec, kind) {
                     Ok(e) => {
                         let _ = ready_tx.send(Ok(()));
                         e
@@ -84,7 +131,6 @@ impl EngineHost {
                     }
                 };
                 while let Ok(job) = rx.recv() {
-                    debug_assert_eq!(job.codes.len() % CHANNELS, 0);
                     let output = engine.run(&job.codes, &job.am, job.threshold);
                     let completion = Completion {
                         tag: job.tag,
@@ -101,7 +147,7 @@ impl EngineHost {
 
         ready_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+            .map_err(|_| err!("engine thread died during startup"))??;
 
         Ok(EngineHost {
             tx,
@@ -114,7 +160,7 @@ impl EngineHost {
     pub fn submit(&self, job: Job) -> crate::Result<()> {
         self.tx
             .send(job)
-            .map_err(|_| anyhow::anyhow!("engine worker has shut down"))
+            .map_err(|_| err!("engine worker has shut down"))
     }
 
     /// Non-blocking submit; `Err(job)` when the queue is full.
@@ -128,12 +174,104 @@ impl EngineHost {
 
 impl Drop for EngineHost {
     fn drop(&mut self) {
-        // Close the job queue, then join the worker.
+        // Close the job queue AND detach the completions receiver before
+        // joining: a worker blocked on a full completions channel (the
+        // consumer stopped draining) only observes shutdown through the
+        // receiver going away — joining with it still alive would
+        // deadlock. Undelivered completions are discarded.
         let (dead_tx, _) = sync_channel::<Job>(1);
-        let tx = std::mem::replace(&mut self.tx, dead_tx);
-        drop(tx);
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        let (_dead_done_tx, dead_done_rx) = sync_channel::<Completion>(1);
+        drop(std::mem::replace(&mut self.completions, dead_done_rx));
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION, LBP_CODES, NUM_CLASSES};
+    use crate::rng::Xoshiro256;
+
+    fn job(seq: u64, codes: Vec<u8>) -> Job {
+        Job {
+            tag: 1,
+            seq,
+            codes,
+            am: Arc::new(vec![0i32; NUM_CLASSES * DIM]),
+            threshold: 130,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn native_host_round_trip() {
+        let host = EngineHost::spawn(
+            EngineSpec::Native {
+                cfg: ClassifierConfig::optimized(),
+            },
+            EngineKind::SparseWindow,
+            2,
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::new(1);
+        let codes: Vec<u8> = (0..FRAMES_PER_PREDICTION * CHANNELS)
+            .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+            .collect();
+        host.submit(job(7, codes)).unwrap();
+        let done = host.completions.recv().unwrap();
+        assert_eq!(done.seq, 7);
+        let out = done.output.unwrap();
+        assert_eq!(out.query.len(), DIM);
+        assert!(done.latency_s() >= 0.0);
+    }
+
+    #[test]
+    fn malformed_job_surfaces_error_not_panic() {
+        let host = EngineHost::spawn(
+            EngineSpec::Native {
+                cfg: ClassifierConfig::optimized(),
+            },
+            EngineKind::SparseWindow,
+            2,
+        )
+        .unwrap();
+        // Wrong length: the worker must report the error through the
+        // completion, then keep serving subsequent jobs.
+        host.submit(job(0, vec![0u8; CHANNELS])).unwrap();
+        let bad = host.completions.recv().unwrap();
+        assert!(bad.output.is_err());
+
+        let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
+        host.submit(job(1, codes)).unwrap();
+        let good = host.completions.recv().unwrap();
+        assert!(good.output.is_ok(), "worker must survive a bad job");
+    }
+
+    #[test]
+    fn try_submit_reports_full_queue() {
+        let host = EngineHost::spawn(
+            EngineSpec::Native {
+                cfg: ClassifierConfig::optimized(),
+            },
+            EngineKind::SparseWindow,
+            1,
+        )
+        .unwrap();
+        // Saturate: with depth 1 and a busy worker, eventually try_submit
+        // must hand a job back instead of blocking.
+        let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
+        let mut handed_back = false;
+        for seq in 0..64 {
+            if host.try_submit(job(seq, codes.clone())).is_err() {
+                handed_back = true;
+                break;
+            }
+        }
+        assert!(handed_back, "bounded queue must exert backpressure");
+        // Drain whatever completed so Drop joins cleanly.
+        while host.completions.try_recv().is_ok() {}
     }
 }

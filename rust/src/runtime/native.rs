@@ -1,0 +1,231 @@
+//! Native window engine: the bit-accurate golden model behind the same
+//! `(codes, am, threshold) →` [`WindowOutput`] contract as the PJRT
+//! engine, so the coordinator's serving path is fully exercisable in the
+//! default (dependency-free) build — no artifacts, no `xla`.
+//!
+//! Semantics mirror the HLO models exactly (`cross_language.rs` pins the
+//! PJRT engine against the same golden model):
+//!
+//! * **sparse**: CompIM bind → OR bundling → 256-frame temporal counters →
+//!   thinning at the *per-job* threshold → AND-popcount scores against the
+//!   AM plane (packed popcount — 64 word ops per class instead of 1024
+//!   multiplies, §Perf L3-3);
+//! * **dense**: XOR bind → majority bundling → temporal majority →
+//!   `DIM - hamming` scores (normalised "bigger = more similar").
+
+use crate::ensure;
+use crate::hdc::classifier::{
+    ClassifierConfig, DenseEncoder, Encoder, Frame, SparseEncoder, Variant,
+};
+use crate::hdc::hv::Hv;
+use crate::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION, NUM_CLASSES};
+
+use super::{EngineKind, WindowOutput};
+
+/// One native engine wrapping a streaming encoder of the requested kind.
+///
+/// Mutable because the encoder carries window state; the engine pool gives
+/// each engine to a dedicated worker thread, exactly like the PJRT one.
+pub struct NativeWindowEngine {
+    kind: EngineKind,
+    encoder: EncoderSlot,
+}
+
+enum EncoderSlot {
+    Sparse(Box<SparseEncoder>),
+    Dense(Box<DenseEncoder>),
+}
+
+impl NativeWindowEngine {
+    pub fn new(kind: EngineKind, cfg: ClassifierConfig) -> NativeWindowEngine {
+        let encoder = match kind {
+            EngineKind::SparseWindow => {
+                EncoderSlot::Sparse(Box::new(SparseEncoder::new(Variant::Optimized, cfg)))
+            }
+            EngineKind::DenseWindow => EncoderSlot::Dense(Box::new(DenseEncoder::new(cfg))),
+        };
+        NativeWindowEngine { kind, encoder }
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        self.kind
+    }
+
+    /// Execute one window. Same contract as the PJRT engine's `run`:
+    /// `codes` is one full frame-major window, `am` the
+    /// `[NUM_CLASSES * DIM]` 0/1 plane, `threshold` the temporal thinning
+    /// threshold (ignored by the dense model).
+    pub fn run(&mut self, codes: &[u8], am: &[i32], threshold: i32) -> crate::Result<WindowOutput> {
+        ensure!(
+            codes.len() == FRAMES_PER_PREDICTION * CHANNELS,
+            "codes length {} != {}",
+            codes.len(),
+            FRAMES_PER_PREDICTION * CHANNELS
+        );
+        ensure!(am.len() == NUM_CLASSES * DIM, "am length {}", am.len());
+
+        match &mut self.encoder {
+            EncoderSlot::Sparse(enc) => {
+                // The dense model ignores `threshold` (PJRT contract), so
+                // only the sparse path range-checks it.
+                ensure!(
+                    (0..=u16::MAX as i32).contains(&threshold),
+                    "threshold {threshold} out of range"
+                );
+                enc.set_temporal_threshold(threshold as u16);
+                let query = encode_window(enc.as_mut(), codes);
+                let mut scores = [0i32; NUM_CLASSES];
+                for (class, score) in scores.iter_mut().enumerate() {
+                    let class_hv = plane_hv(am, class);
+                    *score = query.overlap(&class_hv) as i32;
+                }
+                Ok(WindowOutput {
+                    scores,
+                    query: query.to_i32s(),
+                })
+            }
+            EncoderSlot::Dense(enc) => {
+                let query = encode_window(enc.as_mut(), codes);
+                let mut scores = [0i32; NUM_CLASSES];
+                for (class, score) in scores.iter_mut().enumerate() {
+                    let class_hv = plane_hv(am, class);
+                    *score = DIM as i32 - query.hamming(&class_hv) as i32;
+                }
+                Ok(WindowOutput {
+                    scores,
+                    query: query.to_i32s(),
+                })
+            }
+        }
+    }
+}
+
+/// Drive one full window through a streaming encoder.
+fn encode_window(enc: &mut dyn Encoder, codes: &[u8]) -> Hv {
+    enc.reset();
+    let mut frame = [0u8; CHANNELS];
+    let mut query = None;
+    for chunk in codes.chunks_exact(CHANNELS) {
+        frame.copy_from_slice(chunk);
+        let f: Frame = frame;
+        if let Some(q) = enc.push_frame(&f) {
+            query = Some(q);
+        }
+    }
+    // codes length was validated to exactly one window.
+    query.expect("one full window emits exactly one query")
+}
+
+/// Rebuild one class HV from the flat i32 AM plane.
+fn plane_hv(am: &[i32], class: usize) -> Hv {
+    let plane = &am[class * DIM..(class + 1) * DIM];
+    Hv::from_fn(|i| plane[i] != 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::am::AssociativeMemory;
+    use crate::params::LBP_CODES;
+    use crate::rng::Xoshiro256;
+
+    fn random_codes(rng: &mut Xoshiro256) -> Vec<u8> {
+        (0..FRAMES_PER_PREDICTION * CHANNELS)
+            .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+            .collect()
+    }
+
+    #[test]
+    fn sparse_engine_matches_inline_golden_model() {
+        let mut rng = Xoshiro256::new(0xBEEF);
+        let codes = random_codes(&mut rng);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let threshold = 90u16;
+
+        let cfg = ClassifierConfig {
+            temporal_threshold: threshold,
+            ..ClassifierConfig::optimized()
+        };
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg);
+        let query = encode_window(&mut enc, &codes);
+        let expect_scores = [
+            query.overlap(&am.classes[0]) as i32,
+            query.overlap(&am.classes[1]) as i32,
+        ];
+
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        let out = engine.run(&codes, &am.to_i32s(), threshold as i32).unwrap();
+        assert_eq!(out.query, query.to_i32s());
+        assert_eq!(out.scores, expect_scores);
+    }
+
+    #[test]
+    fn per_job_threshold_is_honoured() {
+        // The PJRT engine takes the threshold per call; the native engine
+        // must too (a session's tuned threshold rides on the Job).
+        let mut rng = Xoshiro256::new(0xCAFE);
+        let codes = random_codes(&mut rng);
+        let am = vec![0i32; NUM_CLASSES * DIM];
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        let loose = engine.run(&codes, &am, 40).unwrap();
+        let tight = engine.run(&codes, &am, 200).unwrap();
+        let ones = |q: &[i32]| q.iter().filter(|&&b| b != 0).count();
+        assert!(
+            ones(&loose.query) > ones(&tight.query),
+            "lower threshold must yield a denser query ({} vs {})",
+            ones(&loose.query),
+            ones(&tight.query)
+        );
+    }
+
+    #[test]
+    fn dense_engine_scores_are_normalised_hamming() {
+        let mut rng = Xoshiro256::new(0xD0D0);
+        let codes = random_codes(&mut rng);
+        let am = AssociativeMemory::new(Hv::random_half(&mut rng), Hv::random_half(&mut rng));
+
+        let mut enc = DenseEncoder::new(ClassifierConfig::default());
+        let query = encode_window(&mut enc, &codes);
+        let expect_scores = [
+            DIM as i32 - query.hamming(&am.classes[0]) as i32,
+            DIM as i32 - query.hamming(&am.classes[1]) as i32,
+        ];
+
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::DenseWindow, ClassifierConfig::default());
+        let out = engine.run(&codes, &am.to_i32s(), 0).unwrap();
+        assert_eq!(out.query, query.to_i32s());
+        assert_eq!(out.scores, expect_scores);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        let am = vec![0i32; NUM_CLASSES * DIM];
+        assert!(engine.run(&[0u8; 10], &am, 1).is_err());
+        let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
+        assert!(engine.run(&codes, &[0i32; 5], 1).is_err());
+        assert!(engine.run(&codes, &am, -1).is_err());
+        assert_eq!(engine.kind(), EngineKind::SparseWindow);
+    }
+
+    #[test]
+    fn stateless_across_runs() {
+        // Repeated runs over the same inputs must agree (the encoder is
+        // reset per job, so no window state leaks between jobs).
+        let mut rng = Xoshiro256::new(0xA11CE);
+        let codes_a = random_codes(&mut rng);
+        let codes_b = random_codes(&mut rng);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        let first = engine.run(&codes_a, &am.to_i32s(), 130).unwrap();
+        engine.run(&codes_b, &am.to_i32s(), 130).unwrap();
+        let again = engine.run(&codes_a, &am.to_i32s(), 130).unwrap();
+        assert_eq!(first.scores, again.scores);
+        assert_eq!(first.query, again.query);
+    }
+}

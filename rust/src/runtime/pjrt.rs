@@ -1,0 +1,229 @@
+//! PJRT execution path (cargo feature `pjrt`): load the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` and execute them through
+//! the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute`), with input/output marshalling matching the
+//! signatures in `artifacts/manifest.txt`.
+//!
+//! Python never runs here — `make artifacts` happened at build time. One
+//! [`WindowEngine`] wraps one compiled model variant; engines are `Send`
+//! but not `Sync` (PJRT buffers are single-threaded here), so the
+//! coordinator gives each engine to a dedicated worker thread
+//! ([`super::engine_pool`]).
+//!
+//! The workspace vendors an offline stub of `xla` (`rust/vendor/xla`)
+//! that type-checks this module and fails at runtime with an actionable
+//! message; swap in the real xla-rs to execute HLO (README §PJRT).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::Context;
+use crate::params::{CHANNELS, DIM, NUM_CLASSES};
+use crate::{ensure, err};
+
+use super::{EngineKind, Manifest, WindowOutput};
+
+/// A compiled, ready-to-execute prediction-window model.
+///
+/// The item-memory tables are *inputs* of the HLO (large constants do not
+/// survive the HLO-text interchange — the printer elides them); the
+/// engine regenerates them from [`crate::hdc::im`] at load time (the
+/// manifest digest guarantees bit-equality with the Python side) and
+/// binds them on every call.
+pub struct WindowEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// Pre-built table literals, in artifact parameter order (between
+    /// `codes` and `am`).
+    tables: Vec<xla::Literal>,
+    pub kind: EngineKind,
+    pub frames: usize,
+    pub path: PathBuf,
+}
+
+/// Flattened sparse tables: (im_pos i32[CH,CODES,SEG], elec i32[CH,SEG]).
+fn sparse_table_literals(seed: u64) -> crate::Result<Vec<xla::Literal>> {
+    use crate::params::{LBP_CODES, SEGMENTS};
+    let im = crate::hdc::im::ItemMemory::generate(seed);
+    let mut impos = Vec::with_capacity(CHANNELS * LBP_CODES * SEGMENTS);
+    for c in 0..CHANNELS {
+        for k in 0..LBP_CODES {
+            let pos = im.lookup(c, k as u8);
+            impos.extend(pos.pos.iter().map(|&p| p as i32));
+        }
+    }
+    let mut elec = Vec::with_capacity(CHANNELS * SEGMENTS);
+    for c in 0..CHANNELS {
+        elec.extend(im.electrode(c).pos.iter().map(|&p| p as i32));
+    }
+    let impos_lit = xla::Literal::vec1(&impos)
+        .reshape(&[CHANNELS as i64, LBP_CODES as i64, SEGMENTS as i64])
+        .map_err(|e| err!("reshape im_pos: {e}"))?;
+    let elec_lit = xla::Literal::vec1(&elec)
+        .reshape(&[CHANNELS as i64, SEGMENTS as i64])
+        .map_err(|e| err!("reshape elec_pos: {e}"))?;
+    Ok(vec![impos_lit, elec_lit])
+}
+
+/// Flattened dense tables: (im_bits, elec_bits, tie_s, tie_t).
+fn dense_table_literals(seed: u64) -> crate::Result<Vec<xla::Literal>> {
+    use crate::params::LBP_CODES;
+    let im = crate::hdc::im::DenseItemMemory::generate(seed);
+    let mut im_bits = Vec::with_capacity(LBP_CODES * DIM);
+    for k in 0..LBP_CODES {
+        im_bits.extend(im.lookup(k as u8).to_i32s());
+    }
+    let mut elec_bits = Vec::with_capacity(CHANNELS * DIM);
+    for c in 0..CHANNELS {
+        elec_bits.extend(im.electrode(c).to_i32s());
+    }
+    let tie_s = im.tiebreak(0).to_i32s();
+    let tie_t = im.tiebreak(1).to_i32s();
+    Ok(vec![
+        xla::Literal::vec1(&im_bits)
+            .reshape(&[LBP_CODES as i64, DIM as i64])
+            .map_err(|e| err!("reshape im_bits: {e}"))?,
+        xla::Literal::vec1(&elec_bits)
+            .reshape(&[CHANNELS as i64, DIM as i64])
+            .map_err(|e| err!("reshape elec_bits: {e}"))?,
+        xla::Literal::vec1(&tie_s),
+        xla::Literal::vec1(&tie_t),
+    ])
+}
+
+impl WindowEngine {
+    /// Load + compile one HLO-text artifact and build its table inputs.
+    pub fn load(
+        client: &xla::PjRtClient,
+        path: &Path,
+        kind: EngineKind,
+        frames: usize,
+        seed: u64,
+    ) -> crate::Result<WindowEngine> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| err!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| err!("compile {}: {e}", path.display()))?;
+        let tables = match kind {
+            EngineKind::SparseWindow => sparse_table_literals(seed)?,
+            EngineKind::DenseWindow => dense_table_literals(seed)?,
+        };
+        Ok(WindowEngine {
+            exe,
+            tables,
+            kind,
+            frames,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Execute one window.
+    ///
+    /// `codes`: frame-major `[frames][CHANNELS]` LBP codes;
+    /// `am`: `[NUM_CLASSES * DIM]` 0/1 plane; `threshold`: temporal
+    /// thinning threshold (ignored by the dense model).
+    pub fn run(&self, codes: &[u8], am: &[i32], threshold: i32) -> crate::Result<WindowOutput> {
+        ensure!(
+            codes.len() == self.frames * CHANNELS,
+            "codes length {} != {}",
+            codes.len(),
+            self.frames * CHANNELS
+        );
+        ensure!(am.len() == NUM_CLASSES * DIM, "am length {}", am.len());
+
+        let codes_i32: Vec<i32> = codes.iter().map(|&c| c as i32).collect();
+        let codes_lit = xla::Literal::vec1(&codes_i32)
+            .reshape(&[self.frames as i64, CHANNELS as i64])
+            .map_err(|e| err!("reshape codes: {e}"))?;
+        let am_lit = xla::Literal::vec1(am)
+            .reshape(&[NUM_CLASSES as i64, DIM as i64])
+            .map_err(|e| err!("reshape am: {e}"))?;
+
+        // Parameter order (see aot.py): codes, <tables…>, am [, thr].
+        let thr_lit = xla::Literal::vec1(&[threshold]);
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(3 + self.tables.len());
+        args.push(&codes_lit);
+        match self.kind {
+            EngineKind::SparseWindow => {
+                args.extend(self.tables.iter());
+                args.push(&am_lit);
+                args.push(&thr_lit);
+            }
+            EngineKind::DenseWindow => {
+                args.extend(self.tables.iter());
+                args.push(&am_lit);
+            }
+        }
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| err!("execute {}: {e}", self.path.display()))?;
+
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True → (scores, query).
+        let (scores_lit, query_lit) = out
+            .to_tuple2()
+            .map_err(|e| err!("untuple result: {e}"))?;
+        let scores_vec = scores_lit
+            .to_vec::<i32>()
+            .map_err(|e| err!("scores: {e}"))?;
+        let query = query_lit
+            .to_vec::<i32>()
+            .map_err(|e| err!("query: {e}"))?;
+        ensure!(scores_vec.len() == NUM_CLASSES, "scores len {}", scores_vec.len());
+        ensure!(query.len() == DIM, "query len {}", query.len());
+        Ok(WindowOutput {
+            scores: [scores_vec[0], scores_vec[1]],
+            query,
+        })
+    }
+}
+
+/// The PJRT runtime: one CPU client + the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and validate the artifacts in `dir`.
+    pub fn new(dir: &Path) -> crate::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn load_sparse(&self) -> crate::Result<WindowEngine> {
+        WindowEngine::load(
+            &self.client,
+            &self.dir.join(&self.manifest.sparse_window),
+            EngineKind::SparseWindow,
+            self.manifest.frames,
+            self.manifest.im_seed,
+        )
+    }
+
+    pub fn load_dense(&self) -> crate::Result<WindowEngine> {
+        WindowEngine::load(
+            &self.client,
+            &self.dir.join(&self.manifest.dense_window),
+            EngineKind::DenseWindow,
+            self.manifest.frames,
+            self.manifest.im_seed,
+        )
+    }
+}

@@ -1,33 +1,60 @@
 //! Cross-language integration tests: the Rust golden model vs. the
 //! AOT-compiled HLO artifacts executed through PJRT.
 //!
-//! These tests need `artifacts/` (built by `make artifacts`); they fail
-//! with a clear message when it is missing.
+//! The file compiles under the default feature set: the manifest/digest
+//! contract and the native engine's conformance to the golden model are
+//! always tested, and every artifact-dependent test *skips* (with a
+//! message) when `artifacts/` has not been built. The PJRT engine tests
+//! additionally require `--features pjrt`.
 
 use std::path::PathBuf;
 
-use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Encoder, SparseEncoder, Variant};
-use sparse_hdc_ieeg::hdc::hv::Hv;
 use sparse_hdc_ieeg::hdc::im::ItemMemory;
-use sparse_hdc_ieeg::params::{
-    CHANNELS, DIM, FRAMES_PER_PREDICTION, IM_SEED, LBP_CODES, NUM_CLASSES,
-};
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, IM_SEED, LBP_CODES};
 use sparse_hdc_ieeg::rng::Xoshiro256;
-use sparse_hdc_ieeg::runtime::{Manifest, Runtime};
+use sparse_hdc_ieeg::runtime::Manifest;
 
-fn artifacts_dir() -> PathBuf {
+/// `artifacts/` next to the crate manifest, when present.
+fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    assert!(
-        dir.join("manifest.txt").exists(),
-        "artifacts/ missing — run `make artifacts` first"
-    );
-    dir
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts`; skipping artifact-dependent test");
+        None
+    }
+}
+
+/// Drive one window of codes through a fresh golden-model sparse encoder.
+fn golden_sparse_query(codes: &[u8], threshold: u16) -> sparse_hdc_ieeg::hdc::hv::Hv {
+    let cfg = ClassifierConfig {
+        spatial_threshold: 1,
+        temporal_threshold: threshold,
+        ..ClassifierConfig::optimized()
+    };
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg);
+    let mut query = None;
+    let mut frame = [0u8; CHANNELS];
+    for chunk in codes.chunks_exact(CHANNELS) {
+        frame.copy_from_slice(chunk);
+        if let Some(q) = enc.push_frame(&frame) {
+            query = Some(q);
+        }
+    }
+    query.expect("one window")
+}
+
+fn random_codes(rng: &mut Xoshiro256) -> Vec<u8> {
+    (0..FRAMES_PER_PREDICTION * CHANNELS)
+        .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+        .collect()
 }
 
 #[test]
 fn im_digest_matches_python() {
-    let manifest = Manifest::load(&artifacts_dir()).unwrap();
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
     let rust_digest = ItemMemory::generate(manifest.im_seed).digest();
     assert_eq!(
         rust_digest, manifest.im_digest,
@@ -36,30 +63,88 @@ fn im_digest_matches_python() {
     assert_eq!(manifest.im_seed, IM_SEED);
 }
 
+/// The native engine implements the same window contract as the HLO
+/// engines; pin it against the golden model directly (no artifacts).
 #[test]
-fn sparse_engine_matches_golden_model() {
-    let rt = Runtime::new(&artifacts_dir()).unwrap();
-    let engine = rt.load_sparse().unwrap();
+fn native_engine_matches_golden_model() {
+    use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+    use sparse_hdc_ieeg::hdc::hv::Hv;
+    use sparse_hdc_ieeg::runtime::native::NativeWindowEngine;
+    use sparse_hdc_ieeg::runtime::EngineKind;
 
     let mut rng = Xoshiro256::new(0xC0FFEE);
+    let mut engine =
+        NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
     for trial in 0..3 {
-        // Random window of codes + random AM + a mid-range threshold.
-        let codes: Vec<u8> = (0..FRAMES_PER_PREDICTION * CHANNELS)
-            .map(|_| rng.next_below(LBP_CODES as u64) as u8)
-            .collect();
-        let am = AssociativeMemory::new(
-            Hv::random(&mut rng, 0.3),
-            Hv::random(&mut rng, 0.3),
-        );
+        let codes = random_codes(&mut rng);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
         let threshold = 40 + trial * 40;
 
-        // Golden model.
-        let cfg = ClassifierConfig {
-            spatial_threshold: 1,
-            temporal_threshold: threshold as u16,
-            ..ClassifierConfig::optimized()
-        };
-        let mut enc = SparseEncoder::new(Variant::Optimized, cfg);
+        let query = golden_sparse_query(&codes, threshold as u16);
+        let expect_scores = [
+            query.overlap(&am.classes[0]) as i32,
+            query.overlap(&am.classes[1]) as i32,
+        ];
+
+        let out = engine.run(&codes, &am.to_i32s(), threshold).unwrap();
+        assert_eq!(out.query, query.to_i32s(), "trial {trial}: query mismatch");
+        assert_eq!(out.scores, expect_scores, "trial {trial}: scores mismatch");
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::*;
+    use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+    use sparse_hdc_ieeg::hdc::hv::Hv;
+    use sparse_hdc_ieeg::params::{DIM, NUM_CLASSES};
+    use sparse_hdc_ieeg::runtime::Runtime;
+
+    #[test]
+    fn sparse_engine_matches_golden_model() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::new(&dir).unwrap();
+        let engine = rt.load_sparse().unwrap();
+
+        let mut rng = Xoshiro256::new(0xC0FFEE);
+        for trial in 0..3 {
+            // Random window of codes + random AM + a mid-range threshold.
+            let codes = random_codes(&mut rng);
+            let am = AssociativeMemory::new(
+                Hv::random(&mut rng, 0.3),
+                Hv::random(&mut rng, 0.3),
+            );
+            let threshold = 40 + trial * 40;
+
+            let query = golden_sparse_query(&codes, threshold as u16);
+            let expect_scores = [
+                query.overlap(&am.classes[0]) as i32,
+                query.overlap(&am.classes[1]) as i32,
+            ];
+
+            let out = engine.run(&codes, &am.to_i32s(), threshold).unwrap();
+            assert_eq!(
+                out.query,
+                query.to_i32s(),
+                "trial {trial}: query HV mismatch (threshold {threshold})"
+            );
+            assert_eq!(out.scores, expect_scores, "trial {trial}: scores mismatch");
+        }
+    }
+
+    #[test]
+    fn dense_engine_matches_golden_model() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::new(&dir).unwrap();
+        let engine = rt.load_dense().unwrap();
+
+        let mut rng = Xoshiro256::new(0xDECAF);
+        let codes = random_codes(&mut rng);
+        let am = AssociativeMemory::new(Hv::random_half(&mut rng), Hv::random_half(&mut rng));
+
+        // Golden dense model.
+        let cfg = ClassifierConfig::default();
+        let mut enc = sparse_hdc_ieeg::hdc::classifier::DenseEncoder::new(cfg);
         let mut query = None;
         let mut frame = [0u8; CHANNELS];
         for chunk in codes.chunks_exact(CHANNELS) {
@@ -70,60 +155,23 @@ fn sparse_engine_matches_golden_model() {
         }
         let query = query.expect("one window");
         let expect_scores = [
-            query.overlap(&am.classes[0]) as i32,
-            query.overlap(&am.classes[1]) as i32,
+            DIM as i32 - query.hamming(&am.classes[0]) as i32,
+            DIM as i32 - query.hamming(&am.classes[1]) as i32,
         ];
 
-        // PJRT engine.
-        let out = engine.run(&codes, &am.to_i32s(), threshold as i32).unwrap();
-        assert_eq!(
-            out.query,
-            query.to_i32s(),
-            "trial {trial}: query HV mismatch (threshold {threshold})"
-        );
-        assert_eq!(out.scores, expect_scores, "trial {trial}: scores mismatch");
+        let out = engine.run(&codes, &am.to_i32s(), 0).unwrap();
+        assert_eq!(out.query, query.to_i32s(), "dense query HV mismatch");
+        assert_eq!(out.scores, expect_scores, "dense scores mismatch");
     }
-}
 
-#[test]
-fn dense_engine_matches_golden_model() {
-    let rt = Runtime::new(&artifacts_dir()).unwrap();
-    let engine = rt.load_dense().unwrap();
-
-    let mut rng = Xoshiro256::new(0xDECAF);
-    let codes: Vec<u8> = (0..FRAMES_PER_PREDICTION * CHANNELS)
-        .map(|_| rng.next_below(LBP_CODES as u64) as u8)
-        .collect();
-    let am = AssociativeMemory::new(Hv::random_half(&mut rng), Hv::random_half(&mut rng));
-
-    // Golden dense model.
-    let cfg = ClassifierConfig::default();
-    let mut enc = sparse_hdc_ieeg::hdc::classifier::DenseEncoder::new(cfg);
-    let mut query = None;
-    let mut frame = [0u8; CHANNELS];
-    for chunk in codes.chunks_exact(CHANNELS) {
-        frame.copy_from_slice(chunk);
-        if let Some(q) = enc.push_frame(&frame) {
-            query = Some(q);
-        }
+    #[test]
+    fn engine_rejects_bad_shapes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::new(&dir).unwrap();
+        let engine = rt.load_sparse().unwrap();
+        let am = vec![0i32; NUM_CLASSES * DIM];
+        assert!(engine.run(&[0u8; 10], &am, 1).is_err());
+        let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
+        assert!(engine.run(&codes, &[0i32; 5], 1).is_err());
     }
-    let query = query.expect("one window");
-    let expect_scores = [
-        DIM as i32 - query.hamming(&am.classes[0]) as i32,
-        DIM as i32 - query.hamming(&am.classes[1]) as i32,
-    ];
-
-    let out = engine.run(&codes, &am.to_i32s(), 0).unwrap();
-    assert_eq!(out.query, query.to_i32s(), "dense query HV mismatch");
-    assert_eq!(out.scores, expect_scores, "dense scores mismatch");
-}
-
-#[test]
-fn engine_rejects_bad_shapes() {
-    let rt = Runtime::new(&artifacts_dir()).unwrap();
-    let engine = rt.load_sparse().unwrap();
-    let am = vec![0i32; NUM_CLASSES * DIM];
-    assert!(engine.run(&[0u8; 10], &am, 1).is_err());
-    let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
-    assert!(engine.run(&codes, &[0i32; 5], 1).is_err());
 }
