@@ -13,6 +13,7 @@
 
 use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
 use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::evalpool;
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::pipeline;
 
@@ -29,19 +30,30 @@ fn main() -> sparse_hdc_ieeg::Result<()> {
     let policy = AlarmPolicy { consecutive: 1 };
 
     println!("max-density   mean-delay-s   detection-acc   FA/h   (sparse-optimized)");
+    // Shard all (density × patient) cells over the evaluation pool;
+    // results come back in input order, so the aggregation below is
+    // identical to the serial sweep.
+    let jobs: Vec<(f64, usize)> = densities
+        .iter()
+        .flat_map(|&d| (0..patients.len()).map(move |i| (d, i)))
+        .collect();
+    let evals = evalpool::map(&jobs, |&(d, i)| {
+        pipeline::evaluate_patient(
+            Variant::Optimized,
+            &ClassifierConfig::optimized(),
+            &patients[i],
+            Some(d),
+            policy,
+        )
+    });
+
     let mut best: Vec<(f64, f64)> = vec![(f64::INFINITY, 0.0); patients.len()];
-    for &d in &densities {
+    for (di, &d) in densities.iter().enumerate() {
         let mut delays = Vec::new();
         let mut acc = 0.0;
         let mut fa = 0.0;
-        for (i, p) in patients.iter().enumerate() {
-            let eval = pipeline::evaluate_patient(
-                Variant::Optimized,
-                &ClassifierConfig::optimized(),
-                p,
-                Some(d),
-                policy,
-            );
+        let row = &evals[di * patients.len()..(di + 1) * patients.len()];
+        for (i, eval) in row.iter().enumerate() {
             if eval.summary.mean_delay_s().is_finite() {
                 delays.push(eval.summary.mean_delay_s());
             }
@@ -67,16 +79,18 @@ fn main() -> sparse_hdc_ieeg::Result<()> {
     let star_a: f64 = best.iter().map(|(_, a)| a).sum::<f64>() / best.len() as f64;
     println!("\nper-patient tuned (stars): delay {star_d:.2} s, accuracy {:.1}%", star_a * 100.0);
 
-    let mut delays = Vec::new();
-    let mut acc = 0.0;
-    for p in &patients {
-        let e = pipeline::evaluate_patient(
+    let dense_evals = evalpool::map(&patients, |p| {
+        pipeline::evaluate_patient(
             Variant::DenseBaseline,
             &ClassifierConfig::default(),
             p,
             None,
             policy,
-        );
+        )
+    });
+    let mut delays = Vec::new();
+    let mut acc = 0.0;
+    for e in &dense_evals {
         if e.summary.mean_delay_s().is_finite() {
             delays.push(e.summary.mean_delay_s());
         }

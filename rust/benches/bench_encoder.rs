@@ -1,0 +1,149 @@
+//! Encoder hot-path benchmarks: the word-parallel kernels against their
+//! retained scalar `*_reference` implementations, plus end-to-end
+//! frames/s for every design variant and the item-memory cache.
+//!
+//! ```bash
+//! cargo bench --bench bench_encoder
+//! BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_encoder.json cargo bench --bench bench_encoder
+//! ```
+//!
+//! (`BENCH_JSON` wants an absolute path — cargo runs bench binaries
+//! with the package root `rust/` as working directory.)
+//!
+//! The second form is what CI runs; the JSON lands at the repo root and
+//! is uploaded as a workflow artifact (perf trajectory tracking). The
+//! acceptance bar for the word-parallel rewrite is ≥ 2x on the
+//! `kernel/*` new-vs-reference pairs and it should carry through to the
+//! `window-encode/*` end-to-end numbers.
+
+use sparse_hdc_ieeg::benchkit::{black_box, Bench};
+use sparse_hdc_ieeg::hdc::bundling::{
+    self, bundle_adder_thin_pos, bundle_or_pos, bundle_or_pos_reference,
+};
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Encoder, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::imcache;
+use sparse_hdc_ieeg::hdc::sparse::SparseHv;
+use sparse_hdc_ieeg::hdc::temporal::{TemporalAccumulator, TemporalAccumulatorReference};
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, IM_SEED, LBP_CODES};
+use sparse_hdc_ieeg::rng::Xoshiro256;
+
+fn random_frames(n: usize, seed: u64) -> Vec<[u8; CHANNELS]> {
+    let mut rng = Xoshiro256::new(seed);
+    (0..n)
+        .map(|_| {
+            let mut f = [0u8; CHANNELS];
+            for c in f.iter_mut() {
+                *c = rng.next_below(LBP_CODES as u64) as u8;
+            }
+            f
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256::new(1);
+
+    // --- kernel pairs: word-parallel vs scalar reference ---------------
+    let bound_pos: Vec<SparseHv> = (0..CHANNELS).map(|_| SparseHv::random(&mut rng)).collect();
+
+    b.bench("kernel/or-tree/word-parallel", || bundle_or_pos(black_box(&bound_pos)));
+    b.bench("kernel/or-tree/reference", || bundle_or_pos_reference(black_box(&bound_pos)));
+
+    b.bench("kernel/adder+thin/word-parallel", || bundle_adder_thin_pos(black_box(&bound_pos), 2));
+    b.bench("kernel/adder+thin/reference", || {
+        let counts = bundling::element_counts_pos_reference(black_box(&bound_pos));
+        bundling::thin_reference(&counts, 2)
+    });
+
+    let spatial = bundle_or_pos(&bound_pos);
+    b.bench("kernel/temporal-add/word-parallel", || {
+        let mut acc = TemporalAccumulator::new();
+        for _ in 0..16 {
+            acc.add(black_box(&spatial));
+        }
+        acc.frames()
+    });
+    b.bench("kernel/temporal-add/reference", || {
+        let mut acc = TemporalAccumulatorReference::new();
+        for _ in 0..16 {
+            acc.add(black_box(&spatial));
+        }
+        acc.frames()
+    });
+
+    let mut full = TemporalAccumulator::new();
+    let mut full_ref = TemporalAccumulatorReference::new();
+    let mut frame_rng = Xoshiro256::new(3);
+    for _ in 0..FRAMES_PER_PREDICTION {
+        let f = Hv::random(&mut frame_rng, 0.4);
+        full.add(&f);
+        full_ref.add(&f);
+    }
+    b.bench("kernel/temporal-thin/word-parallel", || full.peek(black_box(130)));
+    b.bench("kernel/temporal-thin/reference", || full_ref.peek(black_box(130)));
+
+    // --- item-memory cache vs regeneration -----------------------------
+    // Touch the cache once so the cached bench measures the steady state.
+    let _ = imcache::sparse(IM_SEED);
+    b.bench("imcache/encoder-construct (cached)", || {
+        SparseEncoder::new(Variant::Optimized, ClassifierConfig::optimized())
+    });
+    b.bench("imcache/generate-sparse (uncached)", || {
+        sparse_hdc_ieeg::hdc::im::ItemMemory::generate(black_box(7))
+    });
+
+    // --- end-to-end window encode, frames/s per variant -----------------
+    let frames = random_frames(FRAMES_PER_PREDICTION, 2);
+    for variant in Variant::ALL {
+        let cfg = if variant.is_sparse() {
+            ClassifierConfig {
+                spatial_threshold: 1,
+                ..ClassifierConfig::optimized()
+            }
+        } else {
+            ClassifierConfig::default()
+        };
+        let mut enc = sparse_hdc_ieeg::hdc::classifier::make_encoder(variant, cfg);
+        b.bench_throughput(
+            &format!("window-encode/{}", variant.name()),
+            FRAMES_PER_PREDICTION as f64,
+            || {
+                let mut q = None;
+                for f in &frames {
+                    q = q.or(enc.push_frame(f));
+                }
+                q
+            },
+        );
+    }
+
+    // Reference-kernel window for the optimized variant: same CompIM
+    // binds, but scalar OR-tree + scalar temporal accumulate/thin. The
+    // word-parallel `window-encode/sparse-optimized` above must beat this
+    // by ≥ 2x (the PR's acceptance bar).
+    let ims = imcache::sparse(IM_SEED);
+    b.bench_throughput(
+        "window-encode/sparse-optimized (reference kernels)",
+        FRAMES_PER_PREDICTION as f64,
+        || {
+            let mut acc = TemporalAccumulatorReference::new();
+            let mut bound = Vec::with_capacity(CHANNELS);
+            let mut q = None;
+            for f in &frames {
+                bound.clear();
+                for (c, &code) in f.iter().enumerate() {
+                    bound.push(ims.compim.bind(c, code));
+                }
+                acc.add(&bundle_or_pos_reference(&bound));
+                if acc.frames() >= FRAMES_PER_PREDICTION {
+                    q = Some(acc.finish(130));
+                }
+            }
+            q
+        },
+    );
+
+    b.finish();
+}

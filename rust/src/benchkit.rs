@@ -7,6 +7,24 @@
 //! * reports min / median / mean / p95 per-iteration time and derived
 //!   throughput,
 //! * a [`black_box`] to defeat constant folding.
+//!
+//! ## Machine-readable output
+//!
+//! Set `BENCH_JSON=<path>` to additionally write the collected stats as a
+//! JSON document on [`Bench::finish`]:
+//!
+//! ```json
+//! {"schema": "benchkit/v1", "fast": false, "records": [
+//!   {"name": "...", "iters": 1234, "min_s": ..., "median_s": ...,
+//!    "mean_s": ..., "p95_s": ..., "throughput": ...}
+//! ]}
+//! ```
+//!
+//! `throughput` is items/s for benches registered through
+//! [`Bench::bench_throughput`] and `null` otherwise. CI runs
+//! `bench_encoder` with `BENCH_JSON` enabled and uploads the file, so the
+//! perf trajectory is tracked per commit (see `BENCH_encoder.json` at the
+//! repo root for the committed trajectory point).
 
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
@@ -25,11 +43,18 @@ pub struct Stats {
     pub median_s: f64,
     pub mean_s: f64,
     pub p95_s: f64,
+    /// Items per iteration for throughput benches (`None` for plain ones).
+    pub items_per_iter: Option<f64>,
 }
 
 impl Stats {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean_s
+    }
+
+    /// Items/s for throughput benches, `None` otherwise.
+    pub fn throughput_per_s(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| self.throughput(n))
     }
 }
 
@@ -45,10 +70,37 @@ fn fmt_time(s: f64) -> String {
     }
 }
 
+/// Minimal JSON string escaping (bench names are plain ASCII, but keep
+/// the output well-formed for any input).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A finite f64 as a JSON number (JSON has no NaN/Infinity).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "null".to_string()
+    }
+}
+
 /// Benchmark runner with a fixed time budget per benchmark.
 pub struct Bench {
     warmup: Duration,
     measure: Duration,
+    fast: bool,
     results: Vec<Stats>,
     filter: Option<String>,
 }
@@ -76,6 +128,7 @@ impl Bench {
             } else {
                 Duration::from_millis(1500)
             },
+            fast,
             results: Vec::new(),
             filter,
         }
@@ -118,7 +171,9 @@ impl Bench {
         let min_s = samples[0];
         let median_s = samples[samples.len() / 2];
         let mean_s = samples.iter().sum::<f64>() / samples.len() as f64;
-        let p95_s = samples[(samples.len() as f64 * 0.95) as usize % samples.len()];
+        // Clamp the p95 index to the last sample (never wrap to the min).
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let p95_s = samples[p95_idx];
         let stats = Stats {
             name: name.to_string(),
             iters: total_iters,
@@ -126,6 +181,7 @@ impl Bench {
             median_s,
             mean_s,
             p95_s,
+            items_per_iter: None,
         };
         println!(
             "{:<48} min {} med {} mean {} p95 {}",
@@ -148,6 +204,7 @@ impl Bench {
     ) -> Option<&Stats> {
         let before = self.results.len();
         self.bench(name, f)?;
+        self.results[before].items_per_iter = Some(items_per_iter);
         let s = &self.results[before];
         println!(
             "{:<48} throughput {:>12.0} items/s",
@@ -161,9 +218,55 @@ impl Bench {
         &self.results
     }
 
-    /// Final summary table (call at the end of a bench binary).
+    /// Serialize the collected stats as the `benchkit/v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"schema\": \"benchkit/v1\", \"fast\": {},\n \"records\": [",
+            self.fast
+        ));
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let throughput = r
+                .throughput_per_s()
+                .map(json_num)
+                .unwrap_or_else(|| "null".to_string());
+            out.push_str(&format!(
+                "\n  {{\"name\": \"{}\", \"iters\": {}, \"min_s\": {}, \"median_s\": {}, \
+                 \"mean_s\": {}, \"p95_s\": {}, \"throughput\": {}}}",
+                json_escape(&r.name),
+                r.iters,
+                json_num(r.min_s),
+                json_num(r.median_s),
+                json_num(r.mean_s),
+                json_num(r.p95_s),
+                throughput
+            ));
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write the `benchkit/v1` JSON document to `path`.
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Final summary table (call at the end of a bench binary). When
+    /// `BENCH_JSON=<path>` is set, also writes the machine-readable
+    /// record file.
     pub fn finish(&self) {
         println!("\n=== {} benchmarks run ===", self.results.len());
+        if let Ok(path) = std::env::var("BENCH_JSON") {
+            if !path.is_empty() {
+                match self.write_json(&path) {
+                    Ok(()) => println!("wrote {} records to {path}", self.results.len()),
+                    Err(e) => eprintln!("BENCH_JSON: failed to write {path}: {e}"),
+                }
+            }
+        }
     }
 }
 
@@ -188,6 +291,8 @@ mod tests {
         assert!(s.median_s <= s.p95_s * 1.0001);
         assert!(s.iters > 0);
         assert!(s.mean_s > 0.0);
+        assert!(s.items_per_iter.is_none());
+        assert!(s.throughput_per_s().is_none());
     }
 
     #[test]
@@ -209,7 +314,60 @@ mod tests {
             median_s: 1.0,
             mean_s: 0.5,
             p95_s: 1.0,
+            items_per_iter: Some(100.0),
         };
         assert!((s.throughput(100.0) - 200.0).abs() < 1e-9);
+        assert!((s.throughput_per_s().unwrap() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_document_shape() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.filter = None;
+        b.bench("plain \"quoted\"", || 1);
+        b.bench_throughput("with-throughput", 256.0, || 2);
+        let json = b.to_json();
+        assert!(json.starts_with("{\"schema\": \"benchkit/v1\""), "{json}");
+        assert!(json.contains("\"name\": \"plain \\\"quoted\\\"\""), "{json}");
+        assert!(json.contains("\"name\": \"with-throughput\""), "{json}");
+        // Plain bench has a null throughput, the throughput bench a number.
+        assert!(json.contains("\"throughput\": null"), "{json}");
+        assert_eq!(json.matches("\"throughput\": null").count(), 1, "{json}");
+        // Every record carries the full stat set.
+        for key in ["\"iters\"", "\"min_s\"", "\"median_s\"", "\"mean_s\"", "\"p95_s\""] {
+            assert_eq!(json.matches(key).count(), 2, "{key} in {json}");
+        }
+        // Balanced braces/brackets (cheap well-formedness check without a
+        // JSON parser in the dependency-free build).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn json_escape_and_numbers() {
+        assert_eq!(json_escape("a\"b\\c"), "a\\\"b\\\\c");
+        assert_eq!(json_escape("tab\there"), "tab\\there");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert!(json_num(1.5e-7).contains('e'));
+    }
+
+    #[test]
+    fn write_json_roundtrips_through_file() {
+        // Exercises the writer `finish` delegates to, without routing the
+        // output path through the BENCH_JSON env var (tests run
+        // multithreaded; BENCH_FAST below is the suite's existing idiom).
+        std::env::set_var("BENCH_FAST", "1");
+        let name = format!("benchkit-test-{}.json", std::process::id());
+        let path = std::env::temp_dir().join(name);
+        let mut b = Bench::new();
+        b.filter = None;
+        b.bench("file-write-smoke", || 1);
+        b.write_json(path.to_str().unwrap()).expect("writable");
+        let body = std::fs::read_to_string(&path).expect("JSON file written");
+        let _ = std::fs::remove_file(&path);
+        assert!(body.contains("\"file-write-smoke\""), "{body}");
+        assert!(body.ends_with("]}\n"), "{body}");
     }
 }

@@ -8,6 +8,7 @@ use sparse_hdc_ieeg::error::Context;
 use sparse_hdc_ieeg::data::dataset;
 use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
 use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::evalpool;
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::hwmodel::breakdown::{format_breakdown, format_comparison, format_table1};
 use sparse_hdc_ieeg::hwmodel::designs::{analyze, analyze_all, patient11_stimulus};
@@ -239,16 +240,21 @@ pub fn ablate_thinning(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "design / spatial threshold", "mean delay s", "detection acc", "FA/h"
     );
 
-    let mut run = |label: String, variant: Variant, spatial_threshold: u16| {
+    let run = |label: String, variant: Variant, spatial_threshold: u16| {
         let cfg = ClassifierConfig {
             spatial_threshold,
             ..ClassifierConfig::optimized()
         };
+        // Shard the patients over the evaluation pool; results come back
+        // in patient order, so the aggregation is identical to the old
+        // serial loop.
+        let evals = evalpool::map(&patients, |p| {
+            pipeline::evaluate_patient(variant, &cfg, p, Some(max_density), policy)
+        });
         let mut delays = Vec::new();
         let mut acc = 0.0;
         let mut fa = 0.0;
-        for p in &patients {
-            let e = pipeline::evaluate_patient(variant, &cfg, p, Some(max_density), policy);
+        for e in &evals {
             if e.summary.mean_delay_s().is_finite() {
                 delays.push(e.summary.mean_delay_s());
             }
@@ -318,19 +324,32 @@ pub fn fig4(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     );
 
     // Sweep: every patient at the same max density (the lines in Fig. 4).
+    // All (density × patient) cells are independent — shard them over the
+    // evaluation pool in one go, then aggregate in input order so the
+    // printed table is identical to the serial sweep.
+    let jobs: Vec<(f64, usize)> = densities
+        .iter()
+        .flat_map(|&d| (0..patients.len()).map(move |i| (d, i)))
+        .collect();
+    let evals = evalpool::map(&jobs, |&(d, i)| {
+        pipeline::evaluate_patient(
+            Variant::Optimized,
+            &ClassifierConfig::optimized(),
+            &patients[i],
+            Some(d),
+            policy,
+        )
+    });
+
     let mut per_patient_best: Vec<(f64, f64)> = vec![(f64::INFINITY, 0.0); patients.len()];
-    for &d in &densities {
+    for (di, &d) in densities.iter().enumerate() {
         let mut delays = Vec::new();
         let mut acc_sum = 0.0;
         let mut fa = 0.0;
-        for (i, p) in patients.iter().enumerate() {
-            let eval = pipeline::evaluate_patient(
-                Variant::Optimized,
-                &ClassifierConfig::optimized(),
-                p,
-                Some(d),
-                policy,
-            );
+        for (i, eval) in evals[di * patients.len()..(di + 1) * patients.len()]
+            .iter()
+            .enumerate()
+        {
             let delay = eval.summary.mean_delay_s();
             let acc = eval.summary.detection_accuracy();
             if delay.is_finite() {
@@ -380,16 +399,18 @@ pub fn fig4(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     );
 
     // Dense baseline reference line.
-    let mut delays = Vec::new();
-    let mut acc_sum = 0.0;
-    for p in &patients {
-        let eval = pipeline::evaluate_patient(
+    let dense_evals = evalpool::map(&patients, |p| {
+        pipeline::evaluate_patient(
             Variant::DenseBaseline,
             &ClassifierConfig::default(),
             p,
             None,
             policy,
-        );
+        )
+    });
+    let mut delays = Vec::new();
+    let mut acc_sum = 0.0;
+    for eval in &dense_evals {
         if eval.summary.mean_delay_s().is_finite() {
             delays.push(eval.summary.mean_delay_s());
         }

@@ -288,6 +288,28 @@ impl Coordinator {
     }
 }
 
+/// One session's setup: load the patient, one-shot-train on record 0,
+/// and keep only the record to stream — returning the full record set
+/// from N parallel setups would hold the whole cohort in memory at
+/// once (the serial loop peaked at one patient).
+fn setup_session(
+    data: &std::path::Path,
+    pid: u32,
+    record_idx: usize,
+    cfg: &ClassifierConfig,
+) -> crate::Result<(u32, Record, AssociativeMemory)> {
+    let mut records = crate::data::dataset::load_patient(data, pid)
+        .with_context(|| format!("load patient {pid}"))?;
+    ensure!(
+        records.len() > record_idx,
+        "patient {pid} has {} records, need index {record_idx}",
+        records.len()
+    );
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+    let am = pipeline::train_on_record(&mut enc, &records[0], cfg.train_density);
+    Ok((pid, records.swap_remove(record_idx), am))
+}
+
 /// `repro serve --data DIR [--patients LIST] [--use-pjrt] [--realtime]
 /// [--config FILE] [--record K]`
 pub fn serve_command(args: &Args) -> crate::Result<()> {
@@ -325,17 +347,32 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     };
 
     // Train per patient (one-shot on record 0), then stream `record_idx`.
+    // Session setup is embarrassingly parallel (each patient loads + trains
+    // independently); the evalpool keeps session ids in patient-list order.
+    // A failure flag restores fail-fast: workers skip launching new
+    // load+train passes (returning `None`) once any setup errors, and the
+    // drain below surfaces the first *real* error — a worker that races
+    // the flag leaves only a skipped slot, never a masking placeholder.
+    let classifier_cfg = &system.classifier;
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let specs = crate::evalpool::map(&patient_ids, |&pid| {
+        if failed.load(std::sync::atomic::Ordering::Relaxed) {
+            return None;
+        }
+        let spec = setup_session(&data, pid, record_idx, classifier_cfg);
+        if spec.is_err() {
+            failed.store(true, std::sync::atomic::Ordering::Relaxed);
+        }
+        Some(spec)
+    });
     let mut streams = Vec::new();
-    for (i, &pid) in patient_ids.iter().enumerate() {
-        let records = crate::data::dataset::load_patient(&data, pid)
-            .with_context(|| format!("load patient {pid}"))?;
-        ensure!(
-            records.len() > record_idx,
-            "patient {pid} has {} records, need index {record_idx}",
-            records.len()
-        );
-        let mut enc = SparseEncoder::new(Variant::Optimized, system.classifier.clone());
-        let am = pipeline::train_on_record(&mut enc, &records[0], system.classifier.train_density);
+    for (i, spec) in specs.into_iter().enumerate() {
+        let (pid, record, am) = match spec {
+            Some(spec) => spec?,
+            // Skipped after another slot's failure; that slot holds the
+            // real error and the loop returns it when it gets there.
+            None => continue,
+        };
         println!(
             "patient {pid}: trained (class densities {:.1}% / {:.1}%), streaming record {record_idx}",
             am.classes[0].density() * 100.0,
@@ -344,9 +381,9 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         streams.push(StreamSpec {
             session_id: i as u64 + 1,
             patient_id: pid,
-            record: records[record_idx].clone(),
+            record,
             am,
-            threshold: system.classifier.temporal_threshold,
+            threshold: classifier_cfg.temporal_threshold,
         });
     }
 

@@ -1,0 +1,163 @@
+//! Sharded evaluation pool.
+//!
+//! The sweep commands (`repro fig4`, the density-sweep example, the
+//! §III-B ablation, the Fig. 5 design comparison) and the coordinator's
+//! session setup all run many independent `(variant × max-density ×
+//! patient)` jobs. This module shards such job lists over a
+//! `std::thread::scope` worker pool:
+//!
+//! * **deterministic ordering** — results come back in input order
+//!   regardless of which worker finished first, so parallel output is
+//!   byte-identical to the serial loop (`tests/kernels.rs` pins this);
+//! * **work stealing by index** — workers pull the next unclaimed job
+//!   from a shared atomic cursor, so long jobs (big patients) don't
+//!   stall a statically assigned shard;
+//! * **no runtime dependencies** — scoped threads borrow the job slice
+//!   and the closure directly; each result lands in its own slot, and a
+//!   panicking job's payload is re-raised in the caller with its
+//!   original message.
+//!
+//! Worker count defaults to the machine's available parallelism and can
+//! be pinned with `EVAL_WORKERS=<n>` (`EVAL_WORKERS=1` forces the serial
+//! path — useful for profiling and for A/B-ing determinism).
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count: `EVAL_WORKERS` override, else available parallelism.
+pub fn default_workers() -> usize {
+    if let Some(n) = std::env::var("EVAL_WORKERS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every job on the default worker count; results are
+/// returned in input order.
+pub fn map<T, R, F>(jobs: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    map_with(default_workers(), jobs, f)
+}
+
+/// Apply `f` to every job on `workers` threads; results are returned in
+/// input order. `workers <= 1` (or a 0/1-job list) runs inline with no
+/// threads spawned.
+pub fn map_with<T, R, F>(workers: usize, jobs: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let workers = workers.clamp(1, jobs.len().max(1));
+    if workers == 1 {
+        return jobs.iter().map(&f).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    // One slot per job; each index is claimed by exactly one worker, so
+    // the per-slot mutexes are never contended — they only carry the
+    // value across the thread boundary.
+    let slots: Vec<Mutex<Option<R>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    let panicked: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    // Early cancel: once any job panics, no worker claims further jobs
+    // (matching the serial path's abort-on-first-failure wall-clock).
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                match catch_unwind(AssertUnwindSafe(|| f(&jobs[i]))) {
+                    Ok(r) => *slots[i].lock().unwrap() = Some(r),
+                    Err(payload) => {
+                        *panicked.lock().unwrap() = Some(payload);
+                        stop.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+    if let Some(payload) = panicked.into_inner().unwrap() {
+        resume_unwind(payload);
+    }
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .unwrap()
+                .expect("worker filled every claimed slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let jobs: Vec<usize> = (0..257).collect();
+        let out = map_with(8, &jobs, |&j| j * 3);
+        assert_eq!(out, jobs.iter().map(|j| j * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let jobs: Vec<u64> = (0..100).collect();
+        let f = |&j: &u64| crate::rng::splitmix64_mix(j);
+        assert_eq!(map_with(1, &jobs, f), map_with(7, &jobs, f));
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(map_with(4, &empty, |&j| j).is_empty());
+        assert_eq!(map_with(4, &[41u32], |&j| j + 1), vec![42]);
+        assert_eq!(map_with(0, &[1u32, 2], |&j| j), vec![1, 2]);
+    }
+
+    #[test]
+    fn uneven_job_durations_still_ordered() {
+        // Early jobs sleep longest — a finish-order collector would come
+        // back reversed.
+        let jobs: Vec<u64> = (0..16).collect();
+        let out = map_with(8, &jobs, |&j| {
+            std::thread::sleep(std::time::Duration::from_millis(16 - j));
+            j
+        });
+        assert_eq!(out, jobs);
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "job 3 panicked")]
+    fn job_panics_propagate_with_message() {
+        let jobs: Vec<usize> = (0..8).collect();
+        let _ = map_with(4, &jobs, |&j| {
+            if j == 3 {
+                panic!("job 3 panicked");
+            }
+            j
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Shared bit-plane (bit-sliced) counter primitives.
+//!
+//! Both word-parallel counter structures — the spatial adder tree
+//! ([`super::bundling::SpatialCounts`], 7 planes) and the temporal
+//! accumulator ([`super::temporal::TemporalAccumulator`], 8 planes) —
+//! store per-element counts as `N` bit planes over the 16 × u64 HV
+//! words: plane `b` holds bit `b` of the counts of elements
+//! `w*64..w*64+64`. The three operations they share live here,
+//! parameterized on the plane count, so the carry-save adder, the
+//! magnitude comparator and the transpose have exactly one
+//! implementation each.
+
+use crate::params::DIM;
+
+use super::hv::{Hv, WORDS};
+
+/// Ripple-carry add of the set bits of `bits` into word column `w`
+/// (LSB plane first). Returns the carry out of the top plane — `0`
+/// unless a counter wrapped; the caller decides whether that is an
+/// overflow (spatial: impossible by construction) or a saturation to
+/// fix up (temporal). Early-exits once the carry dies.
+#[inline]
+pub fn ripple_add<const N: usize>(planes: &mut [[u64; WORDS]; N], w: usize, bits: u64) -> u64 {
+    let mut carry = bits;
+    for plane in planes.iter_mut() {
+        if carry == 0 {
+            return 0;
+        }
+        let sum = plane[w] ^ carry;
+        carry &= plane[w];
+        plane[w] = sum;
+    }
+    carry
+}
+
+/// Branchless word-level `count >= threshold` over bit-sliced planes:
+/// walk the planes MSB→LSB keeping per-column "greater" /
+/// "equal-so-far" masks. Caller handles the trivial thresholds
+/// (`0` → all ones, `>= 1 << N` → all zeros).
+pub fn ge_threshold<const N: usize>(planes: &[[u64; WORDS]; N], threshold: u64) -> Hv {
+    debug_assert!(threshold >= 1 && threshold < (1u64 << N));
+    let mut out = Hv::zero();
+    for w in 0..WORDS {
+        let mut gt = 0u64;
+        let mut eq = u64::MAX;
+        for b in (0..N).rev() {
+            let p = planes[b][w];
+            if (threshold >> b) & 1 == 1 {
+                eq &= p;
+            } else {
+                gt |= eq & p;
+            }
+        }
+        out.words[w] = gt | eq;
+    }
+    out
+}
+
+/// Transpose bit-sliced planes back to per-element counts (diagnostic /
+/// tuning path — the hot paths never materialize this).
+pub fn transpose_counts<const N: usize>(planes: &[[u64; WORDS]; N]) -> Box<[u16; DIM]> {
+    let mut out = Box::new([0u16; DIM]);
+    for w in 0..WORDS {
+        for (b, plane) in planes.iter().enumerate() {
+            let mut bits = plane[w];
+            while bits != 0 {
+                let i = bits.trailing_zeros() as usize;
+                out[w * 64 + i] |= 1 << b;
+                bits &= bits - 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ripple_add_counts_and_overflows() {
+        let mut planes = [[0u64; WORDS]; 2];
+        // Three adds of the same bit: count goes 1, 2, 3.
+        assert_eq!(ripple_add(&mut planes, 0, 1), 0);
+        assert_eq!(ripple_add(&mut planes, 0, 1), 0);
+        assert_eq!(ripple_add(&mut planes, 0, 1), 0);
+        assert_eq!(transpose_counts(&planes)[0], 3);
+        // Fourth add wraps a 2-bit counter: carry out reports it.
+        assert_eq!(ripple_add(&mut planes, 0, 1), 1);
+        assert_eq!(transpose_counts(&planes)[0], 0);
+    }
+
+    #[test]
+    fn ge_threshold_matches_scalar_compare() {
+        let mut planes = [[0u64; WORDS]; 4];
+        for (i, count) in [0u64, 1, 5, 7, 8, 15].iter().enumerate() {
+            for _ in 0..*count {
+                ripple_add(&mut planes, 0, 1 << i);
+            }
+        }
+        let counts = transpose_counts(&planes);
+        for t in 1..16u64 {
+            let hv = ge_threshold(&planes, t);
+            for i in 0..6 {
+                assert_eq!(hv.get(i), counts[i] as u64 >= t, "element {i} t {t}");
+            }
+        }
+    }
+}

@@ -13,15 +13,124 @@
 //! algorithmic performance, §II-C). Both implementations are provided in
 //! the bit domain (as the hardware computes) and in the position domain
 //! (as the CompIM-fed optimized datapath computes); equivalence is tested.
+//!
+//! ## Word-parallel hot path
+//!
+//! The adder trees are modelled with *bit-sliced* carry-save counters
+//! ([`SpatialCounts`]): plane `b` holds bit `b` of every element's count,
+//! so adding one input HV is a word-wise ripple-carry over at most
+//! [`SPATIAL_PLANES`] planes (64 counters advance per u64 operation), and
+//! thinning is a branchless word-level magnitude comparator. The original
+//! per-bit implementations are retained as `*_reference` functions;
+//! `tests/kernels.rs` pins the two bit-exactly against each other.
 
 use crate::params::{CHANNELS, DIM, SEG_LEN};
 
-use super::hv::Hv;
+use super::bitplanes;
+use super::hv::{Hv, WORDS, WORDS_PER_SEG};
 use super::sparse::SparseHv;
+
+/// Bit planes of one [`SpatialCounts`]: counts reach at most the fan-in
+/// (64 channels), so 7 planes hold any value in `0..=127` and the top
+/// carry out of plane 6 can never fire for valid inputs.
+pub const SPATIAL_PLANES: usize = 7;
+
+/// Bit-sliced per-element counters for the spatial adder tree: 64
+/// counters per u64 word, one bit plane per counter bit. This is the
+/// software mirror of the hardware argument — the adder tree is a column
+/// of carry-save adders, and modelling it column-wise makes the golden
+/// model word-parallel instead of per-bit.
+///
+/// Capacity is [`SPATIAL_PLANES`] bits: at most 127 accumulated inputs.
+/// `add_*` panic past that rather than wrapping silently (the
+/// `bundle_adder_thin*` wrappers route larger fan-ins to the scalar
+/// path instead).
+#[derive(Clone)]
+pub struct SpatialCounts {
+    /// `planes[b][w]` = bit `b` of the counts of elements `w*64..w*64+64`.
+    planes: [[u64; WORDS]; SPATIAL_PLANES],
+    inputs: usize,
+}
+
+impl Default for SpatialCounts {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SpatialCounts {
+    pub fn new() -> Self {
+        SpatialCounts {
+            planes: [[0u64; WORDS]; SPATIAL_PLANES],
+            inputs: 0,
+        }
+    }
+
+    /// Number of HVs accumulated so far.
+    pub fn inputs(&self) -> usize {
+        self.inputs
+    }
+
+    /// Add one bit-domain HV: word-wise ripple-carry across the planes.
+    pub fn add_hv(&mut self, hv: &Hv) {
+        for (w, &word) in hv.words.iter().enumerate() {
+            let carry = bitplanes::ripple_add(&mut self.planes, w, word);
+            assert_eq!(carry, 0, "spatial counter overflow (> 127 inputs)");
+        }
+        self.inputs += 1;
+    }
+
+    /// Add one position-domain HV: scatter its 8 one-bits, rippling one
+    /// word column per segment (the CompIM datapath's 7→128 decode feeds
+    /// exactly one counter column per segment).
+    pub fn add_sparse(&mut self, hv: &SparseHv) {
+        for (s, &p) in hv.pos.iter().enumerate() {
+            let w = s * WORDS_PER_SEG + ((p as usize) >> 6);
+            let carry = bitplanes::ripple_add(&mut self.planes, w, 1u64 << (p & 63));
+            assert_eq!(carry, 0, "spatial counter overflow (> 127 inputs)");
+        }
+        self.inputs += 1;
+    }
+
+    /// Thin to a binary HV (`count >= threshold`) with the branchless
+    /// word-level magnitude comparator ([`bitplanes::ge_threshold`]).
+    pub fn thin(&self, threshold: u16) -> Hv {
+        if threshold == 0 {
+            return Hv::ones();
+        }
+        if (threshold as usize) >= (1 << SPATIAL_PLANES) {
+            return Hv::zero();
+        }
+        bitplanes::ge_threshold(&self.planes, threshold as u64)
+    }
+
+    /// Transpose back to per-element counts (diagnostics / the activity
+    /// model; the hot path never materializes this).
+    pub fn counts(&self) -> Box<[u16; DIM]> {
+        bitplanes::transpose_counts(&self.planes)
+    }
+}
+
+/// Does a fan-in of `n` inputs fit the bit-sliced planes? The hardware
+/// fan-in is 64 channels; anything larger than 127 takes the exact
+/// scalar path instead (cold, but keeps the public u16 contract).
+fn fits_planes(n: usize) -> bool {
+    n < (1 << SPATIAL_PLANES)
+}
 
 /// Per-element counts of 1-bits across a set of HVs (the adder-tree
 /// outputs). Max count = number of inputs (64 → fits u16 easily).
+///
+/// Materializing u16 counts is fastest as a direct scatter — the
+/// bit-sliced planes only win when thinning *without* materializing
+/// (see [`bundle_adder_thin`] / [`bundle_adder_thin_pos`]) — so this
+/// delegates to the scatter implementation.
 pub fn element_counts(bound: &[Hv]) -> Box<[u16; DIM]> {
+    element_counts_reference(bound)
+}
+
+/// Scalar reference for [`element_counts`] (per-bit scatter).
+pub fn element_counts_reference(bound: &[Hv]) -> Box<[u16; DIM]> {
     let mut counts = Box::new([0u16; DIM]);
     for hv in bound {
         for (w, &word) in hv.words.iter().enumerate() {
@@ -36,8 +145,14 @@ pub fn element_counts(bound: &[Hv]) -> Box<[u16; DIM]> {
     counts
 }
 
-/// Position-domain counts: scatter each bound HV's 8 positions.
+/// Position-domain counts. Same materialization argument as
+/// [`element_counts`]: the direct scatter is the fast path here.
 pub fn element_counts_pos(bound: &[SparseHv]) -> Box<[u16; DIM]> {
+    element_counts_pos_reference(bound)
+}
+
+/// Scalar reference for [`element_counts_pos`] (per-position scatter).
+pub fn element_counts_pos_reference(bound: &[SparseHv]) -> Box<[u16; DIM]> {
     let mut counts = Box::new([0u16; DIM]);
     for hv in bound {
         for (s, &p) in hv.pos.iter().enumerate() {
@@ -47,14 +162,50 @@ pub fn element_counts_pos(bound: &[SparseHv]) -> Box<[u16; DIM]> {
     counts
 }
 
-/// Thinning: threshold the counts back to a binary HV.
+/// Thinning: threshold the counts back to a binary HV. Assembles each
+/// output word branchlessly instead of going through `Hv::set`.
 pub fn thin(counts: &[u16; DIM], threshold: u16) -> Hv {
+    let mut hv = Hv::zero();
+    for (w, word) in hv.words.iter_mut().enumerate() {
+        let base = w * 64;
+        let mut bits = 0u64;
+        for b in 0..64 {
+            bits |= ((counts[base + b] >= threshold) as u64) << b;
+        }
+        *word = bits;
+    }
+    hv
+}
+
+/// Scalar reference for [`thin`] (per-bit `Hv::from_fn`).
+pub fn thin_reference(counts: &[u16; DIM], threshold: u16) -> Hv {
     Hv::from_fn(|i| counts[i] >= threshold)
 }
 
-/// Baseline spatial bundling: adder tree + thinning.
+/// Baseline spatial bundling: adder tree + thinning, bit domain. The hot
+/// path stays bit-sliced end to end (no u16 materialization).
 pub fn bundle_adder_thin(bound: &[Hv], threshold: u16) -> Hv {
-    thin(&element_counts(bound), threshold)
+    if !fits_planes(bound.len()) {
+        return thin(&element_counts_reference(bound), threshold);
+    }
+    let mut acc = SpatialCounts::new();
+    for hv in bound {
+        acc.add_hv(hv);
+    }
+    acc.thin(threshold)
+}
+
+/// Adder tree + thinning fed directly from position space (the CompIM
+/// datapath of the `SparseCompIm` design point).
+pub fn bundle_adder_thin_pos(bound: &[SparseHv], threshold: u16) -> Hv {
+    if !fits_planes(bound.len()) {
+        return thin(&element_counts_pos_reference(bound), threshold);
+    }
+    let mut acc = SpatialCounts::new();
+    for hv in bound {
+        acc.add_sparse(hv);
+    }
+    acc.thin(threshold)
 }
 
 /// Optimized spatial bundling: OR tree (no thinning), bit domain.
@@ -67,8 +218,20 @@ pub fn bundle_or(bound: &[Hv]) -> Hv {
 }
 
 /// Optimized spatial bundling fed directly from position space (the
-/// CompIM datapath: 7→128 decode + OR tree).
+/// CompIM datapath: 7→128 decode + OR tree). Each position ORs one
+/// precomputed word mask — no per-bit `Hv::set` bounds/branch work.
 pub fn bundle_or_pos(bound: &[SparseHv]) -> Hv {
+    let mut out = Hv::zero();
+    for hv in bound {
+        for (s, &p) in hv.pos.iter().enumerate() {
+            out.words[s * WORDS_PER_SEG + ((p as usize) >> 6)] |= 1u64 << (p & 63);
+        }
+    }
+    out
+}
+
+/// Scalar reference for [`bundle_or_pos`] (per-bit `Hv::set`).
+pub fn bundle_or_pos_reference(bound: &[SparseHv]) -> Hv {
     let mut out = Hv::zero();
     for hv in bound {
         for (s, &p) in hv.pos.iter().enumerate() {
@@ -120,6 +283,40 @@ mod tests {
         let (pos, bits) = random_bound(&mut rng, CHANNELS);
         assert_eq!(bundle_or_pos(&pos), bundle_or(&bits));
         assert_eq!(*element_counts_pos(&pos), *element_counts(&bits));
+        for t in [1u16, 2, 3] {
+            assert_eq!(bundle_adder_thin_pos(&pos, t), bundle_adder_thin(&bits, t));
+        }
+    }
+
+    #[test]
+    fn word_parallel_matches_reference() {
+        let mut rng = Xoshiro256::new(7);
+        for n in [0usize, 1, 3, CHANNELS] {
+            let (pos, bits) = random_bound(&mut rng, n);
+            assert_eq!(bundle_or_pos(&pos), bundle_or_pos_reference(&pos));
+            let counts = element_counts(&bits);
+            assert_eq!(*counts, *element_counts_reference(&bits));
+            assert_eq!(*element_counts_pos(&pos), *element_counts_pos_reference(&pos));
+            for t in 0..=(n as u16 + 2) {
+                assert_eq!(thin(&counts, t), thin_reference(&counts, t), "n {n} t {t}");
+                assert_eq!(bundle_adder_thin(&bits, t), thin_reference(&counts, t), "n {n} t {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn bit_sliced_counts_roundtrip() {
+        let mut rng = Xoshiro256::new(8);
+        let (pos, bits) = random_bound(&mut rng, CHANNELS);
+        let mut a = SpatialCounts::new();
+        let mut b = SpatialCounts::new();
+        for (p, h) in pos.iter().zip(bits.iter()) {
+            a.add_sparse(p);
+            b.add_hv(h);
+        }
+        assert_eq!(a.inputs(), CHANNELS);
+        assert_eq!(*a.counts(), *b.counts());
+        assert_eq!(*a.counts(), *element_counts_reference(&bits));
     }
 
     #[test]
@@ -174,5 +371,32 @@ mod tests {
     fn empty_bundle_is_zero() {
         assert_eq!(bundle_or(&[]), Hv::zero());
         assert_eq!(bundle_adder_thin(&[], 1), Hv::zero());
+        assert_eq!(bundle_adder_thin_pos(&[], 1), Hv::zero());
+    }
+
+    #[test]
+    fn large_fan_in_falls_back_exactly() {
+        // > 127 inputs exceed the bit-plane capacity; the public API must
+        // transparently take the exact scalar path.
+        let mut rng = Xoshiro256::new(9);
+        let (pos, bits) = random_bound(&mut rng, 130);
+        assert_eq!(*element_counts(&bits), *element_counts_reference(&bits));
+        assert_eq!(*element_counts_pos(&pos), *element_counts_pos_reference(&pos));
+        let counts = element_counts_reference(&bits);
+        for t in [1u16, 64, 129, 130, 131] {
+            assert_eq!(bundle_adder_thin(&bits, t), thin_reference(&counts, t), "t {t}");
+            assert_eq!(bundle_adder_thin_pos(&pos, t), bundle_adder_thin(&bits, t), "t {t}");
+        }
+    }
+
+    #[test]
+    fn thin_threshold_extremes() {
+        // threshold 0 is vacuously true everywhere; a threshold above the
+        // plane capacity can never be met.
+        let acc = SpatialCounts::new();
+        assert_eq!(acc.thin(0), Hv::ones());
+        assert_eq!(acc.thin(1 << SPATIAL_PLANES), Hv::zero());
+        let counts = Box::new([0u16; DIM]);
+        assert_eq!(thin(&counts, 0), thin_reference(&counts, 0));
     }
 }

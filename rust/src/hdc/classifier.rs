@@ -14,6 +14,8 @@
 //! construction — the tests pin this, because it is the paper's §III
 //! correctness claim.
 
+use std::sync::Arc;
+
 use crate::params::{
     CHANNELS, DIM, IM_SEED, NUM_CLASSES, TEMPORAL_THRESHOLD_DEFAULT,
 };
@@ -24,6 +26,7 @@ use super::compim::CompIm;
 use super::dense::{self, DenseTemporal};
 use super::hv::Hv;
 use super::im::{DenseItemMemory, ItemMemory};
+use super::imcache::{self, SparseIms};
 use super::sparse::{bind_bitdomain, SparseHv};
 use super::temporal::TemporalAccumulator;
 
@@ -122,8 +125,9 @@ pub trait Encoder {
 pub struct SparseEncoder {
     variant: Variant,
     cfg: ClassifierConfig,
-    im: ItemMemory,
-    compim: CompIm,
+    /// Seed-interned IM + CompIM ([`imcache`]) — construction is an
+    /// `Arc` clone after the first encoder for a seed.
+    ims: Arc<SparseIms>,
     temporal: TemporalAccumulator,
     /// Scratch for the per-frame bound HVs (avoids 64 allocations/frame).
     bound_bits: Vec<Hv>,
@@ -133,13 +137,11 @@ pub struct SparseEncoder {
 impl SparseEncoder {
     pub fn new(variant: Variant, cfg: ClassifierConfig) -> Self {
         assert!(variant.is_sparse(), "use DenseEncoder for the dense design");
-        let im = ItemMemory::generate(cfg.seed);
-        let compim = CompIm::from_item_memory(&im);
+        let ims = imcache::sparse(cfg.seed);
         SparseEncoder {
             variant,
             cfg,
-            im,
-            compim,
+            ims,
             temporal: TemporalAccumulator::new(),
             bound_bits: Vec::with_capacity(CHANNELS),
             bound_pos: Vec::with_capacity(CHANNELS),
@@ -155,11 +157,11 @@ impl SparseEncoder {
     }
 
     pub fn item_memory(&self) -> &ItemMemory {
-        &self.im
+        &self.ims.im
     }
 
     pub fn comp_im(&self) -> &CompIm {
-        &self.compim
+        &self.ims.compim
     }
 
     pub fn temporal(&self) -> &TemporalAccumulator {
@@ -175,27 +177,27 @@ impl SparseEncoder {
                 // barrel shift → adder tree + thinning.
                 self.bound_bits.clear();
                 for (c, &code) in codes.iter().enumerate() {
-                    let data = self.im.lookup_hv(c, code);
-                    let bound = bind_bitdomain(&self.im.electrode_hv(c), &data)
+                    let data = self.ims.im.lookup_hv(c, code);
+                    let bound = bind_bitdomain(&self.ims.im.electrode_hv(c), &data)
                         .expect("IM entries are sparse by construction");
                     self.bound_bits.push(bound);
                 }
                 bundling::bundle_adder_thin(&self.bound_bits, self.cfg.spatial_threshold)
             }
             Variant::SparseCompIm => {
-                // CompIM binding, but the baseline adder-tree bundling.
+                // CompIM binding, but the baseline adder-tree bundling
+                // (bit-sliced end to end — no per-element counts).
                 self.bound_pos.clear();
                 for (c, &code) in codes.iter().enumerate() {
-                    self.bound_pos.push(self.compim.bind(c, code));
+                    self.bound_pos.push(self.ims.compim.bind(c, code));
                 }
-                let counts = bundling::element_counts_pos(&self.bound_pos);
-                bundling::thin(&counts, self.cfg.spatial_threshold)
+                bundling::bundle_adder_thin_pos(&self.bound_pos, self.cfg.spatial_threshold)
             }
             Variant::Optimized => {
                 // CompIM binding + OR-tree bundling (no thinning).
                 self.bound_pos.clear();
                 for (c, &code) in codes.iter().enumerate() {
-                    self.bound_pos.push(self.compim.bind(c, code));
+                    self.bound_pos.push(self.ims.compim.bind(c, code));
                 }
                 bundling::bundle_or_pos(&self.bound_pos)
             }
@@ -251,14 +253,14 @@ impl Encoder for SparseEncoder {
 /// The dense encoder (Burrello'18 design point).
 pub struct DenseEncoder {
     cfg: ClassifierConfig,
-    im: DenseItemMemory,
+    im: Arc<DenseItemMemory>,
     temporal: DenseTemporal,
 }
 
 impl DenseEncoder {
     pub fn new(cfg: ClassifierConfig) -> Self {
         DenseEncoder {
-            im: DenseItemMemory::generate(cfg.seed),
+            im: imcache::dense(cfg.seed),
             cfg,
             temporal: DenseTemporal::new(),
         }
@@ -504,6 +506,18 @@ mod tests {
         // Query equal to class-1 HV: both metrics must pick class 1.
         assert_eq!(sparse_clf.search(&b).class, crate::params::CLASS_ICTAL);
         assert_eq!(dense_clf.search(&b).class, crate::params::CLASS_ICTAL);
+    }
+
+    #[test]
+    fn encoders_share_interned_item_memory() {
+        // imcache: every encoder for one seed reads the same tables.
+        let a = SparseEncoder::new(Variant::Optimized, ClassifierConfig::optimized());
+        let b = SparseEncoder::new(Variant::SparseBaseline, ClassifierConfig::optimized());
+        assert!(std::ptr::eq(a.item_memory(), b.item_memory()));
+        assert!(std::ptr::eq(a.comp_im(), b.comp_im()));
+        let c = DenseEncoder::new(ClassifierConfig::default());
+        let d = DenseEncoder::new(ClassifierConfig::default());
+        assert!(std::ptr::eq(c.item_memory(), d.item_memory()));
     }
 
     #[test]

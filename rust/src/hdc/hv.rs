@@ -215,7 +215,21 @@ impl Hv {
     /// Expand to one i32 per element (the layout the HLO artifacts use:
     /// JAX-side HVs are `int32[1024]` 0/1 tensors).
     pub fn to_i32s(&self) -> Vec<i32> {
-        (0..DIM).map(|i| self.get(i) as i32).collect()
+        let mut out = vec![0i32; DIM];
+        self.to_i32s_into(&mut out);
+        out
+    }
+
+    /// Fill a preallocated `[i32; DIM]` buffer word-wise (no per-bit
+    /// `get` indexing) — the marshalling hot path of the engine workers.
+    pub fn to_i32s_into(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), DIM);
+        for (w, &word) in self.words.iter().enumerate() {
+            let chunk = &mut out[w * 64..(w + 1) * 64];
+            for (b, v) in chunk.iter_mut().enumerate() {
+                *v = ((word >> b) & 1) as i32;
+            }
+        }
     }
 
     pub fn from_i32s(v: &[i32]) -> Self {
@@ -332,6 +346,14 @@ mod tests {
         let mut rng = Xoshiro256::new(23);
         let hv = Hv::random(&mut rng, 0.25);
         assert_eq!(Hv::from_i32s(&hv.to_i32s()), hv);
+        // The word-wise fill must agree with per-bit `get`.
+        let v = hv.to_i32s();
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, hv.get(i) as i32, "bit {i}");
+        }
+        let mut buf = vec![7i32; DIM];
+        hv.to_i32s_into(&mut buf);
+        assert_eq!(buf, v);
     }
 
     #[test]

@@ -1,0 +1,111 @@
+//! Process-wide item-memory cache.
+//!
+//! Item memories are pure functions of their seed (SplitMix64 chained
+//! hashing, see [`crate::rng`]), but generating one walks 32k+ hash
+//! chains — far too expensive to repeat for every encoder the sweeps and
+//! the evaluation pool construct. This cache interns the generated
+//! tables behind `Arc`s keyed by seed, so
+//! [`SparseEncoder`](super::classifier::SparseEncoder) /
+//! [`DenseEncoder`](super::classifier::DenseEncoder) construction is a
+//! hash-map hit + two `Arc` clones and encoders become cheap enough to
+//! spawn per worker thread.
+//!
+//! The cache is unbounded but keyed by seed; a run touches a handful of
+//! seeds (the shared [`crate::params::IM_SEED`] plus any `--seed`
+//! overrides), so entries are retained for the process lifetime.
+//! Generation happens *outside* the map lock: concurrent first-time
+//! requests for the same seed may generate twice, but both produce the
+//! identical table and the first insert wins — no worker ever observes a
+//! partially built IM.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::compim::CompIm;
+use super::im::{DenseItemMemory, ItemMemory};
+
+/// The sparse tables every sparse design point reads: the baseline
+/// 1024-bit item memory and its compressed (CompIM) form, generated from
+/// the same seed and equal by construction.
+pub struct SparseIms {
+    pub im: ItemMemory,
+    pub compim: CompIm,
+}
+
+static SPARSE: OnceLock<Mutex<HashMap<u64, Arc<SparseIms>>>> = OnceLock::new();
+static DENSE: OnceLock<Mutex<HashMap<u64, Arc<DenseItemMemory>>>> = OnceLock::new();
+
+/// Shared sparse IM + CompIM for `seed`, generating on first use.
+pub fn sparse(seed: u64) -> Arc<SparseIms> {
+    let map = SPARSE.get_or_init(Default::default);
+    if let Some(hit) = map.lock().unwrap().get(&seed) {
+        return hit.clone();
+    }
+    let im = ItemMemory::generate(seed);
+    let compim = CompIm::from_item_memory(&im);
+    let fresh = Arc::new(SparseIms { im, compim });
+    let mut map = map.lock().unwrap();
+    map.entry(seed).or_insert(fresh).clone()
+}
+
+/// Shared dense item memory for `seed`, generating on first use.
+pub fn dense(seed: u64) -> Arc<DenseItemMemory> {
+    let map = DENSE.get_or_init(Default::default);
+    if let Some(hit) = map.lock().unwrap().get(&seed) {
+        return hit.clone();
+    }
+    let fresh = Arc::new(DenseItemMemory::generate(seed));
+    let mut map = map.lock().unwrap();
+    map.entry(seed).or_insert(fresh).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CHANNELS, IM_SEED, LBP_CODES};
+
+    #[test]
+    fn same_seed_shares_one_allocation() {
+        let a = sparse(IM_SEED);
+        let b = sparse(IM_SEED);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = dense(IM_SEED);
+        let d = dense(IM_SEED);
+        assert!(Arc::ptr_eq(&c, &d));
+    }
+
+    #[test]
+    fn cached_tables_match_direct_generation() {
+        let cached = sparse(0xD15C);
+        let direct = ItemMemory::generate(0xD15C);
+        for c in 0..CHANNELS {
+            assert_eq!(cached.im.electrode(c), direct.electrode(c));
+            for k in 0..LBP_CODES {
+                assert_eq!(cached.im.lookup(c, k as u8), direct.lookup(c, k as u8));
+                assert_eq!(cached.compim.lookup(c, k as u8), direct.lookup(c, k as u8));
+            }
+        }
+        assert_eq!(cached.im.digest(), direct.digest());
+    }
+
+    #[test]
+    fn different_seeds_are_distinct_entries() {
+        let a = sparse(1);
+        let b = sparse(2);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_ne!(a.im.lookup(0, 0), b.im.lookup(0, 0));
+    }
+
+    #[test]
+    fn cache_is_thread_safe_under_contention() {
+        let seed = 0xC0FFEE;
+        let arcs: Vec<Arc<SparseIms>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8).map(|_| s.spawn(move || sparse(seed))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // All callers converge on one interned table.
+        for a in &arcs[1..] {
+            assert!(Arc::ptr_eq(&arcs[0], a));
+        }
+    }
+}

@@ -9,6 +9,10 @@
 //! * [`dense`] — dense-HDC ops of the Burrello'18 baseline: XOR binding,
 //!   bit-wise majority bundling, Hamming-distance similarity.
 //! * [`im`] / [`compim`] — item memory and compressed item memory.
+//! * [`imcache`] — process-wide `Arc` interning of generated item
+//!   memories (seed-keyed), making encoder construction cheap.
+//! * [`bitplanes`] — shared bit-sliced counter primitives (carry-save
+//!   ripple add, word-level magnitude comparator, transpose).
 //! * [`bundling`] — spatial bundling: adder trees + thinning (baseline) and
 //!   OR trees (optimized, §III-B).
 //! * [`temporal`] — the 256-frame temporal encoder with 8-bit counters.
@@ -17,10 +21,12 @@
 //! * [`classifier`] — the assembled pipelines for every design variant.
 
 pub mod hv;
+pub mod bitplanes;
 pub mod sparse;
 pub mod dense;
 pub mod im;
 pub mod compim;
+pub mod imcache;
 pub mod bundling;
 pub mod temporal;
 pub mod am;

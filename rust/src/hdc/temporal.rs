@@ -5,16 +5,34 @@
 //! element in hardware → the "large 8192-bit register"), then thins with a
 //! threshold to produce the query HV. The paper's operating point is
 //! threshold 130, keeping the query density in 20–30%.
+//!
+//! ## Word-parallel hot path
+//!
+//! [`TemporalAccumulator`] stores the 1024 × 8-bit counters *bit-sliced*:
+//! 8 bit planes of 16 u64 words. Adding one frame is a word-wise
+//! carry-save ripple (64 counters advance per u64 op) with a saturating
+//! fix-up on the carry out of the top plane — exactly the hardware's
+//! 8-bit saturating registers, but 64 at a time. Thinning walks the
+//! planes MSB→LSB with a branchless magnitude comparator. The original
+//! per-element u16 implementation is retained as
+//! [`TemporalAccumulatorReference`]; `tests/kernels.rs` pins the two
+//! bit-exactly against each other.
 
-use crate::params::{DIM, FRAMES_PER_PREDICTION, TEMPORAL_COUNTER_MAX};
+use crate::params::{DIM, FRAMES_PER_PREDICTION, TEMPORAL_COUNTER_BITS, TEMPORAL_COUNTER_MAX};
 
-use super::hv::Hv;
+use super::bitplanes;
+use super::hv::{Hv, WORDS};
+
+/// Bit planes of the temporal counters (8 in hardware).
+pub const TEMPORAL_PLANES: usize = TEMPORAL_COUNTER_BITS;
 
 /// Streaming temporal accumulator with hardware-faithful 8-bit saturating
-/// counters.
+/// counters, stored bit-sliced for word-parallel accumulate/thin.
 #[derive(Clone)]
 pub struct TemporalAccumulator {
-    counts: Box<[u16; DIM]>,
+    /// `planes[b][w]` = bit `b` of the counters of elements
+    /// `w*64..w*64+64`.
+    planes: [[u64; WORDS]; TEMPORAL_PLANES],
     frames: usize,
 }
 
@@ -27,15 +45,96 @@ impl Default for TemporalAccumulator {
 impl TemporalAccumulator {
     pub fn new() -> Self {
         TemporalAccumulator {
-            counts: Box::new([0u16; DIM]),
+            planes: [[0u64; WORDS]; TEMPORAL_PLANES],
             frames: 0,
         }
     }
 
     /// Add one spatial-encoder output frame. Counters saturate at 255
-    /// exactly like the 8-bit hardware registers. Word-iterated without
-    /// intermediate allocation — this runs once per clock cycle on the
-    /// serving hot path (§Perf L3-1).
+    /// exactly like the 8-bit hardware registers. Word-parallel
+    /// carry-save ripple — this runs once per clock cycle on the serving
+    /// hot path (§Perf L3-1).
+    pub fn add(&mut self, frame: &Hv) {
+        for (w, &word) in frame.words.iter().enumerate() {
+            let carry = bitplanes::ripple_add(&mut self.planes, w, word);
+            if carry != 0 {
+                // Columns whose counter wrapped 255 → 0: saturate back to
+                // all-ones instead.
+                for plane in self.planes.iter_mut() {
+                    plane[w] |= carry;
+                }
+            }
+        }
+        self.frames += 1;
+    }
+
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// One prediction window's worth of frames accumulated?
+    pub fn is_full(&self) -> bool {
+        self.frames >= FRAMES_PER_PREDICTION
+    }
+
+    /// Per-element counter values, transposed out of the bit planes.
+    /// Diagnostic / tuning path only — the hot path never materializes
+    /// this (thinning reads the planes directly).
+    pub fn counts(&self) -> Box<[u16; DIM]> {
+        bitplanes::transpose_counts(&self.planes)
+    }
+
+    /// Thin to a binary query HV (`count >= threshold`) and reset for the
+    /// next window.
+    pub fn finish(&mut self, threshold: u16) -> Hv {
+        let out = self.peek(threshold);
+        self.reset();
+        out
+    }
+
+    /// Thin without resetting (used by training, which inspects several
+    /// candidate thresholds over the same window). Branchless word-level
+    /// magnitude comparator ([`bitplanes::ge_threshold`]) — this is on
+    /// the per-window hot path (§Perf L3-2).
+    pub fn peek(&self, threshold: u16) -> Hv {
+        if threshold == 0 {
+            return Hv::ones();
+        }
+        if threshold > TEMPORAL_COUNTER_MAX {
+            return Hv::zero();
+        }
+        bitplanes::ge_threshold(&self.planes, threshold as u64)
+    }
+
+    pub fn reset(&mut self) {
+        self.planes = [[0u64; WORDS]; TEMPORAL_PLANES];
+        self.frames = 0;
+    }
+}
+
+/// Scalar reference implementation of the temporal accumulator: one u16
+/// per element, per-bit scatter on add, per-element compare on peek.
+/// Kept as the equivalence oracle for [`TemporalAccumulator`].
+#[derive(Clone)]
+pub struct TemporalAccumulatorReference {
+    counts: Box<[u16; DIM]>,
+    frames: usize,
+}
+
+impl Default for TemporalAccumulatorReference {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TemporalAccumulatorReference {
+    pub fn new() -> Self {
+        TemporalAccumulatorReference {
+            counts: Box::new([0u16; DIM]),
+            frames: 0,
+        }
+    }
+
     pub fn add(&mut self, frame: &Hv) {
         for (w, &word) in frame.words.iter().enumerate() {
             let mut bits = word;
@@ -53,42 +152,19 @@ impl TemporalAccumulator {
         self.frames
     }
 
-    /// One prediction window's worth of frames accumulated?
-    pub fn is_full(&self) -> bool {
-        self.frames >= FRAMES_PER_PREDICTION
-    }
-
     pub fn counts(&self) -> &[u16; DIM] {
         &self.counts
     }
 
-    /// Thin to a binary query HV (`count >= threshold`) and reset for the
-    /// next window.
+    pub fn peek(&self, threshold: u16) -> Hv {
+        Hv::from_fn(|i| self.counts[i] >= threshold)
+    }
+
     pub fn finish(&mut self, threshold: u16) -> Hv {
         let out = self.peek(threshold);
-        self.reset();
-        out
-    }
-
-    /// Thin without resetting (used by training, which inspects several
-    /// candidate thresholds over the same window). Word-wise assembly —
-    /// this is on the per-window hot path (§Perf L3-2).
-    pub fn peek(&self, threshold: u16) -> Hv {
-        let mut hv = Hv::zero();
-        for (w, word) in hv.words.iter_mut().enumerate() {
-            let base = w * 64;
-            let mut bits = 0u64;
-            for b in 0..64 {
-                bits |= ((self.counts[base + b] >= threshold) as u64) << b;
-            }
-            *word = bits;
-        }
-        hv
-    }
-
-    pub fn reset(&mut self) {
         self.counts.fill(0);
         self.frames = 0;
+        out
     }
 }
 
@@ -157,6 +233,28 @@ mod tests {
             acc.add(&frame);
         }
         assert_eq!(acc.counts()[0], TEMPORAL_COUNTER_MAX);
+        // Saturation must not disturb neighbouring columns.
+        assert_eq!(acc.counts()[1], 0);
+        assert_eq!(acc.peek(TEMPORAL_COUNTER_MAX).popcount(), 1);
+    }
+
+    #[test]
+    fn matches_reference_with_saturation() {
+        let mut rng = Xoshiro256::new(13);
+        let mut fast = TemporalAccumulator::new();
+        let mut slow = TemporalAccumulatorReference::new();
+        // Enough dense-ish frames to drive many counters into saturation.
+        for _ in 0..300 {
+            let f = Hv::random(&mut rng, 0.7);
+            fast.add(&f);
+            slow.add(&f);
+        }
+        assert_eq!(*fast.counts(), *slow.counts());
+        for t in [0u16, 1, 64, 130, 255, 256, 1000] {
+            assert_eq!(fast.peek(t), slow.peek(t), "threshold {t}");
+        }
+        assert_eq!(fast.finish(130), slow.finish(130));
+        assert_eq!(*fast.counts(), *slow.counts());
     }
 
     #[test]
@@ -180,7 +278,7 @@ mod tests {
             acc.add(&Hv::random(&mut rng, 0.4));
         }
         for max_d in [0.05, 0.1, 0.2, 0.3, 0.5] {
-            let t = threshold_for_max_density(acc.counts(), max_d);
+            let t = threshold_for_max_density(&acc.counts(), max_d);
             let d = acc.peek(t).density();
             assert!(d <= max_d + 1e-12, "max_d {max_d}: got {d} at t {t}");
             // And it is the *smallest* such threshold (t-1 would overflow

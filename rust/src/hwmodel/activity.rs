@@ -191,8 +191,7 @@ fn collect_sparse(cfg: &ClassifierConfig, frames: &[Frame], style: SparseStyle) 
                 bundling::bundle_adder_thin(&bound_bits, cfg.spatial_threshold)
             }
             SparseStyle::CompImAdder => {
-                let counts = bundling::element_counts_pos(&bound_pos);
-                bundling::thin(&counts, cfg.spatial_threshold)
+                bundling::bundle_adder_thin_pos(&bound_pos, cfg.spatial_threshold)
             }
             SparseStyle::CompImOr => bundling::bundle_or_pos(&bound_pos),
         };

@@ -159,7 +159,7 @@ pub fn patient11_stimulus(windows: usize) -> Vec<Frame> {
     };
     let patient = SynthPatient::generate(&synth, 11);
     let rec = &patient.records[0];
-    let frames: Vec<Frame> = record_frames(rec).into_iter().map(|(f, _)| f).collect();
+    let frames: Vec<Frame> = record_frames(rec).map(|(f, _)| f).collect();
     // Skip the interictal lead-in so the windows cover seizure activity,
     // keeping one pre-ictal window for realistic bus-toggle warm-up.
     let start = ((8.0 - 0.5) * crate::params::SAMPLE_RATE_HZ) as usize
@@ -168,7 +168,9 @@ pub fn patient11_stimulus(windows: usize) -> Vec<Frame> {
     frames[start..].to_vec()
 }
 
-/// Analyze every design point under the same stimulus.
+/// Analyze every design point under the same stimulus. The four designs
+/// are independent switching-activity simulations, so they shard over
+/// the [`crate::evalpool`] (deterministic variant order preserved).
 pub fn analyze_all(cfg_sparse_baseline: &ClassifierConfig, windows: usize) -> Vec<DesignReport> {
     let frames = patient11_stimulus(windows);
     // All designs are evaluated with spatial threshold 1, i.e. with the
@@ -179,12 +181,7 @@ pub fn analyze_all(cfg_sparse_baseline: &ClassifierConfig, windows: usize) -> Ve
         spatial_threshold: 1,
         ..cfg_sparse_baseline.clone()
     };
-    vec![
-        analyze(Variant::DenseBaseline, &cfg, &frames),
-        analyze(Variant::SparseBaseline, &cfg, &frames),
-        analyze(Variant::SparseCompIm, &cfg, &frames),
-        analyze(Variant::Optimized, &cfg, &frames),
-    ]
+    crate::evalpool::map(&Variant::ALL, |&variant| analyze(variant, &cfg, &frames))
 }
 
 #[cfg(test)]

@@ -24,6 +24,9 @@
 //! * [`coordinator`] — the streaming serving layer: per-patient sessions,
 //!   frame batching, routing, detector post-processing, metrics and
 //!   backpressure.
+//! * [`evalpool`] — the sharded evaluation pool: deterministic-order
+//!   parallel map over (variant × density × patient) jobs, used by the
+//!   sweep commands and the coordinator's session setup.
 //! * [`bench`]-support ([`benchkit`]) and property-testing ([`testkit`])
 //!   substrates, plus a dependency-free CLI parser ([`cli`]), config
 //!   system ([`config`]) and error type ([`error`]) — the offline build
@@ -69,6 +72,7 @@ pub mod rng;
 pub mod hdc;
 pub mod lbp;
 pub mod pipeline;
+pub mod evalpool;
 pub mod data;
 pub mod hwmodel;
 pub mod runtime;

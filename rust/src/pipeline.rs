@@ -12,24 +12,20 @@ use crate::hdc::classifier::{
 use crate::hdc::temporal::threshold_for_max_density;
 use crate::hdc::train::{train_from_frames, Trainer};
 use crate::lbp::LbpFrontend;
-use crate::params::CHANNELS;
 
 /// Grace period after the annotated offset during which an alarm still
 /// counts as a detection (s).
 pub const DETECT_GRACE_S: f64 = 10.0;
 
-/// Convert a record into labelled LBP frames.
-pub fn record_frames(record: &Record) -> Vec<(Frame, bool)> {
+/// Stream a record as labelled LBP frames.
+///
+/// Returns a lazy iterator — one frame is produced per pull and nothing
+/// is materialized, so the tuning / training / evaluation / density
+/// passes each cost one LBP state machine instead of a full-record
+/// `Vec<(Frame, bool)>` per pass.
+pub fn record_frames(record: &Record) -> impl Iterator<Item = (Frame, bool)> + '_ {
     let mut fe = LbpFrontend::new();
-    let n = record.num_samples();
-    let mut out = Vec::with_capacity(n);
-    let mut sample = [0f32; CHANNELS];
-    for t in 0..n {
-        sample.copy_from_slice(record.sample(t));
-        let codes = fe.push(&sample);
-        out.push((codes, record.is_ictal(t)));
-    }
-    out
+    (0..record.num_samples()).map(move |t| (fe.push(&record.sample_array(t)), record.is_ictal(t)))
 }
 
 /// One-shot training on a record (the patient's first seizure).
@@ -42,16 +38,13 @@ pub fn train_on_record(
 }
 
 /// Run a trained classifier over a record, collecting one prediction per
-/// window.
+/// window. Same streaming pass as every other consumer of
+/// [`record_frames`].
 pub fn run_on_record(clf: &mut Classifier, record: &Record) -> Vec<WindowPrediction> {
     clf.reset();
-    let mut fe = LbpFrontend::new();
     let mut preds = Vec::new();
     let mut idx = 0usize;
-    let mut sample = [0f32; CHANNELS];
-    for t in 0..record.num_samples() {
-        sample.copy_from_slice(record.sample(t));
-        let codes = fe.push(&sample);
+    for (codes, _) in record_frames(record) {
         if let Some(r) = clf.push_frame(&codes) {
             preds.push(WindowPrediction {
                 idx,
@@ -79,7 +72,7 @@ pub fn tune_temporal_threshold(
     let mut enc = SparseEncoder::new(variant, cfg.clone());
     let mut best: u16 = 1;
     let mut inspect = |acc: &crate::hdc::temporal::TemporalAccumulator| {
-        let t = threshold_for_max_density(acc.counts(), max_density);
+        let t = threshold_for_max_density(&acc.counts(), max_density);
         best = best.max(t);
     };
     for (codes, _) in record_frames(record) {

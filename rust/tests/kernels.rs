@@ -1,0 +1,218 @@
+//! Kernel-equivalence and evaluation-pool determinism suite.
+//!
+//! The word-parallel hot path (bit-sliced spatial/temporal counters,
+//! branchless comparators, word-mask OR) must be *bit-exact* against the
+//! retained scalar `*_reference` implementations for every input — this
+//! file pins that across random inputs and all thresholds. It also pins
+//! that the sharded [`evalpool`] produces exactly the serial path's
+//! results in exactly the serial path's order.
+
+use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
+use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::evalpool;
+use sparse_hdc_ieeg::hdc::bundling::{self, SpatialCounts, SPATIAL_PLANES};
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::sparse::SparseHv;
+use sparse_hdc_ieeg::hdc::temporal::{TemporalAccumulator, TemporalAccumulatorReference};
+use sparse_hdc_ieeg::params::{CHANNELS, TEMPORAL_COUNTER_MAX};
+use sparse_hdc_ieeg::pipeline::{self, PatientEval};
+use sparse_hdc_ieeg::testkit::{property, Gen};
+
+// ---------------------------------------------------------------------
+// Spatial bundling: word-parallel vs scalar reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_or_tree_matches_reference() {
+    property("bundle_or_pos == scalar reference", 200, |g: &mut Gen| {
+        let n = g.range(0, CHANNELS);
+        let hvs: Vec<SparseHv> = g.vec(n, |g| g.sparse_hv());
+        assert_eq!(bundling::bundle_or_pos(&hvs), bundling::bundle_or_pos_reference(&hvs));
+    });
+}
+
+#[test]
+fn prop_element_counts_match_reference() {
+    property("bit-sliced counts (bit/pos) == scalar scatter", 100, |g| {
+        let n = g.range(0, CHANNELS);
+        let pos: Vec<SparseHv> = g.vec(n, |g| g.sparse_hv());
+        let bits: Vec<Hv> = pos.iter().map(|p| p.to_hv()).collect();
+        let mut from_bits = SpatialCounts::new();
+        let mut from_pos = SpatialCounts::new();
+        for (p, h) in pos.iter().zip(bits.iter()) {
+            from_pos.add_sparse(p);
+            from_bits.add_hv(h);
+        }
+        assert_eq!(*from_bits.counts(), *bundling::element_counts_reference(&bits));
+        assert_eq!(*from_pos.counts(), *bundling::element_counts_pos_reference(&pos));
+    });
+}
+
+#[test]
+fn prop_thin_matches_reference_all_thresholds() {
+    property("thin / bit-sliced thin == reference, every threshold", 60, |g| {
+        let n = g.range(1, CHANNELS);
+        let pos: Vec<SparseHv> = g.vec(n, |g| g.sparse_hv());
+        let bits: Vec<Hv> = pos.iter().map(|p| p.to_hv()).collect();
+        let counts = bundling::element_counts_reference(&bits);
+        let mut acc = SpatialCounts::new();
+        for p in &pos {
+            acc.add_sparse(p);
+        }
+        // All reachable thresholds plus the out-of-range tail.
+        for t in 0..=(1 << SPATIAL_PLANES) {
+            let expect = bundling::thin_reference(&counts, t);
+            assert_eq!(bundling::thin(&counts, t), expect, "thin t={t}");
+            assert_eq!(acc.thin(t), expect, "bit-sliced thin t={t}");
+            assert_eq!(bundling::bundle_adder_thin(&bits, t), expect, "bundle_adder_thin t={t}");
+            assert_eq!(bundling::bundle_adder_thin_pos(&pos, t), expect, "adder_thin_pos t={t}");
+        }
+    });
+}
+
+#[test]
+fn prop_element_counts_accept_dense_inputs() {
+    // The adder tree also bundles arbitrary-density HVs (the baseline
+    // variant feeds it bound bit-domain HVs); the bit-sliced counters
+    // must match for those too.
+    property("dense-input adder tree == reference", 60, |g| {
+        let n = g.range(1, 32);
+        let hvs: Vec<Hv> = g.vec(n, |g| {
+            let d = g.f64();
+            g.hv(d)
+        });
+        let counts = bundling::element_counts_reference(&hvs);
+        let mut acc = SpatialCounts::new();
+        for hv in &hvs {
+            acc.add_hv(hv);
+        }
+        assert_eq!(*acc.counts(), *counts);
+        for t in [0u16, 1, 2, n as u16 / 2 + 1, n as u16, n as u16 + 1] {
+            assert_eq!(
+                bundling::bundle_adder_thin(&hvs, t),
+                bundling::thin_reference(&counts, t),
+                "t={t}"
+            );
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Temporal accumulator: bit-sliced vs scalar reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_temporal_accumulator_matches_reference() {
+    property("bit-sliced temporal == reference (incl. saturation)", 40, |g| {
+        let mut fast = TemporalAccumulator::new();
+        let mut slow = TemporalAccumulatorReference::new();
+        // Past-saturation streams: up to 300 frames of varied density.
+        let frames = g.range(1, 300);
+        for _ in 0..frames {
+            let d = g.f64() * 0.8;
+            let f = g.hv(d);
+            fast.add(&f);
+            slow.add(&f);
+        }
+        assert_eq!(fast.frames(), slow.frames());
+        assert_eq!(*fast.counts(), *slow.counts());
+        for t in 0..=(TEMPORAL_COUNTER_MAX + 2) {
+            assert_eq!(fast.peek(t), slow.peek(t), "threshold {t}");
+        }
+        let t = g.range(1, TEMPORAL_COUNTER_MAX as usize) as u16;
+        assert_eq!(fast.finish(t), slow.finish(t));
+        assert_eq!(*fast.counts(), *slow.counts());
+        assert_eq!(fast.frames(), 0);
+    });
+}
+
+#[test]
+fn temporal_saturation_pins_at_counter_max() {
+    let mut fast = TemporalAccumulator::new();
+    let mut slow = TemporalAccumulatorReference::new();
+    let f = Hv::ones();
+    for _ in 0..(TEMPORAL_COUNTER_MAX as usize + 50) {
+        fast.add(&f);
+        slow.add(&f);
+    }
+    assert_eq!(*fast.counts(), *slow.counts());
+    assert!(fast.counts().iter().all(|&c| c == TEMPORAL_COUNTER_MAX));
+    assert_eq!(fast.peek(TEMPORAL_COUNTER_MAX), Hv::ones());
+    assert_eq!(fast.peek(TEMPORAL_COUNTER_MAX + 1), Hv::zero());
+}
+
+// ---------------------------------------------------------------------
+// Evaluation pool: parallel output == serial output, same order
+// ---------------------------------------------------------------------
+
+fn synthetic_cohort(n: usize) -> Vec<SynthPatient> {
+    let synth = SynthConfig {
+        records_per_patient: 2,
+        pre_s: 6.0,
+        ictal_s: 4.0,
+        post_s: 2.0,
+        ..Default::default()
+    };
+    (1..=n as u32)
+        .map(|pid| SynthPatient::generate(&synth, pid))
+        .collect()
+}
+
+fn assert_evals_equal(parallel: &[PatientEval], serial: &[PatientEval]) {
+    assert_eq!(parallel.len(), serial.len());
+    for (p, s) in parallel.iter().zip(serial.iter()) {
+        assert_eq!(p.patient_id, s.patient_id, "result order must be input order");
+        assert_eq!(p.temporal_threshold, s.temporal_threshold);
+        assert_eq!(p.summary.detected, s.summary.detected);
+        assert_eq!(p.summary.seizures, s.summary.seizures);
+        assert_eq!(p.summary.false_alarms, s.summary.false_alarms);
+        assert_eq!(p.summary.mean_delay_s().to_bits(), s.summary.mean_delay_s().to_bits());
+        assert_eq!(
+            p.mean_query_density.to_bits(),
+            s.mean_query_density.to_bits(),
+            "bit-exact density"
+        );
+    }
+}
+
+#[test]
+fn evalpool_matches_serial_evaluation() {
+    let patients = synthetic_cohort(3);
+    let policy = AlarmPolicy { consecutive: 1 };
+    // The full (variant × max-density × patient) job shape the sweep
+    // commands shard.
+    let jobs: Vec<(Variant, Option<f64>, usize)> = [
+        (Variant::Optimized, Some(0.15)),
+        (Variant::Optimized, Some(0.30)),
+        (Variant::SparseCompIm, Some(0.30)),
+        (Variant::DenseBaseline, None),
+    ]
+    .iter()
+    .flat_map(|&(v, d)| (0..patients.len()).map(move |i| (v, d, i)))
+    .collect();
+
+    let eval = |&(variant, max_d, i): &(Variant, Option<f64>, usize)| {
+        let cfg = if variant == Variant::Optimized {
+            ClassifierConfig::optimized()
+        } else {
+            ClassifierConfig::default()
+        };
+        pipeline::evaluate_patient(variant, &cfg, &patients[i], max_d, policy)
+    };
+
+    let serial = evalpool::map_with(1, &jobs, eval);
+    let parallel = evalpool::map_with(4, &jobs, eval);
+    assert_evals_equal(&parallel, &serial);
+}
+
+#[test]
+fn evalpool_ordering_is_input_order_under_skew() {
+    // Jobs finishing out of order (patient sizes differ) must not reorder
+    // results.
+    let patients = synthetic_cohort(5);
+    let jobs: Vec<usize> = (0..patients.len()).rev().collect();
+    let ids = evalpool::map_with(3, &jobs, |&i| patients[i].profile.id);
+    let expect: Vec<u32> = jobs.iter().map(|&i| patients[i].profile.id).collect();
+    assert_eq!(ids, expect);
+}

@@ -136,7 +136,7 @@ fn prop_temporal_threshold_tuner_is_minimal() {
             acc.add(&g.hv(d));
         }
         let max_d = 0.05 + g.f64() * 0.45;
-        let t = threshold_for_max_density(acc.counts(), max_d);
+        let t = threshold_for_max_density(&acc.counts(), max_d);
         assert!(acc.peek(t).density() <= max_d + 1e-12);
         if t > 1 {
             assert!(acc.peek(t - 1).density() > max_d);
