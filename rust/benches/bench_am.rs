@@ -1,0 +1,79 @@
+//! Associative-memory search benchmarks: serial `search` vs the fused
+//! `search_batch` at batch sizes 1 / 16 / 256, plus the batched native
+//! engine path the coalescing pool exercises.
+//!
+//! ```bash
+//! cargo bench --bench bench_am
+//! BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_am.json cargo bench --bench bench_am
+//! ```
+//!
+//! The second form is what CI runs (alongside `bench_encoder`); the JSON
+//! feeds the `repro bench-diff` trajectory gate. `search_batch` holds the
+//! class HVs once and fuses both class scores into one pass per query —
+//! the win over `search` grows with the batch size.
+
+use sparse_hdc_ieeg::benchkit::{black_box, Bench};
+use sparse_hdc_ieeg::hdc::am::{AmPlane, AssociativeMemory, Metric};
+use sparse_hdc_ieeg::hdc::classifier::ClassifierConfig;
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, LBP_CODES};
+use sparse_hdc_ieeg::rng::Xoshiro256;
+use sparse_hdc_ieeg::runtime::native::NativeWindowEngine;
+use sparse_hdc_ieeg::runtime::EngineKind;
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256::new(11);
+
+    let am = AssociativeMemory::new(Hv::random(&mut rng, 0.5), Hv::random(&mut rng, 0.5));
+
+    // --- AM search: serial vs batched, sparse + dense metrics ----------
+    for &n in &[1usize, 16, 256] {
+        let queries: Vec<Hv> = (0..n).map(|_| Hv::random(&mut rng, 0.25)).collect();
+        b.bench_throughput(&format!("am/search-serial/batch-{n}"), n as f64, || {
+            queries.iter().map(|q| am.search(black_box(q))).collect::<Vec<_>>()
+        });
+        b.bench_throughput(&format!("am/search-batch/batch-{n}"), n as f64, || {
+            am.search_batch(black_box(&queries), Metric::Overlap)
+        });
+    }
+    let queries: Vec<Hv> = (0..256).map(|_| Hv::random_half(&mut rng)).collect();
+    b.bench_throughput("am/search-dense-serial/batch-256", 256.0, || {
+        queries
+            .iter()
+            .map(|q| am.search_dense(black_box(q)))
+            .collect::<Vec<_>>()
+    });
+    b.bench_throughput("am/search-dense-batch/batch-256", 256.0, || {
+        am.search_batch(black_box(&queries), Metric::Hamming)
+    });
+
+    // --- native engine: per-window run vs run_batch ---------------------
+    // (encode dominates; the batch win here is the shared AM decode +
+    // one search pass — the shape the engine pool submits.)
+    let plane = AmPlane::from_memory(&am);
+    let batch_windows = 8usize;
+    let codes: Vec<u8> = (0..batch_windows * FRAMES_PER_PREDICTION * CHANNELS)
+        .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+        .collect();
+    let thresholds = vec![130i32; batch_windows];
+    let window = FRAMES_PER_PREDICTION * CHANNELS;
+    let mut engine =
+        NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+    b.bench_throughput("engine/native-run-serial/batch-8", batch_windows as f64, || {
+        (0..batch_windows)
+            .map(|w| {
+                engine
+                    .run(black_box(&codes[w * window..(w + 1) * window]), plane.i32s(), 130)
+                    .unwrap()
+            })
+            .collect::<Vec<_>>()
+    });
+    let mut engine =
+        NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+    b.bench_throughput("engine/native-run-batch/batch-8", batch_windows as f64, || {
+        engine.run_batch(black_box(&codes), &plane, &thresholds).unwrap()
+    });
+
+    b.finish();
+}

@@ -270,6 +270,295 @@ impl Bench {
     }
 }
 
+// ---------------------------------------------------------------------
+// Perf-trajectory records: read benchkit/v1 documents back and diff two
+// runs pairwise (`repro bench-diff`). serde is unavailable offline, so a
+// minimal JSON reader lives here next to the writer it mirrors.
+// ---------------------------------------------------------------------
+
+/// One record read back from a benchkit/v1 JSON document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub median_s: f64,
+    pub mean_s: f64,
+    /// Items/s, when the bench was registered with a throughput.
+    pub throughput: Option<f64>,
+}
+
+/// Minimal JSON scanner: just enough of the grammar for the documents
+/// [`Bench::to_json`] emits (objects, arrays, strings with escapes,
+/// numbers incl. exponents, `true`/`false`/`null`).
+struct JsonScanner<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> JsonScanner<'a> {
+    fn new(text: &'a str) -> Self {
+        JsonScanner {
+            bytes: text.as_bytes(),
+            pos: 0,
+        }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> crate::Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| crate::err!("unexpected end of JSON"))
+    }
+
+    fn expect(&mut self, b: u8) -> crate::Result<()> {
+        let got = self.peek()?;
+        crate::ensure!(
+            got == b,
+            "expected {:?}, got {:?} at byte {}",
+            b as char,
+            got as char,
+            self.pos
+        );
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        self.expect(b'"')?;
+        // Collect raw bytes and validate UTF-8 once at the end — pushing
+        // `b as char` would decode multi-byte sequences as Latin-1.
+        let mut out = Vec::new();
+        loop {
+            let b = *self
+                .bytes
+                .get(self.pos)
+                .ok_or_else(|| crate::err!("unterminated JSON string"))?;
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(String::from_utf8(out)?),
+                b'\\' => {
+                    let esc = *self
+                        .bytes
+                        .get(self.pos)
+                        .ok_or_else(|| crate::err!("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push(b'"'),
+                        b'\\' => out.push(b'\\'),
+                        b'/' => out.push(b'/'),
+                        b'n' => out.push(b'\n'),
+                        b't' => out.push(b'\t'),
+                        b'r' => out.push(b'\r'),
+                        b'u' => {
+                            crate::ensure!(
+                                self.pos + 4 <= self.bytes.len(),
+                                "truncated \\u escape"
+                            );
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            let ch = char::from_u32(code).unwrap_or('\u{FFFD}');
+                            out.extend_from_slice(ch.encode_utf8(&mut [0u8; 4]).as_bytes());
+                            self.pos += 4;
+                        }
+                        other => crate::bail!("unsupported escape \\{}", other as char),
+                    }
+                }
+                _ => out.push(b),
+            }
+        }
+    }
+
+    /// Parse any value; returns `Some(f64)` for numbers, `None` for
+    /// everything else (nested containers are consumed and discarded).
+    fn value(&mut self) -> crate::Result<Option<f64>> {
+        match self.peek()? {
+            b'"' => {
+                self.string()?;
+                Ok(None)
+            }
+            b'{' => {
+                self.object(|s, _| s.value().map(|_| ()))?;
+                Ok(None)
+            }
+            b'[' => {
+                self.array(|s| s.value().map(|_| ()))?;
+                Ok(None)
+            }
+            b't' | b'f' | b'n' => {
+                let start = self.pos;
+                while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_alphabetic() {
+                    self.pos += 1;
+                }
+                let word = std::str::from_utf8(&self.bytes[start..self.pos])?;
+                crate::ensure!(
+                    matches!(word, "true" | "false" | "null"),
+                    "bad JSON literal {word:?}"
+                );
+                Ok(None)
+            }
+            _ => {
+                let start = self.pos;
+                let is_num = |b: u8| matches!(b, b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E');
+                while self.pos < self.bytes.len() && is_num(self.bytes[self.pos]) {
+                    self.pos += 1;
+                }
+                let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
+                let parsed: f64 = text
+                    .parse()
+                    .map_err(|e| crate::err!("bad JSON number {text:?}: {e}"))?;
+                Ok(Some(parsed))
+            }
+        }
+    }
+
+    /// Consume an object, calling `field(self, key)` for every value.
+    fn object(
+        &mut self,
+        mut field: impl FnMut(&mut Self, &str) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        self.expect(b'{')?;
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            field(self, &key)?;
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                other => crate::bail!("expected ',' or '}}', got {:?}", other as char),
+            }
+        }
+    }
+
+    /// Consume an array, calling `elem` for every element.
+    fn array(
+        &mut self,
+        mut elem: impl FnMut(&mut Self) -> crate::Result<()>,
+    ) -> crate::Result<()> {
+        self.expect(b'[')?;
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(());
+        }
+        loop {
+            elem(self)?;
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(());
+                }
+                other => crate::bail!("expected ',' or ']', got {:?}", other as char),
+            }
+        }
+    }
+}
+
+/// Parse a benchkit/v1 JSON document into its records.
+pub fn parse_benchkit_json(text: &str) -> crate::Result<Vec<BenchRecord>> {
+    let mut scanner = JsonScanner::new(text);
+    let mut schema = None;
+    let mut records = Vec::new();
+    scanner.object(|s, key| {
+        match key {
+            "schema" => schema = Some(s.string()?),
+            "records" => {
+                s.array(|s| {
+                    let mut rec = BenchRecord {
+                        name: String::new(),
+                        median_s: f64::NAN,
+                        mean_s: f64::NAN,
+                        throughput: None,
+                    };
+                    s.object(|s, field| {
+                        match field {
+                            "name" => rec.name = s.string()?,
+                            "median_s" => rec.median_s = s.value()?.unwrap_or(f64::NAN),
+                            "mean_s" => rec.mean_s = s.value()?.unwrap_or(f64::NAN),
+                            "throughput" => rec.throughput = s.value()?,
+                            _ => {
+                                s.value()?;
+                            }
+                        }
+                        Ok(())
+                    })?;
+                    crate::ensure!(!rec.name.is_empty(), "record without a name");
+                    // The writer always emits finite medians; a missing or
+                    // null median would otherwise become NaN and slip
+                    // through the regression gate unflagged.
+                    crate::ensure!(
+                        rec.median_s.is_finite(),
+                        "record {:?} has no finite median_s",
+                        rec.name
+                    );
+                    records.push(rec);
+                    Ok(())
+                })?;
+            }
+            _ => {
+                s.value()?;
+            }
+        }
+        Ok(())
+    })?;
+    let schema = schema.ok_or_else(|| crate::err!("not a benchkit document (no schema key)"))?;
+    crate::ensure!(
+        schema == "benchkit/v1",
+        "unsupported benchkit schema {schema:?} (expected benchkit/v1)"
+    );
+    Ok(records)
+}
+
+/// One name present in both runs, compared on the median.
+#[derive(Clone, Debug)]
+pub struct BenchDiff {
+    pub name: String,
+    pub baseline_median_s: f64,
+    pub current_median_s: f64,
+    /// `current / baseline` (> 1 = slower than baseline).
+    pub ratio: f64,
+}
+
+impl BenchDiff {
+    /// Regression = a `kernel/*` pair whose median slowed down by more
+    /// than `threshold` (0.20 = 20%). Only the kernel pairs gate: the
+    /// end-to-end numbers are tracked but too machine-noisy to fail on.
+    /// Fail-closed: a non-finite ratio (zero/NaN baseline — `> threshold`
+    /// catches +inf, the NaN check the rest) on a kernel pair counts as a
+    /// regression rather than slipping through.
+    pub fn is_regression(&self, threshold: f64) -> bool {
+        self.name.starts_with("kernel/") && (self.ratio > 1.0 + threshold || self.ratio.is_nan())
+    }
+}
+
+/// Pair two runs' records by name (baseline order), comparing medians.
+pub fn diff_benchkit_records(current: &[BenchRecord], baseline: &[BenchRecord]) -> Vec<BenchDiff> {
+    baseline
+        .iter()
+        .filter_map(|b| {
+            let c = current.iter().find(|c| c.name == b.name)?;
+            Some(BenchDiff {
+                name: b.name.clone(),
+                baseline_median_s: b.median_s,
+                current_median_s: c.median_s,
+                ratio: c.median_s / b.median_s,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +640,79 @@ mod tests {
         assert_eq!(json_num(f64::NAN), "null");
         assert_eq!(json_num(f64::INFINITY), "null");
         assert!(json_num(1.5e-7).contains('e'));
+    }
+
+    #[test]
+    fn parse_reads_back_what_to_json_writes() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new();
+        b.filter = None;
+        b.bench("kernel/thing \"quoted\"", || 1);
+        b.bench_throughput("window/e2e", 64.0, || 2);
+        b.bench("kernel/µs — utf-8 name", || 3);
+        let records = parse_benchkit_json(&b.to_json()).unwrap();
+        assert_eq!(records.len(), 3);
+        assert_eq!(records[0].name, "kernel/thing \"quoted\"");
+        assert!(records[0].throughput.is_none());
+        assert!(records[0].median_s > 0.0);
+        assert_eq!(records[1].name, "window/e2e");
+        assert!(records[1].throughput.unwrap() > 0.0);
+        // Non-ASCII names must round-trip byte-exact (diff pairs by name).
+        assert_eq!(records[2].name, "kernel/µs — utf-8 name");
+        // The committed-baseline shape: extra keys + empty records.
+        let empty = parse_benchkit_json(
+            "{\"schema\": \"benchkit/v1\", \"fast\": true,\n \
+             \"note\": \"placeholder\", \"records\": []}",
+        )
+        .unwrap();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_non_benchkit_documents() {
+        assert!(parse_benchkit_json("{}").is_err(), "no schema key");
+        assert!(parse_benchkit_json("{\"schema\": \"other/v2\", \"records\": []}").is_err());
+        assert!(parse_benchkit_json("not json at all").is_err());
+        assert!(parse_benchkit_json("{\"schema\": \"benchkit/v1\", \"records\": [{}]}").is_err());
+        // A record without a finite median would bypass the gate as NaN.
+        let no_median = "{\"schema\": \"benchkit/v1\", \"records\": [{\"name\": \"kernel/x\"}]}";
+        assert!(parse_benchkit_json(no_median).is_err());
+        let null_median =
+            "{\"schema\": \"benchkit/v1\", \"records\": [{\"name\": \"k\", \"median_s\": null}]}";
+        assert!(parse_benchkit_json(null_median).is_err());
+    }
+
+    #[test]
+    fn diff_pairs_by_name_and_flags_kernel_regressions() {
+        let rec = |name: &str, median: f64| BenchRecord {
+            name: name.to_string(),
+            median_s: median,
+            mean_s: median,
+            throughput: None,
+        };
+        let baseline = vec![
+            rec("kernel/a", 1.0e-6),
+            rec("kernel/b", 1.0e-6),
+            rec("window/c", 1.0e-3),
+            rec("kernel/gone", 1.0e-6),
+        ];
+        let current = vec![
+            rec("kernel/a", 1.1e-6),  // +10% — under the 20% gate
+            rec("kernel/b", 1.5e-6),  // +50% — regression
+            rec("window/c", 900.0),   // huge, but not kernel/* — tracked only
+            rec("kernel/new", 1.0e-6), // unmatched — ignored
+        ];
+        let diffs = diff_benchkit_records(&current, &baseline);
+        assert_eq!(diffs.len(), 3, "only names present in both runs pair up");
+        let by_name = |n: &str| diffs.iter().find(|d| d.name == n).unwrap();
+        assert!(!by_name("kernel/a").is_regression(0.20));
+        assert!(by_name("kernel/a").is_regression(0.05));
+        assert!(by_name("kernel/b").is_regression(0.20));
+        assert!(!by_name("window/c").is_regression(0.20), "non-kernel never gates");
+        // Fail-closed: a pathological zero baseline (infinite ratio) on a
+        // kernel pair flags rather than slipping through.
+        let weird = diff_benchkit_records(&[rec("kernel/z", 1.0e-6)], &[rec("kernel/z", 0.0)]);
+        assert!(weird[0].is_regression(0.20));
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 use std::path::PathBuf;
 
+use sparse_hdc_ieeg::benchkit;
 use sparse_hdc_ieeg::cli::Args;
 use sparse_hdc_ieeg::ensure;
 use sparse_hdc_ieeg::error::Context;
@@ -29,6 +30,86 @@ fn classifier_config(args: &Args, variant: Variant) -> sparse_hdc_ieeg::Result<C
     cfg.spatial_threshold = args.get_parse("spatial-threshold", cfg.spatial_threshold)?;
     cfg.seed = args.get_parse("seed", cfg.seed)?;
     Ok(cfg)
+}
+
+/// `repro bench-diff <current.json> <baseline.json> [--threshold FRAC]`
+///
+/// Compare two benchkit/v1 documents pairwise (matched by record name)
+/// and fail when any `kernel/*` median regressed by more than
+/// `--threshold` (default 0.20 = 20%). CI runs this non-blocking against
+/// the committed trajectory point (`BENCH_encoder.json`); an empty
+/// baseline (no records yet) compares nothing and succeeds.
+pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
+    args.check_known(&["threshold"])?;
+    ensure!(
+        args.positional.len() == 2,
+        "usage: repro bench-diff <current.json> <baseline.json> [--threshold FRAC]"
+    );
+    let threshold: f64 = args.get_parse("threshold", 0.20)?;
+    let read = |path: &str| -> sparse_hdc_ieeg::Result<Vec<benchkit::BenchRecord>> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        benchkit::parse_benchkit_json(&text).with_context(|| format!("parse {path}"))
+    };
+    let current = read(&args.positional[0])?;
+    let baseline = read(&args.positional[1])?;
+
+    let diffs = benchkit::diff_benchkit_records(&current, &baseline);
+    // Fail-closed on lost coverage: a baseline kernel/* bench with no
+    // counterpart in the current run (renamed, filtered out, crashed)
+    // must not make the gate pass vacuously.
+    let missing: Vec<&str> = baseline
+        .iter()
+        .filter(|b| b.name.starts_with("kernel/"))
+        .filter(|b| !current.iter().any(|c| c.name == b.name))
+        .map(|b| b.name.as_str())
+        .collect();
+    if diffs.is_empty() && missing.is_empty() {
+        println!(
+            "bench-diff: no comparable pairs ({} current / {} baseline records) — nothing to gate",
+            current.len(),
+            baseline.len()
+        );
+        return Ok(());
+    }
+
+    println!(
+        "{:<48} {:>14} {:>14} {:>8}",
+        "benchmark", "baseline med", "current med", "Δ"
+    );
+    let mut regressions = 0usize;
+    for d in &diffs {
+        let delta = (d.ratio - 1.0) * 100.0;
+        let flag = if d.is_regression(threshold) {
+            regressions += 1;
+            "  REGRESSION"
+        } else {
+            ""
+        };
+        println!(
+            "{:<48} {:>11.3} µs {:>11.3} µs {:>+7.1}%{}",
+            d.name,
+            d.baseline_median_s * 1e6,
+            d.current_median_s * 1e6,
+            delta,
+            flag
+        );
+    }
+    for name in &missing {
+        println!("{name:<48} missing from the current run  LOST-COVERAGE");
+    }
+    ensure!(
+        regressions == 0 && missing.is_empty(),
+        "{regressions} kernel/* median(s) regressed more than {:.0}% and {} kernel/* \
+         baseline bench(es) are missing from the current run",
+        threshold * 100.0,
+        missing.len()
+    );
+    println!(
+        "bench-diff: {} pairs compared, no kernel/* regression above {:.0}%",
+        diffs.len(),
+        threshold * 100.0
+    );
+    Ok(())
 }
 
 /// `repro gen-data --out DIR [--patients N] [--records N] [--seed S]`
@@ -323,22 +404,32 @@ pub fn fig4(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "max dens", "mean delay s", "detection acc", "FA/h"
     );
 
-    // Sweep: every patient at the same max density (the lines in Fig. 4).
-    // All (density × patient) cells are independent — shard them over the
-    // evaluation pool in one go, then aggregate in input order so the
-    // printed table is identical to the serial sweep.
-    let jobs: Vec<(f64, usize)> = densities
-        .iter()
-        .flat_map(|&d| (0..patients.len()).map(move |i| (d, i)))
-        .collect();
-    let evals = evalpool::map(&jobs, |&(d, i)| {
-        pipeline::evaluate_patient(
+    // Stage 1 — threshold tuning, one pass per *patient*: every candidate
+    // density's threshold falls out of the same encode of the training
+    // record (histogram reuse, `tune_temporal_thresholds`), instead of
+    // re-encoding it once per (density × patient) cell.
+    let densities_ref = &densities;
+    let tuned: Vec<Vec<u16>> = evalpool::map(&patients, |p| {
+        pipeline::tune_temporal_thresholds(
             Variant::Optimized,
             &ClassifierConfig::optimized(),
-            &patients[i],
-            Some(d),
-            policy,
+            p.train_record(),
+            densities_ref,
         )
+    });
+
+    // Stage 2 — evaluation sweep (the lines in Fig. 4): all (density ×
+    // patient) cells are independent — shard them over the evaluation
+    // pool in one go with their pre-tuned thresholds, then aggregate in
+    // input order so the printed table is identical to the serial sweep.
+    let jobs: Vec<(usize, usize)> = (0..densities.len())
+        .flat_map(|di| (0..patients.len()).map(move |i| (di, i)))
+        .collect();
+    let tuned_ref = &tuned;
+    let evals = evalpool::map(&jobs, |&(di, i)| {
+        let mut cfg = ClassifierConfig::optimized();
+        cfg.temporal_threshold = tuned_ref[i][di];
+        pipeline::evaluate_patient(Variant::Optimized, &cfg, &patients[i], None, policy)
     });
 
     let mut per_patient_best: Vec<(f64, f64)> = vec![(f64::INFINITY, 0.0); patients.len()];

@@ -103,6 +103,9 @@ pub struct SystemConfig {
     pub workers: usize,
     /// Bounded queue depth per session (backpressure).
     pub queue_depth: usize,
+    /// Windows per engine micro-batch submitted by a session (1 = submit
+    /// every window immediately; results are bit-identical at any value).
+    pub batch_windows: usize,
 }
 
 impl Default for SystemConfig {
@@ -115,6 +118,7 @@ impl Default for SystemConfig {
             use_pjrt: false,
             workers: 2,
             queue_depth: 64,
+            batch_windows: 4,
         }
     }
 }
@@ -144,6 +148,7 @@ impl SystemConfig {
         cfg.use_pjrt = file.get_parse("runtime.use_pjrt", cfg.use_pjrt)?;
         cfg.workers = file.get_parse("coordinator.workers", cfg.workers)?;
         cfg.queue_depth = file.get_parse("coordinator.queue_depth", cfg.queue_depth)?;
+        cfg.batch_windows = file.get_parse("coordinator.batch_windows", cfg.batch_windows)?;
         Ok(cfg)
     }
 }
@@ -164,6 +169,7 @@ train_density = 0.4     # inline comment
 [coordinator]
 workers = 4
 queue_depth = 128
+batch_windows = 8
 
 [runtime]
 use_pjrt = true
@@ -188,6 +194,7 @@ artifacts_dir = "artifacts"
         assert_eq!(cfg.classifier.temporal_threshold, 120);
         assert_eq!(cfg.workers, 4);
         assert_eq!(cfg.queue_depth, 128);
+        assert_eq!(cfg.batch_windows, 8);
         assert!(cfg.use_pjrt);
         // untouched default
         assert_eq!(cfg.alarm_consecutive, 1);

@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use crate::params::CHANNELS;
 
-use super::session::{ReadyWindow, Session};
+use super::session::{ReadyBatch, Session};
 
 /// A contiguous run of multichannel samples for one session.
 pub struct SampleChunk {
@@ -72,9 +72,9 @@ impl Router {
         self.sessions.is_empty()
     }
 
-    /// Route one chunk; collected windows are appended to `out`.
+    /// Route one chunk; completed window batches are appended to `out`.
     /// Unknown session ids are an error (a production system would 404).
-    pub fn route(&mut self, chunk: &SampleChunk, out: &mut Vec<ReadyWindow>) -> crate::Result<()> {
+    pub fn route(&mut self, chunk: &SampleChunk, out: &mut Vec<ReadyBatch>) -> crate::Result<()> {
         let session = self
             .sessions
             .get_mut(&chunk.session_id)
@@ -82,8 +82,8 @@ impl Router {
         let mut sample = [0f32; CHANNELS];
         for t in 0..chunk.num_samples() {
             sample.copy_from_slice(&chunk.samples[t * CHANNELS..(t + 1) * CHANNELS]);
-            if let Some(w) = session.push_sample(&sample) {
-                out.push(w);
+            if let Some(b) = session.push_sample(&sample) {
+                out.push(b);
             }
         }
         Ok(())

@@ -11,6 +11,11 @@
 //!
 //! Both run on dedicated worker threads behind bounded queues, so a slow
 //! engine stalls the sources (backpressure) instead of ballooning memory.
+//!
+//! Sessions submit **micro-batches** of `batch_windows` windows per
+//! engine job (flushed at stream end), and the engine host coalesces
+//! AM-sharing jobs further; predictions are bit-identical at every batch
+//! size — batching changes only when work reaches the engine.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
@@ -106,15 +111,21 @@ pub struct Coordinator {
     pub chunk_samples: usize,
     /// Pace sources at the iEEG sample rate (wall-clock realtime).
     pub realtime: bool,
+    /// Windows per engine micro-batch (from `SystemConfig`; 1 submits
+    /// every window immediately). Predictions are bit-identical at any
+    /// value — batching only changes when work reaches the engine.
+    pub batch_windows: usize,
 }
 
 impl Coordinator {
     pub fn new(system: SystemConfig, backend: Backend) -> Self {
+        let batch_windows = system.batch_windows.max(1);
         Coordinator {
             system,
             backend,
             chunk_samples: 64,
             realtime: false,
+            batch_windows,
         }
     }
 
@@ -137,13 +148,15 @@ impl Coordinator {
             if cfg_threshold == 0 {
                 cfg_threshold = self.system.classifier.temporal_threshold;
             }
-            router.add_session(Session::new(
+            let mut session = Session::new(
                 s.session_id,
                 s.patient_id,
                 s.am.clone(),
                 cfg_threshold,
                 self.system.alarm_consecutive,
-            ));
+            );
+            session.set_batch_windows(self.batch_windows);
+            router.add_session(session);
             records.insert(s.session_id, s.record.clone());
         }
 
@@ -194,28 +207,40 @@ impl Coordinator {
                 metrics.frames_in += n as u64;
                 ready.clear();
                 router.route(&chunk, &mut ready)?;
-                for w in ready.drain(..) {
-                    let session = router.session(w.session_id).expect("routed");
+                if cur.pos >= cur.len {
+                    // Stream exhausted: flush the session's partial batch
+                    // so the tail windows don't wait for a fill that
+                    // never comes.
+                    if let Some(b) = router
+                        .session_mut(cur.session_id)
+                        .and_then(|s| s.flush_batch())
+                    {
+                        ready.push(b);
+                    }
+                }
+                for b in ready.drain(..) {
+                    let session = router.session(b.session_id).expect("routed");
                     pending_jobs.push(Job {
-                        tag: w.session_id,
-                        seq: w.seq,
-                        codes: w.codes,
+                        tag: b.session_id,
+                        seq: b.seq0,
+                        codes: b.codes,
                         am: session.am.clone(),
-                        threshold: session.threshold as i32,
+                        thresholds: vec![session.threshold as i32; b.windows],
                         submitted: Instant::now(),
                     });
                 }
-                // Submit with backpressure accounting.
-                while let Some(job) = pending_jobs.pop() {
+                // Submit in arrival order, with backpressure accounting.
+                for job in pending_jobs.drain(..) {
+                    let windows = job.windows() as u64;
                     match host.try_submit(job) {
                         Ok(()) => {
-                            metrics.windows_submitted += 1;
+                            metrics.windows_submitted += windows;
                             in_flight += 1;
                         }
                         Err(job) => {
                             metrics.backpressure_stalls += 1;
                             host.submit(job)?; // blocking
-                            metrics.windows_submitted += 1;
+                            metrics.windows_submitted += windows;
                             in_flight += 1;
                         }
                     }
@@ -267,22 +292,29 @@ impl Coordinator {
     }
 
     fn finish(router: &mut Router, metrics: &mut ServingMetrics, c: Completion) {
+        // Submit→complete latency of the whole job, recorded per window
+        // (batched windows share one engine round-trip by design).
         let latency = c.latency_s();
-        match c.output {
-            Ok(out) => {
-                metrics.windows_completed += 1;
-                metrics.latency.record(latency);
-                let is_ictal = out.scores[CLASS_ICTAL] > out.scores[CLASS_INTERICTAL];
-                let margin = out.margin();
-                if let Some(session) = router.session_mut(c.tag) {
-                    if session.complete(c.seq, is_ictal, margin).is_some() {
-                        metrics.alarms += 1;
+        match c.outputs {
+            Ok(outs) => {
+                for (k, out) in outs.iter().enumerate() {
+                    metrics.windows_completed += 1;
+                    metrics.latency.record(latency);
+                    let is_ictal = out.scores[CLASS_ICTAL] > out.scores[CLASS_INTERICTAL];
+                    let margin = out.margin();
+                    if let Some(session) = router.session_mut(c.tag) {
+                        if session.complete(c.seq + k as u64, is_ictal, margin).is_some() {
+                            metrics.alarms += 1;
+                        }
                     }
                 }
             }
             Err(e) => {
-                metrics.windows_failed += 1;
-                eprintln!("window failed (session {}, seq {}): {e:#}", c.tag, c.seq);
+                metrics.windows_failed += c.windows as u64;
+                eprintln!(
+                    "batch failed (session {}, seq {}, {} windows): {e:#}",
+                    c.tag, c.seq, c.windows
+                );
             }
         }
     }
@@ -322,6 +354,7 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "record",
         "artifacts",
         "chunk",
+        "batch",
     ])?;
     let data = PathBuf::from(args.require("data")?);
     let mut system = match args.get("config") {
@@ -397,13 +430,18 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     let mut coordinator = Coordinator::new(system, backend);
     coordinator.realtime = args.flag("realtime");
     coordinator.chunk_samples = args.get_parse("chunk", 64usize)?;
+    // Realtime pacing wants per-window submission (a filling batch would
+    // add whole-window latencies); explicit --batch overrides.
+    let default_batch = if coordinator.realtime { 1 } else { coordinator.batch_windows };
+    coordinator.batch_windows = args.get_parse("batch", default_batch)?.max(1);
 
     println!(
-        "serving {} sessions ({} backend, {}, chunk {} samples)…",
+        "serving {} sessions ({} backend, {}, chunk {} samples, batch {} windows)…",
         streams.len(),
         if coordinator_is_pjrt(&coordinator) { "pjrt" } else { "native" },
         if coordinator.realtime { "realtime pacing" } else { "max speed" },
-        coordinator.chunk_samples
+        coordinator.chunk_samples,
+        coordinator.batch_windows
     );
     let report = coordinator.run(streams)?;
 
@@ -523,6 +561,32 @@ mod tests {
         );
         assert_eq!(streamed.eval.detected, offline_eval.detected);
         assert_eq!(streamed.eval.delay_s, offline_eval.delay_s);
+    }
+
+    #[test]
+    fn batched_serving_bit_identical_to_unbatched() {
+        // The N=1 degenerate-case guarantee, end to end: any batch size
+        // yields exactly the same per-session outcome.
+        let mut unbatched = Coordinator::new(SystemConfig::default(), Backend::Native);
+        unbatched.batch_windows = 1;
+        let r1 = unbatched.run(tiny_streams(2)).unwrap();
+        let mut batched = Coordinator::new(SystemConfig::default(), Backend::Native);
+        batched.batch_windows = 5;
+        let r5 = batched.run(tiny_streams(2)).unwrap();
+
+        assert_eq!(r1.metrics.windows_completed, r5.metrics.windows_completed);
+        assert_eq!(r1.sessions.len(), r5.sessions.len());
+        for (a, b) in r1.sessions.iter().zip(&r5.sessions) {
+            assert_eq!(a.session_id, b.session_id);
+            assert_eq!(a.windows, b.windows);
+            assert_eq!(a.eval.detected, b.eval.detected);
+            assert_eq!(a.eval.delay_s, b.eval.delay_s);
+            assert_eq!(a.eval.false_alarms, b.eval.false_alarms);
+            assert_eq!(a.alarms.len(), b.alarms.len());
+            for (x, y) in a.alarms.iter().zip(&b.alarms) {
+                assert_eq!(x.window_idx, y.window_idx);
+            }
+        }
     }
 
     /// Satellite contract for the default build: `Backend::Pjrt` must fail

@@ -1,19 +1,28 @@
 //! Per-patient session state: LBP front-end → frame assembly → window
-//! submission, plus the trained model (AM + threshold) and detector.
+//! batching, plus the trained model (AM + threshold) and detector.
+//!
+//! Sessions emit [`ReadyBatch`]es: up to `batch_windows` consecutive
+//! prediction windows coalesced into one engine submission (micro-batch).
+//! The default batch size is 1, so the unbatched behaviour is the N=1
+//! degenerate case of the same path.
 
 use std::sync::Arc;
 
 use crate::coordinator::detector::Detector;
 use crate::data::metrics::WindowPrediction;
-use crate::hdc::am::AssociativeMemory;
+use crate::hdc::am::{AmPlane, AssociativeMemory};
 use crate::lbp::LbpFrontend;
 use crate::params::{CHANNELS, FRAMES_PER_PREDICTION};
 
-/// A fully-assembled prediction window ready for an engine.
-pub struct ReadyWindow {
+/// A batch of consecutive fully-assembled prediction windows ready for an
+/// engine.
+pub struct ReadyBatch {
     pub session_id: u64,
-    pub seq: u64,
-    /// Frame-major codes `[FRAMES_PER_PREDICTION * CHANNELS]`.
+    /// Sequence number of the batch's first window.
+    pub seq0: u64,
+    /// Windows in the batch.
+    pub windows: usize,
+    /// Frame-major codes, `windows * FRAMES_PER_PREDICTION * CHANNELS`.
     pub codes: Vec<u8>,
 }
 
@@ -25,9 +34,15 @@ pub struct Session {
     window: Vec<u8>,
     frames_in_window: usize,
     next_seq: u64,
-    /// Trained model deployed on this session.
-    pub am: Arc<Vec<i32>>,
-    pub am_native: AssociativeMemory,
+    /// Windows per emitted batch (1 = emit every window immediately).
+    batch_windows: usize,
+    /// Completed windows waiting for the batch to fill.
+    batch: Vec<u8>,
+    batch_seq0: u64,
+    batch_count: usize,
+    /// Trained model deployed on this session, in both engine
+    /// representations (shared with every job this session submits).
+    pub am: Arc<AmPlane>,
     pub threshold: u16,
     pub detector: Detector,
     /// Collected predictions (for offline scoring after the stream ends).
@@ -49,35 +64,67 @@ impl Session {
             window: Vec::with_capacity(FRAMES_PER_PREDICTION * CHANNELS),
             frames_in_window: 0,
             next_seq: 0,
-            am: Arc::new(am.to_i32s()),
-            am_native: am,
+            batch_windows: 1,
+            batch: Vec::new(),
+            batch_seq0: 0,
+            batch_count: 0,
+            am: Arc::new(AmPlane::from_memory(&am)),
             threshold,
             detector: Detector::new(consecutive),
             predictions: Vec::new(),
         }
     }
 
-    /// Feed one multichannel sample; returns a window when 256 frames have
-    /// been assembled.
-    pub fn push_sample(&mut self, sample: &[f32; CHANNELS]) -> Option<ReadyWindow> {
+    /// Set the micro-batch size (clamped to ≥ 1). Takes effect from the
+    /// next completed window.
+    pub fn set_batch_windows(&mut self, windows: usize) {
+        self.batch_windows = windows.max(1);
+    }
+
+    /// Feed one multichannel sample; returns a batch when `batch_windows`
+    /// windows of 256 frames each have been assembled.
+    pub fn push_sample(&mut self, sample: &[f32; CHANNELS]) -> Option<ReadyBatch> {
         let codes = self.lbp.push(sample);
         self.window.extend_from_slice(&codes);
         self.frames_in_window += 1;
         if self.frames_in_window < FRAMES_PER_PREDICTION {
             return None;
         }
-        let codes = std::mem::replace(
-            &mut self.window,
-            Vec::with_capacity(FRAMES_PER_PREDICTION * CHANNELS),
-        );
+        // Window complete: append it to the pending batch.
+        if self.batch_count == 0 {
+            self.batch_seq0 = self.next_seq;
+        }
+        self.batch.extend_from_slice(&self.window);
+        self.window.clear();
         self.frames_in_window = 0;
-        let seq = self.next_seq;
         self.next_seq += 1;
-        Some(ReadyWindow {
+        self.batch_count += 1;
+        if self.batch_count >= self.batch_windows {
+            self.flush_batch()
+        } else {
+            None
+        }
+    }
+
+    /// Emit the pending (possibly partial) batch, if any — called at
+    /// stream end so no completed window waits forever for the batch to
+    /// fill.
+    pub fn flush_batch(&mut self) -> Option<ReadyBatch> {
+        if self.batch_count == 0 {
+            return None;
+        }
+        let codes = std::mem::replace(
+            &mut self.batch,
+            Vec::with_capacity(self.batch_windows * FRAMES_PER_PREDICTION * CHANNELS),
+        );
+        let batch = ReadyBatch {
             session_id: self.id,
-            seq,
+            seq0: self.batch_seq0,
+            windows: self.batch_count,
             codes,
-        })
+        };
+        self.batch_count = 0;
+        Some(batch)
     }
 
     /// Record a completed prediction and run the detector.
@@ -107,6 +154,8 @@ impl Session {
         self.window.clear();
         self.frames_in_window = 0;
         self.next_seq = 0;
+        self.batch.clear();
+        self.batch_count = 0;
         self.detector.reset();
         self.predictions.clear();
     }
@@ -126,16 +175,44 @@ mod tests {
         let mut s = session();
         let sample = [0f32; CHANNELS];
         for i in 0..FRAMES_PER_PREDICTION * 2 {
-            let w = s.push_sample(&sample);
+            let b = s.push_sample(&sample);
             if (i + 1) % FRAMES_PER_PREDICTION == 0 {
-                let w = w.expect("window boundary");
-                assert_eq!(w.codes.len(), FRAMES_PER_PREDICTION * CHANNELS);
-                assert_eq!(w.seq, (i / FRAMES_PER_PREDICTION) as u64);
+                let b = b.expect("window boundary");
+                assert_eq!(b.windows, 1);
+                assert_eq!(b.codes.len(), FRAMES_PER_PREDICTION * CHANNELS);
+                assert_eq!(b.seq0, (i / FRAMES_PER_PREDICTION) as u64);
             } else {
-                assert!(w.is_none());
+                assert!(b.is_none());
             }
         }
         assert_eq!(s.windows(), 2);
+    }
+
+    #[test]
+    fn batches_accumulate_and_flush() {
+        let mut s = session();
+        s.set_batch_windows(3);
+        let sample = [0f32; CHANNELS];
+        // Two full windows: still pending (batch of 3 not full).
+        for _ in 0..FRAMES_PER_PREDICTION * 2 {
+            assert!(s.push_sample(&sample).is_none());
+        }
+        // Third window completes the batch.
+        let mut got = None;
+        for _ in 0..FRAMES_PER_PREDICTION {
+            got = got.or(s.push_sample(&sample));
+        }
+        let b = got.expect("batch of 3 emits");
+        assert_eq!((b.seq0, b.windows), (0, 3));
+        assert_eq!(b.codes.len(), 3 * FRAMES_PER_PREDICTION * CHANNELS);
+        // One more window, then a stream-end flush emits the partial batch.
+        for _ in 0..FRAMES_PER_PREDICTION {
+            assert!(s.push_sample(&sample).is_none());
+        }
+        let tail = s.flush_batch().expect("partial batch flushes");
+        assert_eq!((tail.seq0, tail.windows), (3, 1));
+        assert!(s.flush_batch().is_none(), "flush is idempotent");
+        assert_eq!(s.windows(), 4);
     }
 
     #[test]

@@ -5,16 +5,42 @@
 //! "there is no information in the 0-bits". The hardware computes the two
 //! class scores sequentially over two cycles with one AND-gate array +
 //! adder tree; the model exposes both scores plus the argmax.
+//!
+//! ## Batched search
+//!
+//! The hardware amortises its AM loads across the AND-popcount array;
+//! the software mirror is [`AssociativeMemory::search_batch`]: the class
+//! HVs are held once and every query streams through a fused word-wise
+//! kernel that produces both class scores in a single pass. The dense
+//! design's Hamming scoring sits behind the same interface via
+//! [`Metric`], so every caller — `Classifier`, the native window engine,
+//! the engine pool — scores through one code path. [`AmPlane`] carries
+//! the AM in both engine representations (flat i32 plane for the PJRT
+//! artifacts, packed HVs for the native engine) with the decode done at
+//! most once per instance.
 
-use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, NUM_CLASSES};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
-use super::hv::Hv;
+use crate::ensure;
+use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, DIM, NUM_CLASSES};
+
+use super::hv::{Hv, WORDS};
 
 /// The associative memory for the 2-class seizure detector.
 #[derive(Clone, Debug)]
 pub struct AssociativeMemory {
     /// `classes[CLASS_INTERICTAL]`, `classes[CLASS_ICTAL]`.
     pub classes: [Hv; NUM_CLASSES],
+}
+
+/// Similarity metric of a search, normalised to "bigger = more similar".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Sparse AND-popcount overlap (paper §II-D).
+    Overlap,
+    /// Dense similarity `DIM - hamming(query, class)` (Burrello'18).
+    Hamming,
 }
 
 /// Result of one similarity search.
@@ -28,6 +54,16 @@ pub struct SearchResult {
 }
 
 impl SearchResult {
+    /// Argmax with the hardware tie-break (strict `ictal > interictal`).
+    pub fn from_scores(scores: [u32; NUM_CLASSES]) -> SearchResult {
+        let class = if scores[CLASS_ICTAL] > scores[CLASS_INTERICTAL] {
+            CLASS_ICTAL
+        } else {
+            CLASS_INTERICTAL
+        };
+        SearchResult { class, scores }
+    }
+
     pub fn is_ictal(&self) -> bool {
         self.class == CLASS_ICTAL
     }
@@ -48,25 +84,125 @@ impl AssociativeMemory {
 
     /// Sparse similarity search: AND + popcount per class, argmax.
     pub fn search(&self, query: &Hv) -> SearchResult {
-        let mut scores = [0u32; NUM_CLASSES];
-        for (i, class) in self.classes.iter().enumerate() {
-            scores[i] = query.overlap(class);
+        SearchResult::from_scores(self.score2(query, Metric::Overlap))
+    }
+
+    /// Dense similarity search: `DIM - hamming` per class, argmax — the
+    /// same normalised [`SearchResult`] contract as the sparse search.
+    pub fn search_dense(&self, query: &Hv) -> SearchResult {
+        SearchResult::from_scores(self.score2(query, Metric::Hamming))
+    }
+
+    /// Batched similarity search: the class HVs are loaded once and every
+    /// query streams through the fused two-class kernel. Bit-exact with
+    /// N calls to [`Self::search`] / [`Self::search_dense`] at every
+    /// batch size (including 0 and 1) — `tests/batching.rs` pins this.
+    pub fn search_batch(&self, queries: &[Hv], metric: Metric) -> Vec<SearchResult> {
+        queries
+            .iter()
+            .map(|q| SearchResult::from_scores(self.score2(q, metric)))
+            .collect()
+    }
+
+    /// Fused two-class scoring: one pass over the query words produces
+    /// both class scores — the software mirror of the hardware's 2-cycle
+    /// AND-popcount array reusing the loaded AM row.
+    fn score2(&self, query: &Hv, metric: Metric) -> [u32; NUM_CLASSES] {
+        let c0 = &self.classes[CLASS_INTERICTAL].words;
+        let c1 = &self.classes[CLASS_ICTAL].words;
+        let (mut s0, mut s1) = (0u32, 0u32);
+        match metric {
+            Metric::Overlap => {
+                for w in 0..WORDS {
+                    let q = query.words[w];
+                    s0 += (q & c0[w]).count_ones();
+                    s1 += (q & c1[w]).count_ones();
+                }
+                [s0, s1]
+            }
+            Metric::Hamming => {
+                for w in 0..WORDS {
+                    let q = query.words[w];
+                    s0 += (q ^ c0[w]).count_ones();
+                    s1 += (q ^ c1[w]).count_ones();
+                }
+                [DIM as u32 - s0, DIM as u32 - s1]
+            }
         }
-        let class = if scores[CLASS_ICTAL] > scores[CLASS_INTERICTAL] {
-            CLASS_ICTAL
-        } else {
-            CLASS_INTERICTAL
-        };
-        SearchResult { class, scores }
     }
 
     /// Serialize to i32 planes for the PJRT artifacts (`int32[2,1024]`).
     pub fn to_i32s(&self) -> Vec<i32> {
-        let mut out = Vec::with_capacity(NUM_CLASSES * crate::params::DIM);
+        let mut out = Vec::with_capacity(NUM_CLASSES * DIM);
         for c in &self.classes {
             out.extend(c.to_i32s());
         }
         out
+    }
+}
+
+/// An AM in both engine representations: the flat `int32[NUM_CLASSES *
+/// DIM]` plane the PJRT artifacts take as an input, plus the packed class
+/// HVs the native engine scores with. The decode happens at most once per
+/// instance, so jobs sharing one `Arc<AmPlane>` (a session's model) never
+/// re-parse the plane — the path this replaces rebuilt both class HVs
+/// from the i32s on *every* engine call.
+pub struct AmPlane {
+    i32s: Vec<i32>,
+    decoded: OnceLock<AssociativeMemory>,
+    decodes: AtomicUsize,
+}
+
+impl AmPlane {
+    /// Wrap a flat i32 plane (length-checked; decode deferred to first
+    /// [`Self::memory`] call).
+    pub fn from_i32s(plane: &[i32]) -> crate::Result<AmPlane> {
+        ensure!(
+            plane.len() == NUM_CLASSES * DIM,
+            "am plane length {} != {}",
+            plane.len(),
+            NUM_CLASSES * DIM
+        );
+        Ok(AmPlane {
+            i32s: plane.to_vec(),
+            decoded: OnceLock::new(),
+            decodes: AtomicUsize::new(0),
+        })
+    }
+
+    /// Build from a trained AM: both representations are known up front,
+    /// so the serving path never decodes at all.
+    pub fn from_memory(am: &AssociativeMemory) -> AmPlane {
+        let plane = AmPlane {
+            i32s: am.to_i32s(),
+            decoded: OnceLock::new(),
+            decodes: AtomicUsize::new(0),
+        };
+        let _ = plane.decoded.set(am.clone());
+        plane
+    }
+
+    /// The flat i32 plane (PJRT marshalling layout).
+    pub fn i32s(&self) -> &[i32] {
+        &self.i32s
+    }
+
+    /// The decoded class HVs; the first call decodes, later calls reuse.
+    pub fn memory(&self) -> &AssociativeMemory {
+        self.decoded.get_or_init(|| {
+            self.decodes.fetch_add(1, Ordering::Relaxed);
+            let class = |c: usize| {
+                let p = &self.i32s[c * DIM..(c + 1) * DIM];
+                Hv::from_fn(|i| p[i] != 0)
+            };
+            AssociativeMemory::new(class(CLASS_INTERICTAL), class(CLASS_ICTAL))
+        })
+    }
+
+    /// How many times the i32 plane has been decoded (0 or 1) —
+    /// regression guard for the per-call rebuild this type replaced.
+    pub fn decode_count(&self) -> usize {
+        self.decodes.load(Ordering::Relaxed)
     }
 }
 
@@ -119,5 +255,64 @@ mod tests {
         assert_eq!(v.len(), NUM_CLASSES * crate::params::DIM);
         assert!(v[..crate::params::DIM].iter().all(|&x| x == 0));
         assert!(v[crate::params::DIM..].iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn dense_search_is_normalised_hamming() {
+        let mut rng = Xoshiro256::new(3);
+        let inter = Hv::random_half(&mut rng);
+        let ictal = Hv::random_half(&mut rng);
+        let q = Hv::random_half(&mut rng);
+        let am = AssociativeMemory::new(inter, ictal);
+        let r = am.search_dense(&q);
+        assert_eq!(r.scores[0], DIM as u32 - q.hamming(&inter));
+        assert_eq!(r.scores[1], DIM as u32 - q.hamming(&ictal));
+        // A query equal to a class HV must pick that class at full score.
+        let exact = am.search_dense(&ictal);
+        assert!(exact.is_ictal());
+        assert_eq!(exact.scores[CLASS_ICTAL], DIM as u32);
+    }
+
+    #[test]
+    fn batch_matches_serial_both_metrics() {
+        let mut rng = Xoshiro256::new(4);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let queries: Vec<Hv> = (0..17).map(|_| Hv::random(&mut rng, 0.25)).collect();
+        let batch = am.search_batch(&queries, Metric::Overlap);
+        for (q, r) in queries.iter().zip(&batch) {
+            assert_eq!(*r, am.search(q));
+        }
+        let batch = am.search_batch(&queries, Metric::Hamming);
+        for (q, r) in queries.iter().zip(&batch) {
+            assert_eq!(*r, am.search_dense(q));
+        }
+        assert!(am.search_batch(&[], Metric::Overlap).is_empty());
+    }
+
+    #[test]
+    fn am_plane_roundtrip_and_lazy_decode() {
+        let mut rng = Xoshiro256::new(5);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let plane = AmPlane::from_i32s(&am.to_i32s()).unwrap();
+        assert_eq!(plane.decode_count(), 0, "decode is deferred");
+        assert_eq!(plane.memory().classes, am.classes);
+        let first = plane.memory() as *const AssociativeMemory;
+        assert_eq!(plane.memory() as *const AssociativeMemory, first);
+        assert_eq!(plane.decode_count(), 1, "decode happens exactly once");
+        assert_eq!(plane.i32s(), &am.to_i32s()[..]);
+    }
+
+    #[test]
+    fn am_plane_from_memory_never_decodes() {
+        let am = AssociativeMemory::new(Hv::zero(), Hv::ones());
+        let plane = AmPlane::from_memory(&am);
+        assert_eq!(plane.memory().classes, am.classes);
+        assert_eq!(plane.decode_count(), 0);
+        assert_eq!(plane.i32s().len(), NUM_CLASSES * DIM);
+    }
+
+    #[test]
+    fn am_plane_rejects_bad_length() {
+        assert!(AmPlane::from_i32s(&[0i32; 5]).is_err());
     }
 }

@@ -16,11 +16,9 @@
 
 use std::sync::Arc;
 
-use crate::params::{
-    CHANNELS, DIM, IM_SEED, NUM_CLASSES, TEMPORAL_THRESHOLD_DEFAULT,
-};
+use crate::params::{CHANNELS, IM_SEED, TEMPORAL_THRESHOLD_DEFAULT};
 
-use super::am::{AssociativeMemory, SearchResult};
+use super::am::{AssociativeMemory, Metric, SearchResult};
 use super::bundling;
 use super::compim::CompIm;
 use super::dense::{self, DenseTemporal};
@@ -343,27 +341,32 @@ impl Classifier {
         Some(self.search(&query))
     }
 
-    /// Similarity search appropriate to the variant: AND-popcount overlap
-    /// for sparse, Hamming for dense. Scores are normalized to
-    /// "bigger = more similar" (dense scores are `DIM - hamming`) so the
-    /// [`SearchResult`] contract is uniform.
-    pub fn search(&self, query: &Hv) -> SearchResult {
+    /// The AM similarity metric this variant's hardware uses:
+    /// AND-popcount overlap for sparse, normalised Hamming for dense.
+    pub fn metric(&self) -> Metric {
         if self.variant.is_sparse() {
-            self.am.search(query)
+            Metric::Overlap
         } else {
-            let mut scores = [0u32; NUM_CLASSES];
-            for (i, class) in self.am.classes.iter().enumerate() {
-                scores[i] = DIM as u32 - query.hamming(class);
-            }
-            let class = if scores[crate::params::CLASS_ICTAL]
-                > scores[crate::params::CLASS_INTERICTAL]
-            {
-                crate::params::CLASS_ICTAL
-            } else {
-                crate::params::CLASS_INTERICTAL
-            };
-            SearchResult { class, scores }
+            Metric::Hamming
         }
+    }
+
+    /// Similarity search appropriate to the variant. Scores are
+    /// normalized to "bigger = more similar" (dense scores are
+    /// `DIM - hamming`) so the [`SearchResult`] contract is uniform.
+    pub fn search(&self, query: &Hv) -> SearchResult {
+        match self.metric() {
+            Metric::Overlap => self.am.search(query),
+            Metric::Hamming => self.am.search_dense(query),
+        }
+    }
+
+    /// Batched similarity search over many window queries — the class HVs
+    /// are held once across the whole batch
+    /// ([`AssociativeMemory::search_batch`]). Bit-exact with N
+    /// [`Self::search`] calls.
+    pub fn search_batch(&self, queries: &[Hv]) -> Vec<SearchResult> {
+        self.am.search_batch(queries, self.metric())
     }
 
     pub fn reset(&mut self) {
@@ -506,6 +509,24 @@ mod tests {
         // Query equal to class-1 HV: both metrics must pick class 1.
         assert_eq!(sparse_clf.search(&b).class, crate::params::CLASS_ICTAL);
         assert_eq!(dense_clf.search(&b).class, crate::params::CLASS_ICTAL);
+    }
+
+    #[test]
+    fn classifier_batch_search_matches_serial() {
+        let mut rng = Xoshiro256::new(77);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.25), Hv::random(&mut rng, 0.25));
+        let sparse_clf =
+            Classifier::new(Variant::Optimized, ClassifierConfig::optimized(), am.clone());
+        let dense_clf = Classifier::new(Variant::DenseBaseline, ClassifierConfig::default(), am);
+        assert_eq!(sparse_clf.metric(), Metric::Overlap);
+        assert_eq!(dense_clf.metric(), Metric::Hamming);
+        let queries: Vec<Hv> = (0..9).map(|_| Hv::random(&mut rng, 0.25)).collect();
+        for clf in [&sparse_clf, &dense_clf] {
+            let batch = clf.search_batch(&queries);
+            for (q, r) in queries.iter().zip(&batch) {
+                assert_eq!(*r, clf.search(q));
+            }
+        }
     }
 
     #[test]

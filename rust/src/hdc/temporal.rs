@@ -168,18 +168,26 @@ impl TemporalAccumulatorReference {
     }
 }
 
-/// Find the smallest threshold such that the thinned density of `counts`
-/// does not exceed `max_density`. This is how the max-HV-density
-/// hyperparameter (paper Fig. 4's x-axis) maps to a hardware threshold:
-/// sweep the count histogram from above.
-pub fn threshold_for_max_density(counts: &[u16; DIM], max_density: f64) -> u16 {
-    let max_ones = (max_density * DIM as f64).floor() as usize;
-    // Histogram of counter values (bounded by TEMPORAL_COUNTER_MAX).
+/// Histogram of counter values (index = value; counters saturate at
+/// [`TEMPORAL_COUNTER_MAX`]). Build it once per window and derive every
+/// candidate density's threshold from it
+/// ([`threshold_for_max_density_hist`]) — the single-pass multi-density
+/// tuning path (`pipeline::tune_temporal_thresholds`).
+pub fn count_histogram(counts: &[u16; DIM]) -> [usize; TEMPORAL_COUNTER_MAX as usize + 1] {
     let mut hist = [0usize; TEMPORAL_COUNTER_MAX as usize + 1];
     for &c in counts.iter() {
         hist[c as usize] += 1;
     }
-    // Walk thresholds downward from max+1; ones(t) = #elements with count >= t.
+    hist
+}
+
+/// [`threshold_for_max_density`] over a prebuilt count histogram: walk
+/// thresholds downward from max+1; `ones(t)` = #elements with count >= t.
+pub fn threshold_for_max_density_hist(
+    hist: &[usize; TEMPORAL_COUNTER_MAX as usize + 1],
+    max_density: f64,
+) -> u16 {
+    let max_ones = (max_density * DIM as f64).floor() as usize;
     let mut ones = 0usize;
     let mut t = TEMPORAL_COUNTER_MAX as usize + 1;
     while t > 1 {
@@ -191,6 +199,14 @@ pub fn threshold_for_max_density(counts: &[u16; DIM], max_density: f64) -> u16 {
         t -= 1;
     }
     t as u16
+}
+
+/// Find the smallest threshold such that the thinned density of `counts`
+/// does not exceed `max_density`. This is how the max-HV-density
+/// hyperparameter (paper Fig. 4's x-axis) maps to a hardware threshold:
+/// sweep the count histogram from above.
+pub fn threshold_for_max_density(counts: &[u16; DIM], max_density: f64) -> u16 {
+    threshold_for_max_density_hist(&count_histogram(counts), max_density)
 }
 
 #[cfg(test)]
@@ -294,5 +310,24 @@ mod tests {
     fn threshold_one_when_everything_fits() {
         let counts = Box::new([0u16; DIM]);
         assert_eq!(threshold_for_max_density(&counts, 0.5), 1);
+    }
+
+    #[test]
+    fn histogram_covers_every_element() {
+        let mut rng = Xoshiro256::new(21);
+        let mut acc = TemporalAccumulator::new();
+        for _ in 0..FRAMES_PER_PREDICTION {
+            acc.add(&Hv::random(&mut rng, 0.3));
+        }
+        let counts = acc.counts();
+        let hist = count_histogram(&counts);
+        assert_eq!(hist.iter().sum::<usize>(), DIM);
+        // Deriving from the histogram equals deriving from the counts.
+        for d in [0.05, 0.2, 0.5] {
+            assert_eq!(
+                threshold_for_max_density_hist(&hist, d),
+                threshold_for_max_density(&counts, d)
+            );
+        }
     }
 }

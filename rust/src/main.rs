@@ -41,6 +41,7 @@ fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         Some("fig5") => commands::fig5(args),
         Some("table1") => commands::table1(args),
         Some("ablate-thinning") => commands::ablate_thinning(args),
+        Some("bench-diff") => commands::bench_diff(args),
         Some("help") | None => {
             print_usage();
             Ok(())
@@ -60,6 +61,7 @@ data / model:
   train     --data DIR --patient ID [--variant V] [--max-density D] [--out FILE]
   detect    --data DIR --patient ID [--variant V] [--max-density D]
   serve     --data DIR [--config FILE] [--patients LIST] [--use-pjrt] [--realtime]
+            [--batch N] [--chunk N]
 
 paper experiments:
   fig1c     [--windows N]                 naive sparse breakdown (Fig. 1c)
@@ -67,6 +69,10 @@ paper experiments:
   fig5      [--windows N]                 design comparison (Fig. 5)
   table1    [--windows N]                 SotA comparison (Table I)
   ablate-thinning [--patients N] [--max-density D]   §III-B ablation
+
+tooling:
+  bench-diff <current.json> <baseline.json> [--threshold FRAC]
+            compare two benchkit/v1 runs; fail on kernel/* median regressions
 
 variants: dense-baseline | sparse-baseline | sparse-compim | sparse-optimized
 "#

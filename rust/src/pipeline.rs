@@ -9,7 +9,7 @@ use crate::hdc::am::AssociativeMemory;
 use crate::hdc::classifier::{
     Classifier, ClassifierConfig, Encoder, Frame, SparseEncoder, Variant,
 };
-use crate::hdc::temporal::threshold_for_max_density;
+use crate::hdc::hv::Hv;
 use crate::hdc::train::{train_from_frames, Trainer};
 use crate::lbp::LbpFrontend;
 
@@ -37,23 +37,40 @@ pub fn train_on_record(
     train_from_frames(encoder, record_frames(record), train_density)
 }
 
+/// Window queries per [`Classifier::search_batch`] flush in
+/// [`run_on_record`] — bounds the query buffer while still amortising
+/// the AM hold across many windows.
+const SEARCH_MICRO_BATCH: usize = 64;
+
 /// Run a trained classifier over a record, collecting one prediction per
 /// window. Same streaming pass as every other consumer of
-/// [`record_frames`].
+/// [`record_frames`], but windows are scored in micro-batches through
+/// [`Classifier::search_batch`] (bit-exact with per-window search).
 pub fn run_on_record(clf: &mut Classifier, record: &Record) -> Vec<WindowPrediction> {
-    clf.reset();
-    let mut preds = Vec::new();
-    let mut idx = 0usize;
-    for (codes, _) in record_frames(record) {
-        if let Some(r) = clf.push_frame(&codes) {
+    fn flush(clf: &Classifier, queries: &mut Vec<Hv>, preds: &mut Vec<WindowPrediction>) {
+        let base = preds.len();
+        for (k, r) in clf.search_batch(queries).into_iter().enumerate() {
             preds.push(WindowPrediction {
-                idx,
+                idx: base + k,
                 is_ictal: r.is_ictal(),
                 margin: r.margin(),
             });
-            idx += 1;
+        }
+        queries.clear();
+    }
+
+    clf.reset();
+    let mut preds = Vec::new();
+    let mut queries = Vec::with_capacity(SEARCH_MICRO_BATCH);
+    for (codes, _) in record_frames(record) {
+        if let Some(q) = clf.encoder.push_frame(&codes) {
+            queries.push(q);
+            if queries.len() == SEARCH_MICRO_BATCH {
+                flush(clf, &mut queries, &mut preds);
+            }
         }
     }
+    flush(clf, &mut queries, &mut preds);
     preds
 }
 
@@ -68,12 +85,30 @@ pub fn tune_temporal_threshold(
     record: &Record,
     max_density: f64,
 ) -> u16 {
+    tune_temporal_thresholds(variant, cfg, record, &[max_density])[0]
+}
+
+/// Single-pass multi-density tuning: one encode of the training record
+/// yields the threshold for *every* candidate density. Each window's
+/// accumulator is histogrammed once
+/// ([`crate::hdc::temporal::count_histogram`]) and all densities'
+/// per-window minimal thresholds are derived from that histogram —
+/// bit-exact with calling [`tune_temporal_threshold`] once per density,
+/// at one encode pass instead of D (the `repro fig4` sweep shape).
+pub fn tune_temporal_thresholds(
+    variant: Variant,
+    cfg: &ClassifierConfig,
+    record: &Record,
+    max_densities: &[f64],
+) -> Vec<u16> {
     assert!(variant.is_sparse(), "density tuning applies to sparse HDC");
     let mut enc = SparseEncoder::new(variant, cfg.clone());
-    let mut best: u16 = 1;
+    let mut best = vec![1u16; max_densities.len()];
     let mut inspect = |acc: &crate::hdc::temporal::TemporalAccumulator| {
-        let t = threshold_for_max_density(&acc.counts(), max_density);
-        best = best.max(t);
+        let hist = crate::hdc::temporal::count_histogram(&acc.counts());
+        for (b, &d) in best.iter_mut().zip(max_densities) {
+            *b = (*b).max(crate::hdc::temporal::threshold_for_max_density_hist(&hist, d));
+        }
     };
     for (codes, _) in record_frames(record) {
         enc.push_frame_inspect(&codes, &mut inspect);
@@ -253,6 +288,22 @@ mod tests {
         let t_low = tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), 0.05);
         let t_high = tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), 0.4);
         assert!(t_low >= t_high, "t(0.05)={t_low} vs t(0.4)={t_high}");
+    }
+
+    #[test]
+    fn single_pass_tuning_matches_per_density_passes() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        let densities = [0.05, 0.15, 0.25, 0.4, 0.5];
+        let one_pass =
+            tune_temporal_thresholds(Variant::Optimized, &cfg, patient.train_record(), &densities);
+        for (&d, &t) in densities.iter().zip(&one_pass) {
+            assert_eq!(
+                t,
+                tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), d),
+                "density {d}"
+            );
+        }
     }
 
     #[test]

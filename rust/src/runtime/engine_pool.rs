@@ -8,6 +8,18 @@
 //! the coordinator's backpressure boundary (a full queue blocks the
 //! producing session, the streaming analogue of the accelerator's fixed
 //! 256-cycle cadence).
+//!
+//! ## Batching and coalescing
+//!
+//! A [`Job`] owns a window *range*: `thresholds.len()` consecutive
+//! windows of one session, executed through the engine's `run_batch`.
+//! Before executing, the worker drains whatever is already queued and
+//! **coalesces consecutive jobs that share an AM** (`Arc` identity) into
+//! one `run_batch` call, amortising the AM hold across every queued
+//! window. Coalescing never reorders: jobs are grouped in arrival order
+//! only, and each job gets its own [`Completion`] (original `tag`/`seq`),
+//! delivered in submission order. If a coalesced call fails, the group is
+//! re-run job by job so the error lands on the offending job alone.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
@@ -15,9 +27,10 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::err;
+use crate::hdc::am::AmPlane;
 use crate::hdc::classifier::ClassifierConfig;
 
-use super::native::NativeWindowEngine;
+use super::native::{NativeWindowEngine, WINDOW_CODES};
 use super::{EngineKind, WindowOutput};
 
 /// Which engine the worker thread should construct.
@@ -56,34 +69,100 @@ impl Executor {
         }
     }
 
-    fn run(&mut self, codes: &[u8], am: &[i32], threshold: i32) -> crate::Result<WindowOutput> {
+    fn run_batch(
+        &mut self,
+        codes: &[u8],
+        am: &AmPlane,
+        thresholds: &[i32],
+    ) -> crate::Result<Vec<WindowOutput>> {
         match self {
-            Executor::Native(engine) => engine.run(codes, am, threshold),
+            Executor::Native(engine) => engine.run_batch(codes, am, thresholds),
             #[cfg(feature = "pjrt")]
-            Executor::Pjrt(engine) => engine.run(codes, am, threshold),
+            Executor::Pjrt(engine) => engine.run_batch(codes, am.i32s(), thresholds),
         }
     }
 }
 
-/// One prediction-window job.
+/// Execute a run of AM-sharing jobs, returning one result per job in
+/// input order.
+///
+/// The fast path concatenates the jobs into a single `run_batch` call and
+/// splits the outputs back per job. It is taken only when every job's
+/// shape is self-consistent and the batched call succeeds; otherwise each
+/// job runs on its own so an error is attributed to the job that caused
+/// it (the per-job results are bit-exact either way — `run_batch` is
+/// pinned against serial execution at every batch size).
+fn run_coalesced(engine: &mut Executor, group: &[Job]) -> Vec<crate::Result<Vec<WindowOutput>>> {
+    let shapes_ok = group
+        .iter()
+        .all(|job| job.codes.len() == job.windows() * WINDOW_CODES);
+    if group.len() > 1 && shapes_ok {
+        let codes: Vec<u8> = group.iter().flat_map(|job| job.codes.iter().copied()).collect();
+        let thresholds: Vec<i32> = group
+            .iter()
+            .flat_map(|job| job.thresholds.iter().copied())
+            .collect();
+        if let Ok(mut outputs) = engine.run_batch(&codes, &group[0].am, &thresholds) {
+            let mut per_job = Vec::with_capacity(group.len());
+            for job in group {
+                let rest = outputs.split_off(job.windows());
+                per_job.push(Ok(std::mem::replace(&mut outputs, rest)));
+            }
+            return per_job;
+        }
+    }
+    group
+        .iter()
+        .map(|job| engine.run_batch(&job.codes, &job.am, &job.thresholds))
+        .collect()
+}
+
+/// One prediction job: a range of `thresholds.len()` consecutive windows
+/// of one session (N=1 is the degenerate case, not the design center).
 pub struct Job {
     /// Opaque tag the submitter uses to route the reply (session id, ...).
     pub tag: u64,
-    /// Window sequence number within the tag.
+    /// Sequence number of the job's *first* window within the tag;
+    /// window `k` of the batch is `seq + k`.
     pub seq: u64,
-    /// Frame-major `[frames * CHANNELS]` LBP codes.
+    /// Frame-major LBP codes of all windows, concatenated
+    /// (`thresholds.len() * FRAMES_PER_PREDICTION * CHANNELS`).
     pub codes: Vec<u8>,
-    /// AM plane, shared across jobs of one session.
-    pub am: Arc<Vec<i32>>,
-    pub threshold: i32,
+    /// AM shared across jobs of one session (`Arc` identity is the
+    /// worker's coalescing key; the decode happens at most once).
+    pub am: Arc<AmPlane>,
+    /// One temporal thinning threshold per window — the batch size.
+    pub thresholds: Vec<i32>,
     pub submitted: Instant,
 }
 
-/// A completed job.
+impl Job {
+    /// Windows in this job's range.
+    pub fn windows(&self) -> usize {
+        self.thresholds.len()
+    }
+
+    /// A job carrying a single window (the N=1 degenerate case).
+    pub fn single(tag: u64, seq: u64, codes: Vec<u8>, am: Arc<AmPlane>, threshold: i32) -> Job {
+        Job {
+            tag,
+            seq,
+            codes,
+            am,
+            thresholds: vec![threshold],
+            submitted: Instant::now(),
+        }
+    }
+}
+
+/// A completed job: one [`WindowOutput`] per window of the job's range,
+/// in window order.
 pub struct Completion {
     pub tag: u64,
     pub seq: u64,
-    pub output: crate::Result<WindowOutput>,
+    /// Windows the job carried (so failures account for every window).
+    pub windows: usize,
+    pub outputs: crate::Result<Vec<WindowOutput>>,
     pub submitted: Instant,
     pub finished: Instant,
 }
@@ -130,17 +209,37 @@ impl EngineHost {
                         return;
                     }
                 };
-                while let Ok(job) = rx.recv() {
-                    let output = engine.run(&job.codes, &job.am, job.threshold);
-                    let completion = Completion {
-                        tag: job.tag,
-                        seq: job.seq,
-                        output,
-                        submitted: job.submitted,
-                        finished: Instant::now(),
-                    };
-                    if done_tx.send(completion).is_err() {
-                        break; // consumer gone
+                'serve: while let Ok(first) = rx.recv() {
+                    // Drain whatever is already queued (never waits), then
+                    // execute arrival-order runs of AM-sharing jobs as one
+                    // run_batch call each.
+                    let mut jobs = vec![first];
+                    while let Ok(job) = rx.try_recv() {
+                        jobs.push(job);
+                    }
+                    let mut start = 0;
+                    while start < jobs.len() {
+                        let mut end = start + 1;
+                        while end < jobs.len() && Arc::ptr_eq(&jobs[start].am, &jobs[end].am) {
+                            end += 1;
+                        }
+                        let group = &jobs[start..end];
+                        let results = run_coalesced(&mut engine, group);
+                        let finished = Instant::now();
+                        for (job, outputs) in group.iter().zip(results) {
+                            let completion = Completion {
+                                tag: job.tag,
+                                seq: job.seq,
+                                windows: job.windows(),
+                                outputs,
+                                submitted: job.submitted,
+                                finished,
+                            };
+                            if done_tx.send(completion).is_err() {
+                                break 'serve; // consumer gone
+                            }
+                        }
+                        start = end;
                     }
                 }
             })?;
@@ -192,80 +291,78 @@ impl Drop for EngineHost {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION, LBP_CODES, NUM_CLASSES};
+    use crate::hdc::am::AssociativeMemory;
+    use crate::hdc::hv::Hv;
+    use crate::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION, LBP_CODES};
     use crate::rng::Xoshiro256;
 
-    fn job(seq: u64, codes: Vec<u8>) -> Job {
-        Job {
-            tag: 1,
-            seq,
-            codes,
-            am: Arc::new(vec![0i32; NUM_CLASSES * DIM]),
-            threshold: 130,
-            submitted: Instant::now(),
-        }
+    fn zero_am() -> Arc<AmPlane> {
+        Arc::new(AmPlane::from_memory(&AssociativeMemory::new(Hv::zero(), Hv::zero())))
     }
 
-    #[test]
-    fn native_host_round_trip() {
-        let host = EngineHost::spawn(
+    fn job_on(am: &Arc<AmPlane>, seq: u64, codes: Vec<u8>) -> Job {
+        Job::single(1, seq, codes, am.clone(), 130)
+    }
+
+    fn spawn_native(queue_depth: usize) -> EngineHost {
+        EngineHost::spawn(
             EngineSpec::Native {
                 cfg: ClassifierConfig::optimized(),
             },
             EngineKind::SparseWindow,
-            2,
+            queue_depth,
         )
-        .unwrap();
-        let mut rng = Xoshiro256::new(1);
-        let codes: Vec<u8> = (0..FRAMES_PER_PREDICTION * CHANNELS)
+        .unwrap()
+    }
+
+    fn random_window(rng: &mut Xoshiro256) -> Vec<u8> {
+        (0..FRAMES_PER_PREDICTION * CHANNELS)
             .map(|_| rng.next_below(LBP_CODES as u64) as u8)
-            .collect();
-        host.submit(job(7, codes)).unwrap();
+            .collect()
+    }
+
+    #[test]
+    fn native_host_round_trip() {
+        let host = spawn_native(2);
+        let mut rng = Xoshiro256::new(1);
+        let am = zero_am();
+        host.submit(job_on(&am, 7, random_window(&mut rng))).unwrap();
         let done = host.completions.recv().unwrap();
         assert_eq!(done.seq, 7);
-        let out = done.output.unwrap();
-        assert_eq!(out.query.len(), DIM);
+        assert_eq!(done.windows, 1);
+        let outs = done.outputs.unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].query.len(), DIM);
         assert!(done.latency_s() >= 0.0);
     }
 
     #[test]
     fn malformed_job_surfaces_error_not_panic() {
-        let host = EngineHost::spawn(
-            EngineSpec::Native {
-                cfg: ClassifierConfig::optimized(),
-            },
-            EngineKind::SparseWindow,
-            2,
-        )
-        .unwrap();
+        let host = spawn_native(2);
+        let am = zero_am();
         // Wrong length: the worker must report the error through the
         // completion, then keep serving subsequent jobs.
-        host.submit(job(0, vec![0u8; CHANNELS])).unwrap();
+        host.submit(job_on(&am, 0, vec![0u8; CHANNELS])).unwrap();
         let bad = host.completions.recv().unwrap();
-        assert!(bad.output.is_err());
+        assert!(bad.outputs.is_err());
+        assert_eq!(bad.windows, 1);
 
         let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
-        host.submit(job(1, codes)).unwrap();
+        host.submit(job_on(&am, 1, codes)).unwrap();
         let good = host.completions.recv().unwrap();
-        assert!(good.output.is_ok(), "worker must survive a bad job");
+        assert!(good.outputs.is_ok(), "worker must survive a bad job");
     }
 
     #[test]
     fn try_submit_reports_full_queue() {
-        let host = EngineHost::spawn(
-            EngineSpec::Native {
-                cfg: ClassifierConfig::optimized(),
-            },
-            EngineKind::SparseWindow,
-            1,
-        )
-        .unwrap();
+        let host = spawn_native(1);
         // Saturate: with depth 1 and a busy worker, eventually try_submit
         // must hand a job back instead of blocking.
+        let am = zero_am();
         let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
         let mut handed_back = false;
         for seq in 0..64 {
-            if host.try_submit(job(seq, codes.clone())).is_err() {
+            if host.try_submit(job_on(&am, seq, codes.clone())).is_err() {
                 handed_back = true;
                 break;
             }
@@ -273,5 +370,124 @@ mod tests {
         assert!(handed_back, "bounded queue must exert backpressure");
         // Drain whatever completed so Drop joins cleanly.
         while host.completions.try_recv().is_ok() {}
+    }
+
+    #[test]
+    fn coalescing_preserves_tags_seqs_and_order() {
+        // Two sessions interleaved, more jobs than the queue depth, mixed
+        // batch sizes: completions must come back in submission order with
+        // the original tag/seq, and every output must equal a fresh serial
+        // run of the same window.
+        let mut rng = Xoshiro256::new(0xC0A1);
+        let am_a = Arc::new(AmPlane::from_memory(&AssociativeMemory::new(
+            Hv::random(&mut rng, 0.3),
+            Hv::random(&mut rng, 0.3),
+        )));
+        let am_b = Arc::new(AmPlane::from_memory(&AssociativeMemory::new(
+            Hv::random(&mut rng, 0.3),
+            Hv::random(&mut rng, 0.3),
+        )));
+
+        struct Sent {
+            tag: u64,
+            seq: u64,
+            codes: Vec<u8>,
+            thresholds: Vec<i32>,
+            am: Arc<AmPlane>,
+        }
+        let mut sent = Vec::new();
+        let mut seqs = [0u64, 0u64];
+        for i in 0..12u64 {
+            // Runs of 3 same-AM jobs so arrival-order coalescing has
+            // actual material (alternating AMs would never group).
+            let (tag, am) = if (i / 3) % 2 == 0 { (1, &am_a) } else { (2, &am_b) };
+            let windows = 1 + (i as usize % 3);
+            let codes: Vec<u8> = (0..windows).flat_map(|_| random_window(&mut rng)).collect();
+            let thresholds: Vec<i32> = (0..windows).map(|w| 90 + 20 * w as i32).collect();
+            sent.push(Sent {
+                tag,
+                seq: seqs[tag as usize - 1],
+                codes,
+                thresholds,
+                am: am.clone(),
+            });
+            seqs[tag as usize - 1] += windows as u64;
+        }
+
+        let host = spawn_native(4);
+        let mut completions = Vec::new();
+        for s in &sent {
+            host.submit(Job {
+                tag: s.tag,
+                seq: s.seq,
+                codes: s.codes.clone(),
+                am: s.am.clone(),
+                thresholds: s.thresholds.clone(),
+                submitted: Instant::now(),
+            })
+            .unwrap();
+        }
+        for _ in 0..sent.len() {
+            completions.push(host.completions.recv().unwrap());
+        }
+
+        let mut serial =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        for (s, c) in sent.iter().zip(&completions) {
+            assert_eq!((c.tag, c.seq), (s.tag, s.seq), "submission order kept");
+            assert_eq!(c.windows, s.thresholds.len());
+            let outs = c.outputs.as_ref().unwrap();
+            assert_eq!(outs.len(), s.thresholds.len());
+            for (w, &t) in s.thresholds.iter().enumerate() {
+                let expect = serial
+                    .run(&s.codes[w * WINDOW_CODES..(w + 1) * WINDOW_CODES], s.am.i32s(), t)
+                    .unwrap();
+                assert_eq!(outs[w].scores, expect.scores);
+                assert_eq!(outs[w].query, expect.query);
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_error_lands_on_offending_job_only() {
+        let mut rng = Xoshiro256::new(0xE44);
+        let am = zero_am();
+        let host = spawn_native(8);
+        // good, bad (truncated codes), good — all sharing one AM so they
+        // are coalescing candidates whenever they queue up together.
+        host.submit(job_on(&am, 0, random_window(&mut rng))).unwrap();
+        host.submit(job_on(&am, 1, vec![0u8; 7])).unwrap();
+        host.submit(job_on(&am, 2, random_window(&mut rng))).unwrap();
+        let a = host.completions.recv().unwrap();
+        let b = host.completions.recv().unwrap();
+        let c = host.completions.recv().unwrap();
+        assert!(a.outputs.is_ok(), "seq 0 must succeed");
+        assert!(b.outputs.is_err(), "seq 1 carries the shape error");
+        assert!(c.outputs.is_ok(), "seq 2 must succeed");
+        assert_eq!((a.seq, b.seq, c.seq), (0, 1, 2));
+    }
+
+    #[test]
+    fn shared_am_plane_decodes_at_most_once_across_jobs() {
+        // The ISSUE regression guard: jobs sharing one `Arc<AmPlane>` must
+        // reuse the decoded plane (the old path re-decoded per call).
+        let mut rng = Xoshiro256::new(0xA51);
+        let raw: Vec<i32> = AssociativeMemory::new(
+            Hv::random(&mut rng, 0.3),
+            Hv::random(&mut rng, 0.3),
+        )
+        .to_i32s();
+        let am = Arc::new(AmPlane::from_i32s(&raw).unwrap());
+        assert_eq!(am.decode_count(), 0);
+        let host = spawn_native(4);
+        for seq in 0..6 {
+            host.submit(job_on(&am, seq, random_window(&mut rng))).unwrap();
+        }
+        for _ in 0..6 {
+            assert!(host.completions.recv().unwrap().outputs.is_ok());
+        }
+        // The completion channel recv synchronises with the worker's
+        // sends, so the counter read is ordered after every decode.
+        assert_eq!(am.decode_count(), 1, "decode must happen exactly once");
     }
 }

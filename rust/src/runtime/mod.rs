@@ -1,8 +1,10 @@
 //! Window-engine runtime: the execution layer behind the coordinator.
 //!
-//! Two engines implement the same `(codes, am, threshold) →`
-//! [`WindowOutput`] contract behind the [`engine_pool`] worker
-//! (`Job`/`Completion` channels):
+//! Two engines implement the same batch-first contract behind the
+//! [`engine_pool`] worker (`Job`/`Completion` channels):
+//! `run_batch(codes /* N windows */, am, thresholds /* len N */) →
+//! Vec<`[`WindowOutput`]`>`, with the single-window
+//! `(codes, am, threshold)` `run` as the N=1 degenerate case:
 //!
 //! * [`native`] — the bit-accurate golden model from [`crate::hdc`];
 //!   always compiled, needs **no artifacts** and no external crates. This

@@ -7,20 +7,31 @@
 //! PJRT engine against the same golden model):
 //!
 //! * **sparse**: CompIM bind → OR bundling → 256-frame temporal counters →
-//!   thinning at the *per-job* threshold → AND-popcount scores against the
-//!   AM plane (packed popcount — 64 word ops per class instead of 1024
-//!   multiplies, §Perf L3-3);
+//!   thinning at the *per-window* threshold → AND-popcount scores against
+//!   the AM plane (packed popcount — 64 word ops per class instead of
+//!   1024 multiplies, §Perf L3-3);
 //! * **dense**: XOR bind → majority bundling → temporal majority →
 //!   `DIM - hamming` scores (normalised "bigger = more similar").
+//!
+//! The native unit of work is a **batch** of N windows
+//! ([`NativeWindowEngine::run_batch`]): the decoded AM ([`AmPlane`]) is
+//! held once, every window is encoded, and all queries stream through one
+//! [`crate::hdc::am::AssociativeMemory::search_batch`] call.
+//! [`NativeWindowEngine::run`] is the N=1 degenerate case and delegates
+//! to a batch of one.
 
 use crate::ensure;
+use crate::hdc::am::{AmPlane, Metric};
 use crate::hdc::classifier::{
     ClassifierConfig, DenseEncoder, Encoder, Frame, SparseEncoder, Variant,
 };
 use crate::hdc::hv::Hv;
-use crate::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION, NUM_CLASSES};
+use crate::params::{CHANNELS, FRAMES_PER_PREDICTION};
 
 use super::{EngineKind, WindowOutput};
+
+/// Frame-major LBP codes of one full prediction window.
+pub const WINDOW_CODES: usize = FRAMES_PER_PREDICTION * CHANNELS;
 
 /// One native engine wrapping a streaming encoder of the requested kind.
 ///
@@ -54,49 +65,78 @@ impl NativeWindowEngine {
     /// Execute one window. Same contract as the PJRT engine's `run`:
     /// `codes` is one full frame-major window, `am` the
     /// `[NUM_CLASSES * DIM]` 0/1 plane, `threshold` the temporal thinning
-    /// threshold (ignored by the dense model).
+    /// threshold (ignored by the dense model). Delegates to
+    /// [`Self::run_batch`] with a batch of one, so the serial and batched
+    /// paths cannot drift.
     pub fn run(&mut self, codes: &[u8], am: &[i32], threshold: i32) -> crate::Result<WindowOutput> {
-        ensure!(
-            codes.len() == FRAMES_PER_PREDICTION * CHANNELS,
-            "codes length {} != {}",
-            codes.len(),
-            FRAMES_PER_PREDICTION * CHANNELS
-        );
-        ensure!(am.len() == NUM_CLASSES * DIM, "am length {}", am.len());
+        let plane = AmPlane::from_i32s(am)?;
+        let mut outputs = self.run_batch(codes, &plane, &[threshold])?;
+        Ok(outputs.pop().expect("a batch of one yields one output"))
+    }
 
-        match &mut self.encoder {
+    /// Execute a batch of `thresholds.len()` windows against one AM.
+    ///
+    /// `codes` is `N` frame-major windows concatenated
+    /// (`N * FRAMES_PER_PREDICTION * CHANNELS` bytes); `thresholds` holds
+    /// one temporal thinning threshold per window (ignored by the dense
+    /// model, which still uses its length as the batch size). The decoded
+    /// AM is read from the [`AmPlane`] — shared across jobs of one
+    /// session, it is decoded at most once — and all N queries are scored
+    /// through one [`crate::hdc::am::AssociativeMemory::search_batch`]
+    /// pass. An empty batch returns an empty vec.
+    pub fn run_batch(
+        &mut self,
+        codes: &[u8],
+        am: &AmPlane,
+        thresholds: &[i32],
+    ) -> crate::Result<Vec<WindowOutput>> {
+        let n = thresholds.len();
+        ensure!(
+            codes.len() == n * WINDOW_CODES,
+            "codes length {} != {} ({} windows of {})",
+            codes.len(),
+            n * WINDOW_CODES,
+            n,
+            WINDOW_CODES
+        );
+
+        let (queries, metric) = match &mut self.encoder {
             EncoderSlot::Sparse(enc) => {
-                // The dense model ignores `threshold` (PJRT contract), so
-                // only the sparse path range-checks it.
-                ensure!(
-                    (0..=u16::MAX as i32).contains(&threshold),
-                    "threshold {threshold} out of range"
-                );
-                enc.set_temporal_threshold(threshold as u16);
-                let query = encode_window(enc.as_mut(), codes);
-                let mut scores = [0i32; NUM_CLASSES];
-                for (class, score) in scores.iter_mut().enumerate() {
-                    let class_hv = plane_hv(am, class);
-                    *score = query.overlap(&class_hv) as i32;
+                // The dense model ignores thresholds (PJRT contract), so
+                // only the sparse path range-checks them — all of them,
+                // before any window is encoded, so a bad batch is
+                // rejected atomically.
+                for &threshold in thresholds {
+                    ensure!(
+                        (0..=u16::MAX as i32).contains(&threshold),
+                        "threshold {threshold} out of range"
+                    );
                 }
-                Ok(WindowOutput {
-                    scores,
-                    query: query.to_i32s(),
-                })
+                let mut queries = Vec::with_capacity(n);
+                for (chunk, &threshold) in codes.chunks_exact(WINDOW_CODES).zip(thresholds) {
+                    enc.set_temporal_threshold(threshold as u16);
+                    queries.push(encode_window(enc.as_mut(), chunk));
+                }
+                (queries, Metric::Overlap)
             }
             EncoderSlot::Dense(enc) => {
-                let query = encode_window(enc.as_mut(), codes);
-                let mut scores = [0i32; NUM_CLASSES];
-                for (class, score) in scores.iter_mut().enumerate() {
-                    let class_hv = plane_hv(am, class);
-                    *score = DIM as i32 - query.hamming(&class_hv) as i32;
-                }
-                Ok(WindowOutput {
-                    scores,
-                    query: query.to_i32s(),
-                })
+                let queries = codes
+                    .chunks_exact(WINDOW_CODES)
+                    .map(|chunk| encode_window(enc.as_mut(), chunk))
+                    .collect();
+                (queries, Metric::Hamming)
             }
-        }
+        };
+
+        let results = am.memory().search_batch(&queries, metric);
+        Ok(queries
+            .iter()
+            .zip(results)
+            .map(|(query, r)| WindowOutput {
+                scores: [r.scores[0] as i32, r.scores[1] as i32],
+                query: query.to_i32s(),
+            })
+            .collect())
     }
 }
 
@@ -116,17 +156,11 @@ fn encode_window(enc: &mut dyn Encoder, codes: &[u8]) -> Hv {
     query.expect("one full window emits exactly one query")
 }
 
-/// Rebuild one class HV from the flat i32 AM plane.
-fn plane_hv(am: &[i32], class: usize) -> Hv {
-    let plane = &am[class * DIM..(class + 1) * DIM];
-    Hv::from_fn(|i| plane[i] != 0)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::hdc::am::AssociativeMemory;
-    use crate::params::LBP_CODES;
+    use crate::params::{DIM, LBP_CODES, NUM_CLASSES};
     use crate::rng::Xoshiro256;
 
     fn random_codes(rng: &mut Xoshiro256) -> Vec<u8> {
@@ -227,5 +261,65 @@ mod tests {
         let again = engine.run(&codes_a, &am.to_i32s(), 130).unwrap();
         assert_eq!(first.scores, again.scores);
         assert_eq!(first.query, again.query);
+    }
+
+    #[test]
+    fn run_batch_matches_serial_runs() {
+        let mut rng = Xoshiro256::new(0xBA7C);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let plane = AmPlane::from_memory(&am);
+        let thresholds = [40i32, 130, 200];
+        let codes: Vec<u8> = (0..thresholds.len() * WINDOW_CODES)
+            .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+            .collect();
+        for kind in [EngineKind::SparseWindow, EngineKind::DenseWindow] {
+            let cfg = if kind == EngineKind::SparseWindow {
+                ClassifierConfig::optimized()
+            } else {
+                ClassifierConfig::default()
+            };
+            let mut engine = NativeWindowEngine::new(kind, cfg);
+            let batch = engine.run_batch(&codes, &plane, &thresholds).unwrap();
+            assert_eq!(batch.len(), thresholds.len());
+            for (w, &t) in thresholds.iter().enumerate() {
+                let serial = engine
+                    .run(&codes[w * WINDOW_CODES..(w + 1) * WINDOW_CODES], plane.i32s(), t)
+                    .unwrap();
+                assert_eq!(batch[w].scores, serial.scores, "{kind:?} window {w}");
+                assert_eq!(batch[w].query, serial.query, "{kind:?} window {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let am = AmPlane::from_memory(&AssociativeMemory::new(Hv::zero(), Hv::ones()));
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        assert!(engine.run_batch(&[], &am, &[]).unwrap().is_empty());
+        // Mismatched codes/thresholds shapes are rejected.
+        assert!(engine.run_batch(&[0u8; WINDOW_CODES], &am, &[]).is_err());
+        assert!(engine.run_batch(&[], &am, &[130]).is_err());
+        // One bad threshold rejects the whole batch atomically.
+        let codes = vec![0u8; 2 * WINDOW_CODES];
+        assert!(engine.run_batch(&codes, &am, &[130, -1]).is_err());
+    }
+
+    #[test]
+    fn am_plane_decode_reused_across_batches() {
+        // Regression guard for the old per-call `plane_hv` rebuild: an
+        // i32-sourced plane shared by many run_batch calls decodes once.
+        let mut rng = Xoshiro256::new(0xDECD);
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let plane = AmPlane::from_i32s(&am.to_i32s()).unwrap();
+        let codes: Vec<u8> = (0..WINDOW_CODES)
+            .map(|_| rng.next_below(LBP_CODES as u64) as u8)
+            .collect();
+        let mut engine =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        for _ in 0..4 {
+            engine.run_batch(&codes, &plane, &[130]).unwrap();
+        }
+        assert_eq!(plane.decode_count(), 1, "plane must be decoded exactly once");
     }
 }

@@ -181,6 +181,36 @@ impl WindowEngine {
             query,
         })
     }
+
+    /// Execute a batch of `thresholds.len()` windows against one AM —
+    /// the same contract as `NativeWindowEngine::run_batch`, so the
+    /// native/pjrt A/B stays bit-exact at every batch size.
+    ///
+    /// The AOT artifacts currently take one window per call (a batched
+    /// HLO entry point on the Python compile path is the remaining half —
+    /// see ROADMAP), so this executes the windows serially; swapping in a
+    /// batched artifact later cannot change the results, only the cost.
+    pub fn run_batch(
+        &self,
+        codes: &[u8],
+        am: &[i32],
+        thresholds: &[i32],
+    ) -> crate::Result<Vec<WindowOutput>> {
+        let window = self.frames * CHANNELS;
+        ensure!(
+            codes.len() == thresholds.len() * window,
+            "codes length {} != {} ({} windows of {})",
+            codes.len(),
+            thresholds.len() * window,
+            thresholds.len(),
+            window
+        );
+        codes
+            .chunks_exact(window)
+            .zip(thresholds)
+            .map(|(chunk, &threshold)| self.run(chunk, am, threshold))
+            .collect()
+    }
 }
 
 /// The PJRT runtime: one CPU client + the artifact manifest.

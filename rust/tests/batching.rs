@@ -1,0 +1,183 @@
+//! Batched == serial bit-exactness suite.
+//!
+//! The batch-first execution path (PR: multi-query AM search, batched
+//! window-engine contract, coalescing job pools) must be *bit-exact*
+//! with the serial paths at every batch size — 0, 1, and beyond the
+//! engine host's queue depth — for both the sparse and dense kinds.
+//! This file pins `search_batch` against N `search`/`search_dense`
+//! calls, `run_batch` against N `run` calls, and the end-to-end host
+//! path (micro-batched jobs + worker coalescing) against fresh serial
+//! engine runs.
+
+use std::sync::Arc;
+
+use sparse_hdc_ieeg::hdc::am::{AmPlane, AssociativeMemory, Metric};
+use sparse_hdc_ieeg::hdc::classifier::ClassifierConfig;
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::params::TEMPORAL_COUNTER_MAX;
+use sparse_hdc_ieeg::runtime::engine_pool::{EngineHost, EngineSpec, Job};
+use sparse_hdc_ieeg::runtime::native::{NativeWindowEngine, WINDOW_CODES};
+use sparse_hdc_ieeg::runtime::EngineKind;
+use sparse_hdc_ieeg::testkit::{property, Gen};
+
+fn random_am(g: &mut Gen) -> AssociativeMemory {
+    let d0 = g.f64() * 0.5;
+    let d1 = g.f64() * 0.5;
+    AssociativeMemory::new(g.hv(d0), g.hv(d1))
+}
+
+fn random_windows(g: &mut Gen, n: usize) -> Vec<u8> {
+    let mut codes = Vec::with_capacity(n * WINDOW_CODES);
+    for _ in 0..n {
+        for frame in g.frames(sparse_hdc_ieeg::params::FRAMES_PER_PREDICTION) {
+            codes.extend_from_slice(&frame);
+        }
+    }
+    codes
+}
+
+// ---------------------------------------------------------------------
+// hdc layer: search_batch == N searches
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_search_batch_matches_serial_searches() {
+    property("search_batch == N search calls, both metrics", 80, |g: &mut Gen| {
+        let am = random_am(g);
+        // Batch sizes including 0 and 1.
+        let n = g.range(0, 40);
+        let queries: Vec<Hv> = g.vec(n, |g| {
+            let d = g.f64() * 0.6;
+            g.hv(d)
+        });
+        let overlap = am.search_batch(&queries, Metric::Overlap);
+        let hamming = am.search_batch(&queries, Metric::Hamming);
+        assert_eq!(overlap.len(), n);
+        assert_eq!(hamming.len(), n);
+        for (i, q) in queries.iter().enumerate() {
+            assert_eq!(overlap[i], am.search(q), "overlap query {i}");
+            assert_eq!(hamming[i], am.search_dense(q), "hamming query {i}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// runtime layer: run_batch == N runs (sparse + dense engines)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_run_batch_matches_serial_runs() {
+    // Batch sizes 0, 1 and up to 9 windows with mixed thresholds; both
+    // engine kinds. Engines are stateless across runs (pinned in
+    // runtime::native tests), so one engine serves both paths.
+    property("run_batch == N run calls", 6, |g: &mut Gen| {
+        let am = random_am(g);
+        let plane = AmPlane::from_memory(&am);
+        let n = match g.range(0, 3) {
+            0 => 0,
+            1 => 1,
+            _ => g.range(2, 9),
+        };
+        let codes = random_windows(g, n);
+        let thresholds: Vec<i32> = (0..n)
+            .map(|_| g.range(1, TEMPORAL_COUNTER_MAX as usize) as i32)
+            .collect();
+
+        for kind in [EngineKind::SparseWindow, EngineKind::DenseWindow] {
+            let cfg = if kind == EngineKind::SparseWindow {
+                ClassifierConfig::optimized()
+            } else {
+                ClassifierConfig::default()
+            };
+            let mut engine = NativeWindowEngine::new(kind, cfg);
+            let batch = engine.run_batch(&codes, &plane, &thresholds).unwrap();
+            assert_eq!(batch.len(), n, "{kind:?}");
+            for (w, &t) in thresholds.iter().enumerate() {
+                let window = &codes[w * WINDOW_CODES..(w + 1) * WINDOW_CODES];
+                let serial = engine.run(window, plane.i32s(), t).unwrap();
+                assert_eq!(batch[w].scores, serial.scores, "{kind:?} window {w}");
+                assert_eq!(batch[w].query, serial.query, "{kind:?} window {w}");
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// pool layer: micro-batched jobs + coalescing == serial, in order
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_host_with_coalescing_matches_serial_in_order() {
+    // More jobs than the queue depth (blocking submits), mixed batch
+    // sizes, two AM-sharing sessions interleaved so arrival-order
+    // coalescing has material to work on. Every completion must carry
+    // the submitted tag/seq in submission order, and every window output
+    // must be byte-identical to a fresh serial run.
+    const QUEUE_DEPTH: usize = 3;
+    property("host jobs == serial runs, input order", 4, |g: &mut Gen| {
+        let planes = [
+            Arc::new(AmPlane::from_memory(&random_am(g))),
+            Arc::new(AmPlane::from_memory(&random_am(g))),
+        ];
+        struct Sent {
+            tag: u64,
+            seq: u64,
+            codes: Vec<u8>,
+            thresholds: Vec<i32>,
+            am: Arc<AmPlane>,
+        }
+        let jobs = g.range(QUEUE_DEPTH + 1, 2 * QUEUE_DEPTH + 4);
+        let mut sent: Vec<Sent> = Vec::new();
+        let mut seqs = [0u64; 2];
+        for _ in 0..jobs {
+            let which = g.range(0, 1);
+            let windows = g.range(1, 3);
+            let thresholds: Vec<i32> = (0..windows)
+                .map(|_| g.range(1, TEMPORAL_COUNTER_MAX as usize) as i32)
+                .collect();
+            sent.push(Sent {
+                tag: which as u64 + 1,
+                seq: seqs[which],
+                codes: random_windows(g, windows),
+                thresholds,
+                am: planes[which].clone(),
+            });
+            seqs[which] += windows as u64;
+        }
+
+        let host = EngineHost::spawn(
+            EngineSpec::Native {
+                cfg: ClassifierConfig::optimized(),
+            },
+            EngineKind::SparseWindow,
+            QUEUE_DEPTH,
+        )
+        .unwrap();
+        for s in &sent {
+            host.submit(Job {
+                tag: s.tag,
+                seq: s.seq,
+                codes: s.codes.clone(),
+                am: s.am.clone(),
+                thresholds: s.thresholds.clone(),
+                submitted: std::time::Instant::now(),
+            })
+            .unwrap();
+        }
+
+        let mut serial =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        for s in &sent {
+            let c = host.completions.recv().unwrap();
+            assert_eq!((c.tag, c.seq), (s.tag, s.seq), "submission order kept");
+            let outs = c.outputs.unwrap();
+            assert_eq!(outs.len(), s.thresholds.len());
+            for (w, &t) in s.thresholds.iter().enumerate() {
+                let window = &s.codes[w * WINDOW_CODES..(w + 1) * WINDOW_CODES];
+                let expect = serial.run(window, s.am.i32s(), t).unwrap();
+                assert_eq!(outs[w].scores, expect.scores, "tag {} seq {}", s.tag, s.seq);
+                assert_eq!(outs[w].query, expect.query, "tag {} seq {}", s.tag, s.seq);
+            }
+        }
+    });
+}

@@ -174,4 +174,35 @@ mod pjrt {
         let codes = vec![0u8; FRAMES_PER_PREDICTION * CHANNELS];
         assert!(engine.run(&codes, &[0i32; 5], 1).is_err());
     }
+
+    /// The PJRT-parity half of the batching contract: `run_batch` must
+    /// agree with the native engine's `run_batch` at batch > 1 (the PJRT
+    /// side executes serially until the batched HLO artifact lands, so
+    /// this pins the contract the future artifact must keep).
+    #[test]
+    fn batched_ab_matches_native() {
+        use sparse_hdc_ieeg::hdc::am::AmPlane;
+        use sparse_hdc_ieeg::runtime::native::NativeWindowEngine;
+        use sparse_hdc_ieeg::runtime::EngineKind;
+
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::new(&dir).unwrap();
+        let engine = rt.load_sparse().unwrap();
+
+        let mut rng = Xoshiro256::new(0xAB0);
+        let thresholds = [60i32, 130, 220];
+        let codes: Vec<u8> = (0..thresholds.len()).flat_map(|_| random_codes(&mut rng)).collect();
+        let am = AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.3));
+        let plane = AmPlane::from_memory(&am);
+
+        let pjrt_out = engine.run_batch(&codes, plane.i32s(), &thresholds).unwrap();
+        let mut native =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        let native_out = native.run_batch(&codes, &plane, &thresholds).unwrap();
+        assert_eq!(pjrt_out.len(), native_out.len());
+        for (w, (p, n)) in pjrt_out.iter().zip(&native_out).enumerate() {
+            assert_eq!(p.scores, n.scores, "window {w}: scores mismatch");
+            assert_eq!(p.query, n.query, "window {w}: query mismatch");
+        }
+    }
 }

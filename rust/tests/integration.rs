@@ -159,9 +159,10 @@ fn native_engine_host_serves_and_reports_job_errors() {
     // The default build's engine host: construction succeeds without any
     // artifacts, malformed jobs come back as error completions (not
     // thread panics), and well-formed jobs complete after them.
-    use sparse_hdc_ieeg::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION, NUM_CLASSES};
+    use sparse_hdc_ieeg::hdc::am::{AmPlane, AssociativeMemory};
+    use sparse_hdc_ieeg::hdc::hv::Hv;
+    use sparse_hdc_ieeg::params::{CHANNELS, DIM, FRAMES_PER_PREDICTION};
     use std::sync::Arc;
-    use std::time::Instant;
 
     let host = EngineHost::spawn(
         EngineSpec::Native {
@@ -171,24 +172,19 @@ fn native_engine_host_serves_and_reports_job_errors() {
         4,
     )
     .expect("native engine needs no artifacts");
-    let am = Arc::new(vec![0i32; NUM_CLASSES * DIM]);
-    let job = |seq: u64, codes: Vec<u8>| Job {
-        tag: 9,
-        seq,
-        codes,
-        am: am.clone(),
-        threshold: 130,
-        submitted: Instant::now(),
-    };
+    let am = Arc::new(AmPlane::from_memory(&AssociativeMemory::new(Hv::zero(), Hv::zero())));
+    let job = |seq: u64, codes: Vec<u8>| Job::single(9, seq, codes, am.clone(), 130);
     host.submit(job(0, vec![0u8; 3 * CHANNELS])).unwrap(); // truncated window
     host.submit(job(1, vec![0u8; FRAMES_PER_PREDICTION * CHANNELS]))
         .unwrap();
     let bad = host.completions.recv().unwrap();
     assert_eq!(bad.seq, 0);
-    assert!(bad.output.is_err());
+    assert!(bad.outputs.is_err());
     let good = host.completions.recv().unwrap();
     assert_eq!(good.seq, 1);
-    assert_eq!(good.output.unwrap().query.len(), DIM);
+    let outs = good.outputs.unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].query.len(), DIM);
 }
 
 #[test]
