@@ -38,18 +38,18 @@ fn main() -> sparse_hdc_ieeg::Result<()> {
     for pid in 1..=4u32 {
         let patient = SynthPatient::generate(&synth, pid);
         let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-        let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+        let bundle = pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
         println!(
-            "patient {pid}: trained one-shot (class densities {:.1}% / {:.1}%)",
-            am.classes[0].density() * 100.0,
-            am.classes[1].density() * 100.0
+            "patient {pid}: trained one-shot, model v{} (class densities {:.1}% / {:.1}%)",
+            bundle.version,
+            bundle.am.classes[0].density() * 100.0,
+            bundle.am.classes[1].density() * 100.0
         );
         streams.push(StreamSpec {
             session_id: pid as u64,
             patient_id: pid,
             record: patient.records[1].clone(),
-            am,
-            threshold: cfg.temporal_threshold,
+            bundle,
         });
     }
 

@@ -6,13 +6,13 @@
 use sparse_hdc_ieeg::benchkit::{black_box, Bench};
 use sparse_hdc_ieeg::config::SystemConfig;
 use sparse_hdc_ieeg::coordinator::detector::Detector;
+use sparse_hdc_ieeg::coordinator::registry::PublishedModel;
 use sparse_hdc_ieeg::coordinator::router::{Router, SampleChunk};
 use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec};
 use sparse_hdc_ieeg::coordinator::session::Session;
 use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
-use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
-use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::model::ModelBundle;
 use sparse_hdc_ieeg::params::CHANNELS;
 use sparse_hdc_ieeg::pipeline;
 use sparse_hdc_ieeg::rng::Xoshiro256;
@@ -22,7 +22,7 @@ fn main() {
     let mut rng = Xoshiro256::new(5);
 
     // --- session sample path (LBP + window assembly) ---
-    let mut session = Session::new(1, 1, AssociativeMemory::new(Hv::zero(), Hv::ones()), 130, 1);
+    let mut session = Session::new(1, 1, PublishedModel::placeholder(), 1);
     let mut sample = [0f32; CHANNELS];
     b.bench_throughput("session/push-sample", 1.0, || {
         for (i, s) in sample.iter_mut().enumerate() {
@@ -34,13 +34,7 @@ fn main() {
     // --- router dispatch ---
     let mut router = Router::new();
     for id in 1..=8u64 {
-        router.add_session(Session::new(
-            id,
-            id as u32,
-            AssociativeMemory::new(Hv::zero(), Hv::ones()),
-            130,
-            1,
-        ));
+        router.add_session(Session::new(id, id as u32, PublishedModel::placeholder(), 1));
     }
     let chunk = SampleChunk {
         session_id: 4,
@@ -70,24 +64,23 @@ fn main() {
         ..Default::default()
     };
     let cfg = ClassifierConfig::optimized();
-    let specs: Vec<(u32, AssociativeMemory, sparse_hdc_ieeg::data::synth::Record)> = (1..=2u32)
+    let specs: Vec<(u32, ModelBundle, sparse_hdc_ieeg::data::synth::Record)> = (1..=2u32)
         .map(|pid| {
             let p = SynthPatient::generate(&synth, pid);
             let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-            let am = pipeline::train_on_record(&mut enc, p.train_record(), cfg.train_density);
-            (pid, am, p.records[1].clone())
+            let bundle = pipeline::train_on_record(&mut enc, p.train_record(), &cfg);
+            (pid, bundle, p.records[1].clone())
         })
         .collect();
     let samples_per_run: f64 = specs.iter().map(|(_, _, r)| r.num_samples() as f64).sum();
     b.bench_throughput("coordinator/stream-2-patients (samples/s)", samples_per_run, || {
         let streams: Vec<StreamSpec> = specs
             .iter()
-            .map(|(pid, am, rec)| StreamSpec {
+            .map(|(pid, bundle, rec)| StreamSpec {
                 session_id: *pid as u64,
                 patient_id: *pid,
                 record: rec.clone(),
-                am: am.clone(),
-                threshold: cfg.temporal_threshold,
+                bundle: bundle.clone(),
             })
             .collect();
         let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);

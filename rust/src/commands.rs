@@ -139,7 +139,8 @@ pub fn gen_data(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     Ok(())
 }
 
-/// `repro train --data DIR --patient ID [--variant V] [--max-density D]`
+/// `repro train --data DIR --patient ID [--variant V] [--max-density D]
+/// [--save FILE] [--retrain-epochs N]`
 pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&[
         "data",
@@ -150,6 +151,8 @@ pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "spatial-threshold",
         "seed",
         "out",
+        "save",
+        "retrain-epochs",
     ])?;
     let data = PathBuf::from(args.require("data")?);
     let pid: u32 = args.get_parse("patient", 1u32)?;
@@ -166,20 +169,66 @@ pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     }
 
     let mut enc = sparse_hdc_ieeg::hdc::classifier::make_encoder(variant, cfg.clone());
-    let am = pipeline::train_on_record(enc.as_mut(), &records[0], cfg.train_density);
+    let mut bundle = pipeline::train_on_record(enc.as_mut(), &records[0], &cfg);
+    bundle.provenance.patient_id = pid;
     println!(
         "trained {} on patient {pid} record 0: class densities interictal {:.1}% ictal {:.1}%",
         variant.name(),
-        am.classes[0].density() * 100.0,
-        am.classes[1].density() * 100.0
+        bundle.am.classes[0].density() * 100.0,
+        bundle.am.classes[1].density() * 100.0
     );
+
+    // Optional iterative refinement before saving (Pale et al.): re-bundle
+    // misclassified training windows, keep the better model version.
+    let retrain_epochs: usize = args.get_parse("retrain-epochs", 0usize)?;
+    if retrain_epochs > 0 {
+        ensure!(
+            variant.is_sparse(),
+            "online retraining targets the sparse design points"
+        );
+        let opts = pipeline::RetrainOptions {
+            max_epochs: retrain_epochs,
+            ..Default::default()
+        };
+        let (next, report) = pipeline::retrain_bundle(&bundle, &records[0], &opts);
+        println!(
+            "online retrain (≤{retrain_epochs} epochs): training-window errors {} -> {} \
+             — saving model v{}",
+            report.initial_errors, report.best_errors, next.version
+        );
+        bundle = next;
+    }
+
+    if let Some(path) = args.get("save") {
+        let bytes = bundle.to_bytes();
+        std::fs::write(path, &bytes)
+            .with_context(|| format!("write model bundle {path}"))?;
+        println!(
+            "model bundle v{} written to {path} ({} bytes)",
+            bundle.version,
+            bytes.len()
+        );
+    }
     if let Some(out) = args.get("out") {
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(&am.classes[0].to_bytes());
-        bytes.extend_from_slice(&am.classes[1].to_bytes());
+        bytes.extend_from_slice(&bundle.am.classes[0].to_bytes());
+        bytes.extend_from_slice(&bundle.am.classes[1].to_bytes());
         std::fs::write(out, &bytes)?;
-        println!("AM written to {out} ({} bytes)", bytes.len());
+        println!("raw AM written to {out} ({} bytes)", bytes.len());
     }
+    Ok(())
+}
+
+/// `repro model-info <bundle.hdcm>` — inspect a saved model bundle.
+pub fn model_info(args: &Args) -> sparse_hdc_ieeg::Result<()> {
+    args.check_known(&[])?;
+    ensure!(
+        args.positional.len() == 1,
+        "usage: repro model-info <bundle.hdcm>"
+    );
+    let path = std::path::Path::new(&args.positional[0]);
+    let bundle = sparse_hdc_ieeg::hdc::model::ModelBundle::load(path)?;
+    println!("{}", bundle.describe());
     Ok(())
 }
 

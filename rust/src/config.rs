@@ -3,11 +3,14 @@
 //!
 //! Parses a TOML subset sufficient for deployment configs: `[section]`
 //! headers, `key = value` with string / integer / float / boolean values,
-//! `#` comments. Lookup is by `"section.key"`. A typed view
+//! `#` comments (quote-aware: a `#` inside a quoted value is data, not a
+//! comment). Lookup is by `"section.key"`. A typed view
 //! ([`SystemConfig`]) maps the file onto the coordinator/classifier
-//! options, layered as defaults → file → CLI overrides.
+//! options, layered as defaults → file → CLI overrides — and **rejects
+//! unrecognized keys**, so a typo like `cordinator.workers` fails with
+//! the list of known keys instead of silently deploying defaults.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 use crate::error::Context;
@@ -15,6 +18,43 @@ use crate::{bail, err};
 
 use crate::hdc::classifier::{ClassifierConfig, Variant};
 use crate::params::IM_SEED;
+
+/// Strip a trailing `#` comment, honouring quoted values: a `#` inside
+/// a quoted value (`key = "a#b"`) is data, not a comment. Only a quote
+/// that *opens the value* (first character after `=`) delimits — an
+/// apostrophe inside a bare value or a comment (`dir = /o'brien # x`)
+/// stays plain text, so it cannot swallow the comment marker.
+fn strip_comment(line: &str) -> &str {
+    let hash = line.find('#');
+    let eq = line.find('=');
+    match (hash, eq) {
+        (None, _) => line,
+        (Some(h), None) => &line[..h],
+        // `#` before any `=`: the assignment (if any) is itself comment.
+        (Some(h), Some(e)) if h < e => &line[..h],
+        (Some(_), Some(e)) => {
+            let value = &line[e + 1..];
+            let vstart = e + 1 + (value.len() - value.trim_start().len());
+            let rest = &line[vstart..];
+            if let Some(q @ ('"' | '\'')) = rest.chars().next() {
+                // Quoted value: the comment can only start after the
+                // closing quote (both quote chars are 1 byte).
+                if let Some(close) = rest[1..].find(q) {
+                    let after = vstart + 1 + close + 1;
+                    return match line[after..].find('#') {
+                        Some(h) => &line[..after + h],
+                        None => line,
+                    };
+                }
+                // Unterminated quote: fall through to the bare-value rule.
+            }
+            match line[vstart..].find('#') {
+                Some(h) => &line[..vstart + h],
+                None => line,
+            }
+        }
+    }
+}
 
 /// A parsed flat config: `"section.key" → raw string value`.
 #[derive(Debug, Clone, Default)]
@@ -27,7 +67,7 @@ impl ConfigFile {
         let mut values = BTreeMap::new();
         let mut section = String::new();
         for (lineno, raw) in text.lines().enumerate() {
-            let line = raw.split('#').next().unwrap_or("").trim();
+            let line = strip_comment(raw).trim();
             if line.is_empty() {
                 continue;
             }
@@ -85,6 +125,54 @@ impl ConfigFile {
     }
 }
 
+/// A [`ConfigFile`] view that records every key it is asked for, so the
+/// typed loader can reject keys nothing consumed (typo detection).
+struct TrackedConfig<'a> {
+    file: &'a ConfigFile,
+    consumed: BTreeSet<&'static str>,
+}
+
+impl<'a> TrackedConfig<'a> {
+    fn new(file: &'a ConfigFile) -> Self {
+        TrackedConfig {
+            file,
+            consumed: BTreeSet::new(),
+        }
+    }
+
+    fn get(&mut self, key: &'static str) -> Option<&'a str> {
+        self.consumed.insert(key);
+        self.file.get(key)
+    }
+
+    fn get_parse<T: std::str::FromStr>(&mut self, key: &'static str, default: T) -> crate::Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.consumed.insert(key);
+        self.file.get_parse(key, default)
+    }
+
+    /// Error actionably on any file key no loader consumed.
+    fn finish(self) -> crate::Result<()> {
+        let unknown: Vec<&str> = self
+            .file
+            .keys()
+            .filter(|k| !self.consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        let known: Vec<&str> = self.consumed.iter().copied().collect();
+        bail!(
+            "unrecognized config key{} {} — known keys: {}",
+            if unknown.len() == 1 { "" } else { "s" },
+            unknown.join(", "),
+            known.join(", ")
+        )
+    }
+}
+
 /// Typed system configuration used by the `repro` binary and the
 /// coordinator.
 #[derive(Debug, Clone)]
@@ -106,6 +194,12 @@ pub struct SystemConfig {
     /// Windows per engine micro-batch submitted by a session (1 = submit
     /// every window immediately; results are bit-identical at any value).
     pub batch_windows: usize,
+    /// Saved model bundle to deploy (`[model] path`); serving skips
+    /// startup retraining when set.
+    pub model_path: Option<String>,
+    /// Background online-retraining epochs per patient during serving
+    /// (`[model] retrain_epochs`; 0 = off).
+    pub retrain_epochs: usize,
 }
 
 impl Default for SystemConfig {
@@ -119,17 +213,21 @@ impl Default for SystemConfig {
             workers: 2,
             queue_depth: 64,
             batch_windows: 4,
+            model_path: None,
+            retrain_epochs: 0,
         }
     }
 }
 
 impl SystemConfig {
-    /// Layer file values over the defaults.
+    /// Layer file values over the defaults. Every key the file holds must
+    /// be one this loader reads — anything else errors with the list of
+    /// known keys.
     pub fn from_file(file: &ConfigFile) -> crate::Result<Self> {
         let mut cfg = SystemConfig::default();
+        let mut file = TrackedConfig::new(file);
         if let Some(v) = file.get("system.variant") {
-            cfg.variant = Variant::from_name(v)
-                .ok_or_else(|| err!("unknown variant {v:?}"))?;
+            cfg.variant = Variant::from_name(v).ok_or_else(|| err!("unknown variant {v:?}"))?;
         }
         cfg.classifier.seed = file.get_parse("classifier.seed", IM_SEED)?;
         cfg.classifier.spatial_threshold =
@@ -149,6 +247,9 @@ impl SystemConfig {
         cfg.workers = file.get_parse("coordinator.workers", cfg.workers)?;
         cfg.queue_depth = file.get_parse("coordinator.queue_depth", cfg.queue_depth)?;
         cfg.batch_windows = file.get_parse("coordinator.batch_windows", cfg.batch_windows)?;
+        cfg.model_path = file.get("model.path").map(str::to_string);
+        cfg.retrain_epochs = file.get_parse("model.retrain_epochs", cfg.retrain_epochs)?;
+        file.finish()?;
         Ok(cfg)
     }
 }
@@ -174,6 +275,10 @@ batch_windows = 8
 [runtime]
 use_pjrt = true
 artifacts_dir = "artifacts"
+
+[model]
+path = "models/p1.hdcm"
+retrain_epochs = 3
 "#;
 
     #[test]
@@ -196,6 +301,8 @@ artifacts_dir = "artifacts"
         assert_eq!(cfg.queue_depth, 128);
         assert_eq!(cfg.batch_windows, 8);
         assert!(cfg.use_pjrt);
+        assert_eq!(cfg.model_path.as_deref(), Some("models/p1.hdcm"));
+        assert_eq!(cfg.retrain_epochs, 3);
         // untouched default
         assert_eq!(cfg.alarm_consecutive, 1);
     }
@@ -218,5 +325,53 @@ artifacts_dir = "artifacts"
         let cfg = SystemConfig::from_file(&f).unwrap();
         assert_eq!(cfg.variant, Variant::Optimized);
         assert_eq!(cfg.classifier.temporal_threshold, 130);
+        assert_eq!(cfg.model_path, None);
+        assert_eq!(cfg.retrain_epochs, 0);
+    }
+
+    #[test]
+    fn typo_keys_error_actionably() {
+        // The motivating bug: a typo'd section silently deployed defaults.
+        let f = ConfigFile::parse("[cordinator]\nworkers = 8").unwrap();
+        let err = SystemConfig::from_file(&f).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("cordinator.workers"), "{msg}");
+        assert!(msg.contains("coordinator.workers"), "should list known keys: {msg}");
+
+        // Typo'd key inside a valid section too.
+        let f = ConfigFile::parse("[coordinator]\nworker = 8").unwrap();
+        let err = SystemConfig::from_file(&f).unwrap_err();
+        assert!(format!("{err:#}").contains("coordinator.worker"), "{err:#}");
+
+        // All-known keys still pass.
+        let f = ConfigFile::parse(SAMPLE).unwrap();
+        assert!(SystemConfig::from_file(&f).is_ok());
+    }
+
+    #[test]
+    fn hash_inside_quotes_is_data() {
+        let f = ConfigFile::parse(
+            "[runtime]\nartifacts_dir = \"art#1\"  # and a real comment\n\
+             [model]\npath = 'a#b#c'\n",
+        )
+        .unwrap();
+        assert_eq!(f.get("runtime.artifacts_dir"), Some("art#1"));
+        assert_eq!(f.get("model.path"), Some("a#b#c"));
+        // Unquoted values still treat # as a comment start.
+        let f = ConfigFile::parse("[coordinator]\nworkers = 4 # comment").unwrap();
+        assert_eq!(f.get("coordinator.workers"), Some("4"));
+        // A comment containing an apostrophe must not swallow the line end.
+        let f = ConfigFile::parse("[coordinator]\nworkers = 4 # don't trip\nqueue_depth = 9")
+            .unwrap();
+        assert_eq!(f.get("coordinator.workers"), Some("4"));
+        assert_eq!(f.get("coordinator.queue_depth"), Some("9"));
+        // An apostrophe *inside* a bare value is data and the trailing
+        // comment is still stripped (quotes only delimit when they open
+        // the value).
+        let f = ConfigFile::parse("[runtime]\nartifacts_dir = /data/o'brien # prod box").unwrap();
+        assert_eq!(f.get("runtime.artifacts_dir"), Some("/data/o'brien"));
+        // Comment-only line containing an `=` stays a comment.
+        let f = ConfigFile::parse("# commented = out\n[coordinator]\nworkers = 2").unwrap();
+        assert_eq!(f.get("coordinator.workers"), Some("2"));
     }
 }

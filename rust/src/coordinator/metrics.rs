@@ -97,6 +97,8 @@ pub struct ServingMetrics {
     pub windows_failed: u64,
     pub alarms: u64,
     pub backpressure_stalls: u64,
+    /// Mid-stream model swaps picked up from the registry (all sessions).
+    pub model_swaps: u64,
     pub latency: LatencyHistogram,
 }
 
@@ -117,6 +119,7 @@ impl ServingMetrics {
             windows_failed: 0,
             alarms: 0,
             backpressure_stalls: 0,
+            model_swaps: 0,
             latency: LatencyHistogram::new(),
         }
     }
@@ -135,7 +138,7 @@ impl ServingMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "samples {} | windows {}/{} ({} failed) | alarms {} | stalls {} | \
+            "samples {} | windows {}/{} ({} failed) | alarms {} | stalls {} | model swaps {} | \
              window latency mean {:.2} ms p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms max {:.2} ms | \
              {:.0} windows/s, {:.0} samples/s",
             self.samples_in,
@@ -144,6 +147,7 @@ impl ServingMetrics {
             self.windows_failed,
             self.alarms,
             self.backpressure_stalls,
+            self.model_swaps,
             self.latency.mean_s() * 1e3,
             self.latency.quantile_s(0.50) * 1e3,
             self.latency.quantile_s(0.95) * 1e3,

@@ -7,7 +7,9 @@
 //! into alarm events. The coordinator owns:
 //!
 //! * [`session`] — per-patient state: LBP front-end, window assembly,
-//!   trained AM + threshold, detector state;
+//!   the deployed model version, detector state;
+//! * [`registry`] — patient → published [`crate::hdc::model::ModelBundle`]
+//!   with atomic hot swap (background retrains publish here);
 //! * [`router`] — routes interleaved sample chunks to sessions;
 //! * [`runtime::engine_pool`](crate::runtime::engine_pool) — the engine
 //!   worker threads with bounded queues (backpressure);
@@ -18,6 +20,7 @@
 
 pub mod detector;
 pub mod metrics;
+pub mod registry;
 pub mod router;
 pub mod server;
 pub mod session;

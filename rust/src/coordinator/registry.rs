@@ -1,0 +1,262 @@
+//! Versioned model registry: patient → currently-published model, with
+//! atomic hot swap.
+//!
+//! The registry is the serving-side home of [`ModelBundle`]s. Publishing
+//! wraps the bundle into a [`PublishedModel`] — the bundle plus its
+//! engine-ready [`AmPlane`], built once — and swaps it in under a write
+//! lock. Consumers ([`crate::coordinator::session::Session`]s via the
+//! server loop) hold an `Arc<PublishedModel>` and refresh it per
+//! micro-batch, so a background retrain publishing a new version is
+//! picked up **mid-stream with zero queue drain**:
+//!
+//! * in-flight jobs keep their own `Arc<AmPlane>` (the PR-3 job design),
+//!   so nothing already queued is touched;
+//! * each version owns a *distinct* `AmPlane` allocation, and the engine
+//!   host coalesces jobs only on `Arc` identity — a swap boundary can
+//!   therefore never mix two model versions inside one coalesced
+//!   `run_batch` call (pinned by `engine_pool` and
+//!   `tests/model_lifecycle.rs`);
+//! * versions are monotonically increasing per patient: a stale publish
+//!   (version <= current) is rejected, so a slow retrain can never
+//!   clobber a newer model.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+use crate::ensure;
+use crate::hdc::am::AmPlane;
+use crate::hdc::model::ModelBundle;
+
+/// A bundle as deployed: the artifact plus its decoded engine plane.
+pub struct PublishedModel {
+    pub bundle: ModelBundle,
+    /// Shared with every job submitted against this version ([`Arc`]
+    /// identity doubles as the engine host's coalescing key).
+    pub plane: Arc<AmPlane>,
+}
+
+impl PublishedModel {
+    pub fn new(bundle: ModelBundle) -> PublishedModel {
+        let plane = Arc::new(AmPlane::from_bundle(&bundle));
+        PublishedModel { bundle, plane }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.bundle.version
+    }
+
+    /// The temporal thinning threshold jobs against this model carry.
+    pub fn threshold(&self) -> u16 {
+        self.bundle.config.temporal_threshold
+    }
+
+    /// A version-1 model with trivial class HVs (interictal all-zeros,
+    /// ictal all-ones) under the default optimized config — for tests
+    /// and benchmarks that need *a* deployed model but don't care about
+    /// its contents. Not a serving default: real paths always deploy a
+    /// trained bundle.
+    pub fn placeholder() -> Arc<PublishedModel> {
+        use crate::hdc::am::AssociativeMemory;
+        use crate::hdc::classifier::{ClassifierConfig, Variant};
+        use crate::hdc::hv::Hv;
+        use crate::hdc::model::Provenance;
+        Arc::new(PublishedModel::new(ModelBundle::new(
+            Variant::Optimized,
+            ClassifierConfig::optimized(),
+            AssociativeMemory::new(Hv::zero(), Hv::ones()),
+            Provenance::default(),
+        )))
+    }
+}
+
+/// Patient → current [`PublishedModel`], atomically swappable.
+pub struct ModelRegistry {
+    slots: RwLock<BTreeMap<u32, Arc<PublishedModel>>>,
+    publishes: AtomicU64,
+}
+
+impl Default for ModelRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry {
+            slots: RwLock::new(BTreeMap::new()),
+            publishes: AtomicU64::new(0),
+        }
+    }
+
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<u32, Arc<PublishedModel>>> {
+        self.slots.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn write(&self) -> std::sync::RwLockWriteGuard<'_, BTreeMap<u32, Arc<PublishedModel>>> {
+        self.slots.write().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Publish a new model version for a patient. Fails on a stale
+    /// publish (`bundle.version` not strictly newer than the current
+    /// one), so concurrent retrains cannot roll a patient back.
+    pub fn publish(
+        &self,
+        patient_id: u32,
+        bundle: ModelBundle,
+    ) -> crate::Result<Arc<PublishedModel>> {
+        let model = Arc::new(PublishedModel::new(bundle));
+        let mut slots = self.write();
+        if let Some(current) = slots.get(&patient_id) {
+            ensure!(
+                model.version() > current.version(),
+                "stale publish for patient {patient_id}: version {} <= current {}",
+                model.version(),
+                current.version()
+            );
+        }
+        slots.insert(patient_id, model.clone());
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        Ok(model)
+    }
+
+    /// Publish unless the registry already holds this version or newer;
+    /// returns whichever model is current afterwards. This is how the
+    /// coordinator seeds stream-spec bundles without racing a background
+    /// retrain that may already have published a newer version.
+    pub fn ensure(&self, patient_id: u32, bundle: ModelBundle) -> Arc<PublishedModel> {
+        let mut slots = self.write();
+        if let Some(current) = slots.get(&patient_id) {
+            if current.version() >= bundle.version {
+                return current.clone();
+            }
+        }
+        let model = Arc::new(PublishedModel::new(bundle));
+        slots.insert(patient_id, model.clone());
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+        model
+    }
+
+    /// The currently-published model for a patient.
+    pub fn current(&self, patient_id: u32) -> Option<Arc<PublishedModel>> {
+        self.read().get(&patient_id).cloned()
+    }
+
+    pub fn patients(&self) -> Vec<u32> {
+        self.read().keys().copied().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.read().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.read().is_empty()
+    }
+
+    /// Successful publishes (including the initial ones) — a cheap
+    /// observability counter for serving reports.
+    pub fn publishes(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::am::AssociativeMemory;
+    use crate::hdc::classifier::{ClassifierConfig, Variant};
+    use crate::hdc::hv::Hv;
+    use crate::hdc::model::Provenance;
+
+    fn bundle(version: u64) -> ModelBundle {
+        let mut b = ModelBundle::new(
+            Variant::Optimized,
+            ClassifierConfig::optimized(),
+            AssociativeMemory::new(Hv::zero(), Hv::ones()),
+            Provenance::default(),
+        );
+        b.version = version;
+        b
+    }
+
+    #[test]
+    fn publish_and_lookup() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.current(7).is_none());
+        let m1 = reg.publish(7, bundle(1)).unwrap();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.patients(), vec![7]);
+        let got = reg.current(7).unwrap();
+        assert!(Arc::ptr_eq(&m1, &got));
+        assert_eq!(got.version(), 1);
+        assert_eq!(reg.publishes(), 1);
+    }
+
+    #[test]
+    fn stale_publish_rejected_newer_swaps() {
+        let reg = ModelRegistry::new();
+        reg.publish(3, bundle(2)).unwrap();
+        // Same version and older versions are stale.
+        assert!(reg.publish(3, bundle(2)).is_err());
+        assert!(reg.publish(3, bundle(1)).is_err());
+        assert_eq!(reg.current(3).unwrap().version(), 2);
+        // Strictly newer swaps atomically.
+        let m3 = reg.publish(3, bundle(3)).unwrap();
+        assert!(Arc::ptr_eq(&m3, &reg.current(3).unwrap()));
+        assert_eq!(reg.publishes(), 2);
+    }
+
+    #[test]
+    fn ensure_keeps_the_newer_version() {
+        let reg = ModelRegistry::new();
+        let first = reg.ensure(5, bundle(1));
+        assert_eq!(first.version(), 1);
+        // Re-ensuring the same version keeps the existing Arc.
+        let again = reg.ensure(5, bundle(1));
+        assert!(Arc::ptr_eq(&first, &again));
+        // A newer publish wins over a later ensure of the old version.
+        reg.publish(5, bundle(4)).unwrap();
+        let kept = reg.ensure(5, bundle(1));
+        assert_eq!(kept.version(), 4);
+        // And ensure with a newer version swaps.
+        assert_eq!(reg.ensure(5, bundle(9)).version(), 9);
+    }
+
+    #[test]
+    fn versions_own_distinct_planes() {
+        // The coalescing-safety invariant: two published versions never
+        // share an AmPlane allocation, so jobs against different versions
+        // can never coalesce into one engine call.
+        let reg = ModelRegistry::new();
+        let v1 = reg.publish(1, bundle(1)).unwrap();
+        let v2 = reg.publish(1, bundle(2)).unwrap();
+        assert!(!Arc::ptr_eq(&v1.plane, &v2.plane));
+    }
+
+    #[test]
+    fn concurrent_publish_and_read() {
+        let reg = Arc::new(ModelRegistry::new());
+        std::thread::scope(|scope| {
+            let r = reg.clone();
+            scope.spawn(move || {
+                for v in 1..=50u64 {
+                    let _ = r.publish(1, bundle(v));
+                }
+            });
+            let r = reg.clone();
+            scope.spawn(move || {
+                let mut last = 0;
+                for _ in 0..200 {
+                    if let Some(m) = r.current(1) {
+                        assert!(m.version() >= last, "versions must be monotone");
+                        last = m.version();
+                    }
+                }
+            });
+        });
+        assert_eq!(reg.current(1).unwrap().version(), 50);
+    }
+}

@@ -93,20 +93,14 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hdc::am::AssociativeMemory;
-    use crate::hdc::hv::Hv;
+    use crate::coordinator::registry::PublishedModel;
     use crate::params::FRAMES_PER_PREDICTION;
 
     fn router_with(ids: &[u64]) -> Router {
+        let model = PublishedModel::placeholder();
         let mut r = Router::new();
         for &id in ids {
-            r.add_session(Session::new(
-                id,
-                id as u32,
-                AssociativeMemory::new(Hv::zero(), Hv::ones()),
-                130,
-                1,
-            ));
+            r.add_session(Session::new(id, id as u32, model.clone(), 1));
         }
         r
     }

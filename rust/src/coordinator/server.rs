@@ -16,13 +16,25 @@
 //! engine job (flushed at stream end), and the engine host coalesces
 //! AM-sharing jobs further; predictions are bit-identical at every batch
 //! size — batching changes only when work reaches the engine.
+//!
+//! ## Model lifecycle
+//!
+//! Streams carry [`ModelBundle`]s (not bare AMs): `repro serve` either
+//! one-shot-trains them at startup or loads a saved bundle
+//! (`--model <path>`), publishes them into a [`ModelRegistry`], and each
+//! session re-reads the registry per micro-batch — so a background
+//! retrain ([`crate::pipeline::retrain_bundle`], `--retrain-epochs N`)
+//! that publishes a new version is picked up **mid-stream** without
+//! draining a single queued job.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::cli::Args;
 use crate::config::{ConfigFile, SystemConfig};
 use crate::coordinator::metrics::ServingMetrics;
+use crate::coordinator::registry::ModelRegistry;
 use crate::coordinator::router::{Router, SampleChunk};
 use crate::coordinator::session::Session;
 use crate::data::metrics::{evaluate_record, AlarmPolicy, EvalSummary};
@@ -30,8 +42,8 @@ use crate::data::synth::Record;
 use crate::ensure;
 use crate::err;
 use crate::error::Context;
-use crate::hdc::am::AssociativeMemory;
 use crate::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
+use crate::hdc::model::ModelBundle;
 use crate::params::{CHANNELS, CLASS_ICTAL, CLASS_INTERICTAL, SAMPLE_RATE_HZ};
 use crate::pipeline;
 use crate::runtime::engine_pool::{Completion, EngineHost, EngineSpec, Job};
@@ -76,14 +88,14 @@ fn spawn_host(
     }
 }
 
-/// One patient stream to serve: the session's trained model plus the
-/// record to replay.
+/// One patient stream to serve: the model bundle to deploy (published
+/// into the registry as this patient's initial version) plus the record
+/// to replay.
 pub struct StreamSpec {
     pub session_id: u64,
     pub patient_id: u32,
     pub record: Record,
-    pub am: AssociativeMemory,
-    pub threshold: u16,
+    pub bundle: ModelBundle,
 }
 
 /// Per-session outcome of a serving run.
@@ -91,7 +103,13 @@ pub struct SessionReport {
     pub session_id: u64,
     pub patient_id: u32,
     pub windows: u64,
+    /// Model version deployed when the stream ended.
+    pub model_version: u64,
+    /// Mid-stream model swaps the session picked up.
+    pub model_swaps: u64,
     pub alarms: Vec<crate::coordinator::detector::AlarmEvent>,
+    /// Per-window predictions, in window order.
+    pub predictions: Vec<crate::data::metrics::WindowPrediction>,
     pub eval: crate::data::metrics::RecordOutcome,
 }
 
@@ -130,8 +148,30 @@ impl Coordinator {
     }
 
     /// Serve a set of patient streams to completion and score the
-    /// detections against the records' annotations.
+    /// detections against the records' annotations. Stream bundles are
+    /// published into a private registry; use [`Self::run_with_registry`]
+    /// to share the registry with background publishers.
     pub fn run(&self, streams: Vec<StreamSpec>) -> crate::Result<StreamReport> {
+        self.run_with_registry(streams, &ModelRegistry::new(), |_| {})
+    }
+
+    /// [`Self::run`] against a caller-owned [`ModelRegistry`]: each
+    /// spec's bundle is seeded via [`ModelRegistry::ensure`] (a newer
+    /// version already published wins), and sessions re-read the
+    /// registry per micro-batch, so anything publishing into `registry`
+    /// while this runs — a background retrain thread, or the `tick`
+    /// hook — hot-swaps models at a batch boundary with zero queue
+    /// drain.
+    ///
+    /// `tick(windows_submitted)` runs after every routed source chunk
+    /// (deterministically interleaved with submissions — the tests pin
+    /// swap boundaries through it).
+    pub fn run_with_registry(
+        &self,
+        streams: Vec<StreamSpec>,
+        registry: &ModelRegistry,
+        mut tick: impl FnMut(u64),
+    ) -> crate::Result<StreamReport> {
         ensure!(!streams.is_empty(), "no streams to serve");
         let mut metrics = ServingMetrics::new();
         let host = spawn_host(
@@ -140,40 +180,45 @@ impl Coordinator {
             self.system.queue_depth,
         )?;
 
-        // Build sessions + retain records for scoring/pacing.
-        let mut router = Router::new();
-        let mut records: std::collections::BTreeMap<u64, Record> = Default::default();
-        for s in &streams {
-            let mut cfg_threshold = s.threshold;
-            if cfg_threshold == 0 {
-                cfg_threshold = self.system.classifier.temporal_threshold;
-            }
-            let mut session = Session::new(
-                s.session_id,
-                s.patient_id,
-                s.am.clone(),
-                cfg_threshold,
-                self.system.alarm_consecutive,
-            );
-            session.set_batch_windows(self.batch_windows);
-            router.add_session(session);
-            records.insert(s.session_id, s.record.clone());
-        }
-
         // Source cursors.
         struct Cursor {
             session_id: u64,
             pos: usize,
             len: usize,
         }
-        let mut cursors: Vec<Cursor> = streams
-            .iter()
-            .map(|s| Cursor {
+
+        // Build sessions + retain records for scoring/pacing.
+        let mut router = Router::new();
+        let mut records: std::collections::BTreeMap<u64, Record> = Default::default();
+        let mut cursors: Vec<Cursor> = Vec::with_capacity(streams.len());
+        for s in streams {
+            // Sessions of one patient share the registry slot by design;
+            // a *different* bundle at the same version would be silently
+            // dropped by `ensure`, so reject the ambiguity instead of
+            // serving the wrong model (compare two models by giving them
+            // distinct versions, or serve them as distinct patient ids).
+            if let Some(current) = registry.current(s.patient_id) {
+                ensure!(
+                    current.version() != s.bundle.version || current.bundle == s.bundle,
+                    "patient {} already has a different model published at version {} — \
+                     one model per (patient, version); bump the version or use distinct \
+                     patient ids",
+                    s.patient_id,
+                    s.bundle.version
+                );
+            }
+            let model = registry.ensure(s.patient_id, s.bundle);
+            let mut session =
+                Session::new(s.session_id, s.patient_id, model, self.system.alarm_consecutive);
+            session.set_batch_windows(self.batch_windows);
+            router.add_session(session);
+            cursors.push(Cursor {
                 session_id: s.session_id,
                 pos: 0,
                 len: s.record.num_samples(),
-            })
-            .collect();
+            });
+            records.insert(s.session_id, s.record);
+        }
 
         let t0 = Instant::now();
         let mut ready = Vec::new();
@@ -219,13 +264,21 @@ impl Coordinator {
                     }
                 }
                 for b in ready.drain(..) {
-                    let session = router.session(b.session_id).expect("routed");
+                    let session = router.session_mut(b.session_id).expect("routed");
+                    // Pick up a hot-swapped model for this and later
+                    // batches; jobs already in flight keep their own Arc.
+                    // An encoder-incompatible publish fails the run loudly
+                    // instead of scoring against the wrong item memory.
+                    if session.refresh_model(registry)? {
+                        metrics.model_swaps += 1;
+                    }
+                    let model = session.model();
                     pending_jobs.push(Job {
                         tag: b.session_id,
                         seq: b.seq0,
                         codes: b.codes,
-                        am: session.am.clone(),
-                        thresholds: vec![session.threshold as i32; b.windows],
+                        am: model.plane.clone(),
+                        thresholds: vec![model.threshold() as i32; b.windows],
                         submitted: Instant::now(),
                     });
                 }
@@ -245,6 +298,7 @@ impl Coordinator {
                         }
                     }
                 }
+                tick(metrics.windows_submitted);
                 // Opportunistically drain completions.
                 while let Ok(c) = host.completions.try_recv() {
                     in_flight -= 1;
@@ -280,7 +334,10 @@ impl Coordinator {
                 session_id: s.id,
                 patient_id: s.patient_id,
                 windows: s.windows(),
+                model_version: s.model().version(),
+                model_swaps: s.model_swaps,
                 alarms: s.detector.events.clone(),
+                predictions: s.predictions.clone(),
                 eval,
             });
         }
@@ -320,16 +377,20 @@ impl Coordinator {
     }
 }
 
-/// One session's setup: load the patient, one-shot-train on record 0,
-/// and keep only the record to stream — returning the full record set
-/// from N parallel setups would hold the whole cohort in memory at
-/// once (the serial loop peaked at one patient).
+/// One session's setup: load the patient, deploy either the saved
+/// bundle or a fresh one-shot model trained on record 0, and keep only
+/// the record to stream — returning the full record set from N parallel
+/// setups would hold the whole cohort in memory at once (the serial
+/// loop peaked at one patient). `keep_train` additionally retains
+/// record 0 for a background retrain pass.
 fn setup_session(
     data: &std::path::Path,
     pid: u32,
     record_idx: usize,
     cfg: &ClassifierConfig,
-) -> crate::Result<(u32, Record, AssociativeMemory)> {
+    keep_train: bool,
+    saved: Option<&ModelBundle>,
+) -> crate::Result<(u32, Record, ModelBundle, Option<Record>)> {
     let mut records = crate::data::dataset::load_patient(data, pid)
         .with_context(|| format!("load patient {pid}"))?;
     ensure!(
@@ -337,13 +398,47 @@ fn setup_session(
         "patient {pid} has {} records, need index {record_idx}",
         records.len()
     );
-    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-    let am = pipeline::train_on_record(&mut enc, &records[0], cfg.train_density);
-    Ok((pid, records.swap_remove(record_idx), am))
+    let bundle = match saved {
+        // Saved bundle: no startup retraining.
+        Some(bundle) => bundle.clone(),
+        None => {
+            let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+            let mut bundle = pipeline::train_on_record(&mut enc, &records[0], cfg);
+            bundle.provenance.patient_id = pid;
+            bundle
+        }
+    };
+    // Clone before the swap_remove: streaming record 0 itself must not
+    // silently retrain on a different record.
+    let train = if keep_train { Some(records[0].clone()) } else { None };
+    let stream = records.swap_remove(record_idx);
+    Ok((pid, stream, bundle, train))
 }
 
-/// `repro serve --data DIR [--patients LIST] [--use-pjrt] [--realtime]
-/// [--config FILE] [--record K]`
+/// Load a saved model bundle for serving: the bundle's own encoder
+/// config replaces the system classifier config (engines must encode
+/// with exactly what the model was trained against).
+fn deploy_saved_bundle(path: &str, system: &mut SystemConfig) -> crate::Result<ModelBundle> {
+    let bundle = ModelBundle::load(std::path::Path::new(path))?;
+    ensure!(
+        bundle.variant == Variant::Optimized,
+        "serve deploys the sparse-optimized design point, bundle is {}",
+        bundle.variant.name()
+    );
+    if system.classifier != bundle.config {
+        println!(
+            "using the bundle's encoder config (seed {:#x}, temporal threshold {}) \
+             over the system config",
+            bundle.config.seed, bundle.config.temporal_threshold
+        );
+    }
+    system.classifier = bundle.config.clone();
+    Ok(bundle)
+}
+
+/// `repro serve --data DIR [--patients LIST] [--model FILE]
+/// [--retrain-epochs N] [--use-pjrt] [--realtime] [--config FILE]
+/// [--record K]`
 pub fn serve_command(args: &Args) -> crate::Result<()> {
     args.check_known(&[
         "data",
@@ -355,6 +450,8 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "artifacts",
         "chunk",
         "batch",
+        "model",
+        "retrain-epochs",
     ])?;
     let data = PathBuf::from(args.require("data")?);
     let mut system = match args.get("config") {
@@ -367,6 +464,7 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     }
     let artifacts = args.get_str("artifacts", &system.artifacts_dir);
     let record_idx: usize = args.get_parse("record", 1usize)?;
+    let retrain_epochs: usize = args.get_parse("retrain-epochs", system.retrain_epochs)?;
 
     let patient_ids: Vec<u32> = {
         let list = args.get_list("patients");
@@ -379,45 +477,102 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         }
     };
 
-    // Train per patient (one-shot on record 0), then stream `record_idx`.
-    // Session setup is embarrassingly parallel (each patient loads + trains
-    // independently); the evalpool keeps session ids in patient-list order.
-    // A failure flag restores fail-fast: workers skip launching new
-    // load+train passes (returning `None`) once any setup errors, and the
-    // drain below surfaces the first *real* error — a worker that races
-    // the flag leaves only a skipped slot, never a masking placeholder.
+    // The model per patient: either load one saved bundle for every
+    // served patient (`--model`, skipping startup retraining entirely),
+    // or one-shot-train per patient. Setup is embarrassingly parallel
+    // (each patient loads + trains independently); the evalpool keeps
+    // session ids in patient-list order. A failure flag restores
+    // fail-fast: workers skip launching new load+train passes (returning
+    // `None`) once any setup errors, and the drain below surfaces the
+    // first *real* error — a worker that races the flag leaves only a
+    // skipped slot, never a masking placeholder.
+    let model_path = args
+        .get("model")
+        .map(str::to_string)
+        .or_else(|| system.model_path.clone());
+    let saved_bundle = match &model_path {
+        Some(path) => {
+            let bundle = deploy_saved_bundle(path, &mut system)?;
+            println!("loaded model bundle from {path}:\n{}", bundle.describe());
+            Some(bundle)
+        }
+        None => None,
+    };
     let classifier_cfg = &system.classifier;
+    let keep_train = retrain_epochs > 0;
+    let saved_ref = &saved_bundle;
     let failed = std::sync::atomic::AtomicBool::new(false);
     let specs = crate::evalpool::map(&patient_ids, |&pid| {
         if failed.load(std::sync::atomic::Ordering::Relaxed) {
             return None;
         }
-        let spec = setup_session(&data, pid, record_idx, classifier_cfg);
+        let spec = setup_session(
+            &data,
+            pid,
+            record_idx,
+            classifier_cfg,
+            keep_train,
+            saved_ref.as_ref(),
+        );
         if spec.is_err() {
             failed.store(true, std::sync::atomic::Ordering::Relaxed);
         }
         Some(spec)
     });
+
+    let registry = Arc::new(ModelRegistry::new());
     let mut streams = Vec::new();
+    let mut retrain_inputs: Vec<(u32, Record, ModelBundle)> = Vec::new();
     for (i, spec) in specs.into_iter().enumerate() {
-        let (pid, record, am) = match spec {
+        let (pid, record, bundle, train) = match spec {
             Some(spec) => spec?,
             // Skipped after another slot's failure; that slot holds the
             // real error and the loop returns it when it gets there.
             None => continue,
         };
         println!(
-            "patient {pid}: trained (class densities {:.1}% / {:.1}%), streaming record {record_idx}",
-            am.classes[0].density() * 100.0,
-            am.classes[1].density() * 100.0
+            "patient {pid}: model v{} (class densities {:.1}% / {:.1}%), streaming record {record_idx}{}",
+            bundle.version,
+            bundle.am.classes[0].density() * 100.0,
+            bundle.am.classes[1].density() * 100.0,
+            if model_path.is_some() { " [saved bundle — no startup retraining]" } else { "" }
         );
+        // Publish v1 *before* any background retrain can publish v2, so
+        // version monotonicity holds per patient.
+        registry.ensure(pid, bundle.clone());
+        if let Some(train) = train {
+            retrain_inputs.push((pid, train, bundle.clone()));
+        }
         streams.push(StreamSpec {
             session_id: i as u64 + 1,
             patient_id: pid,
             record,
-            am,
-            threshold: classifier_cfg.temporal_threshold,
+            bundle,
         });
+    }
+
+    // Background retrain: derive the next model version per patient while
+    // the streams are being served; sessions hot-swap at the next
+    // micro-batch after the publish.
+    let mut retrainers = Vec::new();
+    for (pid, train, base) in retrain_inputs {
+        let reg = registry.clone();
+        retrainers.push(std::thread::spawn(move || {
+            let opts = pipeline::RetrainOptions {
+                max_epochs: retrain_epochs,
+                ..Default::default()
+            };
+            let (next, report) = pipeline::retrain_bundle(&base, &train, &opts);
+            let version = next.version;
+            match reg.publish(pid, next) {
+                Ok(_) => format!(
+                    "patient {pid}: published model v{version} \
+                     (training-window errors {} -> {})",
+                    report.initial_errors, report.best_errors
+                ),
+                Err(e) => format!("patient {pid}: publish of v{version} skipped: {e:#}"),
+            }
+        }));
     }
 
     let backend = if system.use_pjrt {
@@ -436,14 +591,26 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     coordinator.batch_windows = args.get_parse("batch", default_batch)?.max(1);
 
     println!(
-        "serving {} sessions ({} backend, {}, chunk {} samples, batch {} windows)…",
+        "serving {} sessions ({} backend, {}, chunk {} samples, batch {} windows{})…",
         streams.len(),
         if coordinator_is_pjrt(&coordinator) { "pjrt" } else { "native" },
         if coordinator.realtime { "realtime pacing" } else { "max speed" },
         coordinator.chunk_samples,
-        coordinator.batch_windows
+        coordinator.batch_windows,
+        if retrain_epochs > 0 {
+            format!(", background retrain x{retrain_epochs} epochs")
+        } else {
+            String::new()
+        }
     );
-    let report = coordinator.run(streams)?;
+    let report = coordinator.run_with_registry(streams, &registry, |_| {})?;
+
+    for handle in retrainers {
+        match handle.join() {
+            Ok(msg) => println!("{msg}"),
+            Err(_) => eprintln!("a retrain thread panicked"),
+        }
+    }
 
     for s in &report.sessions {
         let delay = s
@@ -452,9 +619,12 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
             .map(|d| format!("{d:.2} s"))
             .unwrap_or_else(|| "—".into());
         println!(
-            "session {} (patient {}): {} windows, {} alarms, detected={:?}, delay {}, FA {}",
+            "session {} (patient {}, model v{}, {} swaps): {} windows, {} alarms, \
+             detected={:?}, delay {}, FA {}",
             s.session_id,
             s.patient_id,
+            s.model_version,
+            s.model_swaps,
             s.windows,
             s.alarms.len(),
             s.eval.detected,
@@ -500,13 +670,12 @@ mod tests {
                 let p = SynthPatient::generate(&synth, i as u32 + 1);
                 let cfg = ClassifierConfig::optimized();
                 let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-                let am = pipeline::train_on_record(&mut enc, &p.records[0], cfg.train_density);
+                let bundle = pipeline::train_on_record(&mut enc, &p.records[0], &cfg);
                 StreamSpec {
                     session_id: i as u64 + 1,
                     patient_id: i as u32 + 1,
                     record: p.records[1].clone(),
-                    am,
-                    threshold: cfg.temporal_threshold,
+                    bundle,
                 }
             })
             .collect()
@@ -523,12 +692,16 @@ mod tests {
         let report = coordinator.run(streams).unwrap();
         assert_eq!(report.metrics.windows_completed, expected_windows);
         assert_eq!(report.metrics.windows_failed, 0);
+        assert_eq!(report.metrics.model_swaps, 0, "nothing published mid-run");
         assert_eq!(report.sessions.len(), 2);
         assert_eq!(report.summary.seizures, 2);
         // The synthetic seizures are strong; the native path must detect.
         assert!(report.summary.detected >= 1);
         for s in &report.sessions {
             assert!(s.windows > 0);
+            assert_eq!(s.model_version, 1);
+            assert_eq!(s.model_swaps, 0);
+            assert_eq!(s.predictions.len(), s.windows as usize);
         }
     }
 
@@ -538,17 +711,13 @@ mod tests {
         // offline pipeline produces for the same record + model.
         let streams = tiny_streams(1);
         let record = streams[0].record.clone();
-        let am = streams[0].am.clone();
+        let am = streams[0].bundle.am.clone();
         let cfg = ClassifierConfig::optimized();
 
         let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
         let report = coordinator.run(streams).unwrap();
 
-        let mut clf = crate::hdc::classifier::Classifier::new(
-            Variant::Optimized,
-            cfg,
-            am,
-        );
+        let mut clf = crate::hdc::classifier::Classifier::new(Variant::Optimized, cfg, am);
         let offline = pipeline::run_on_record(&mut clf, &record);
         let streamed = &report.sessions[0];
         assert_eq!(streamed.windows as usize, offline.len());

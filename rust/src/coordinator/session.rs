@@ -1,16 +1,24 @@
 //! Per-patient session state: LBP front-end → frame assembly → window
-//! batching, plus the trained model (AM + threshold) and detector.
+//! batching, plus the deployed model (a registry-swappable
+//! [`PublishedModel`]) and detector.
 //!
 //! Sessions emit [`ReadyBatch`]es: up to `batch_windows` consecutive
 //! prediction windows coalesced into one engine submission (micro-batch).
 //! The default batch size is 1, so the unbatched behaviour is the N=1
 //! degenerate case of the same path.
+//!
+//! The model is *not* baked into the session: the server refreshes it
+//! from the [`ModelRegistry`] at job-creation time
+//! ([`Session::refresh_model`]), so a background retrain that publishes
+//! a new version takes effect from the next micro-batch — no queue
+//! drain, no session restart; jobs already in flight keep the old
+//! version's `Arc<AmPlane>`.
 
 use std::sync::Arc;
 
 use crate::coordinator::detector::Detector;
+use crate::coordinator::registry::{ModelRegistry, PublishedModel};
 use crate::data::metrics::WindowPrediction;
-use crate::hdc::am::{AmPlane, AssociativeMemory};
 use crate::lbp::LbpFrontend;
 use crate::params::{CHANNELS, FRAMES_PER_PREDICTION};
 
@@ -40,23 +48,19 @@ pub struct Session {
     batch: Vec<u8>,
     batch_seq0: u64,
     batch_count: usize,
-    /// Trained model deployed on this session, in both engine
-    /// representations (shared with every job this session submits).
-    pub am: Arc<AmPlane>,
-    pub threshold: u16,
+    /// Model currently deployed on this session (AM plane + threshold +
+    /// version). Swapped in-place by [`Self::refresh_model`]; shared with
+    /// every job this session submits.
+    model: Arc<PublishedModel>,
+    /// Mid-stream model swaps this session has picked up.
+    pub model_swaps: u64,
     pub detector: Detector,
     /// Collected predictions (for offline scoring after the stream ends).
     pub predictions: Vec<WindowPrediction>,
 }
 
 impl Session {
-    pub fn new(
-        id: u64,
-        patient_id: u32,
-        am: AssociativeMemory,
-        threshold: u16,
-        consecutive: usize,
-    ) -> Self {
+    pub fn new(id: u64, patient_id: u32, model: Arc<PublishedModel>, consecutive: usize) -> Self {
         Session {
             id,
             patient_id,
@@ -68,11 +72,56 @@ impl Session {
             batch: Vec::new(),
             batch_seq0: 0,
             batch_count: 0,
-            am: Arc::new(AmPlane::from_memory(&am)),
-            threshold,
+            model,
+            model_swaps: 0,
             detector: Detector::new(consecutive),
             predictions: Vec::new(),
         }
+    }
+
+    /// The deployed model (current version).
+    pub fn model(&self) -> &Arc<PublishedModel> {
+        &self.model
+    }
+
+    /// Pick up the registry's current model for this patient if it is a
+    /// different published instance. Returns `Ok(true)` on a swap. Takes
+    /// effect for batches submitted *after* the call — in-flight jobs
+    /// keep their own `Arc` to the old plane.
+    ///
+    /// A published model trained under a different *encoder identity*
+    /// (variant, IM seed, spatial threshold) than the deployed one is
+    /// refused with an error: the serving engine's encoder is fixed at
+    /// spawn, so swapping in such a model would silently score windows
+    /// encoded with the wrong item memory. (The temporal threshold rides
+    /// on every job, so it may change freely across versions.)
+    pub fn refresh_model(&mut self, registry: &ModelRegistry) -> crate::Result<bool> {
+        let Some(current) = registry.current(self.patient_id) else {
+            return Ok(false);
+        };
+        if Arc::ptr_eq(&current, &self.model) {
+            return Ok(false);
+        }
+        let old = &self.model.bundle;
+        let new = &current.bundle;
+        crate::ensure!(
+            new.variant == old.variant
+                && new.config.seed == old.config.seed
+                && new.config.spatial_threshold == old.config.spatial_threshold,
+            "session {}: published model v{} ({}, seed {:#x}, spatial {}) does not match \
+             the deployed encoder ({}, seed {:#x}, spatial {}) — refusing the hot swap",
+            self.id,
+            new.version,
+            new.variant.name(),
+            new.config.seed,
+            new.config.spatial_threshold,
+            old.variant.name(),
+            old.config.seed,
+            old.config.spatial_threshold
+        );
+        self.model = current;
+        self.model_swaps += 1;
+        Ok(true)
     }
 
     /// Set the micro-batch size (clamped to ≥ 1). Takes effect from the
@@ -148,7 +197,7 @@ impl Session {
         self.next_seq
     }
 
-    /// Reset stream state (new record), keeping the trained model.
+    /// Reset stream state (new record), keeping the deployed model.
     pub fn reset_stream(&mut self) {
         self.lbp.reset();
         self.window.clear();
@@ -164,10 +213,9 @@ impl Session {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hdc::hv::Hv;
 
     fn session() -> Session {
-        Session::new(1, 11, AssociativeMemory::new(Hv::zero(), Hv::ones()), 130, 1)
+        Session::new(1, 11, PublishedModel::placeholder(), 1)
     }
 
     #[test]
@@ -233,10 +281,66 @@ mod tests {
             s.push_sample(&sample);
         }
         s.complete(0, true, 1);
-        let am = s.am.clone();
+        let m = s.model().clone();
         s.reset_stream();
         assert_eq!(s.windows(), 0);
         assert!(s.predictions.is_empty());
-        assert!(Arc::ptr_eq(&am, &s.am));
+        assert!(Arc::ptr_eq(&m, s.model()));
+    }
+
+    #[test]
+    fn refresh_model_swaps_only_on_new_versions() {
+        let registry = ModelRegistry::new();
+        let mut s = session();
+        // No entry for this patient: nothing to swap.
+        assert!(!s.refresh_model(&registry).unwrap());
+        assert_eq!(s.model_swaps, 0);
+        assert_eq!(s.model().version(), 1);
+
+        // A published model for the session's patient is picked up once.
+        registry
+            .publish(11, {
+                let mut b = s.model().bundle.clone();
+                b.version = 2;
+                b
+            })
+            .unwrap();
+        assert!(s.refresh_model(&registry).unwrap());
+        assert!(!s.refresh_model(&registry).unwrap(), "same instance: no re-swap");
+        assert_eq!(s.model_swaps, 1);
+        assert_eq!(s.model().version(), 2);
+        assert!(Arc::ptr_eq(s.model(), &registry.current(11).unwrap()));
+    }
+
+    #[test]
+    fn refresh_model_refuses_an_encoder_incompatible_swap() {
+        let registry = ModelRegistry::new();
+        let mut s = session();
+        // v2 trained under a different IM seed: the engine's encoder
+        // cannot serve it — the swap must error, not silently deploy.
+        registry
+            .publish(11, {
+                let mut b = s.model().bundle.clone();
+                b.version = 2;
+                b.config.seed ^= 1;
+                b
+            })
+            .unwrap();
+        let err = s.refresh_model(&registry).unwrap_err();
+        assert!(format!("{err:#}").contains("hot swap"), "{err:#}");
+        // The session keeps serving the deployed model.
+        assert_eq!(s.model().version(), 1);
+        assert_eq!(s.model_swaps, 0);
+        // A temporal-threshold-only change is a legal swap.
+        registry
+            .publish(11, {
+                let mut b = s.model().bundle.clone();
+                b.version = 3;
+                b.config.temporal_threshold += 7;
+                b
+            })
+            .unwrap();
+        assert!(s.refresh_model(&registry).unwrap());
+        assert_eq!(s.model().version(), 3);
     }
 }

@@ -15,7 +15,7 @@ use crate::params::{FRAMES_PER_PREDICTION, SAMPLE_RATE_HZ};
 use super::synth::Record;
 
 /// One classifier output for one prediction window.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WindowPrediction {
     /// Window index: covers samples `[idx * W, (idx+1) * W)`.
     pub idx: usize,

@@ -28,7 +28,7 @@ use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, DIM, NUM_CLASSES};
 use super::hv::{Hv, WORDS};
 
 /// The associative memory for the 2-class seizure detector.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct AssociativeMemory {
     /// `classes[CLASS_INTERICTAL]`, `classes[CLASS_ICTAL]`.
     pub classes: [Hv; NUM_CLASSES],

@@ -68,7 +68,7 @@ impl Variant {
 
 /// Tunable parameters of the classifier (hardware-fixed values live in
 /// [`crate::params`]).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClassifierConfig {
     /// IM generation seed (shared with the Python compile path).
     pub seed: u64,

@@ -18,6 +18,10 @@
 //! * [`temporal`] — the 256-frame temporal encoder with 8-bit counters.
 //! * [`am`] — associative memory and AND-popcount similarity search.
 //! * [`train`] — offline one-shot training (§II-D).
+//! * [`online`] — iterative online retraining on misclassified windows
+//!   (Pale et al., arXiv:2201.09759), deriving new model versions.
+//! * [`model`] — the persistent, versioned [`model::ModelBundle`]
+//!   artifact (AM + encoder config + provenance) and its binary format.
 //! * [`classifier`] — the assembled pipelines for every design variant.
 
 pub mod hv;
@@ -31,4 +35,6 @@ pub mod bundling;
 pub mod temporal;
 pub mod am;
 pub mod train;
+pub mod online;
+pub mod model;
 pub mod classifier;

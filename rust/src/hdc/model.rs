@@ -1,0 +1,527 @@
+//! Persistent model artifacts: the [`ModelBundle`].
+//!
+//! A trained model is more than the two class HVs: reproducing its
+//! predictions needs the encoder seed and thresholds it was trained
+//! against, and operating it over time needs provenance (who trained it,
+//! on how many windows, how many online epochs) plus a **monotonically
+//! increasing version** so a registry can reject stale publishes. The
+//! bundle carries all of that as one first-class, saveable artifact —
+//! `repro train --save` writes it, `repro model-info` inspects it,
+//! `repro serve --model` deploys it without retraining at startup, and
+//! [`crate::hdc::online::OnlineTrainer`] derives new versions from it.
+//!
+//! ## On-disk format
+//!
+//! Dependency-free little-endian binary (serde is unavailable offline —
+//! DESIGN.md §2), mirroring the hand-rolled approach of
+//! [`crate::benchkit`]'s JSON reader and the `.ieeg` dataset format:
+//!
+//! ```text
+//! magic   [u8;4] = b"HDCM"
+//! format  u32    = 1
+//! n_sections u32
+//! section * n_sections:
+//!     tag [u8;4], len u32, payload [u8; len]
+//! ```
+//!
+//! Sections (any order; unknown tags are skipped for forward
+//! compatibility, the four below are required):
+//!
+//! | tag    | payload                                                        |
+//! |--------|----------------------------------------------------------------|
+//! | `META` | version u64, variant name (u32 len + utf8)                     |
+//! | `CFGS` | seed u64, spatial u16, temporal u16, train_density f64-bits    |
+//! | `AMPL` | num_classes u32, dim u32, packed class HVs (dim/8 bytes each)  |
+//! | `PROV` | patient u32, epochs u32, parent u64, windows 2×u64, note (str) |
+//!
+//! Every length is validated before use, so truncated or corrupt files
+//! fail with an actionable error instead of a panic; a format-version
+//! bump fails loudly rather than misreading old bytes.
+
+use std::path::Path;
+
+use crate::ensure;
+use crate::error::Context;
+use crate::params::{DIM, NUM_CLASSES};
+
+use super::am::{AmPlane, AssociativeMemory};
+use super::classifier::{ClassifierConfig, Variant};
+use super::hv::Hv;
+
+const MAGIC: [u8; 4] = *b"HDCM";
+
+/// On-disk format version this build writes and reads.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Where a model came from: training lineage metadata, carried alongside
+/// the weights so `repro model-info` can answer "what is this file?".
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Provenance {
+    /// Patient the model was trained for (0 = unknown / not patient-bound).
+    pub patient_id: u32,
+    /// Online-retraining epochs behind this version (0 = one-shot).
+    pub epochs: u32,
+    /// Version this bundle was derived from (0 = freshly trained).
+    pub parent_version: u64,
+    /// Training windows absorbed per class (interictal, ictal).
+    pub train_windows: [u64; NUM_CLASSES],
+    /// Free-form note ("one-shot", retrain summary, ...).
+    pub note: String,
+}
+
+/// A complete, persistent, versioned model artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelBundle {
+    /// Monotonically increasing model version (fresh training = 1; each
+    /// online retrain derives `version + 1`). Registries reject stale
+    /// publishes by comparing this.
+    pub version: u64,
+    /// Design point the model was trained for.
+    pub variant: Variant,
+    /// Encoder configuration the AM was trained against (seed,
+    /// spatial/temporal thresholds, train density) — serving must encode
+    /// with exactly this config to reproduce the training-time function.
+    pub config: ClassifierConfig,
+    /// The trained associative memory (class-representing HVs).
+    pub am: AssociativeMemory,
+    pub provenance: Provenance,
+}
+
+impl ModelBundle {
+    /// A freshly trained version-1 bundle.
+    pub fn new(
+        variant: Variant,
+        config: ClassifierConfig,
+        am: AssociativeMemory,
+        provenance: Provenance,
+    ) -> ModelBundle {
+        ModelBundle {
+            version: 1,
+            variant,
+            config,
+            am,
+            provenance,
+        }
+    }
+
+    /// The version an artifact derived from this bundle must carry.
+    pub fn next_version(&self) -> u64 {
+        self.version + 1
+    }
+
+    /// Serialize to the on-disk byte format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut meta = Vec::new();
+        put_u64(&mut meta, self.version);
+        put_str(&mut meta, self.variant.name());
+
+        let mut cfgs = Vec::new();
+        put_u64(&mut cfgs, self.config.seed);
+        cfgs.extend_from_slice(&self.config.spatial_threshold.to_le_bytes());
+        cfgs.extend_from_slice(&self.config.temporal_threshold.to_le_bytes());
+        put_u64(&mut cfgs, self.config.train_density.to_bits());
+
+        let mut ampl = Vec::new();
+        ampl.extend_from_slice(&(NUM_CLASSES as u32).to_le_bytes());
+        ampl.extend_from_slice(&(DIM as u32).to_le_bytes());
+        for class in &self.am.classes {
+            ampl.extend_from_slice(&class.to_bytes());
+        }
+
+        let mut prov = Vec::new();
+        prov.extend_from_slice(&self.provenance.patient_id.to_le_bytes());
+        prov.extend_from_slice(&self.provenance.epochs.to_le_bytes());
+        put_u64(&mut prov, self.provenance.parent_version);
+        for &w in &self.provenance.train_windows {
+            put_u64(&mut prov, w);
+        }
+        put_str(&mut prov, &self.provenance.note);
+
+        let mut out = Vec::new();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&4u32.to_le_bytes());
+        section(&mut out, b"META", &meta);
+        section(&mut out, b"CFGS", &cfgs);
+        section(&mut out, b"AMPL", &ampl);
+        section(&mut out, b"PROV", &prov);
+        out
+    }
+
+    /// Parse the on-disk byte format. Rejects bad magic, format-version
+    /// mismatches, truncation, length overruns, unknown variants and
+    /// architecture mismatches with actionable errors; unknown *sections*
+    /// are skipped (forward compatibility within one format version).
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<ModelBundle> {
+        let mut r = Reader::new(bytes);
+        let magic = r.take(4).context("model bundle header")?;
+        ensure!(
+            magic == &MAGIC,
+            "not a model bundle: magic {:02x?} (expected {:02x?} — is this a `repro train --save` file?)",
+            magic,
+            MAGIC
+        );
+        let format = r.u32()?;
+        ensure!(
+            format == FORMAT_VERSION,
+            "model bundle format version {format}, this build reads {FORMAT_VERSION} — \
+             re-save with a matching build"
+        );
+        let n_sections = r.u32()?;
+
+        let mut meta: Option<(u64, Variant)> = None;
+        let mut cfgs: Option<ClassifierConfig> = None;
+        let mut ampl: Option<AssociativeMemory> = None;
+        let mut prov: Option<Provenance> = None;
+
+        for _ in 0..n_sections {
+            let tag: [u8; 4] = r.take(4)?.try_into().expect("4-byte slice");
+            let len = r.u32()? as usize;
+            let payload = r
+                .take(len)
+                .with_context(|| format!("section {:?}", tag_name(&tag)))?;
+            let mut pr = Reader::new(payload);
+            match &tag {
+                b"META" => {
+                    let version = pr.u64()?;
+                    ensure!(version >= 1, "model version 0 (must be >= 1)");
+                    let name = pr.string()?;
+                    let variant = Variant::from_name(&name)
+                        .with_context(|| format!("unknown variant {name:?} in model bundle"))?;
+                    pr.finish("META")?;
+                    meta = Some((version, variant));
+                }
+                b"CFGS" => {
+                    let seed = pr.u64()?;
+                    let spatial_threshold = pr.u16()?;
+                    let temporal_threshold = pr.u16()?;
+                    let train_density = f64::from_bits(pr.u64()?);
+                    pr.finish("CFGS")?;
+                    cfgs = Some(ClassifierConfig {
+                        seed,
+                        spatial_threshold,
+                        temporal_threshold,
+                        train_density,
+                    });
+                }
+                b"AMPL" => {
+                    let classes = pr.u32()? as usize;
+                    let dim = pr.u32()? as usize;
+                    ensure!(
+                        classes == NUM_CLASSES && dim == DIM,
+                        "model bundle is {classes} classes × {dim} dims, \
+                         this build expects {NUM_CLASSES} × {DIM}"
+                    );
+                    let mut hvs = [Hv::zero(); NUM_CLASSES];
+                    for hv in hvs.iter_mut() {
+                        let raw: &[u8; DIM / 8] =
+                            pr.take(DIM / 8)?.try_into().expect("fixed-size slice");
+                        *hv = Hv::from_bytes(raw);
+                    }
+                    pr.finish("AMPL")?;
+                    ampl = Some(AssociativeMemory::new(hvs[0], hvs[1]));
+                }
+                b"PROV" => {
+                    let patient_id = pr.u32()?;
+                    let epochs = pr.u32()?;
+                    let parent_version = pr.u64()?;
+                    let mut train_windows = [0u64; NUM_CLASSES];
+                    for w in train_windows.iter_mut() {
+                        *w = pr.u64()?;
+                    }
+                    let note = pr.string()?;
+                    pr.finish("PROV")?;
+                    prov = Some(Provenance {
+                        patient_id,
+                        epochs,
+                        parent_version,
+                        train_windows,
+                        note,
+                    });
+                }
+                _ => {} // unknown section: skip (forward compatibility)
+            }
+        }
+        ensure!(
+            r.remaining() == 0,
+            "{} trailing bytes after {} sections",
+            r.remaining(),
+            n_sections
+        );
+
+        let (version, variant) = meta.context("model bundle has no META section")?;
+        Ok(ModelBundle {
+            version,
+            variant,
+            config: cfgs.context("model bundle has no CFGS section")?,
+            am: ampl.context("model bundle has no AMPL section")?,
+            provenance: prov.context("model bundle has no PROV section")?,
+        })
+    }
+
+    /// Write the bundle to `path`.
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write model bundle {}", path.display()))
+    }
+
+    /// Load a bundle from `path`.
+    pub fn load(path: &Path) -> crate::Result<ModelBundle> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("read model bundle {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse model bundle {}", path.display()))
+    }
+
+    /// Human-readable summary (`repro model-info`).
+    pub fn describe(&self) -> String {
+        let p = &self.provenance;
+        let lineage = if p.parent_version == 0 {
+            "freshly trained".to_string()
+        } else {
+            format!("derived from v{}", p.parent_version)
+        };
+        format!(
+            "model bundle v{} (format {FORMAT_VERSION})\n\
+             \x20 variant            : {}\n\
+             \x20 encoder seed       : {:#018x}\n\
+             \x20 spatial threshold  : {}\n\
+             \x20 temporal threshold : {}\n\
+             \x20 train density      : {:.3}\n\
+             \x20 class densities    : interictal {:.1}% / ictal {:.1}%\n\
+             \x20 provenance         : patient {}, {} online epoch(s), {}, \
+             windows {}/{}\n\
+             \x20 note               : {}",
+            self.version,
+            self.variant.name(),
+            self.config.seed,
+            self.config.spatial_threshold,
+            self.config.temporal_threshold,
+            self.config.train_density,
+            self.am.classes[0].density() * 100.0,
+            self.am.classes[1].density() * 100.0,
+            p.patient_id,
+            p.epochs,
+            lineage,
+            p.train_windows[0],
+            p.train_windows[1],
+            if p.note.is_empty() { "—" } else { &p.note },
+        )
+    }
+}
+
+impl AmPlane {
+    /// Both engine representations of a bundle's AM — what every engine
+    /// (native and PJRT) consumes, pre-decoded so serving never pays a
+    /// plane decode (see [`AmPlane::from_memory`]).
+    pub fn from_bundle(bundle: &ModelBundle) -> AmPlane {
+        AmPlane::from_memory(&bundle.am)
+    }
+}
+
+fn tag_name(tag: &[u8; 4]) -> String {
+    String::from_utf8_lossy(tag).into_owned()
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn section(out: &mut Vec<u8>, tag: &[u8; 4], payload: &[u8]) {
+    out.extend_from_slice(tag);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "truncated model bundle: need {n} bytes at offset {}, only {} left",
+            self.pos,
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> crate::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn string(&mut self) -> crate::Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    /// Assert a known section was consumed exactly (a short or long
+    /// payload means corruption, not forward-compatible extension — new
+    /// fields get a format-version bump).
+    fn finish(&self, tag: &str) -> crate::Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "section {tag} has {} unread bytes (corrupt or wrong format)",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn bundle(seed: u64) -> ModelBundle {
+        let mut rng = Xoshiro256::new(seed);
+        ModelBundle {
+            version: 3,
+            variant: Variant::Optimized,
+            config: ClassifierConfig {
+                seed: 0xABCD_EF01_2345_6789,
+                spatial_threshold: 1,
+                temporal_threshold: 117,
+                train_density: 0.37,
+            },
+            am: AssociativeMemory::new(Hv::random(&mut rng, 0.3), Hv::random(&mut rng, 0.2)),
+            provenance: Provenance {
+                patient_id: 11,
+                epochs: 2,
+                parent_version: 2,
+                train_windows: [120, 40],
+                note: "unit-test bundle — µtf8 ✓".to_string(),
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_identity() {
+        let b = bundle(1);
+        let back = ModelBundle::from_bytes(&b.to_bytes()).unwrap();
+        assert_eq!(back, b);
+        // Bit-level: re-serializing the parse yields the same bytes.
+        assert_eq!(back.to_bytes(), b.to_bytes());
+    }
+
+    #[test]
+    fn save_load_roundtrip_through_disk() {
+        let b = bundle(2);
+        let path = std::env::temp_dir().join(format!("hdc_model_{}.hdcm", std::process::id()));
+        b.save(&path).unwrap();
+        let back = ModelBundle::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = bundle(3).to_bytes();
+        bytes[0] = b'X';
+        let err = ModelBundle::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("magic"), "{err:#}");
+    }
+
+    #[test]
+    fn format_version_mismatch_is_actionable() {
+        let mut bytes = bundle(4).to_bytes();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let err = ModelBundle::from_bytes(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("format version 99"), "{msg}");
+        assert!(msg.contains(&FORMAT_VERSION.to_string()), "{msg}");
+    }
+
+    #[test]
+    fn every_truncation_errors_without_panicking() {
+        let bytes = bundle(5).to_bytes();
+        for n in 0..bytes.len() {
+            assert!(
+                ModelBundle::from_bytes(&bytes[..n]).is_err(),
+                "prefix of {n}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+        assert!(ModelBundle::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = bundle(6).to_bytes();
+        bytes.push(0);
+        assert!(ModelBundle::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn unknown_sections_are_skipped() {
+        // Forward compatibility: a newer writer may append sections this
+        // reader does not know; they must parse-skip cleanly.
+        let b = bundle(7);
+        let mut bytes = b.to_bytes();
+        bytes[8..12].copy_from_slice(&5u32.to_le_bytes()); // section count 4 → 5
+        section(&mut bytes, b"XTRA", &[1, 2, 3, 4]);
+        let back = ModelBundle::from_bytes(&bytes).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn oversized_section_length_rejected() {
+        let b = bundle(8);
+        let bytes = b.to_bytes();
+        // Patch the META section length to overrun the buffer.
+        let mut patched = bytes.clone();
+        patched[16..20].copy_from_slice(&(bytes.len() as u32).to_le_bytes());
+        assert!(ModelBundle::from_bytes(&patched).is_err());
+    }
+
+    #[test]
+    fn describe_mentions_the_essentials() {
+        let d = bundle(9).describe();
+        assert!(d.contains("v3"), "{d}");
+        assert!(d.contains("sparse-optimized"), "{d}");
+        assert!(d.contains("117"), "{d}");
+        assert!(d.contains("patient 11"), "{d}");
+        assert!(d.contains("derived from v2"), "{d}");
+    }
+
+    #[test]
+    fn am_plane_from_bundle_never_decodes() {
+        let b = bundle(10);
+        let plane = AmPlane::from_bundle(&b);
+        assert_eq!(plane.memory().classes, b.am.classes);
+        assert_eq!(plane.decode_count(), 0);
+    }
+
+    #[test]
+    fn next_version_is_monotone() {
+        let b = bundle(11);
+        assert_eq!(b.next_version(), 4);
+        assert_eq!(ModelBundle::new(b.variant, b.config, b.am, b.provenance).version, 1);
+    }
+}

@@ -8,18 +8,55 @@
 //! design point bundles with a bit-wise majority instead.
 //!
 //! Training runs offline (design-/fit-time); only the resulting AM is
-//! deployed on the accelerator.
+//! deployed on the accelerator. Deployment-facing entry points emit a
+//! persistent [`ModelBundle`] (AM + encoder config + provenance +
+//! version) rather than a bare [`AssociativeMemory`]; the thinning
+//! helper ([`thin_counts_to_density`]) is shared with the iterative
+//! retrainer ([`crate::hdc::online`]).
 
 use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, DIM, NUM_CLASSES};
 
 use super::am::AssociativeMemory;
-use super::classifier::{Encoder, Frame, Variant};
+use super::classifier::{ClassifierConfig, Encoder, Frame, Variant};
 use super::dense::majority_from_counts;
 use super::hv::Hv;
+use super::model::{ModelBundle, Provenance};
 
 /// A labelled frame stream: the LBP codes of one frame plus whether the
 /// frame lies inside the expert-annotated ictal interval.
 pub type LabelledFrame = (Frame, bool);
+
+/// Thin a class counter plane to at most `max_density` ones (sparse
+/// bundling with thinning, §II-D): pick the smallest threshold `t >= 1`
+/// with `|{i : plane[i] >= t}| <= max_density * DIM`, via a count
+/// histogram — the class-plane analogue of the temporal tuning path
+/// ([`crate::hdc::temporal::count_histogram`] /
+/// [`crate::hdc::temporal::threshold_for_max_density_hist`], which are
+/// fixed to the 8-bit hardware counters; class counts are unbounded, so
+/// the histogram here is sized by the observed maximum).
+pub fn thin_counts_to_density(plane: &[u32; DIM], max_density: f64) -> Hv {
+    let max_count = plane.iter().copied().max().unwrap_or(0);
+    if max_count == 0 {
+        return Hv::zero();
+    }
+    let max_ones = (max_density * DIM as f64).floor() as usize;
+    let mut hist = vec![0usize; max_count as usize + 2];
+    for &c in plane.iter() {
+        hist[c as usize] += 1;
+    }
+    // Smallest threshold t >= 1 with |{i : plane[i] >= t}| <= max_ones.
+    let mut ones = 0usize;
+    let mut t = max_count as usize + 1;
+    while t > 1 {
+        let next = ones + hist[t - 1];
+        if next > max_ones {
+            break;
+        }
+        ones = next;
+        t -= 1;
+    }
+    Hv::from_fn(|i| plane[i] >= t as u32)
+}
 
 /// Accumulates query HVs per class and produces the AM.
 pub struct Trainer {
@@ -52,34 +89,6 @@ impl Trainer {
         self.windows
     }
 
-    /// Thin one class plane to at most `train_density` (sparse bundling
-    /// with thinning, §II-D).
-    fn thin_class(&self, class: usize) -> Hv {
-        let plane = &self.counts[class];
-        let max_ones = (self.train_density * DIM as f64).floor() as usize;
-        // Count histogram over window counts (bounded by windows seen).
-        let max_count = self.windows[class] as u32;
-        if max_count == 0 {
-            return Hv::zero();
-        }
-        let mut hist = vec![0usize; max_count as usize + 2];
-        for &c in plane.iter() {
-            hist[c as usize] += 1;
-        }
-        // Smallest threshold t >= 1 with |{i : plane[i] >= t}| <= max_ones.
-        let mut ones = 0usize;
-        let mut t = max_count as usize + 1;
-        while t > 1 {
-            let next = ones + hist[t - 1];
-            if next > max_ones {
-                break;
-            }
-            ones = next;
-            t -= 1;
-        }
-        Hv::from_fn(|i| plane[i] >= t as u32)
-    }
-
     /// Majority bundling for the dense design point.
     fn majority_class(&self, class: usize) -> Hv {
         let n = self.windows[class];
@@ -97,8 +106,8 @@ impl Trainer {
     pub fn finish(&self, variant: Variant) -> AssociativeMemory {
         let (inter, ictal) = if variant.is_sparse() {
             (
-                self.thin_class(CLASS_INTERICTAL),
-                self.thin_class(CLASS_ICTAL),
+                thin_counts_to_density(&self.counts[CLASS_INTERICTAL], self.train_density),
+                thin_counts_to_density(&self.counts[CLASS_ICTAL], self.train_density),
             )
         } else {
             (
@@ -108,20 +117,39 @@ impl Trainer {
         };
         AssociativeMemory::new(inter, ictal)
     }
+
+    /// Produce a persistent, versioned model artifact: the AM plus the
+    /// encoder config it was trained against and this trainer's window
+    /// provenance. Fresh one-shot training always yields version 1.
+    pub fn finish_bundle(
+        &self,
+        variant: Variant,
+        cfg: &ClassifierConfig,
+        mut provenance: Provenance,
+    ) -> ModelBundle {
+        provenance.train_windows = [
+            self.windows[CLASS_INTERICTAL] as u64,
+            self.windows[CLASS_ICTAL] as u64,
+        ];
+        if provenance.note.is_empty() {
+            provenance.note = "one-shot training".to_string();
+        }
+        ModelBundle::new(variant, cfg.clone(), self.finish(variant), provenance)
+    }
 }
 
-/// One-shot training over a labelled frame stream.
-///
-/// Windows are labelled by *majority of frame labels* within the window
-/// (an expert-marked onset mid-window labels that window ictal only if
-/// most of it is ictal — conservative, mirrors [1]'s windowing).
-pub fn train_from_frames(
+/// Stream labelled frames through an encoder, invoking `add` once per
+/// completed prediction window with the window's query HV and its
+/// **majority label**: an expert-marked onset mid-window labels that
+/// window ictal only if most of it is ictal — conservative, mirrors
+/// [1]'s windowing. This is *the* window-labelling rule; one-shot
+/// training, the explicit-trainer path and online retraining all label
+/// through this one function so they can never drift apart.
+pub fn label_windows(
     encoder: &mut dyn Encoder,
     frames: impl IntoIterator<Item = LabelledFrame>,
-    train_density: f64,
-) -> AssociativeMemory {
-    let variant = encoder.variant();
-    let mut trainer = Trainer::new(train_density);
+    mut add: impl FnMut(Hv, bool),
+) {
     encoder.reset();
     let mut ictal_frames = 0usize;
     let mut total_frames = 0usize;
@@ -129,13 +157,29 @@ pub fn train_from_frames(
         ictal_frames += ictal as usize;
         total_frames += 1;
         if let Some(query) = encoder.push_frame(&codes) {
-            trainer.add_window(&query, ictal_frames * 2 > total_frames);
+            add(query, ictal_frames * 2 > total_frames);
             ictal_frames = 0;
             total_frames = 0;
         }
     }
     encoder.reset();
-    trainer.finish(variant)
+}
+
+/// One-shot training over a labelled frame stream, yielding a
+/// version-1 [`ModelBundle`] that carries the encoder config alongside
+/// the AM (the artifact every downstream layer consumes). Windows are
+/// labelled by [`label_windows`].
+pub fn train_from_frames(
+    encoder: &mut dyn Encoder,
+    frames: impl IntoIterator<Item = LabelledFrame>,
+    cfg: &ClassifierConfig,
+) -> ModelBundle {
+    let variant = encoder.variant();
+    let mut trainer = Trainer::new(cfg.train_density);
+    label_windows(encoder, frames, |query, ictal| {
+        trainer.add_window(&query, ictal)
+    });
+    trainer.finish_bundle(variant, cfg, Provenance::default())
 }
 
 #[cfg(test)]
@@ -176,7 +220,8 @@ mod tests {
         for _ in 0..8 * FRAMES_PER_PREDICTION {
             frames.push((frame(&mut rng, true), true));
         }
-        let am = train_from_frames(&mut enc, frames, cfg.train_density);
+        let bundle = train_from_frames(&mut enc, frames, &cfg);
+        let am = &bundle.am;
 
         // Class HVs should be near the density target and distinct.
         let d0 = am.classes[CLASS_INTERICTAL].density();
@@ -184,6 +229,13 @@ mod tests {
         assert!(d0 > 0.05 && d0 <= 0.5 + 1e-9, "interictal density {d0}");
         assert!(d1 > 0.05 && d1 <= 0.5 + 1e-9, "ictal density {d1}");
         assert_ne!(am.classes[0], am.classes[1]);
+
+        // The bundle records what it was trained with.
+        assert_eq!(bundle.version, 1);
+        assert_eq!(bundle.variant, Variant::Optimized);
+        assert_eq!(bundle.config, cfg);
+        assert_eq!(bundle.provenance.train_windows, [8, 8]);
+        assert_eq!(bundle.provenance.epochs, 0);
 
         // Test: fresh windows classify correctly.
         let mut correct = 0;
@@ -223,6 +275,35 @@ mod tests {
     }
 
     #[test]
+    fn thin_helper_picks_minimal_threshold() {
+        let mut rng = Xoshiro256::new(77);
+        let mut plane = Box::new([0u32; DIM]);
+        for _ in 0..40 {
+            for p in Hv::random(&mut rng, 0.3).one_positions() {
+                plane[p] += 1;
+            }
+        }
+        for max_d in [0.05, 0.2, 0.5] {
+            let max_ones = (max_d * DIM as f64).floor() as usize;
+            let hv = thin_counts_to_density(&plane, max_d);
+            assert!(hv.density() <= max_d + 1e-12, "density {} > {max_d}", hv.density());
+            // Minimality: loosening the threshold far enough to admit the
+            // highest-count *excluded* element must overflow the cap
+            // (otherwise the helper should have kept it).
+            let excluded_max = plane
+                .iter()
+                .enumerate()
+                .filter(|&(i, &c)| !hv.get(i) && c > 0)
+                .map(|(_, &c)| c)
+                .max();
+            if let Some(s) = excluded_max {
+                let looser = plane.iter().filter(|&&c| c >= s).count();
+                assert!(looser > max_ones, "count-{s} elements wrongly excluded at {max_d}");
+            }
+        }
+    }
+
+    #[test]
     fn window_labels_use_majority() {
         // A window with less than half ictal frames counts interictal.
         let mut rng = Xoshiro256::new(8);
@@ -233,10 +314,11 @@ mod tests {
             // 25% of frames labelled ictal.
             frames.push((frame(&mut rng, false), i % 4 == 0));
         }
-        let am = train_from_frames(&mut enc, frames, cfg.train_density);
+        let bundle = train_from_frames(&mut enc, frames, &cfg);
         // Everything went to interictal; the ictal class stays empty.
-        assert_eq!(am.classes[CLASS_ICTAL].popcount(), 0);
-        assert!(am.classes[CLASS_INTERICTAL].popcount() > 0);
+        assert_eq!(bundle.am.classes[CLASS_ICTAL].popcount(), 0);
+        assert!(bundle.am.classes[CLASS_INTERICTAL].popcount() > 0);
+        assert_eq!(bundle.provenance.train_windows, [1, 0]);
     }
 
     #[test]

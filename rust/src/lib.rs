@@ -22,8 +22,10 @@
 //!   `artifacts/*.hlo.txt` produced by `python/compile/aot.py` and executes
 //!   them on the request path.
 //! * [`coordinator`] — the streaming serving layer: per-patient sessions,
-//!   frame batching, routing, detector post-processing, metrics and
-//!   backpressure.
+//!   frame batching, routing, detector post-processing, metrics,
+//!   backpressure, and the versioned model registry (hot-swappable
+//!   [`hdc::model::ModelBundle`] artifacts, online retraining via
+//!   [`hdc::online`]).
 //! * [`evalpool`] — the sharded evaluation pool: deterministic-order
 //!   parallel map over (variant × density × patient) jobs, used by the
 //!   sweep commands and the coordinator's session setup.

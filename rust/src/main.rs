@@ -3,9 +3,10 @@
 //! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §4):
 //!
 //! * `gen-data`  — write synthetic patient datasets to disk
-//! * `train`     — one-shot-train a patient, store the AM
+//! * `train`     — one-shot-train a patient, save a model bundle
 //! * `detect`    — run a trained classifier over records
 //! * `serve`     — start the streaming coordinator (end-to-end system)
+//! * `model-info` — inspect a saved model bundle
 //! * `fig1c`     — naive-sparse area/energy breakdown (paper Fig. 1(c))
 //! * `fig4`      — delay/accuracy vs max-density sweep (paper Fig. 4)
 //! * `fig5`      — four-design breakdown comparison (paper Fig. 5)
@@ -36,6 +37,7 @@ fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         Some("train") => commands::train(args),
         Some("detect") => commands::detect(args),
         Some("serve") => commands::serve(args),
+        Some("model-info") => commands::model_info(args),
         Some("fig1c") => commands::fig1c(args),
         Some("fig4") => commands::fig4(args),
         Some("fig5") => commands::fig5(args),
@@ -58,10 +60,12 @@ USAGE: repro <subcommand> [options]
 
 data / model:
   gen-data  --out DIR [--patients N] [--records N] [--seed S]
-  train     --data DIR --patient ID [--variant V] [--max-density D] [--out FILE]
+  train     --data DIR --patient ID [--variant V] [--max-density D]
+            [--save FILE] [--retrain-epochs N] [--out FILE]
+  model-info <bundle.hdcm>                inspect a saved model bundle
   detect    --data DIR --patient ID [--variant V] [--max-density D]
-  serve     --data DIR [--config FILE] [--patients LIST] [--use-pjrt] [--realtime]
-            [--batch N] [--chunk N]
+  serve     --data DIR [--config FILE] [--patients LIST] [--model FILE]
+            [--retrain-epochs N] [--use-pjrt] [--realtime] [--batch N] [--chunk N]
 
 paper experiments:
   fig1c     [--windows N]                 naive sparse breakdown (Fig. 1c)

@@ -5,12 +5,13 @@
 
 use crate::data::metrics::{evaluate_record, AlarmPolicy, EvalSummary, WindowPrediction};
 use crate::data::synth::{Record, SynthPatient};
-use crate::hdc::am::AssociativeMemory;
 use crate::hdc::classifier::{
     Classifier, ClassifierConfig, Encoder, Frame, SparseEncoder, Variant,
 };
 use crate::hdc::hv::Hv;
-use crate::hdc::train::{train_from_frames, Trainer};
+use crate::hdc::model::{ModelBundle, Provenance};
+use crate::hdc::online::{OnlineConfig, OnlineReport, OnlineTrainer};
+use crate::hdc::train::{label_windows, train_from_frames, Trainer};
 use crate::lbp::LbpFrontend;
 
 /// Grace period after the annotated offset during which an alarm still
@@ -28,13 +29,15 @@ pub fn record_frames(record: &Record) -> impl Iterator<Item = (Frame, bool)> + '
     (0..record.num_samples()).map(move |t| (fe.push(&record.sample_array(t)), record.is_ictal(t)))
 }
 
-/// One-shot training on a record (the patient's first seizure).
+/// One-shot training on a record (the patient's first seizure), yielding
+/// a version-1 [`ModelBundle`] — the persistent artifact the serving
+/// layers, the CLI (`repro train --save`) and the registry consume.
 pub fn train_on_record(
     encoder: &mut dyn Encoder,
     record: &Record,
-    train_density: f64,
-) -> AssociativeMemory {
-    train_from_frames(encoder, record_frames(record), train_density)
+    cfg: &ClassifierConfig,
+) -> ModelBundle {
+    train_from_frames(encoder, record_frames(record), cfg)
 }
 
 /// Window queries per [`Classifier::search_batch`] flush in
@@ -145,8 +148,8 @@ pub fn evaluate_patient(
 
     // Train.
     let mut encoder = crate::hdc::classifier::make_encoder(variant, cfg.clone());
-    let am = train_on_record(encoder.as_mut(), patient.train_record(), cfg.train_density);
-    let mut clf = Classifier::from_encoder(encoder, am);
+    let bundle = train_on_record(encoder.as_mut(), patient.train_record(), &cfg);
+    let mut clf = Classifier::from_encoder(encoder, bundle.am);
 
     // Evaluate.
     let mut summary = EvalSummary::default();
@@ -189,27 +192,102 @@ pub fn measure_query_density(variant: Variant, cfg: &ClassifierConfig, record: &
 }
 
 /// Train with an explicit trainer (exposed for tests that need the
-/// intermediate planes).
+/// intermediate planes). Window labelling is
+/// [`label_windows`](crate::hdc::train::label_windows) — the same rule
+/// as every other training path.
 pub fn trainer_for_record(
     encoder: &mut dyn Encoder,
     record: &Record,
     train_density: f64,
 ) -> Trainer {
     let mut trainer = Trainer::new(train_density);
-    encoder.reset();
-    let mut ictal_frames = 0usize;
-    let mut total = 0usize;
-    for (codes, ictal) in record_frames(record) {
-        ictal_frames += ictal as usize;
-        total += 1;
-        if let Some(q) = encoder.push_frame(&codes) {
-            trainer.add_window(&q, ictal_frames * 2 > total);
-            ictal_frames = 0;
-            total = 0;
+    label_windows(encoder, record_frames(record), |q, ictal| {
+        trainer.add_window(&q, ictal)
+    });
+    trainer
+}
+
+/// Encode a record into an [`OnlineTrainer`]: the same streaming pass and
+/// majority window-labelling as one-shot training
+/// ([`label_windows`](crate::hdc::train::label_windows)), but the
+/// labelled window queries are retained for the retraining epochs.
+pub fn online_trainer_for_record(
+    variant: Variant,
+    cfg: &ClassifierConfig,
+    record: &Record,
+) -> OnlineTrainer {
+    let mut encoder = SparseEncoder::new(variant, cfg.clone());
+    let mut trainer = OnlineTrainer::new(variant, cfg.train_density);
+    label_windows(&mut encoder, record_frames(record), |q, ictal| {
+        trainer.absorb(q, ictal)
+    });
+    trainer
+}
+
+/// Knobs of a bundle-level retrain ([`retrain_bundle`]).
+#[derive(Clone, Debug)]
+pub struct RetrainOptions {
+    /// Upper bound on retraining epochs.
+    pub max_epochs: usize,
+    /// Full Pale-style update (add to correct, subtract from wrong).
+    pub subtract: bool,
+    /// Re-tune the temporal threshold for this max query density before
+    /// encoding (the Fig. 4 hyperparameter, derived through the
+    /// [`crate::hdc::temporal::count_histogram`] path). `None` keeps the
+    /// bundle's threshold.
+    pub max_density: Option<f64>,
+}
+
+impl Default for RetrainOptions {
+    fn default() -> Self {
+        RetrainOptions {
+            max_epochs: 8,
+            subtract: true,
+            max_density: None,
         }
     }
-    encoder.reset();
-    trainer
+}
+
+/// Derive the next version of a model bundle by iterative online
+/// retraining on `record` (typically the same training seizure, or a
+/// newly annotated one). The input bundle is untouched — the result
+/// carries `version + 1` and lineage provenance, ready for
+/// [`crate::coordinator::registry::ModelRegistry::publish`]; in-flight
+/// inference on the old version is unaffected.
+pub fn retrain_bundle(
+    bundle: &ModelBundle,
+    record: &Record,
+    opts: &RetrainOptions,
+) -> (ModelBundle, OnlineReport) {
+    let mut cfg = bundle.config.clone();
+    if let Some(d) = opts.max_density {
+        cfg.temporal_threshold = tune_temporal_threshold(bundle.variant, &cfg, record, d);
+    }
+    let mut trainer = online_trainer_for_record(bundle.variant, &cfg, record);
+    let (am, report) = trainer.run(&OnlineConfig {
+        max_epochs: opts.max_epochs,
+        subtract: opts.subtract,
+    });
+    let windows = trainer.windows_per_class();
+    let next = ModelBundle {
+        version: bundle.next_version(),
+        variant: bundle.variant,
+        config: cfg,
+        am,
+        provenance: Provenance {
+            patient_id: bundle.provenance.patient_id,
+            epochs: report.epochs.len() as u32,
+            parent_version: bundle.version,
+            train_windows: [windows[0] as u64, windows[1] as u64],
+            note: format!(
+                "online retrain: training-window errors {} -> {} over {} epoch(s)",
+                report.initial_errors,
+                report.best_errors,
+                report.epochs.len()
+            ),
+        },
+    };
+    (next, report)
 }
 
 #[cfg(test)]
@@ -307,12 +385,51 @@ mod tests {
     }
 
     #[test]
+    fn retrain_bundle_bumps_version_and_never_degrades() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = crate::hdc::classifier::make_encoder(Variant::Optimized, cfg.clone());
+        let bundle = train_on_record(enc.as_mut(), patient.train_record(), &cfg);
+        assert_eq!(bundle.version, 1);
+
+        let (next, report) = retrain_bundle(&bundle, patient.train_record(), &Default::default());
+        assert_eq!(next.version, 2);
+        assert_eq!(next.provenance.parent_version, 1);
+        assert_eq!(next.variant, bundle.variant);
+        assert!(report.best_errors <= report.initial_errors);
+
+        // The retrained AM's training-window error really is what the
+        // report claims (and therefore <= one-shot's), measured with a
+        // fresh encode pass.
+        let trainer =
+            online_trainer_for_record(Variant::Optimized, &cfg, patient.train_record());
+        assert_eq!(trainer.errors(&next.am), report.best_errors);
+        assert_eq!(trainer.errors(&bundle.am), report.initial_errors);
+    }
+
+    #[test]
+    fn retrain_can_re_tune_the_temporal_threshold() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = crate::hdc::classifier::make_encoder(Variant::Optimized, cfg.clone());
+        let bundle = train_on_record(enc.as_mut(), patient.train_record(), &cfg);
+        let opts = RetrainOptions {
+            max_density: Some(0.05),
+            ..Default::default()
+        };
+        let (next, _) = retrain_bundle(&bundle, patient.train_record(), &opts);
+        let expect =
+            tune_temporal_threshold(Variant::Optimized, &cfg, patient.train_record(), 0.05);
+        assert_eq!(next.config.temporal_threshold, expect);
+    }
+
+    #[test]
     fn predictions_cover_record() {
         let patient = test_patient();
         let cfg = ClassifierConfig::optimized();
         let mut enc = crate::hdc::classifier::make_encoder(Variant::Optimized, cfg.clone());
-        let am = train_on_record(enc.as_mut(), patient.train_record(), cfg.train_density);
-        let mut clf = Classifier::from_encoder(enc, am);
+        let bundle = train_on_record(enc.as_mut(), patient.train_record(), &cfg);
+        let mut clf = Classifier::from_encoder(enc, bundle.am);
         let rec = &patient.records[1];
         let preds = run_on_record(&mut clf, rec);
         let expected = rec.num_samples() / crate::params::FRAMES_PER_PREDICTION;

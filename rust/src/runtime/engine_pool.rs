@@ -468,6 +468,43 @@ mod tests {
     }
 
     #[test]
+    fn mid_queue_model_swap_never_mixes_planes() {
+        // The registry hot-swap contract at the engine level: when a
+        // session's jobs switch from model v1's plane to v2's mid-queue,
+        // completions stay in submission order and every window is scored
+        // against exactly the plane its job carried — the Arc-identity
+        // coalescing key makes mixing versions inside one run_batch call
+        // impossible.
+        let mut rng = Xoshiro256::new(0x5A47);
+        let v1 = Arc::new(AmPlane::from_memory(&AssociativeMemory::new(
+            Hv::random(&mut rng, 0.3),
+            Hv::random(&mut rng, 0.3),
+        )));
+        let v2 = Arc::new(AmPlane::from_memory(&AssociativeMemory::new(
+            Hv::random(&mut rng, 0.3),
+            Hv::random(&mut rng, 0.3),
+        )));
+        let windows: Vec<Vec<u8>> = (0..8).map(|_| random_window(&mut rng)).collect();
+
+        let host = spawn_native(8);
+        for (seq, codes) in windows.iter().enumerate() {
+            let am = if seq < 4 { &v1 } else { &v2 };
+            host.submit(job_on(am, seq as u64, codes.clone())).unwrap();
+        }
+        let mut serial =
+            NativeWindowEngine::new(EngineKind::SparseWindow, ClassifierConfig::optimized());
+        for seq in 0..8usize {
+            let c = host.completions.recv().unwrap();
+            assert_eq!(c.seq, seq as u64, "submission order preserved across the swap");
+            let am = if seq < 4 { &v1 } else { &v2 };
+            let expect = serial.run(&windows[seq], am.i32s(), 130).unwrap();
+            let outs = c.outputs.unwrap();
+            assert_eq!(outs[0].scores, expect.scores, "seq {seq} scored on the wrong plane");
+            assert_eq!(outs[0].query, expect.query);
+        }
+    }
+
+    #[test]
     fn shared_am_plane_decodes_at_most_once_across_jobs() {
         // The ISSUE regression guard: jobs sharing one `Arc<AmPlane>` must
         // reuse the decoded plane (the old path re-decoded per call).

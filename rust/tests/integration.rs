@@ -80,13 +80,12 @@ fn pjrt_and_native_serving_agree() {
     let cfg = ClassifierConfig::optimized();
     let patient = SynthPatient::generate(&tiny_synth(), 9);
     let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-    let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+    let bundle = pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
     let spec = |sid| StreamSpec {
         session_id: sid,
         patient_id: 9,
         record: patient.records[1].clone(),
-        am: am.clone(),
-        threshold: cfg.temporal_threshold,
+        bundle: bundle.clone(),
     };
 
     let native = Coordinator::new(SystemConfig::default(), Backend::Native)
@@ -117,14 +116,13 @@ fn backpressure_with_depth_one_queue_completes() {
     let cfg = ClassifierConfig::optimized();
     let patient = SynthPatient::generate(&tiny_synth(), 3);
     let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-    let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+    let bundle = pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
     let report = Coordinator::new(system, Backend::Native)
         .run(vec![StreamSpec {
             session_id: 1,
             patient_id: 3,
             record: patient.records[1].clone(),
-            am,
-            threshold: cfg.temporal_threshold,
+            bundle,
         }])
         .unwrap();
     assert_eq!(report.metrics.windows_failed, 0);
@@ -225,14 +223,14 @@ fn config_drives_coordinator_behaviour() {
     };
     let patient = SynthPatient::generate(&tiny_synth(), 4);
     let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-    let am = pipeline::train_on_record(&mut enc, patient.train_record(), cfg.train_density);
+    let bundle = pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
+    assert_eq!(bundle.config.temporal_threshold, 90, "bundle carries the tuned threshold");
     let report = Coordinator::new(system, Backend::Native)
         .run(vec![StreamSpec {
             session_id: 1,
             patient_id: 4,
             record: patient.records[1].clone(),
-            am,
-            threshold: 90,
+            bundle,
         }])
         .unwrap();
     // All alarms obey the 3-consecutive policy: the detector fired at most
@@ -250,13 +248,12 @@ fn multi_patient_interleaving_isolated() {
     let mk = |pid: u32| {
         let p = SynthPatient::generate(&tiny_synth(), pid);
         let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-        let am = pipeline::train_on_record(&mut enc, p.train_record(), cfg.train_density);
+        let bundle = pipeline::train_on_record(&mut enc, p.train_record(), &cfg);
         StreamSpec {
             session_id: pid as u64,
             patient_id: pid,
             record: p.records[1].clone(),
-            am,
-            threshold: cfg.temporal_threshold,
+            bundle,
         }
     };
     let solo1 = Coordinator::new(SystemConfig::default(), Backend::Native)

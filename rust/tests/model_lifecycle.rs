@@ -1,0 +1,305 @@
+//! Model-lifecycle integration tests: bundle persistence round-trips,
+//! corruption handling, serving from a saved artifact (no startup
+//! retraining), online retraining guarantees, and mid-stream registry
+//! hot swap under the coalescing engine host.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sparse_hdc_ieeg::config::SystemConfig;
+use sparse_hdc_ieeg::coordinator::registry::ModelRegistry;
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec, StreamReport};
+use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::model::{ModelBundle, Provenance};
+use sparse_hdc_ieeg::pipeline;
+use sparse_hdc_ieeg::rng::Xoshiro256;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hdc_ml_{tag}_{}.hdcm", std::process::id()))
+}
+
+fn tiny_synth() -> SynthConfig {
+    SynthConfig {
+        records_per_patient: 2,
+        pre_s: 4.0,
+        ictal_s: 3.0,
+        post_s: 1.0,
+        ..Default::default()
+    }
+}
+
+fn trained_bundle(pid: u32) -> (SynthPatient, ModelBundle) {
+    let patient = SynthPatient::generate(&tiny_synth(), pid);
+    let cfg = ClassifierConfig::optimized();
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+    let mut bundle = pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
+    bundle.provenance.patient_id = pid;
+    (patient, bundle)
+}
+
+/// Property: save → load is bit-identical for randomized bundles (AM
+/// planes, thresholds, seeds, provenance — the full artifact).
+#[test]
+fn bundle_roundtrip_property() {
+    let mut rng = Xoshiro256::new(0xB00B1E5);
+    for case in 0..24u64 {
+        let density = 0.05 + (case as f64 % 7.0) * 0.07;
+        let bundle = ModelBundle {
+            version: 1 + rng.next_below(1000),
+            variant: if case % 2 == 0 { Variant::Optimized } else { Variant::SparseCompIm },
+            config: ClassifierConfig {
+                seed: rng.next_u64(),
+                spatial_threshold: (rng.next_below(4) + 1) as u16,
+                temporal_threshold: rng.next_below(256) as u16,
+                train_density: density,
+            },
+            am: AssociativeMemory::new(
+                Hv::random(&mut rng, density),
+                Hv::random(&mut rng, density),
+            ),
+            provenance: Provenance {
+                patient_id: rng.next_below(100) as u32,
+                epochs: rng.next_below(9) as u32,
+                parent_version: rng.next_below(10),
+                train_windows: [rng.next_below(500), rng.next_below(500)],
+                note: format!("case {case} — note with ümlauts / #hash / \"quotes\""),
+            },
+        };
+        let bytes = bundle.to_bytes();
+        let back = ModelBundle::from_bytes(&bytes).unwrap_or_else(|e| {
+            panic!("case {case}: roundtrip failed: {e:#}");
+        });
+        assert_eq!(back, bundle, "case {case}");
+        assert_eq!(back.am.classes[0], bundle.am.classes[0]);
+        assert_eq!(back.am.classes[1], bundle.am.classes[1]);
+    }
+}
+
+#[test]
+fn corrupt_files_fail_actionably() {
+    // Not-a-bundle file.
+    let path = tmpfile("garbage");
+    std::fs::write(&path, b"definitely not a model bundle").unwrap();
+    let err = ModelBundle::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains(path.to_str().unwrap()), "{err:#}");
+    std::fs::remove_file(&path).ok();
+
+    // Truncated on disk: every prefix fails, never panics.
+    let (_, bundle) = trained_bundle(1);
+    let bytes = bundle.to_bytes();
+    let path = tmpfile("trunc");
+    for frac in [1, 3, 7, 9] {
+        std::fs::write(&path, &bytes[..bytes.len() * frac / 10]).unwrap();
+        assert!(ModelBundle::load(&path).is_err(), "prefix {frac}0% must fail");
+    }
+    // Flipped format version is told apart from truncation.
+    let mut patched = bytes.clone();
+    patched[4..8].copy_from_slice(&7u32.to_le_bytes());
+    std::fs::write(&path, &patched).unwrap();
+    let err = ModelBundle::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("format version 7"), "{err:#}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// The acceptance pin: serving from a saved bundle skips retraining and
+/// is bit-identical — window for window — to the retrain-at-startup
+/// path with the same seed/config.
+#[test]
+fn serving_from_saved_bundle_matches_retrain_at_startup() {
+    let (patient, bundle) = trained_bundle(7);
+
+    // Save → load: the artifact that `repro serve --model` deploys.
+    let path = tmpfile("serve");
+    bundle.save(&path).unwrap();
+    let loaded = ModelBundle::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, bundle, "the loaded artifact is the trained model, bit for bit");
+
+    let spec = |bundle: ModelBundle| StreamSpec {
+        session_id: 1,
+        patient_id: 7,
+        record: patient.records[1].clone(),
+        bundle,
+    };
+    let run = |b: ModelBundle| -> StreamReport {
+        Coordinator::new(SystemConfig::default(), Backend::Native)
+            .run(vec![spec(b)])
+            .unwrap()
+    };
+    let fresh = run(bundle);
+    let saved = run(loaded);
+
+    assert_eq!(fresh.sessions[0].predictions, saved.sessions[0].predictions);
+    assert_eq!(fresh.sessions[0].eval.detected, saved.sessions[0].eval.detected);
+    assert_eq!(fresh.sessions[0].eval.delay_s, saved.sessions[0].eval.delay_s);
+    assert_eq!(fresh.sessions[0].eval.false_alarms, saved.sessions[0].eval.false_alarms);
+    assert_eq!(fresh.sessions[0].model_version, saved.sessions[0].model_version);
+}
+
+/// The acceptance pin for the retrainer: the published next version
+/// scores no worse than one-shot on the training windows (keep-best),
+/// and versions stay monotone through the registry.
+#[test]
+fn online_retrain_improves_or_preserves_and_versions_monotone() {
+    let (patient, bundle) = trained_bundle(3);
+    let (next, report) = pipeline::retrain_bundle(
+        &bundle,
+        patient.train_record(),
+        &pipeline::RetrainOptions::default(),
+    );
+    assert_eq!(next.version, 2);
+    assert_eq!(next.provenance.parent_version, 1);
+    assert!(
+        report.best_errors <= report.initial_errors,
+        "retrain must not degrade training-window accuracy \
+         ({} -> {})",
+        report.initial_errors,
+        report.best_errors
+    );
+    // Measured independently with a fresh encode pass.
+    let trainer = pipeline::online_trainer_for_record(
+        Variant::Optimized,
+        &next.config,
+        patient.train_record(),
+    );
+    assert!(trainer.errors(&next.am) <= trainer.errors(&bundle.am));
+
+    // Registry: v1 then v2 publish fine; re-publishing v1 afterwards is
+    // rejected as stale.
+    let registry = ModelRegistry::new();
+    registry.publish(3, bundle.clone()).unwrap();
+    registry.publish(3, next).unwrap();
+    assert!(registry.publish(3, bundle).is_err());
+    assert_eq!(registry.current(3).unwrap().version(), 2);
+}
+
+/// The hot-swap pin: publish v2 (class HVs swapped, so predictions
+/// flip) mid-stream through the registry, and the served prediction
+/// stream must equal v1's predictions up to the (deterministic) swap
+/// boundary and v2's from it on — exercised under the coalescing
+/// `EngineHost` with submission-order delivery, zero queue drain.
+#[test]
+fn mid_stream_swap_changes_results_only_at_the_boundary() {
+    let (patient, v1) = trained_bundle(5);
+    // v2: same encoder config, classes swapped — flips every decision.
+    let mut v2 = v1.clone();
+    v2.version = 2;
+    v2.provenance.parent_version = 1;
+    v2.am = AssociativeMemory::new(v1.am.classes[1], v1.am.classes[0]);
+
+    let spec = |bundle: ModelBundle| StreamSpec {
+        session_id: 1,
+        patient_id: 5,
+        record: patient.records[1].clone(),
+        bundle,
+    };
+    let run_pure = |b: ModelBundle| -> Vec<sparse_hdc_ieeg::data::metrics::WindowPrediction> {
+        Coordinator::new(SystemConfig::default(), Backend::Native)
+            .run(vec![spec(b)])
+            .unwrap()
+            .sessions
+            .remove(0)
+            .predictions
+    };
+    let preds_v1 = run_pure(v1.clone());
+    let preds_v2 = run_pure(v2.clone());
+    assert_eq!(preds_v1.len(), preds_v2.len());
+    assert_ne!(preds_v1, preds_v2, "class-swapped model must predict differently");
+
+    // Swapped run: publish v2 once the first micro-batch (4 windows,
+    // the SystemConfig default) has been submitted. The next batch picks
+    // it up, so the boundary sits at window 4 exactly.
+    let registry = Arc::new(ModelRegistry::new());
+    let published = AtomicBool::new(false);
+    let reg = registry.clone();
+    let v2_for_hook = v2.clone();
+    let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+    let report = coordinator
+        .run_with_registry(vec![spec(v1.clone())], &registry, move |windows_submitted| {
+            if windows_submitted >= 4 && !published.swap(true, Ordering::Relaxed) {
+                reg.publish(5, v2_for_hook.clone()).unwrap();
+            }
+        })
+        .unwrap();
+
+    let session = &report.sessions[0];
+    assert_eq!(session.model_version, 2, "stream must end on the new version");
+    assert_eq!(session.model_swaps, 1);
+    assert_eq!(report.metrics.model_swaps, 1);
+    assert_eq!(report.metrics.windows_failed, 0, "zero drain: nothing is lost at the swap");
+
+    let boundary = 4usize;
+    assert_eq!(
+        &session.predictions[..boundary],
+        &preds_v1[..boundary],
+        "windows before the swap boundary must come from v1"
+    );
+    assert_eq!(
+        &session.predictions[boundary..],
+        &preds_v2[boundary..],
+        "windows from the swap boundary on must come from v2"
+    );
+}
+
+/// Registry sharing across sessions of one patient: both sessions see
+/// the same published instance and swap together.
+#[test]
+fn two_sessions_of_one_patient_share_the_published_model() {
+    let (patient, bundle) = trained_bundle(9);
+    let specs = vec![
+        StreamSpec {
+            session_id: 1,
+            patient_id: 9,
+            record: patient.records[1].clone(),
+            bundle: bundle.clone(),
+        },
+        StreamSpec {
+            session_id: 2,
+            patient_id: 9,
+            record: patient.records[1].clone(),
+            bundle,
+        },
+    ];
+    let report = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(specs)
+        .unwrap();
+    assert_eq!(report.sessions.len(), 2);
+    assert_eq!(
+        report.sessions[0].predictions, report.sessions[1].predictions,
+        "same patient, same record, same published model → same stream"
+    );
+}
+
+/// Two *different* bundles at the same (patient, version) are ambiguous
+/// — the registry slot is per patient, so serving must reject instead
+/// of silently running the second session on the first session's model.
+#[test]
+fn conflicting_bundles_for_one_patient_are_rejected() {
+    let (patient, bundle) = trained_bundle(13);
+    let mut other = bundle.clone();
+    other.am = AssociativeMemory::new(other.am.classes[1], other.am.classes[0]);
+    let specs = vec![
+        StreamSpec {
+            session_id: 1,
+            patient_id: 13,
+            record: patient.records[1].clone(),
+            bundle,
+        },
+        StreamSpec {
+            session_id: 2,
+            patient_id: 13,
+            record: patient.records[1].clone(),
+            bundle: other,
+        },
+    ];
+    let err = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(specs)
+        .expect_err("conflicting same-version bundles must not serve");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("patient 13"), "{msg}");
+    assert!(msg.contains("version"), "{msg}");
+}

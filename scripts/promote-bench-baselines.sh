@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Promote a CI run's bench-trajectory-json artifact to the committed
+# perf baselines (ROADMAP "Perf trajectory" item).
+#
+# Usage:
+#   1. Download the `bench-trajectory-json` artifact from a CI run on the
+#      target commit (or run the benches locally:
+#      BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_encoder.current.json \
+#          cargo bench --bench bench_encoder
+#      BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_am.current.json \
+#          cargo bench --bench bench_am).
+#   2. ./scripts/promote-bench-baselines.sh [artifact-dir]
+#   3. Review the diff and commit — `repro bench-diff` then gates kernel/*
+#      medians against real numbers instead of the empty stubs.
+set -euo pipefail
+
+src="${1:-.}"
+root="$(cd "$(dirname "$0")/.." && pwd)"
+
+promote() {
+    local current="$src/$1.current.json" baseline="$root/$1.json"
+    if [[ ! -f "$current" ]]; then
+        echo "skip: $current not found" >&2
+        return
+    fi
+    if ! grep -q '"records": \[' "$current"; then
+        echo "refuse: $current does not look like a benchkit/v1 document" >&2
+        exit 1
+    fi
+    cp "$current" "$baseline"
+    echo "promoted $current -> $baseline"
+}
+
+promote BENCH_encoder
+promote BENCH_am
+
+echo "done — review with: git diff BENCH_encoder.json BENCH_am.json"
