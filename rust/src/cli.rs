@@ -92,6 +92,22 @@ impl Args {
         }
     }
 
+    /// Typed optional option: `None` when absent, `Some(parsed)` when
+    /// present, an error when present but unparseable — for options with
+    /// no meaningful default (`--max-density`, `--models-dir`-style
+    /// opt-ins), where `get_parse`'s mandatory default would invent one.
+    pub fn get_parse_opt<T: std::str::FromStr>(&self, name: &str) -> crate::Result<Option<T>>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.get(name)
+            .map(|s| {
+                s.parse::<T>()
+                    .with_context(|| format!("invalid value for --{name}: {s:?}"))
+            })
+            .transpose()
+    }
+
     /// Comma-separated list option.
     pub fn get_list(&self, name: &str) -> Vec<String> {
         self.get(name)
@@ -141,6 +157,15 @@ mod tests {
         assert!((a.get_parse("f", 0.0f64).unwrap() - 2.5).abs() < 1e-12);
         assert_eq!(a.get_parse("missing", 7u32).unwrap(), 7);
         assert!(a.get_parse::<usize>("f", 0).is_err() || a.get("f") == Some("2.5"));
+    }
+
+    #[test]
+    fn optional_typed_getter() {
+        let a = parse(&["x", "--d", "0.25", "--bad", "nope"]);
+        assert_eq!(a.get_parse_opt::<f64>("d").unwrap(), Some(0.25));
+        assert_eq!(a.get_parse_opt::<f64>("missing").unwrap(), None);
+        let err = a.get_parse_opt::<f64>("bad").unwrap_err();
+        assert!(format!("{err:#}").contains("--bad"), "{err:#}");
     }
 
     #[test]

@@ -161,8 +161,7 @@ pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     let records = dataset::load_patient(&data, pid)?;
     ensure!(!records.is_empty(), "patient {pid} has no records");
 
-    if let Some(d) = args.get("max-density") {
-        let d: f64 = d.parse()?;
+    if let Some(d) = args.get_parse_opt::<f64>("max-density")? {
         cfg.temporal_threshold =
             pipeline::tune_temporal_threshold(variant, &cfg, &records[0], d);
         println!("tuned temporal threshold = {} for max density {d}", cfg.temporal_threshold);
@@ -219,14 +218,44 @@ pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     Ok(())
 }
 
-/// `repro model-info <bundle.hdcm>` — inspect a saved model bundle.
+/// `repro model-info <bundle.hdcm | models-dir>` — inspect a saved model
+/// bundle, or list a `--models-dir` store (the latest valid version per
+/// patient, as a restarted `serve` would recover it).
 pub fn model_info(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&[])?;
     ensure!(
         args.positional.len() == 1,
-        "usage: repro model-info <bundle.hdcm>"
+        "usage: repro model-info <bundle.hdcm | models-dir>"
     );
     let path = std::path::Path::new(&args.positional[0]);
+    if path.is_dir() {
+        // Read-only inspection: `peek` reports corrupt files but never
+        // renames them — looking at a store must not change it (the
+        // quarantine side effect belongs to `serve`'s recovery scan).
+        let store = sparse_hdc_ieeg::coordinator::registry::ModelStore::open(path)?;
+        let scan = store.peek()?;
+        ensure!(
+            !scan.recovered.is_empty(),
+            "no valid model bundles under {} ({} corrupt, {} ignored)",
+            path.display(),
+            scan.quarantined.len(),
+            scan.ignored.len()
+        );
+        println!("model store {} — latest valid version per patient:", path.display());
+        for (pid, bundle) in &scan.recovered {
+            println!(
+                "  patient {pid}: latest v{} (format {}, {} online epoch(s), counter planes {})",
+                bundle.version,
+                bundle.wire_format(),
+                bundle.provenance.epochs,
+                if bundle.counters.is_some() { "present" } else { "absent" },
+            );
+        }
+        for q in &scan.quarantined {
+            println!("  corrupt: {}", q.display());
+        }
+        return Ok(());
+    }
     let bundle = sparse_hdc_ieeg::hdc::model::ModelBundle::load(path)?;
     println!("{}", bundle.describe());
     Ok(())
@@ -248,7 +277,7 @@ pub fn detect(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     let pid: u32 = args.get_parse("patient", 1u32)?;
     let variant = parse_variant(args)?;
     let cfg = classifier_config(args, variant)?;
-    let max_density: Option<f64> = args.get("max-density").map(|s| s.parse()).transpose()?;
+    let max_density: Option<f64> = args.get_parse_opt("max-density")?;
     let policy = AlarmPolicy {
         consecutive: args.get_parse("consecutive", 1usize)?,
     };

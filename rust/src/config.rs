@@ -197,9 +197,25 @@ pub struct SystemConfig {
     /// Saved model bundle to deploy (`[model] path`); serving skips
     /// startup retraining when set.
     pub model_path: Option<String>,
-    /// Background online-retraining epochs per patient during serving
-    /// (`[model] retrain_epochs`; 0 = off).
+    /// Durable per-patient model store (`[model] dir`, CLI
+    /// `--models-dir`): published versions persist here and a serve
+    /// restart resumes from the highest valid one.
+    pub model_dir: Option<String>,
+    /// Online-retraining epochs per scheduled retrain
+    /// (`[model] retrain_epochs`; 0 = retraining off).
     pub retrain_epochs: usize,
+    /// Retrain-trigger threshold on the sliding false-alarm rate
+    /// (`[model] fa_rate`; 0.0 = trigger as soon as the window fills).
+    pub retrain_fa_rate: f64,
+    /// Sliding false-alarm-estimator window, in prediction windows
+    /// (`[model] fa_window`).
+    pub retrain_fa_window: usize,
+    /// Windows to hold off after a triggered retrain
+    /// (`[model] retrain_cooldown`).
+    pub retrain_cooldown: usize,
+    /// Retrains allowed per patient per serve run
+    /// (`[model] max_retrains`; 0 = unlimited).
+    pub retrain_max: u64,
 }
 
 impl Default for SystemConfig {
@@ -214,7 +230,12 @@ impl Default for SystemConfig {
             queue_depth: 64,
             batch_windows: 4,
             model_path: None,
+            model_dir: None,
             retrain_epochs: 0,
+            retrain_fa_rate: 0.0,
+            retrain_fa_window: 64,
+            retrain_cooldown: 512,
+            retrain_max: 1,
         }
     }
 }
@@ -248,7 +269,12 @@ impl SystemConfig {
         cfg.queue_depth = file.get_parse("coordinator.queue_depth", cfg.queue_depth)?;
         cfg.batch_windows = file.get_parse("coordinator.batch_windows", cfg.batch_windows)?;
         cfg.model_path = file.get("model.path").map(str::to_string);
+        cfg.model_dir = file.get("model.dir").map(str::to_string);
         cfg.retrain_epochs = file.get_parse("model.retrain_epochs", cfg.retrain_epochs)?;
+        cfg.retrain_fa_rate = file.get_parse("model.fa_rate", cfg.retrain_fa_rate)?;
+        cfg.retrain_fa_window = file.get_parse("model.fa_window", cfg.retrain_fa_window)?;
+        cfg.retrain_cooldown = file.get_parse("model.retrain_cooldown", cfg.retrain_cooldown)?;
+        cfg.retrain_max = file.get_parse("model.max_retrains", cfg.retrain_max)?;
         file.finish()?;
         Ok(cfg)
     }
@@ -278,7 +304,12 @@ artifacts_dir = "artifacts"
 
 [model]
 path = "models/p1.hdcm"
+dir = "models/fleet"
 retrain_epochs = 3
+fa_rate = 0.15
+fa_window = 32
+retrain_cooldown = 128
+max_retrains = 4
 "#;
 
     #[test]
@@ -302,7 +333,12 @@ retrain_epochs = 3
         assert_eq!(cfg.batch_windows, 8);
         assert!(cfg.use_pjrt);
         assert_eq!(cfg.model_path.as_deref(), Some("models/p1.hdcm"));
+        assert_eq!(cfg.model_dir.as_deref(), Some("models/fleet"));
         assert_eq!(cfg.retrain_epochs, 3);
+        assert!((cfg.retrain_fa_rate - 0.15).abs() < 1e-12);
+        assert_eq!(cfg.retrain_fa_window, 32);
+        assert_eq!(cfg.retrain_cooldown, 128);
+        assert_eq!(cfg.retrain_max, 4);
         // untouched default
         assert_eq!(cfg.alarm_consecutive, 1);
     }
@@ -326,7 +362,10 @@ retrain_epochs = 3
         assert_eq!(cfg.variant, Variant::Optimized);
         assert_eq!(cfg.classifier.temporal_threshold, 130);
         assert_eq!(cfg.model_path, None);
+        assert_eq!(cfg.model_dir, None);
         assert_eq!(cfg.retrain_epochs, 0);
+        assert_eq!(cfg.retrain_fa_window, 64);
+        assert_eq!(cfg.retrain_max, 1);
     }
 
     #[test]

@@ -1,6 +1,87 @@
-//! Serving metrics: ingest counters, latency distribution, throughput.
+//! Serving metrics: ingest counters, latency distribution, throughput,
+//! and the sliding false-alarm-rate estimator that drives the retrain
+//! scheduler ([`crate::coordinator::scheduler`]).
 
 use std::time::Instant;
+
+/// Sliding-window false-alarm-rate estimator: a fixed-capacity ring of
+/// per-window outcomes (`true` = the window was a false alarm — predicted
+/// ictal outside the annotated seizure). O(1) push, O(1) rate. The
+/// retrain scheduler reads [`Self::rate`] only once the window is
+/// [`Self::full`], so a handful of early windows can never trigger a
+/// retrain off a tiny sample.
+#[derive(Clone, Debug)]
+pub struct FalseAlarmRate {
+    buf: Vec<bool>,
+    head: usize,
+    len: usize,
+    false_alarms: usize,
+}
+
+impl FalseAlarmRate {
+    /// A window of `window` outcomes (clamped to ≥ 1).
+    pub fn new(window: usize) -> Self {
+        let cap = window.max(1);
+        FalseAlarmRate {
+            buf: vec![false; cap],
+            head: 0,
+            len: 0,
+            false_alarms: 0,
+        }
+    }
+
+    /// Record one window outcome, evicting the oldest once full.
+    pub fn push(&mut self, false_alarm: bool) {
+        if self.len == self.buf.len() {
+            self.false_alarms -= self.buf[self.head] as usize;
+        } else {
+            self.len += 1;
+        }
+        self.buf[self.head] = false_alarm;
+        self.false_alarms += false_alarm as usize;
+        self.head = (self.head + 1) % self.buf.len();
+    }
+
+    /// Outcomes currently in the window.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The window holds `capacity` outcomes (rate is representative).
+    pub fn full(&self) -> bool {
+        self.len == self.buf.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// False alarms currently in the window.
+    pub fn false_alarms(&self) -> usize {
+        self.false_alarms
+    }
+
+    /// False-alarm fraction of the windowed outcomes (0.0 when empty).
+    pub fn rate(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.false_alarms as f64 / self.len as f64
+    }
+
+    /// Forget everything (a retrain was triggered — the next rate must
+    /// reflect the *new* model, not the outcomes that indicted the old).
+    pub fn clear(&mut self) {
+        self.buf.fill(false);
+        self.head = 0;
+        self.len = 0;
+        self.false_alarms = 0;
+    }
+}
 
 /// Fixed-bucket latency histogram (µs buckets, log-spaced).
 #[derive(Clone, Debug)]
@@ -99,6 +180,11 @@ pub struct ServingMetrics {
     pub backpressure_stalls: u64,
     /// Mid-stream model swaps picked up from the registry (all sessions).
     pub model_swaps: u64,
+    /// Windows predicted ictal outside the annotated seizure (the raw
+    /// material of the false-alarm-rate estimator).
+    pub false_positives: u64,
+    /// Retrains the scheduler triggered during this run (all patients).
+    pub retrains_triggered: u64,
     pub latency: LatencyHistogram,
 }
 
@@ -120,6 +206,8 @@ impl ServingMetrics {
             alarms: 0,
             backpressure_stalls: 0,
             model_swaps: 0,
+            false_positives: 0,
+            retrains_triggered: 0,
             latency: LatencyHistogram::new(),
         }
     }
@@ -138,7 +226,8 @@ impl ServingMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "samples {} | windows {}/{} ({} failed) | alarms {} | stalls {} | model swaps {} | \
+            "samples {} | windows {}/{} ({} failed) | alarms {} | FPs {} | stalls {} | \
+             model swaps {} | retrains {} | \
              window latency mean {:.2} ms p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms max {:.2} ms | \
              {:.0} windows/s, {:.0} samples/s",
             self.samples_in,
@@ -146,8 +235,10 @@ impl ServingMetrics {
             self.windows_submitted,
             self.windows_failed,
             self.alarms,
+            self.false_positives,
             self.backpressure_stalls,
             self.model_swaps,
+            self.retrains_triggered,
             self.latency.mean_s() * 1e3,
             self.latency.quantile_s(0.50) * 1e3,
             self.latency.quantile_s(0.95) * 1e3,
@@ -183,6 +274,62 @@ mod tests {
         let h = LatencyHistogram::new();
         assert!(h.mean_s().is_nan());
         assert!(h.quantile_s(0.5).is_nan());
+    }
+
+    #[test]
+    fn false_alarm_rate_slides_and_clears() {
+        let mut est = FalseAlarmRate::new(4);
+        assert!(est.is_empty());
+        assert_eq!(est.rate(), 0.0);
+        est.push(true);
+        est.push(false);
+        assert_eq!((est.len(), est.false_alarms()), (2, 1));
+        assert!(!est.full());
+        assert!((est.rate() - 0.5).abs() < 1e-12);
+        est.push(false);
+        est.push(false);
+        assert!(est.full());
+        assert!((est.rate() - 0.25).abs() < 1e-12);
+        // Sliding: the initial `true` is evicted by the 5th push.
+        est.push(false);
+        assert_eq!(est.false_alarms(), 0);
+        assert_eq!(est.rate(), 0.0);
+        assert_eq!(est.len(), 4);
+        // A burst drives the rate to 1.0 within one window span.
+        for _ in 0..4 {
+            est.push(true);
+        }
+        assert!((est.rate() - 1.0).abs() < 1e-12);
+        est.clear();
+        assert!(est.is_empty());
+        assert_eq!(est.false_alarms(), 0);
+        assert_eq!(est.capacity(), 4);
+    }
+
+    #[test]
+    fn false_alarm_rate_window_is_exact() {
+        // Cross-check the ring against a naive reference over a long
+        // deterministic pattern.
+        let mut est = FalseAlarmRate::new(7);
+        let mut naive: Vec<bool> = Vec::new();
+        for i in 0..100usize {
+            let fa = i % 3 == 0;
+            est.push(fa);
+            naive.push(fa);
+            let tail: Vec<bool> = naive.iter().rev().take(7).copied().collect();
+            let expect = tail.iter().filter(|&&b| b).count();
+            assert_eq!(est.false_alarms(), expect, "after push {i}");
+            assert_eq!(est.len(), tail.len());
+        }
+    }
+
+    #[test]
+    fn zero_window_clamps_to_one() {
+        let mut est = FalseAlarmRate::new(0);
+        assert_eq!(est.capacity(), 1);
+        est.push(true);
+        assert!(est.full());
+        assert_eq!(est.rate(), 1.0);
     }
 
     #[test]

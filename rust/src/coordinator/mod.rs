@@ -9,7 +9,12 @@
 //! * [`session`] — per-patient state: LBP front-end, window assembly,
 //!   the deployed model version, detector state;
 //! * [`registry`] — patient → published [`crate::hdc::model::ModelBundle`]
-//!   with atomic hot swap (background retrains publish here);
+//!   with atomic hot swap (background retrains publish here), plus the
+//!   durable [`registry::ModelStore`] backend (`serve --models-dir`);
+//! * [`scheduler`] — the false-alarm-driven retrain policy: per-window
+//!   outcomes feed a sliding estimator, triggered retrains resume from
+//!   the model's counter planes and publish+persist the next version
+//!   mid-stream;
 //! * [`router`] — routes interleaved sample chunks to sessions;
 //! * [`runtime::engine_pool`](crate::runtime::engine_pool) — the engine
 //!   worker threads with bounded queues (backpressure);
@@ -22,6 +27,7 @@ pub mod detector;
 pub mod metrics;
 pub mod registry;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 pub mod session;
 

@@ -16,15 +16,30 @@
 //!   therefore never mix two model versions inside one coalesced
 //!   `run_batch` call (pinned by `engine_pool` and
 //!   `tests/model_lifecycle.rs`);
-//! * versions are monotonically increasing per patient: a stale publish
-//!   (version <= current) is rejected, so a slow retrain can never
-//!   clobber a newer model.
+//! * versions are monotonically increasing per patient: a **stale**
+//!   publish (version < current) and a **duplicate** publish (version ==
+//!   current) are rejected with distinct errors — a slow retrain racing a
+//!   newer model reads differently from a double-publish bug, and
+//!   operators triage them differently.
+//!
+//! ## Persistence ([`ModelStore`])
+//!
+//! The registry itself is memory-only; [`ModelStore`] is its durable
+//! backend. Every published version is written to a per-patient
+//! directory (`<root>/<patient>/v<NNN>.hdcm`) via an atomic
+//! write-to-temp-then-rename, and a startup [`ModelStore::scan`] recovers
+//! the highest *valid* version per patient — quarantining corrupt files
+//! (renamed `*.corrupt`) and ignoring leftover temp files from a crashed
+//! publish — so `repro serve --models-dir` resumes exactly where the
+//! last publish left off.
 
 use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 use crate::ensure;
+use crate::error::Context;
 use crate::hdc::am::AmPlane;
 use crate::hdc::model::ModelBundle;
 
@@ -98,9 +113,13 @@ impl ModelRegistry {
         self.slots.write().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// Publish a new model version for a patient. Fails on a stale
-    /// publish (`bundle.version` not strictly newer than the current
-    /// one), so concurrent retrains cannot roll a patient back.
+    /// Publish a new model version for a patient. Fails unless
+    /// `bundle.version` is strictly newer than the current one, with the
+    /// two non-monotone cases told apart: a **duplicate** publish
+    /// (version == current — usually a double-publish bug or a replayed
+    /// request) and a **stale** publish (version < current — a slow
+    /// retrain lost the race to a newer model). Either way the current
+    /// model is untouched.
     pub fn publish(
         &self,
         patient_id: u32,
@@ -110,8 +129,13 @@ impl ModelRegistry {
         let mut slots = self.write();
         if let Some(current) = slots.get(&patient_id) {
             ensure!(
+                model.version() != current.version(),
+                "duplicate publish for patient {patient_id}: version {} is already current",
+                model.version()
+            );
+            ensure!(
                 model.version() > current.version(),
-                "stale publish for patient {patient_id}: version {} <= current {}",
+                "stale publish for patient {patient_id}: version {} < current {}",
                 model.version(),
                 current.version()
             );
@@ -162,6 +186,195 @@ impl ModelRegistry {
     }
 }
 
+/// Durable backend of the registry: a per-patient directory of versioned
+/// bundle files.
+///
+/// ```text
+/// <root>/
+///   1/ v001.hdcm  v002.hdcm            # patient 1, versions 1 and 2
+///   7/ v001.hdcm  .v002.hdcm.tmp       # crashed mid-publish: tmp ignored
+/// ```
+///
+/// Publishing is crash-safe: the bundle is written to a hidden
+/// `.v<NNN>.hdcm.tmp` in the same directory and `rename`d into place, so
+/// a reader (or a restarted server) only ever sees complete files or no
+/// file. [`Self::scan`] walks the tree newest-version-first and recovers
+/// the highest bundle that parses *and* matches its filename (version)
+/// and directory (patient id); anything that fails is renamed
+/// `*.corrupt` (quarantined — the next scan will not retry it) and the
+/// scan falls back to the next-newest version.
+pub struct ModelStore {
+    root: PathBuf,
+}
+
+/// Outcome of a [`ModelStore::scan`].
+#[derive(Default)]
+pub struct StoreScan {
+    /// Highest valid version per patient.
+    pub recovered: BTreeMap<u32, ModelBundle>,
+    /// Files that failed to load: renamed `*.corrupt` by [`ModelStore::scan`]
+    /// (the returned paths are the new names), reported at their original
+    /// paths by the read-only [`ModelStore::peek`].
+    pub quarantined: Vec<PathBuf>,
+    /// Entries that are not versioned bundle files (leftover `.tmp`
+    /// publishes, foreign files, non-numeric directories) — left alone.
+    pub ignored: Vec<PathBuf>,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) a model store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> crate::Result<ModelStore> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("create model store {}", root.display()))?;
+        Ok(ModelStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Path a given (patient, version) persists at.
+    pub fn version_path(&self, patient_id: u32, version: u64) -> PathBuf {
+        self.root
+            .join(patient_id.to_string())
+            .join(format!("v{version:03}.hdcm"))
+    }
+
+    /// Persist a bundle under its provenance patient id, atomically:
+    /// write to a temp file in the destination directory, then rename
+    /// into place. The temp name is unique per writer (process +
+    /// sequence), so concurrent saves of the same version (two
+    /// schedulers racing, an unlimited-retrain policy) can never
+    /// interleave writes into one file — the atomic rename means the
+    /// last completed publish wins wholesale. Returns the final path.
+    pub fn save(&self, bundle: &ModelBundle) -> crate::Result<PathBuf> {
+        static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+        let patient_id = bundle.provenance.patient_id;
+        ensure!(
+            patient_id != 0,
+            "bundle v{} has no patient id (provenance.patient_id = 0) — \
+             a model store is keyed by patient",
+            bundle.version
+        );
+        let dir = self.root.join(patient_id.to_string());
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("create patient dir {}", dir.display()))?;
+        let path = self.version_path(patient_id, bundle.version);
+        let tmp = dir.join(format!(
+            ".v{:03}.{}.{}.hdcm.tmp",
+            bundle.version,
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        // write → fsync → rename → fsync(dir): without the data fsync,
+        // delayed allocation can commit the rename before the payload
+        // blocks, and an OS crash would leave a truncated "published"
+        // file — exactly the torn state the temp file exists to prevent.
+        {
+            use std::io::Write;
+            let mut file = std::fs::File::create(&tmp)
+                .with_context(|| format!("create model bundle {}", tmp.display()))?;
+            file.write_all(&bundle.to_bytes())
+                .with_context(|| format!("write model bundle {}", tmp.display()))?;
+            file.sync_all()
+                .with_context(|| format!("sync model bundle {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publish {} -> {}", tmp.display(), path.display()))?;
+        // Make the rename itself durable (directory metadata). Best
+        // effort: not every filesystem lets a directory be fsynced.
+        if let Ok(d) = std::fs::File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(path)
+    }
+
+    /// Recover the highest valid version per patient (see the type-level
+    /// docs for the corruption / crash-leftover rules). Deterministic:
+    /// directory-read order never affects the result.
+    pub fn scan(&self) -> crate::Result<StoreScan> {
+        self.scan_inner(true)
+    }
+
+    /// Read-only [`Self::scan`]: corrupt files are *reported* under
+    /// `quarantined` at their original paths but never renamed.
+    /// Inspection tools (`repro model-info <dir>`) go through this so
+    /// that looking at a store cannot change it.
+    pub fn peek(&self) -> crate::Result<StoreScan> {
+        self.scan_inner(false)
+    }
+
+    fn scan_inner(&self, quarantine_corrupt: bool) -> crate::Result<StoreScan> {
+        let mut out = StoreScan::default();
+        let entries = std::fs::read_dir(&self.root)
+            .with_context(|| format!("scan model store {}", self.root.display()))?;
+        for entry in entries {
+            let dir = entry?.path();
+            let pid = dir
+                .file_name()
+                .and_then(|n| n.to_str())
+                .filter(|n| n.bytes().all(|b| b.is_ascii_digit()))
+                .and_then(|n| n.parse::<u32>().ok());
+            let (Some(pid), true) = (pid, dir.is_dir()) else {
+                out.ignored.push(dir);
+                continue;
+            };
+            let mut candidates: Vec<(u64, PathBuf)> = Vec::new();
+            for file in std::fs::read_dir(&dir)? {
+                let path = file?.path();
+                match path.file_name().and_then(|n| n.to_str()).and_then(parse_version_name) {
+                    Some(version) => candidates.push((version, path)),
+                    None => out.ignored.push(path),
+                }
+            }
+            // Newest first; the first candidate that loads cleanly wins,
+            // older versions stay on disk untouched (history).
+            candidates.sort_by(|a, b| b.0.cmp(&a.0));
+            for (version, path) in candidates {
+                match ModelBundle::load(&path) {
+                    Ok(b) if b.version == version && b.provenance.patient_id == pid => {
+                        out.recovered.insert(pid, b);
+                        break;
+                    }
+                    // Parses but lies about its name (wrong version or
+                    // patient): as untrustworthy as a corrupt file.
+                    Ok(_) | Err(_) => out.quarantined.push(if quarantine_corrupt {
+                        quarantine(&path)
+                    } else {
+                        path
+                    }),
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// `v<digits>.hdcm` → version; anything else (tmp files, quarantined
+/// files, foreign names) is not a bundle candidate.
+fn parse_version_name(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix('v')?.strip_suffix(".hdcm")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Rename a failed bundle file out of the candidate namespace so the
+/// next scan does not retry it; returns the new path. If the rename
+/// itself fails the original path is returned — the scan still skips the
+/// file this run.
+fn quarantine(path: &Path) -> PathBuf {
+    let mut name = path.as_os_str().to_owned();
+    name.push(".corrupt");
+    let target = PathBuf::from(name);
+    match std::fs::rename(path, &target) {
+        Ok(()) => target,
+        Err(_) => path.to_path_buf(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,7 +412,7 @@ mod tests {
     fn stale_publish_rejected_newer_swaps() {
         let reg = ModelRegistry::new();
         reg.publish(3, bundle(2)).unwrap();
-        // Same version and older versions are stale.
+        // Same version and older versions are rejected.
         assert!(reg.publish(3, bundle(2)).is_err());
         assert!(reg.publish(3, bundle(1)).is_err());
         assert_eq!(reg.current(3).unwrap().version(), 2);
@@ -207,6 +420,31 @@ mod tests {
         let m3 = reg.publish(3, bundle(3)).unwrap();
         assert!(Arc::ptr_eq(&m3, &reg.current(3).unwrap()));
         assert_eq!(reg.publishes(), 2);
+    }
+
+    #[test]
+    fn duplicate_and_stale_publishes_error_distinctly() {
+        // The two non-monotone failure modes must be tellable apart: a
+        // re-publish of the current version is a *duplicate* (double-
+        // publish bug / replayed request), an older version is *stale*
+        // (a slow retrain lost the race). Both leave the slot untouched.
+        let reg = ModelRegistry::new();
+        reg.publish(4, bundle(5)).unwrap();
+
+        let dup = reg.publish(4, bundle(5)).unwrap_err();
+        let msg = format!("{dup:#}");
+        assert!(msg.contains("duplicate publish"), "{msg}");
+        assert!(msg.contains("version 5 is already current"), "{msg}");
+        assert!(!msg.contains("stale"), "{msg}");
+
+        let stale = reg.publish(4, bundle(3)).unwrap_err();
+        let msg = format!("{stale:#}");
+        assert!(msg.contains("stale publish"), "{msg}");
+        assert!(msg.contains("version 3 < current 5"), "{msg}");
+        assert!(!msg.contains("duplicate"), "{msg}");
+
+        assert_eq!(reg.current(4).unwrap().version(), 5);
+        assert_eq!(reg.publishes(), 1, "failed publishes are not counted");
     }
 
     #[test]
@@ -234,6 +472,107 @@ mod tests {
         let v1 = reg.publish(1, bundle(1)).unwrap();
         let v2 = reg.publish(1, bundle(2)).unwrap();
         assert!(!Arc::ptr_eq(&v1.plane, &v2.plane));
+    }
+
+    fn store_dir(tag: &str) -> PathBuf {
+        crate::testkit::scratch_dir(&format!("store_{tag}"))
+    }
+
+    fn patient_bundle(pid: u32, version: u64) -> ModelBundle {
+        let mut b = bundle(version);
+        b.provenance.patient_id = pid;
+        b
+    }
+
+    #[test]
+    fn store_save_scan_roundtrip() {
+        let dir = store_dir("roundtrip");
+        let store = ModelStore::open(&dir).unwrap();
+        let path = store.save(&patient_bundle(7, 1)).unwrap();
+        assert_eq!(path, store.version_path(7, 1));
+        assert!(path.ends_with("7/v001.hdcm"));
+        store.save(&patient_bundle(7, 2)).unwrap();
+        store.save(&patient_bundle(12, 4)).unwrap();
+
+        let scan = store.scan().unwrap();
+        assert_eq!(scan.recovered.len(), 2);
+        assert_eq!(scan.recovered[&7], patient_bundle(7, 2));
+        assert_eq!(scan.recovered[&12], patient_bundle(12, 4));
+        assert!(scan.quarantined.is_empty());
+        assert!(scan.ignored.is_empty());
+        // Older versions are history, not garbage.
+        assert!(store.version_path(7, 1).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_rejects_patientless_bundles() {
+        let dir = store_dir("nopid");
+        let store = ModelStore::open(&dir).unwrap();
+        let err = store.save(&bundle(1)).unwrap_err();
+        assert!(format!("{err:#}").contains("patient"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_quarantines_corrupt_and_ignores_tmp() {
+        let dir = store_dir("corrupt");
+        let store = ModelStore::open(&dir).unwrap();
+        store.save(&patient_bundle(3, 1)).unwrap();
+        store.save(&patient_bundle(3, 2)).unwrap();
+        // Simulate a crash: the newest version is truncated on disk and a
+        // temp file from an unfinished publish is left behind.
+        let v3 = store.version_path(3, 3);
+        let bytes = patient_bundle(3, 3).to_bytes();
+        std::fs::write(&v3, &bytes[..bytes.len() / 2]).unwrap();
+        std::fs::write(dir.join("3").join(".v004.hdcm.tmp"), b"partial").unwrap();
+
+        let scan = store.scan().unwrap();
+        assert_eq!(scan.recovered[&3].version, 2, "fall back to the newest valid version");
+        assert_eq!(scan.quarantined.len(), 1);
+        assert!(scan.quarantined[0].ends_with("v003.hdcm.corrupt"));
+        assert!(!v3.exists(), "corrupt file renamed out of the namespace");
+        assert_eq!(scan.ignored.len(), 1, "tmp leftovers are ignored, not quarantined");
+
+        // Idempotent: a second scan finds nothing new to quarantine.
+        let again = store.scan().unwrap();
+        assert_eq!(again.recovered[&3].version, 2);
+        assert!(again.quarantined.is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn peek_reports_without_touching_the_store() {
+        let dir = store_dir("peek");
+        let store = ModelStore::open(&dir).unwrap();
+        store.save(&patient_bundle(4, 1)).unwrap();
+        let v2 = store.version_path(4, 2);
+        std::fs::write(&v2, b"torn write").unwrap();
+
+        let peek = store.peek().unwrap();
+        assert_eq!(peek.recovered[&4].version, 1);
+        assert_eq!(peek.quarantined, vec![v2.clone()], "reported at the original path");
+        assert!(v2.exists(), "peek must not rename anything");
+
+        // A real scan afterwards does quarantine it.
+        let scan = store.scan().unwrap();
+        assert!(!v2.exists());
+        assert_eq!(scan.quarantined.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_quarantines_lying_filenames() {
+        // A file that parses but claims a different version (or patient)
+        // than its name is untrustworthy — quarantined like corruption.
+        let dir = store_dir("lying");
+        let store = ModelStore::open(&dir).unwrap();
+        store.save(&patient_bundle(5, 1)).unwrap();
+        std::fs::write(store.version_path(5, 9), patient_bundle(5, 2).to_bytes()).unwrap();
+        let scan = store.scan().unwrap();
+        assert_eq!(scan.recovered[&5].version, 1);
+        assert_eq!(scan.quarantined.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

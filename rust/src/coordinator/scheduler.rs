@@ -1,0 +1,401 @@
+//! False-alarm-driven retrain scheduling.
+//!
+//! PR 4's `--retrain-epochs` launched one unconditional background
+//! retrain per patient at startup. This module replaces that one-shot
+//! pass with a **policy**: sessions feed per-window outcomes (was the
+//! window a false alarm?) into a sliding estimator
+//! ([`crate::coordinator::metrics::FalseAlarmRate`]), and when a
+//! patient's rate crosses the configured trigger the scheduler launches
+//! an **incremental** retrain — resumed from the model's persisted
+//! counter planes ([`crate::pipeline::retrain_bundle`]) — then persists
+//! the new version to the [`ModelStore`] (when configured) and publishes
+//! it into the [`ModelRegistry`], where serving sessions hot-swap it at
+//! their next micro-batch. Persist-then-publish: a version that is being
+//! served is always already on disk, so a crash right after the publish
+//! still resumes at that version.
+//!
+//! The trigger decision ([`PatientWatch::observe`]) is a pure function
+//! of the per-patient outcome stream — no clocks, no thread timing — so
+//! tests can pin the exact window index a planted false-alarm burst
+//! fires at (`tests/retrain_scheduler.rs`). Only the retrain *execution*
+//! is asynchronous (a background thread per trigger); foreground mode
+//! ([`RetrainScheduler::foreground`]) runs it inline for deterministic
+//! end-to-end tests.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::coordinator::metrics::FalseAlarmRate;
+use crate::coordinator::registry::{ModelRegistry, ModelStore};
+use crate::data::synth::Record;
+use crate::pipeline::{self, RetrainOptions};
+
+/// When and how to retrain a patient's model.
+#[derive(Clone, Debug)]
+pub struct RetrainPolicy {
+    /// Upper bound on online epochs per retrain
+    /// ([`crate::hdc::online::OnlineConfig::max_epochs`]).
+    pub epochs: usize,
+    /// Sliding-window size (prediction windows) of the false-alarm-rate
+    /// estimator. The rate is only consulted once the window is full.
+    pub fa_window: usize,
+    /// Trigger threshold: retrain when the windowed false-alarm rate
+    /// reaches this fraction. `0.0` triggers as soon as the window fills
+    /// — the "retrain once, early in the stream" behaviour the old
+    /// one-shot pass approximated.
+    pub fa_rate: f64,
+    /// Windows to hold off after a trigger before the rate is consulted
+    /// again (gives the retrained model time to prove itself).
+    pub cooldown: usize,
+    /// Retrains allowed per patient over the stream (0 = unlimited).
+    pub max_retrains: u64,
+}
+
+impl Default for RetrainPolicy {
+    fn default() -> Self {
+        RetrainPolicy {
+            epochs: 4,
+            fa_window: 64,
+            fa_rate: 0.0,
+            cooldown: 512,
+            max_retrains: 1,
+        }
+    }
+}
+
+/// Per-patient trigger state: the estimator plus cooldown/budget
+/// bookkeeping. Purely deterministic — see the module docs.
+#[derive(Clone, Debug)]
+pub struct PatientWatch {
+    est: FalseAlarmRate,
+    cooldown_left: usize,
+    /// Retrains triggered for this patient so far.
+    pub retrains: u64,
+    /// Outcomes observed (1-based index of the latest window fed in).
+    pub windows_seen: u64,
+}
+
+impl PatientWatch {
+    pub fn new(policy: &RetrainPolicy) -> Self {
+        PatientWatch {
+            est: FalseAlarmRate::new(policy.fa_window),
+            cooldown_left: 0,
+            retrains: 0,
+            windows_seen: 0,
+        }
+    }
+
+    /// Current windowed false-alarm rate (diagnostic).
+    pub fn rate(&self) -> f64 {
+        self.est.rate()
+    }
+
+    /// Feed one window outcome; returns `true` when this outcome crosses
+    /// the retrain trigger. On a trigger the estimator is cleared and
+    /// the cooldown starts; outcomes during the cooldown are *not* fed
+    /// to the estimator (they straddle the swap to the retrained model),
+    /// so the post-cooldown rate indicts only the new model.
+    pub fn observe(&mut self, policy: &RetrainPolicy, false_alarm: bool) -> bool {
+        self.windows_seen += 1;
+        if self.cooldown_left > 0 {
+            self.cooldown_left -= 1;
+            return false;
+        }
+        self.est.push(false_alarm);
+        if policy.max_retrains != 0 && self.retrains >= policy.max_retrains {
+            return false;
+        }
+        if !self.est.full() || self.est.rate() < policy.fa_rate {
+            return false;
+        }
+        self.retrains += 1;
+        self.cooldown_left = policy.cooldown;
+        self.est.clear();
+        true
+    }
+}
+
+/// The scheduler: per-patient [`PatientWatch`]es plus everything a
+/// triggered retrain needs (the training record, the registry to read
+/// the current version from and publish the next into, and optionally
+/// the store to persist it first).
+pub struct RetrainScheduler {
+    policy: RetrainPolicy,
+    registry: Arc<ModelRegistry>,
+    store: Option<Arc<ModelStore>>,
+    /// Training record per patient (the labelled seizure the retrain's
+    /// epoch loop classifies against). A patient without one can trigger
+    /// but not retrain — reported, not fatal.
+    train: BTreeMap<u32, Record>,
+    background: bool,
+    watches: Mutex<BTreeMap<u32, PatientWatch>>,
+    /// (patient, 1-based window index) of every trigger, in order.
+    trigger_log: Mutex<Vec<(u32, u64)>>,
+    /// Patients with a retrain currently executing. A trigger that lands
+    /// while one is in flight is *not* re-launched (it would re-derive
+    /// the same base version, burn a full retrain and then hit the
+    /// registry's duplicate-publish rejection); the next trigger after
+    /// the job lands picks up the newly published base instead. Shared
+    /// with the background jobs (they clear their own entry on exit).
+    in_flight: Arc<Mutex<BTreeSet<u32>>>,
+    threads: Mutex<Vec<JoinHandle<String>>>,
+    /// Messages from foreground (inline) retrains, drained by `join`.
+    messages: Mutex<Vec<String>>,
+}
+
+impl RetrainScheduler {
+    pub fn new(
+        policy: RetrainPolicy,
+        registry: Arc<ModelRegistry>,
+        store: Option<Arc<ModelStore>>,
+        train: BTreeMap<u32, Record>,
+    ) -> RetrainScheduler {
+        RetrainScheduler {
+            policy,
+            registry,
+            store,
+            train,
+            background: true,
+            watches: Mutex::new(BTreeMap::new()),
+            trigger_log: Mutex::new(Vec::new()),
+            in_flight: Arc::new(Mutex::new(BTreeSet::new())),
+            threads: Mutex::new(Vec::new()),
+            messages: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Run triggered retrains inline on the observing thread instead of
+    /// spawning — publishes land at a deterministic point in the stream
+    /// (tests pin hot-swap boundaries through this).
+    pub fn foreground(mut self) -> Self {
+        self.background = false;
+        self
+    }
+
+    pub fn policy(&self) -> &RetrainPolicy {
+        &self.policy
+    }
+
+    fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Feed one per-window outcome for a patient; launches a retrain and
+    /// returns `true` when the policy triggers.
+    pub fn observe(&self, patient_id: u32, false_alarm: bool) -> bool {
+        let (triggered, at) = {
+            let mut watches = Self::lock(&self.watches);
+            let watch = watches
+                .entry(patient_id)
+                .or_insert_with(|| PatientWatch::new(&self.policy));
+            (watch.observe(&self.policy, false_alarm), watch.windows_seen)
+        };
+        if triggered {
+            Self::lock(&self.trigger_log).push((patient_id, at));
+            self.launch(patient_id);
+        }
+        triggered
+    }
+
+    /// Every trigger so far as (patient, 1-based window index), in
+    /// trigger order — the deterministic record the tests pin.
+    pub fn triggers(&self) -> Vec<(u32, u64)> {
+        Self::lock(&self.trigger_log).clone()
+    }
+
+    /// Retrains triggered for one patient.
+    pub fn retrains(&self, patient_id: u32) -> u64 {
+        Self::lock(&self.watches)
+            .get(&patient_id)
+            .map(|w| w.retrains)
+            .unwrap_or(0)
+    }
+
+    fn launch(&self, patient_id: u32) {
+        let Some(record) = self.train.get(&patient_id).cloned() else {
+            Self::lock(&self.messages).push(format!(
+                "patient {patient_id}: retrain triggered but no training record was \
+                 retained — skipped"
+            ));
+            return;
+        };
+        let Some(current) = self.registry.current(patient_id) else {
+            Self::lock(&self.messages).push(format!(
+                "patient {patient_id}: retrain triggered before any model was published — \
+                 skipped"
+            ));
+            return;
+        };
+        if !Self::lock(&self.in_flight).insert(patient_id) {
+            Self::lock(&self.messages).push(format!(
+                "patient {patient_id}: retrain triggered while a previous retrain is \
+                 still in flight — skipped (a later trigger will see the new base)"
+            ));
+            return;
+        }
+        let base = current.bundle.clone();
+        let registry = self.registry.clone();
+        let store = self.store.clone();
+        let epochs = self.policy.epochs;
+        let in_flight = self.in_flight.clone();
+        let job = move || {
+            let msg = retrain_job(&registry, store.as_deref(), patient_id, base, &record, epochs);
+            Self::lock(&in_flight).remove(&patient_id);
+            msg
+        };
+        if self.background {
+            Self::lock(&self.threads).push(std::thread::spawn(job));
+        } else {
+            let msg = job();
+            Self::lock(&self.messages).push(msg);
+        }
+    }
+
+    /// Wait for every in-flight retrain and drain all outcome messages
+    /// (in completion order; foreground messages first).
+    pub fn join(&self) -> Vec<String> {
+        let mut out: Vec<String> = Self::lock(&self.messages).drain(..).collect();
+        let handles: Vec<JoinHandle<String>> = Self::lock(&self.threads).drain(..).collect();
+        for handle in handles {
+            out.push(
+                handle
+                    .join()
+                    .unwrap_or_else(|_| "a retrain thread panicked".to_string()),
+            );
+        }
+        out
+    }
+}
+
+/// One triggered retrain, start to finish: derive v+1 (incrementally
+/// when the bundle carries counter planes), persist it, publish it.
+fn retrain_job(
+    registry: &ModelRegistry,
+    store: Option<&ModelStore>,
+    patient_id: u32,
+    base: crate::hdc::model::ModelBundle,
+    record: &Record,
+    epochs: usize,
+) -> String {
+    let opts = RetrainOptions {
+        max_epochs: epochs,
+        ..Default::default()
+    };
+    let (mut next, report) = pipeline::retrain_bundle(&base, record, &opts);
+    next.provenance.patient_id = patient_id;
+    let version = next.version;
+    if let Some(store) = store {
+        if let Err(e) = store.save(&next) {
+            return format!("patient {patient_id}: persist of v{version} failed: {e:#}");
+        }
+    }
+    match registry.publish(patient_id, next) {
+        Ok(_) => format!(
+            "patient {patient_id}: published model v{version} \
+             (training-window errors {} -> {})",
+            report.initial_errors, report.best_errors
+        ),
+        Err(e) => format!("patient {patient_id}: publish of v{version} skipped: {e:#}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdc::am::AssociativeMemory;
+    use crate::hdc::classifier::{ClassifierConfig, Variant};
+    use crate::hdc::hv::Hv;
+    use crate::hdc::model::{ModelBundle, Provenance};
+
+    fn policy(window: usize, rate: f64, cooldown: usize, max: u64) -> RetrainPolicy {
+        RetrainPolicy {
+            epochs: 2,
+            fa_window: window,
+            fa_rate: rate,
+            cooldown,
+            max_retrains: max,
+        }
+    }
+
+    #[test]
+    fn zero_rate_triggers_exactly_when_the_window_fills() {
+        let p = policy(8, 0.0, 1000, 1);
+        let mut w = PatientWatch::new(&p);
+        for i in 1..=7u64 {
+            assert!(!w.observe(&p, false), "window not full at {i}");
+        }
+        assert!(w.observe(&p, false), "full window + rate 0.0 >= 0.0 fires");
+        assert_eq!(w.windows_seen, 8);
+        assert_eq!(w.retrains, 1);
+        // Budget of 1: never again, cooldown or not.
+        for _ in 0..2000 {
+            assert!(!w.observe(&p, true));
+        }
+    }
+
+    #[test]
+    fn rate_threshold_needs_the_burst() {
+        // 25% threshold over a 16-window estimator: clean stream never
+        // fires; 4 false alarms inside one window span do.
+        let p = policy(16, 0.25, 1000, 1);
+        let mut w = PatientWatch::new(&p);
+        for _ in 0..100 {
+            assert!(!w.observe(&p, false));
+        }
+        assert!(!w.observe(&p, true));
+        assert!(!w.observe(&p, true));
+        assert!(!w.observe(&p, true));
+        assert!(w.observe(&p, true), "4/16 = 25% reaches the trigger");
+        assert_eq!(w.windows_seen, 104);
+    }
+
+    #[test]
+    fn cooldown_spaces_triggers() {
+        let p = policy(2, 1.0, 10, 0); // unlimited retrains, 10-window cooldown
+        let mut w = PatientWatch::new(&p);
+        assert!(!w.observe(&p, true));
+        assert!(w.observe(&p, true), "2/2 false alarms fire");
+        // Cooldown: the next 10 outcomes cannot fire…
+        for i in 0..10 {
+            assert!(!w.observe(&p, true), "cooldown window {i}");
+        }
+        // …after which the (cleared, refilled) estimator fires again.
+        assert!(!w.observe(&p, true), "estimator refilling after clear");
+        assert!(w.observe(&p, true));
+        assert_eq!(w.retrains, 2);
+    }
+
+    #[test]
+    fn scheduler_without_training_record_reports_instead_of_retraining() {
+        let registry = Arc::new(ModelRegistry::new());
+        registry
+            .publish(3, {
+                let mut b = ModelBundle::new(
+                    Variant::Optimized,
+                    ClassifierConfig::optimized(),
+                    AssociativeMemory::new(Hv::zero(), Hv::ones()),
+                    Provenance::default(),
+                );
+                b.provenance.patient_id = 3;
+                b
+            })
+            .unwrap();
+        let sched = RetrainScheduler::new(
+            policy(2, 0.0, 100, 1),
+            registry.clone(),
+            None,
+            BTreeMap::new(),
+        )
+        .foreground();
+        assert!(!sched.observe(3, false));
+        assert!(sched.observe(3, false), "trigger fires at window 2");
+        assert_eq!(sched.triggers(), vec![(3, 2)]);
+        assert_eq!(sched.retrains(3), 1);
+        let msgs = sched.join();
+        assert_eq!(msgs.len(), 1);
+        assert!(msgs[0].contains("no training record"), "{}", msgs[0]);
+        // No publish happened: still v1.
+        assert_eq!(registry.current(3).unwrap().version(), 1);
+    }
+}

@@ -54,6 +54,10 @@ pub struct Session {
     model: Arc<PublishedModel>,
     /// Mid-stream model swaps this session has picked up.
     pub model_swaps: u64,
+    /// Windows predicted ictal outside the annotated seizure — the
+    /// session's share of the false-alarm-rate signal the retrain
+    /// scheduler watches (fed by the server, which holds the annotation).
+    pub false_positives: u64,
     pub detector: Detector,
     /// Collected predictions (for offline scoring after the stream ends).
     pub predictions: Vec<WindowPrediction>,
@@ -74,6 +78,7 @@ impl Session {
             batch_count: 0,
             model,
             model_swaps: 0,
+            false_positives: 0,
             detector: Detector::new(consecutive),
             predictions: Vec::new(),
         }
@@ -192,6 +197,12 @@ impl Session {
         self.detector.push(seq, is_ictal, margin)
     }
 
+    /// Record one ground-truthed window outcome (called by the server,
+    /// which owns the record annotation).
+    pub fn record_outcome(&mut self, false_positive: bool) {
+        self.false_positives += false_positive as u64;
+    }
+
     /// Windows emitted so far.
     pub fn windows(&self) -> u64 {
         self.next_seq
@@ -207,6 +218,7 @@ impl Session {
         self.batch_count = 0;
         self.detector.reset();
         self.predictions.clear();
+        self.false_positives = 0;
     }
 }
 

@@ -18,14 +18,14 @@
 //!
 //! ```text
 //! magic   [u8;4] = b"HDCM"
-//! format  u32    = 1
+//! format  u32    = 1 | 2
 //! n_sections u32
 //! section * n_sections:
 //!     tag [u8;4], len u32, payload [u8; len]
 //! ```
 //!
 //! Sections (any order; unknown tags are skipped for forward
-//! compatibility, the four below are required):
+//! compatibility, the first four below are required):
 //!
 //! | tag    | payload                                                        |
 //! |--------|----------------------------------------------------------------|
@@ -33,10 +33,25 @@
 //! | `CFGS` | seed u64, spatial u16, temporal u16, train_density f64-bits    |
 //! | `AMPL` | num_classes u32, dim u32, packed class HVs (dim/8 bytes each)  |
 //! | `PROV` | patient u32, epochs u32, parent u64, windows 2×u64, note (str) |
+//! | `CNTP` | classes u32, dim u32, windows 2×u64, per-class count planes    |
+//! |        | (dim × u32 each) — **format 2, optional**                      |
 //!
-//! Every length is validated before use, so truncated or corrupt files
-//! fail with an actionable error instead of a panic; a format-version
-//! bump fails loudly rather than misreading old bytes.
+//! Format 2 is format 1 plus the optional `CNTP` section: the saturating
+//! per-class counter planes the model was thinned from, so
+//! [`crate::hdc::online::OnlineTrainer`] can resume retraining
+//! incrementally from the artifact instead of re-seeding from a record.
+//! A bundle without counter planes is still written as format 1 (byte-
+//! identical to the format-1 writer), and because `CNTP` is just another
+//! length-prefixed section, a format-1 reader that tolerates the header
+//! recovers the format-1 content by the unknown-section skip rule.
+//! Readers here accept both versions and skip `CNTP` when absent.
+//!
+//! Every length is validated against the remaining file size before any
+//! payload is touched (allocations are fixed-size, never sized by an
+//! attacker-controlled length), so truncated, corrupt or bit-flipped
+//! files fail with an actionable error instead of a panic or an OOM; a
+//! format-version bump beyond what this build reads fails loudly rather
+//! than misreading new bytes.
 
 use std::path::Path;
 
@@ -50,8 +65,13 @@ use super::hv::Hv;
 
 const MAGIC: [u8; 4] = *b"HDCM";
 
-/// On-disk format version this build writes and reads.
-pub const FORMAT_VERSION: u32 = 1;
+/// Newest on-disk format version this build reads and writes. Bundles
+/// without counter planes are still written as format
+/// [`BASE_FORMAT_VERSION`] so format-1 readers keep loading them.
+pub const FORMAT_VERSION: u32 = 2;
+
+/// The counter-plane-free baseline format (what PR-4 readers understand).
+pub const BASE_FORMAT_VERSION: u32 = 1;
 
 /// Where a model came from: training lineage metadata, carried alongside
 /// the weights so `repro model-info` can answer "what is this file?".
@@ -67,6 +87,21 @@ pub struct Provenance {
     pub train_windows: [u64; NUM_CLASSES],
     /// Free-form note ("one-shot", retrain summary, ...).
     pub note: String,
+}
+
+/// The training state behind a thinned AM: the per-class counter planes
+/// (saturating accumulators of every absorbed window query) plus the
+/// absorbed-window counts. Carrying them in the bundle (format 2,
+/// section `CNTP`) lets a retrain resume exactly where the previous
+/// training pass left off instead of re-seeding the planes from the raw
+/// record — the artifact *is* the training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterPlanes {
+    /// Per-class accumulators (interictal, ictal), one count per HV
+    /// element.
+    pub counts: [Box<[u32; DIM]>; NUM_CLASSES],
+    /// Windows absorbed into each plane (interictal, ictal).
+    pub windows: [u64; NUM_CLASSES],
 }
 
 /// A complete, persistent, versioned model artifact.
@@ -85,6 +120,11 @@ pub struct ModelBundle {
     /// The trained associative memory (class-representing HVs).
     pub am: AssociativeMemory,
     pub provenance: Provenance,
+    /// Format-2 counter planes ([`CounterPlanes`]): present on bundles
+    /// emitted by the training paths, absent on format-1 artifacts.
+    /// `None` never blocks serving — only incremental retraining falls
+    /// back to re-seeding from a record.
+    pub counters: Option<CounterPlanes>,
 }
 
 impl ModelBundle {
@@ -101,12 +141,25 @@ impl ModelBundle {
             config,
             am,
             provenance,
+            counters: None,
         }
     }
 
     /// The version an artifact derived from this bundle must carry.
     pub fn next_version(&self) -> u64 {
         self.version + 1
+    }
+
+    /// The format version this bundle serializes as: counter planes need
+    /// format 2, everything else stays at the format-1 baseline so
+    /// format-1 readers keep loading counter-less artifacts byte for
+    /// byte.
+    pub fn wire_format(&self) -> u32 {
+        if self.counters.is_some() {
+            FORMAT_VERSION
+        } else {
+            BASE_FORMAT_VERSION
+        }
     }
 
     /// Serialize to the on-disk byte format.
@@ -137,14 +190,32 @@ impl ModelBundle {
         }
         put_str(&mut prov, &self.provenance.note);
 
+        let cntp = self.counters.as_ref().map(|c| {
+            let mut cntp = Vec::with_capacity(8 + 16 + NUM_CLASSES * DIM * 4);
+            cntp.extend_from_slice(&(NUM_CLASSES as u32).to_le_bytes());
+            cntp.extend_from_slice(&(DIM as u32).to_le_bytes());
+            for &w in &c.windows {
+                put_u64(&mut cntp, w);
+            }
+            for plane in &c.counts {
+                for &count in plane.iter() {
+                    cntp.extend_from_slice(&count.to_le_bytes());
+                }
+            }
+            cntp
+        });
+
         let mut out = Vec::new();
         out.extend_from_slice(&MAGIC);
-        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-        out.extend_from_slice(&4u32.to_le_bytes());
+        out.extend_from_slice(&self.wire_format().to_le_bytes());
+        out.extend_from_slice(&(4u32 + cntp.is_some() as u32).to_le_bytes());
         section(&mut out, b"META", &meta);
         section(&mut out, b"CFGS", &cfgs);
         section(&mut out, b"AMPL", &ampl);
         section(&mut out, b"PROV", &prov);
+        if let Some(cntp) = &cntp {
+            section(&mut out, b"CNTP", cntp);
+        }
         out
     }
 
@@ -163,9 +234,9 @@ impl ModelBundle {
         );
         let format = r.u32()?;
         ensure!(
-            format == FORMAT_VERSION,
-            "model bundle format version {format}, this build reads {FORMAT_VERSION} — \
-             re-save with a matching build"
+            (BASE_FORMAT_VERSION..=FORMAT_VERSION).contains(&format),
+            "model bundle format version {format}, this build reads \
+             {BASE_FORMAT_VERSION}..={FORMAT_VERSION} — re-save with a matching build"
         );
         let n_sections = r.u32()?;
 
@@ -173,6 +244,7 @@ impl ModelBundle {
         let mut cfgs: Option<ClassifierConfig> = None;
         let mut ampl: Option<AssociativeMemory> = None;
         let mut prov: Option<Provenance> = None;
+        let mut cntp: Option<CounterPlanes> = None;
 
         for _ in 0..n_sections {
             let tag: [u8; 4] = r.take(4)?.try_into().expect("4-byte slice");
@@ -239,6 +311,32 @@ impl ModelBundle {
                         note,
                     });
                 }
+                b"CNTP" => {
+                    let classes = pr.u32()? as usize;
+                    let dim = pr.u32()? as usize;
+                    ensure!(
+                        classes == NUM_CLASSES && dim == DIM,
+                        "counter planes are {classes} classes × {dim} dims, \
+                         this build expects {NUM_CLASSES} × {DIM}"
+                    );
+                    let mut windows = [0u64; NUM_CLASSES];
+                    for w in windows.iter_mut() {
+                        *w = pr.u64()?;
+                    }
+                    // Fixed-size allocation: the payload length was
+                    // already bounds-checked against the file, and the
+                    // planes are DIM × u32 by construction — nothing here
+                    // allocates from an attacker-controlled length.
+                    let mut counts = [Box::new([0u32; DIM]), Box::new([0u32; DIM])];
+                    for plane in counts.iter_mut() {
+                        let raw = pr.take(DIM * 4)?;
+                        for (slot, chunk) in plane.iter_mut().zip(raw.chunks_exact(4)) {
+                            *slot = u32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+                        }
+                    }
+                    pr.finish("CNTP")?;
+                    cntp = Some(CounterPlanes { counts, windows });
+                }
                 _ => {} // unknown section: skip (forward compatibility)
             }
         }
@@ -256,6 +354,7 @@ impl ModelBundle {
             config: cfgs.context("model bundle has no CFGS section")?,
             am: ampl.context("model bundle has no AMPL section")?,
             provenance: prov.context("model bundle has no PROV section")?,
+            counters: cntp,
         })
     }
 
@@ -280,8 +379,15 @@ impl ModelBundle {
         } else {
             format!("derived from v{}", p.parent_version)
         };
+        let counters = match &self.counters {
+            Some(c) => format!(
+                "present ({}/{} windows — incremental retrain resumes here)",
+                c.windows[0], c.windows[1]
+            ),
+            None => "absent (format-1 artifact — retrains re-seed from a record)".to_string(),
+        };
         format!(
-            "model bundle v{} (format {FORMAT_VERSION})\n\
+            "model bundle v{} (format {fmt})\n\
              \x20 variant            : {}\n\
              \x20 encoder seed       : {:#018x}\n\
              \x20 spatial threshold  : {}\n\
@@ -290,6 +396,7 @@ impl ModelBundle {
              \x20 class densities    : interictal {:.1}% / ictal {:.1}%\n\
              \x20 provenance         : patient {}, {} online epoch(s), {}, \
              windows {}/{}\n\
+             \x20 counter planes     : {}\n\
              \x20 note               : {}",
             self.version,
             self.variant.name(),
@@ -304,7 +411,9 @@ impl ModelBundle {
             lineage,
             p.train_windows[0],
             p.train_windows[1],
+            counters,
             if p.note.is_empty() { "—" } else { &p.note },
+            fmt = self.wire_format(),
         )
     }
 }
@@ -418,7 +527,15 @@ mod tests {
                 train_windows: [120, 40],
                 note: "unit-test bundle — µtf8 ✓".to_string(),
             },
+            counters: None,
         }
+    }
+
+    fn bundle_v2(seed: u64) -> ModelBundle {
+        let mut rng = Xoshiro256::new(seed ^ 0xC0DE);
+        let mut b = bundle(seed);
+        b.counters = Some(crate::testkit::random_counter_planes(&mut rng));
+        b
     }
 
     #[test]
@@ -428,6 +545,45 @@ mod tests {
         assert_eq!(back, b);
         // Bit-level: re-serializing the parse yields the same bytes.
         assert_eq!(back.to_bytes(), b.to_bytes());
+    }
+
+    #[test]
+    fn v2_roundtrip_preserves_counter_planes() {
+        let b = bundle_v2(21);
+        let bytes = b.to_bytes();
+        // Counter planes force the format-2 header…
+        assert_eq!(bytes[4..8], FORMAT_VERSION.to_le_bytes());
+        let back = ModelBundle::from_bytes(&bytes).unwrap();
+        assert_eq!(back, b);
+        assert_eq!(back.to_bytes(), bytes);
+        // …while counter-less bundles stay on the format-1 wire, byte-
+        // compatible with readers that predate CNTP.
+        assert_eq!(bundle(21).to_bytes()[4..8], BASE_FORMAT_VERSION.to_le_bytes());
+    }
+
+    #[test]
+    fn v2_truncations_error_without_panicking() {
+        let bytes = bundle_v2(22).to_bytes();
+        for n in 0..bytes.len() {
+            assert!(
+                ModelBundle::from_bytes(&bytes[..n]).is_err(),
+                "prefix of {n}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+        assert!(ModelBundle::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn cntp_shape_mismatch_rejected() {
+        let b = bundle_v2(23);
+        let mut bytes = b.to_bytes();
+        // The CNTP payload opens with classes u32 + dim u32; find the
+        // section and corrupt its dim field.
+        let pos = bytes.windows(4).position(|w| w == b"CNTP".as_slice()).unwrap();
+        bytes[pos + 8 + 4..pos + 8 + 8].copy_from_slice(&77u32.to_le_bytes());
+        let err = ModelBundle::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("77"), "{err:#}");
     }
 
     #[test]

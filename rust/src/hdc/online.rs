@@ -32,6 +32,7 @@ use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, DIM, NUM_CLASSES};
 use super::am::AssociativeMemory;
 use super::classifier::Variant;
 use super::hv::Hv;
+use super::model::CounterPlanes;
 use super::train::thin_counts_to_density;
 
 /// Knobs of the retraining loop.
@@ -112,6 +113,21 @@ impl OnlineTrainer {
         }
     }
 
+    /// Resume from persisted training state: the counter planes of a
+    /// format-2 [`crate::hdc::model::ModelBundle`] become this trainer's
+    /// accumulators, exactly as the pass that produced them left them.
+    /// The epoch loop still needs the labelled window queries — feed
+    /// them through [`Self::attach`] (which does **not** re-seed the
+    /// planes). For a one-shot bundle this reconstructs the from-record
+    /// trainer state bit for bit; for a retrained bundle it continues
+    /// from the post-epoch planes instead of forgetting them.
+    pub fn from_counters(variant: Variant, train_density: f64, planes: &CounterPlanes) -> Self {
+        let mut t = OnlineTrainer::new(variant, train_density);
+        t.counts = planes.counts.clone();
+        t.windows = [planes.windows[0] as usize, planes.windows[1] as usize];
+        t
+    }
+
     pub fn variant(&self) -> Variant {
         self.variant
     }
@@ -128,9 +144,27 @@ impl OnlineTrainer {
         self.queries.push((query, ictal));
     }
 
+    /// Retain a labelled query for the epoch loop **without** touching
+    /// the counter planes — the companion of [`Self::from_counters`],
+    /// whose planes already contain these windows.
+    pub fn attach(&mut self, query: Hv, ictal: bool) {
+        self.queries.push((query, ictal));
+    }
+
     /// Training windows absorbed per class (interictal, ictal).
     pub fn windows_per_class(&self) -> [usize; NUM_CLASSES] {
         self.windows
+    }
+
+    /// Snapshot the current training state for persistence in a format-2
+    /// bundle. Taken after [`Self::run`], the planes are the **best**
+    /// epoch's state (see `run`), so they thin to exactly the AM the run
+    /// returned and the next retrain resumes from the published model.
+    pub fn counters(&self) -> CounterPlanes {
+        CounterPlanes {
+            counts: self.counts.clone(),
+            windows: [self.windows[0] as u64, self.windows[1] as u64],
+        }
     }
 
     /// Thin the current counter planes into a candidate AM.
@@ -152,11 +186,18 @@ impl OnlineTrainer {
     /// Run the retraining loop; returns the best AM seen (which is the
     /// one-shot AM when no epoch improves on it) plus the per-epoch
     /// trajectory.
+    ///
+    /// On return the trainer's counter planes are restored to the state
+    /// that produced the **best** AM (not a worse tail epoch's), so
+    /// [`Self::counters`] always thins to exactly the returned AM — the
+    /// invariant that makes persisted format-2 bundles self-consistent
+    /// and chained retrains resume from the state actually published.
     pub fn run(&mut self, cfg: &OnlineConfig) -> (AssociativeMemory, OnlineReport) {
         let mut current = self.build_am();
         let initial_errors = self.errors(&current);
         let mut best = current.clone();
         let mut best_errors = initial_errors;
+        let mut best_counts = self.counts.clone();
         // Errors of `current` — carried across epochs so each epoch costs
         // one classification pass (the re-bundle walk) plus one for the
         // freshly thinned AM, not three.
@@ -202,8 +243,10 @@ impl OnlineTrainer {
             if errors_after < best_errors {
                 best_errors = errors_after;
                 best = current.clone();
+                best_counts = self.counts.clone();
             }
         }
+        self.counts = best_counts;
 
         let report = OnlineReport {
             windows: self.queries.len(),
@@ -334,5 +377,64 @@ mod tests {
     #[should_panic(expected = "sparse")]
     fn dense_variant_rejected() {
         let _ = OnlineTrainer::new(Variant::DenseBaseline, 0.5);
+    }
+
+    #[test]
+    fn from_counters_resumes_bit_identically() {
+        // Reconstructing a trainer from persisted counter planes +
+        // attached queries must be indistinguishable from the trainer
+        // that produced the planes — same AM, same epoch trajectory.
+        let build = || confuser_trainer();
+        let mut direct = build();
+
+        let planes = build().counters();
+        let mut resumed = OnlineTrainer::from_counters(Variant::Optimized, 0.1, &planes);
+        for (q, ictal) in &build().queries {
+            resumed.attach(*q, *ictal);
+        }
+
+        assert_eq!(resumed.windows_per_class(), direct.windows_per_class());
+        assert_eq!(resumed.build_am().classes, direct.build_am().classes);
+
+        let (am_d, rep_d) = direct.run(&OnlineConfig::default());
+        let (am_r, rep_r) = resumed.run(&OnlineConfig::default());
+        assert_eq!(am_r.classes, am_d.classes);
+        assert_eq!(rep_r.initial_errors, rep_d.initial_errors);
+        assert_eq!(rep_r.best_errors, rep_d.best_errors);
+        assert_eq!(rep_r.epochs.len(), rep_d.epochs.len());
+        // And the post-run counters — what a format-2 bundle persists —
+        // agree too, so chained retrains stay deterministic.
+        assert_eq!(resumed.counters(), direct.counters());
+    }
+
+    #[test]
+    fn post_run_counters_thin_to_the_returned_am() {
+        // The self-consistency invariant of persisted bundles: whatever
+        // the epoch trajectory did (including worse tail epochs), the
+        // planes left in the trainer thin to exactly the AM `run`
+        // returned.
+        for seed in [1u64, 5, 9, 13] {
+            let mut rng = Xoshiro256::new(seed);
+            let mut t = OnlineTrainer::new(Variant::Optimized, 0.25);
+            for i in 0..24 {
+                let ictal = i % 2 == 0;
+                let base = if ictal { 0 } else { 256 };
+                let q = Hv::from_fn(|j| (j >= base && j < base + 512) && rng.next_bool(0.3));
+                t.absorb(q, ictal);
+            }
+            let (am, _) = t.run(&OnlineConfig::default());
+            assert_eq!(t.build_am().classes, am.classes, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn attach_leaves_the_planes_alone() {
+        let mut t = OnlineTrainer::new(Variant::Optimized, 0.5);
+        t.absorb(hv(&[0..100]), false);
+        let before = t.counters();
+        t.attach(hv(&[0..100]), false);
+        let after = t.counters();
+        assert_eq!(before, after, "attach must not re-seed the planes");
+        assert_eq!(t.windows_per_class(), [1, 0]);
     }
 }

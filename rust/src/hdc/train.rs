@@ -20,7 +20,7 @@ use super::am::AssociativeMemory;
 use super::classifier::{ClassifierConfig, Encoder, Frame, Variant};
 use super::dense::majority_from_counts;
 use super::hv::Hv;
-use super::model::{ModelBundle, Provenance};
+use super::model::{CounterPlanes, ModelBundle, Provenance};
 
 /// A labelled frame stream: the LBP codes of one frame plus whether the
 /// frame lies inside the expert-annotated ictal interval.
@@ -89,6 +89,20 @@ impl Trainer {
         self.windows
     }
 
+    /// Snapshot the accumulated counter planes — the training state a
+    /// format-2 [`ModelBundle`] persists so retraining can resume from
+    /// the artifact ([`crate::hdc::online::OnlineTrainer::from_counters`])
+    /// instead of re-seeding from the record.
+    pub fn counter_planes(&self) -> CounterPlanes {
+        CounterPlanes {
+            counts: self.counts.clone(),
+            windows: [
+                self.windows[CLASS_INTERICTAL] as u64,
+                self.windows[CLASS_ICTAL] as u64,
+            ],
+        }
+    }
+
     /// Majority bundling for the dense design point.
     fn majority_class(&self, class: usize) -> Hv {
         let n = self.windows[class];
@@ -134,7 +148,14 @@ impl Trainer {
         if provenance.note.is_empty() {
             provenance.note = "one-shot training".to_string();
         }
-        ModelBundle::new(variant, cfg.clone(), self.finish(variant), provenance)
+        let mut bundle = ModelBundle::new(variant, cfg.clone(), self.finish(variant), provenance);
+        // Persist the training state alongside the thinned AM (format 2)
+        // for the sparse design points — dense majority bundling has no
+        // online-retraining path to resume.
+        if variant.is_sparse() {
+            bundle.counters = Some(self.counter_planes());
+        }
+        bundle
     }
 }
 
@@ -319,6 +340,42 @@ mod tests {
         assert_eq!(bundle.am.classes[CLASS_ICTAL].popcount(), 0);
         assert!(bundle.am.classes[CLASS_INTERICTAL].popcount() > 0);
         assert_eq!(bundle.provenance.train_windows, [1, 0]);
+    }
+
+    #[test]
+    fn bundles_carry_the_counter_planes() {
+        let mut rng = Xoshiro256::new(31);
+        let mut trainer = Trainer::new(0.4);
+        let queries: Vec<(Hv, bool)> = (0..12)
+            .map(|i| (Hv::random(&mut rng, 0.2), i % 3 == 0))
+            .collect();
+        for (q, ictal) in &queries {
+            trainer.add_window(q, *ictal);
+        }
+        let bundle = trainer.finish_bundle(
+            Variant::Optimized,
+            &ClassifierConfig::optimized(),
+            Provenance::default(),
+        );
+        let planes = bundle.counters.expect("sparse bundles persist their planes");
+        assert_eq!(planes.windows, [8, 4]);
+        // The planes really are the accumulation of the queries: thinning
+        // them reproduces the bundle's AM exactly.
+        assert_eq!(
+            AssociativeMemory::new(
+                thin_counts_to_density(&planes.counts[CLASS_INTERICTAL], 0.4),
+                thin_counts_to_density(&planes.counts[CLASS_ICTAL], 0.4),
+            )
+            .classes,
+            bundle.am.classes
+        );
+        // Dense bundles stay format 1 (no online path to resume).
+        let dense = Trainer::new(0.5).finish_bundle(
+            Variant::DenseBaseline,
+            &ClassifierConfig::default(),
+            Provenance::default(),
+        );
+        assert!(dense.counters.is_none());
     }
 
     #[test]

@@ -62,10 +62,11 @@ data / model:
   gen-data  --out DIR [--patients N] [--records N] [--seed S]
   train     --data DIR --patient ID [--variant V] [--max-density D]
             [--save FILE] [--retrain-epochs N] [--out FILE]
-  model-info <bundle.hdcm>                inspect a saved model bundle
+  model-info <bundle.hdcm | models-dir>   inspect a bundle / list a store
   detect    --data DIR --patient ID [--variant V] [--max-density D]
   serve     --data DIR [--config FILE] [--patients LIST] [--model FILE]
-            [--retrain-epochs N] [--use-pjrt] [--realtime] [--batch N] [--chunk N]
+            [--models-dir DIR] [--retrain-epochs N] [--retrain-fa-rate R]
+            [--use-pjrt] [--realtime] [--batch N] [--chunk N]
 
 paper experiments:
   fig1c     [--windows N]                 naive sparse breakdown (Fig. 1c)

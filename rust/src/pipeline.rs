@@ -254,6 +254,17 @@ impl Default for RetrainOptions {
 /// carries `version + 1` and lineage provenance, ready for
 /// [`crate::coordinator::registry::ModelRegistry::publish`]; in-flight
 /// inference on the old version is unaffected.
+///
+/// When the bundle carries format-2 counter planes *and* the effective
+/// encoder config is unchanged (no threshold re-tune), the retrain
+/// **resumes incrementally** from the persisted planes
+/// ([`OnlineTrainer::from_counters`]): the record supplies only the
+/// labelled window queries for the epoch loop. For a one-shot bundle
+/// this is bit-identical to re-seeding from the record (pinned by
+/// `tests/retrain_scheduler.rs`); for a bundle that already went through
+/// epochs it continues from the post-epoch planes instead of discarding
+/// them. A re-tuned threshold changes the encoding, which invalidates the
+/// stored planes — that path falls back to from-record seeding.
 pub fn retrain_bundle(
     bundle: &ModelBundle,
     record: &Record,
@@ -263,12 +274,24 @@ pub fn retrain_bundle(
     if let Some(d) = opts.max_density {
         cfg.temporal_threshold = tune_temporal_threshold(bundle.variant, &cfg, record, d);
     }
-    let mut trainer = online_trainer_for_record(bundle.variant, &cfg, record);
+    let (mut trainer, incremental) = match &bundle.counters {
+        Some(planes) if cfg == bundle.config && bundle.variant.is_sparse() => {
+            let mut trainer =
+                OnlineTrainer::from_counters(bundle.variant, cfg.train_density, planes);
+            let mut encoder = SparseEncoder::new(bundle.variant, cfg.clone());
+            label_windows(&mut encoder, record_frames(record), |q, ictal| {
+                trainer.attach(q, ictal)
+            });
+            (trainer, true)
+        }
+        _ => (online_trainer_for_record(bundle.variant, &cfg, record), false),
+    };
     let (am, report) = trainer.run(&OnlineConfig {
         max_epochs: opts.max_epochs,
         subtract: opts.subtract,
     });
     let windows = trainer.windows_per_class();
+    let counters = Some(trainer.counters());
     let next = ModelBundle {
         version: bundle.next_version(),
         variant: bundle.variant,
@@ -280,12 +303,14 @@ pub fn retrain_bundle(
             parent_version: bundle.version,
             train_windows: [windows[0] as u64, windows[1] as u64],
             note: format!(
-                "online retrain: training-window errors {} -> {} over {} epoch(s)",
+                "online retrain ({}): training-window errors {} -> {} over {} epoch(s)",
+                if incremental { "resumed from counter planes" } else { "seeded from record" },
                 report.initial_errors,
                 report.best_errors,
                 report.epochs.len()
             ),
         },
+        counters,
     };
     (next, report)
 }

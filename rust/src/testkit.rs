@@ -15,8 +15,9 @@
 //! ```
 
 use crate::hdc::hv::Hv;
+use crate::hdc::model::CounterPlanes;
 use crate::hdc::sparse::SparseHv;
-use crate::params::{CHANNELS, LBP_CODES};
+use crate::params::{CHANNELS, DIM, LBP_CODES};
 use crate::rng::Xoshiro256;
 
 /// Per-case value generator.
@@ -87,6 +88,89 @@ impl Gen {
     pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
         (0..n).map(|_| f(self)).collect()
     }
+
+    /// Randomized model counter planes ([`random_counter_planes`]).
+    pub fn counter_planes(&mut self) -> CounterPlanes {
+        random_counter_planes(&mut self.rng)
+    }
+}
+
+/// Randomized [`CounterPlanes`] — the one test-side builder the
+/// bundle-format, persistence and scheduler suites share, so a
+/// counter-plane schema change has a single home.
+pub fn random_counter_planes(rng: &mut Xoshiro256) -> CounterPlanes {
+    let mut counts = [Box::new([0u32; DIM]), Box::new([0u32; DIM])];
+    for plane in counts.iter_mut() {
+        for c in plane.iter_mut() {
+            *c = (rng.next_u64() & 0x1FF) as u32;
+        }
+    }
+    CounterPlanes {
+        counts,
+        windows: [rng.next_below(500), rng.next_below(500)],
+    }
+}
+
+/// A small two-record synthetic patient (14 s per record: 8 s lead-in,
+/// 4 s seizure, 2 s tail) plus a one-shot-trained v1
+/// [`crate::hdc::model::ModelBundle`] re-keyed to the patient — the
+/// shared fixture of the model-lifecycle suites (record 0 trains,
+/// record 1 streams). One home so the suites can't drift on synth
+/// shape or bundle seeding.
+pub fn tiny_trained_patient(
+    pid: u32,
+) -> (
+    crate::data::synth::SynthPatient,
+    crate::hdc::model::ModelBundle,
+) {
+    use crate::data::synth::{SynthConfig, SynthPatient};
+    use crate::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
+
+    let synth = SynthConfig {
+        records_per_patient: 2,
+        pre_s: 8.0,
+        ictal_s: 4.0,
+        post_s: 2.0,
+        ..Default::default()
+    };
+    let patient = SynthPatient::generate(&synth, pid);
+    let cfg = ClassifierConfig::optimized();
+    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+    let mut bundle = crate::pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
+    bundle.provenance.patient_id = pid;
+    (patient, bundle)
+}
+
+/// A unique scratch directory under the system temp dir (removed first
+/// if a previous run left one). Unique per (tag, process, thread), so
+/// parallel test binaries and threads never collide. Not auto-deleted —
+/// tests remove it on success so failures leave evidence behind.
+pub fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "hdc_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+/// A synthetic per-window outcome stream (`true` = the window was a
+/// false alarm) with one planted burst of consecutive false alarms:
+/// clean everywhere except `[burst_start, burst_start + burst_len)`.
+/// The retrain-scheduler tests feed this to
+/// [`crate::coordinator::scheduler::PatientWatch`] and pin the exact
+/// window index the policy fires at; other tests can reuse it wherever
+/// a deterministic false-alarm pattern is needed.
+pub fn planted_false_alarm_stream(total: usize, burst_start: usize, burst_len: usize) -> Vec<bool> {
+    assert!(
+        burst_start + burst_len <= total,
+        "burst [{burst_start}, {}) does not fit in {total} windows",
+        burst_start + burst_len
+    );
+    (0..total)
+        .map(|i| i >= burst_start && i < burst_start + burst_len)
+        .collect()
 }
 
 /// Run `cases` property cases. Each case gets a [`Gen`] derived from the
@@ -136,6 +220,22 @@ mod tests {
             assert!((3..=9).contains(&r));
         }
         assert_eq!(g.frames(5).len(), 5);
+    }
+
+    #[test]
+    fn planted_stream_shape() {
+        let s = planted_false_alarm_stream(10, 4, 3);
+        assert_eq!(s.len(), 10);
+        assert_eq!(s.iter().filter(|&&b| b).count(), 3);
+        assert!(!s[3] && s[4] && s[6] && !s[7]);
+        // A zero-length burst is a clean stream.
+        assert!(planted_false_alarm_stream(5, 2, 0).iter().all(|&b| !b));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn planted_stream_rejects_overflowing_burst() {
+        planted_false_alarm_stream(8, 6, 4);
     }
 
     #[test]

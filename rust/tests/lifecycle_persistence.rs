@@ -1,0 +1,208 @@
+//! Durable-model-fleet tests: the [`ModelStore`] persistence backend
+//! (scan ≡ the publish sequence that produced the directory, crash
+//! recovery) and the serve → kill → serve-from-`--models-dir` round
+//! trip, pinned window for window against an uninterrupted run.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use sparse_hdc_ieeg::config::SystemConfig;
+use sparse_hdc_ieeg::coordinator::registry::{ModelRegistry, ModelStore};
+use sparse_hdc_ieeg::coordinator::scheduler::{RetrainPolicy, RetrainScheduler};
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec};
+use sparse_hdc_ieeg::data::metrics::WindowPrediction;
+use sparse_hdc_ieeg::data::synth::SynthPatient;
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
+use sparse_hdc_ieeg::hdc::model::{ModelBundle, Provenance};
+use sparse_hdc_ieeg::testkit::{property, scratch_dir, tiny_trained_patient, Gen};
+
+fn store_dir(tag: &str) -> PathBuf {
+    scratch_dir(&format!("persist_{tag}"))
+}
+
+/// A small synthetic bundle (no training pass) for store-level tests.
+fn synthetic_bundle(g: &mut Gen, patient_id: u32, version: u64) -> ModelBundle {
+    let mut b = ModelBundle::new(
+        Variant::Optimized,
+        ClassifierConfig::optimized(),
+        AssociativeMemory::new(g.hv(0.3), g.hv(0.2)),
+        Provenance {
+            patient_id,
+            epochs: g.usize_below(5) as u32,
+            parent_version: version.saturating_sub(1),
+            train_windows: [g.u64() % 300, g.u64() % 300],
+            note: format!("synthetic v{version}"),
+        },
+    );
+    b.version = version;
+    if g.bool(0.5) {
+        b.counters = Some(g.counter_planes());
+    }
+    b
+}
+
+/// Property: after any publish sequence, `scan` recovers exactly the
+/// highest version written per patient — the directory is a faithful
+/// replay of the sequence, nothing quarantined, nothing invented.
+#[test]
+fn scan_equals_publish_sequence() {
+    property("ModelStore scan ≡ publish sequence", 16, |g: &mut Gen| {
+        let dir = store_dir(&format!("prop_{:x}", g.case_seed));
+        let store = ModelStore::open(&dir).unwrap();
+        let mut latest: BTreeMap<u32, ModelBundle> = BTreeMap::new();
+        let mut next_version: BTreeMap<u32, u64> = BTreeMap::new();
+
+        let publishes = g.range(1, 10);
+        for _ in 0..publishes {
+            let pid = 1 + g.usize_below(3) as u32;
+            let version = next_version.entry(pid).or_insert(0);
+            *version += 1 + g.usize_below(2) as u64; // gaps are legal
+            let bundle = synthetic_bundle(g, pid, *version);
+            store.save(&bundle).unwrap();
+            latest.insert(pid, bundle);
+        }
+
+        let scan = store.scan().unwrap();
+        assert!(scan.quarantined.is_empty(), "clean store must not quarantine");
+        assert!(scan.ignored.is_empty());
+        assert_eq!(scan.recovered.len(), latest.len());
+        for (pid, bundle) in &latest {
+            assert_eq!(&scan.recovered[pid], bundle, "patient {pid}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    });
+}
+
+/// Crash simulation: a leftover `.tmp` from an interrupted publish plus
+/// a truncated highest version — the scan must fall back to the newest
+/// valid version, quarantine the truncated file, ignore the tmp, and be
+/// idempotent about it.
+#[test]
+fn crash_leftovers_fall_back_to_newest_valid() {
+    let dir = store_dir("crash");
+    let store = ModelStore::open(&dir).unwrap();
+    let mut g = Gen::new(0xC9A5);
+    let v1 = synthetic_bundle(&mut g, 9, 1);
+    let v2 = synthetic_bundle(&mut g, 9, 2);
+    let v3 = synthetic_bundle(&mut g, 9, 3);
+    store.save(&v1).unwrap();
+    store.save(&v2).unwrap();
+    store.save(&v3).unwrap();
+
+    // Truncate the newest version at half its bytes (the crash window a
+    // non-atomic writer would have had) and strand a tmp publish.
+    let v3_path = store.version_path(9, 3);
+    let bytes = std::fs::read(&v3_path).unwrap();
+    std::fs::write(&v3_path, &bytes[..bytes.len() / 2]).unwrap();
+    std::fs::write(dir.join("9").join(".v004.hdcm.tmp"), b"interrupted").unwrap();
+
+    let scan = store.scan().unwrap();
+    assert_eq!(scan.recovered[&9], v2, "newest *valid* version wins");
+    assert_eq!(scan.quarantined.len(), 1);
+    assert!(scan.quarantined[0].ends_with("v003.hdcm.corrupt"), "{:?}", scan.quarantined);
+    assert!(!v3_path.exists(), "truncated file renamed out of the way");
+    assert_eq!(scan.ignored.len(), 1, "tmp leftover ignored: {:?}", scan.ignored);
+
+    // Idempotent: nothing new to quarantine, same recovery.
+    let again = store.scan().unwrap();
+    assert_eq!(again.recovered[&9], v2);
+    assert!(again.quarantined.is_empty());
+
+    // A re-publish of v3 (e.g. the retrain re-runs after restart) heals
+    // the store: the atomic rename lands a complete file.
+    store.save(&v3).unwrap();
+    assert_eq!(store.scan().unwrap().recovered[&9], v3);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn run_stream(bundle: ModelBundle, patient: &SynthPatient, pid: u32) -> Vec<WindowPrediction> {
+    Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![StreamSpec {
+            session_id: 1,
+            patient_id: pid,
+            record: patient.records[1].clone(),
+            bundle,
+        }])
+        .unwrap()
+        .sessions
+        .remove(0)
+        .predictions
+}
+
+/// The serve → kill → serve-from-`--models-dir` acceptance pin, at the
+/// coordinator level (CI exercises the real SIGTERM through the binary):
+///
+/// 1. serve run A persists v1 at startup and — via a triggered retrain —
+///    persists + publishes v2 mid-stream;
+/// 2. "kill": run A's registry and coordinator are dropped; only the
+///    store directory survives;
+/// 3. serve run B scans the store, resumes at v2, and its stream is
+///    pinned **window for window** against an uninterrupted run of the
+///    exact in-memory v2 that run A published.
+#[test]
+fn serve_kill_resume_round_trip_pins_windows() {
+    let pid = 21;
+    let (patient, v1) = tiny_trained_patient(pid);
+    let dir = store_dir("resume");
+    let store = Arc::new(ModelStore::open(&dir).unwrap());
+
+    // --- run A: persist v1, trigger one foreground retrain → v2. ---
+    let registry = Arc::new(ModelRegistry::new());
+    store.save(&v1).unwrap();
+    let mut train = BTreeMap::new();
+    train.insert(pid, patient.records[0].clone());
+    let scheduler = Arc::new(
+        RetrainScheduler::new(
+            RetrainPolicy {
+                epochs: 3,
+                fa_window: 4,
+                fa_rate: 0.0,
+                cooldown: 100_000,
+                max_retrains: 1,
+            },
+            registry.clone(),
+            Some(store.clone()),
+            train,
+        )
+        .foreground(),
+    );
+    let mut coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+    coordinator.scheduler = Some(scheduler.clone());
+    let interrupted = coordinator
+        .run_with_registry(
+            vec![StreamSpec {
+                session_id: 1,
+                patient_id: pid,
+                record: patient.records[1].clone(),
+                bundle: v1.clone(),
+            }],
+            &registry,
+            |_| {},
+        )
+        .unwrap();
+    assert_eq!(scheduler.triggers(), vec![(pid, 4)]);
+    assert_eq!(interrupted.metrics.retrains_triggered, 1);
+    let msgs = scheduler.join();
+    assert!(msgs[0].contains("published model v2"), "{:?}", msgs);
+    let published_v2 = registry.current(pid).unwrap().bundle.clone();
+    assert_eq!(published_v2.version, 2);
+    assert!(published_v2.counters.is_some(), "retrained bundles persist their planes");
+
+    // --- "kill": drop everything in-memory; the store is the survivor. ---
+    drop((registry, coordinator, scheduler));
+
+    // --- run B: a fresh scan recovers exactly the published v2… ---
+    let scan = ModelStore::open(&dir).unwrap().scan().unwrap();
+    let recovered = scan.recovered[&pid].clone();
+    assert_eq!(recovered, published_v2, "disk round-trip is bit-faithful");
+
+    // …and serving the recovered artifact is pinned window for window
+    // against an uninterrupted run of the in-memory v2.
+    let resumed = run_stream(recovered, &patient, pid);
+    let uninterrupted = run_stream(published_v2, &patient, pid);
+    assert_eq!(resumed.len(), uninterrupted.len());
+    assert_eq!(resumed, uninterrupted, "resume must not shift a single window");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,7 +1,9 @@
 //! Model-lifecycle integration tests: bundle persistence round-trips,
-//! corruption handling, serving from a saved artifact (no startup
-//! retraining), online retraining guarantees, and mid-stream registry
-//! hot swap under the coalescing engine host.
+//! corruption handling (including an adversarial byte-flip fuzz over
+//! every offset of both format versions and the v2→v1 cross-read
+//! matrix), serving from a saved artifact (no startup retraining),
+//! online retraining guarantees, and mid-stream registry hot swap under
+//! the coalescing engine host.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -10,65 +12,55 @@ use std::sync::Arc;
 use sparse_hdc_ieeg::config::SystemConfig;
 use sparse_hdc_ieeg::coordinator::registry::ModelRegistry;
 use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec, StreamReport};
-use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
 use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
-use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, SparseEncoder, Variant};
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::hdc::hv::Hv;
-use sparse_hdc_ieeg::hdc::model::{ModelBundle, Provenance};
+use sparse_hdc_ieeg::hdc::model::{ModelBundle, Provenance, BASE_FORMAT_VERSION, FORMAT_VERSION};
 use sparse_hdc_ieeg::pipeline;
 use sparse_hdc_ieeg::rng::Xoshiro256;
+use sparse_hdc_ieeg::testkit::tiny_trained_patient;
 
 fn tmpfile(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("hdc_ml_{tag}_{}.hdcm", std::process::id()))
 }
 
-fn tiny_synth() -> SynthConfig {
-    SynthConfig {
-        records_per_patient: 2,
-        pre_s: 4.0,
-        ictal_s: 3.0,
-        post_s: 1.0,
-        ..Default::default()
+/// A randomized bundle; even cases carry counter planes (format 2), odd
+/// cases are counter-less (format 1).
+fn random_bundle(rng: &mut Xoshiro256, case: u64) -> ModelBundle {
+    let density = 0.05 + (case as f64 % 7.0) * 0.07;
+    ModelBundle {
+        version: 1 + rng.next_below(1000),
+        variant: if case % 2 == 0 { Variant::Optimized } else { Variant::SparseCompIm },
+        config: ClassifierConfig {
+            seed: rng.next_u64(),
+            spatial_threshold: (rng.next_below(4) + 1) as u16,
+            temporal_threshold: rng.next_below(256) as u16,
+            train_density: density,
+        },
+        am: AssociativeMemory::new(Hv::random(rng, density), Hv::random(rng, density)),
+        provenance: Provenance {
+            patient_id: rng.next_below(100) as u32,
+            epochs: rng.next_below(9) as u32,
+            parent_version: rng.next_below(10),
+            train_windows: [rng.next_below(500), rng.next_below(500)],
+            note: format!("case {case} — note with ümlauts / #hash / \"quotes\""),
+        },
+        counters: if case % 2 == 0 {
+            Some(sparse_hdc_ieeg::testkit::random_counter_planes(rng))
+        } else {
+            None
+        },
     }
 }
 
-fn trained_bundle(pid: u32) -> (SynthPatient, ModelBundle) {
-    let patient = SynthPatient::generate(&tiny_synth(), pid);
-    let cfg = ClassifierConfig::optimized();
-    let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
-    let mut bundle = pipeline::train_on_record(&mut enc, patient.train_record(), &cfg);
-    bundle.provenance.patient_id = pid;
-    (patient, bundle)
-}
-
-/// Property: save → load is bit-identical for randomized bundles (AM
-/// planes, thresholds, seeds, provenance — the full artifact).
+/// Property: save → load is bit-identical for randomized bundles of both
+/// format versions (AM planes, thresholds, seeds, provenance, counter
+/// planes — the full artifact).
 #[test]
 fn bundle_roundtrip_property() {
     let mut rng = Xoshiro256::new(0xB00B1E5);
     for case in 0..24u64 {
-        let density = 0.05 + (case as f64 % 7.0) * 0.07;
-        let bundle = ModelBundle {
-            version: 1 + rng.next_below(1000),
-            variant: if case % 2 == 0 { Variant::Optimized } else { Variant::SparseCompIm },
-            config: ClassifierConfig {
-                seed: rng.next_u64(),
-                spatial_threshold: (rng.next_below(4) + 1) as u16,
-                temporal_threshold: rng.next_below(256) as u16,
-                train_density: density,
-            },
-            am: AssociativeMemory::new(
-                Hv::random(&mut rng, density),
-                Hv::random(&mut rng, density),
-            ),
-            provenance: Provenance {
-                patient_id: rng.next_below(100) as u32,
-                epochs: rng.next_below(9) as u32,
-                parent_version: rng.next_below(10),
-                train_windows: [rng.next_below(500), rng.next_below(500)],
-                note: format!("case {case} — note with ümlauts / #hash / \"quotes\""),
-            },
-        };
+        let bundle = random_bundle(&mut rng, case);
         let bytes = bundle.to_bytes();
         let back = ModelBundle::from_bytes(&bytes).unwrap_or_else(|e| {
             panic!("case {case}: roundtrip failed: {e:#}");
@@ -76,6 +68,8 @@ fn bundle_roundtrip_property() {
         assert_eq!(back, bundle, "case {case}");
         assert_eq!(back.am.classes[0], bundle.am.classes[0]);
         assert_eq!(back.am.classes[1], bundle.am.classes[1]);
+        assert_eq!(back.counters, bundle.counters, "case {case}");
+        assert_eq!(back.wire_format(), if case % 2 == 0 { 2 } else { 1 });
     }
 }
 
@@ -89,7 +83,7 @@ fn corrupt_files_fail_actionably() {
     std::fs::remove_file(&path).ok();
 
     // Truncated on disk: every prefix fails, never panics.
-    let (_, bundle) = trained_bundle(1);
+    let (_, bundle) = tiny_trained_patient(1);
     let bytes = bundle.to_bytes();
     let path = tmpfile("trunc");
     for frac in [1, 3, 7, 9] {
@@ -105,12 +99,179 @@ fn corrupt_files_fail_actionably() {
     std::fs::remove_file(&path).ok();
 }
 
+/// Flip fuzz core: for every byte offset of `bytes`, apply
+/// `flips_per_offset` seeded random single-byte corruptions and parse.
+/// The parser must return `Err` or a semantically valid bundle — never
+/// panic (caught and re-raised with the reproducing offset/mask) and
+/// never allocate from the corrupted length fields (all allocations in
+/// the parser are fixed-size; lengths are bounds-checked against the
+/// file before any payload is touched). A parse that succeeds must
+/// round-trip: serialize → parse → the same bundle.
+fn byte_flip_fuzz(bytes: &[u8], seed: u64, flips_per_offset: usize) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut survived = 0usize;
+    for offset in 0..bytes.len() {
+        for _ in 0..flips_per_offset {
+            // Non-zero XOR mask: the byte always actually changes.
+            let mask = (rng.next_below(255) + 1) as u8;
+            let mut mutated = bytes.to_vec();
+            mutated[offset] ^= mask;
+            let outcome = std::panic::catch_unwind(|| ModelBundle::from_bytes(&mutated));
+            match outcome {
+                Err(_) => panic!(
+                    "parser panicked at offset {offset} (xor {mask:#04x}, seed {seed:#x})"
+                ),
+                Ok(Ok(bundle)) => {
+                    survived += 1;
+                    let rt = ModelBundle::from_bytes(&bundle.to_bytes()).unwrap_or_else(|e| {
+                        panic!(
+                            "offset {offset} (xor {mask:#04x}): accepted bundle does not \
+                             re-parse: {e:#}"
+                        )
+                    });
+                    assert_eq!(rt, bundle, "offset {offset}: accepted bundle must round-trip");
+                }
+                Ok(Err(_)) => {} // rejected cleanly — the common case
+            }
+        }
+    }
+    // Sanity: flips inside free-form payload bytes (note text, counter
+    // values) must survive as valid bundles — an all-rejecting parser
+    // would also "pass" the panic check.
+    assert!(survived > 0, "no single-byte flip ever produced a valid bundle");
+}
+
+/// Every offset of a format-2 bundle, one seeded flip each — fast enough
+/// for the default test run.
+#[test]
+fn byte_flips_never_panic_v2() {
+    let mut rng = Xoshiro256::new(0xF1_1B);
+    byte_flip_fuzz(&random_bundle(&mut rng, 0).to_bytes(), 0xA5A5_0001, 1);
+}
+
+/// Every offset of a format-1 bundle, one seeded flip each.
+#[test]
+fn byte_flips_never_panic_v1() {
+    let mut rng = Xoshiro256::new(0xF1_1C);
+    byte_flip_fuzz(&random_bundle(&mut rng, 1).to_bytes(), 0xA5A5_0002, 1);
+}
+
+/// The exhaustive adversarial pass: several independent flips per offset
+/// over multiple randomized bundles of both format versions. CI runs it
+/// via `cargo test -q -- --include-ignored`.
+#[test]
+#[ignore = "exhaustive byte-flip fuzz (CI runs it with --include-ignored)"]
+fn byte_flip_fuzz_exhaustive_both_formats() {
+    let mut rng = Xoshiro256::new(0xFA_57);
+    for case in 0..4u64 {
+        let bytes = random_bundle(&mut rng, case).to_bytes();
+        byte_flip_fuzz(&bytes, 0xE8_0A57 ^ case, 4);
+    }
+}
+
+/// Walk the section table of a serialized bundle, applying `f` to each
+/// (tag-offset, len) pair — the test-side mirror of the parser's layout.
+fn for_each_section(bytes: &[u8], mut f: impl FnMut(usize, usize)) {
+    let n = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let mut off = 12;
+    for _ in 0..n {
+        let len = u32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap()) as usize;
+        f(off, len);
+        off += 8 + len;
+    }
+}
+
+/// The v2 → v1 cross-read matrix, pinning the unknown-section skip rule
+/// both ways:
+///
+/// * a v2 reader over v1 bytes recovers everything, counters absent;
+/// * a reader that does **not** know `CNTP` (simulated by renaming the
+///   tag to one no reader knows and patching the header back to format
+///   1 — exactly what a format-1 binary sees modulo the tag name)
+///   recovers the v1 content of a v2 bundle via the skip rule;
+/// * v2 bytes parse completely, counters present;
+/// * formats beyond this build fail actionably.
+#[test]
+fn v2_v1_cross_read_matrix() {
+    let mut rng = Xoshiro256::new(0xC0FE);
+    let v2 = random_bundle(&mut rng, 0);
+    assert!(v2.counters.is_some());
+    let mut v1_content = v2.clone();
+    v1_content.counters = None;
+
+    let v1_bytes = v1_content.to_bytes();
+    let v2_bytes = v2.to_bytes();
+    assert_eq!(v1_bytes[4..8], BASE_FORMAT_VERSION.to_le_bytes());
+    assert_eq!(v2_bytes[4..8], FORMAT_VERSION.to_le_bytes());
+
+    // v2 reader ← v1 bytes: counters None, everything else intact.
+    let up = ModelBundle::from_bytes(&v1_bytes).unwrap();
+    assert_eq!(up, v1_content);
+    assert!(up.counters.is_none());
+
+    // v2 reader ← v2 bytes: the full artifact.
+    assert_eq!(ModelBundle::from_bytes(&v2_bytes).unwrap(), v2);
+
+    // "v1 reader" ← v2 bytes: rename CNTP to an unknown tag and set the
+    // header to format 1 — the skip rule must recover the v1 content.
+    let mut downgraded = v2_bytes.clone();
+    downgraded[4..8].copy_from_slice(&BASE_FORMAT_VERSION.to_le_bytes());
+    for_each_section(&v2_bytes, |off, _| {
+        if &v2_bytes[off..off + 4] == b"CNTP" {
+            downgraded[off..off + 4].copy_from_slice(b"ZZZZ");
+        }
+    });
+    let down = ModelBundle::from_bytes(&downgraded).unwrap();
+    assert_eq!(down, v1_content, "skip rule must yield exactly the v1 content");
+
+    // CNTP is self-describing: even under a format-1 header the section
+    // parses when present (sections, not the header, carry the schema).
+    let mut header_only = v2_bytes.clone();
+    header_only[4..8].copy_from_slice(&BASE_FORMAT_VERSION.to_le_bytes());
+    assert_eq!(ModelBundle::from_bytes(&header_only).unwrap(), v2);
+
+    // A future format fails loudly with the supported range.
+    let mut future = v2_bytes;
+    future[4..8].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+    let err = ModelBundle::from_bytes(&future).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(&format!("format version {}", FORMAT_VERSION + 1)), "{msg}");
+    assert!(msg.contains(&FORMAT_VERSION.to_string()), "{msg}");
+}
+
+/// Section-length adversarial cases the random flips may miss: every
+/// section's length field forced to huge / overlapping values must be
+/// rejected by the pre-allocation bounds check.
+#[test]
+fn hostile_section_lengths_rejected() {
+    let mut rng = Xoshiro256::new(0x1E57);
+    for case in 0..2u64 {
+        let bytes = random_bundle(&mut rng, case).to_bytes();
+        let mut offsets = Vec::new();
+        for_each_section(&bytes, |off, _| offsets.push(off));
+        for off in offsets {
+            for hostile in [u32::MAX, bytes.len() as u32, 0x7FFF_FFFF] {
+                let mut m = bytes.clone();
+                m[off + 4..off + 8].copy_from_slice(&hostile.to_le_bytes());
+                assert!(
+                    ModelBundle::from_bytes(&m).is_err(),
+                    "case {case}: hostile len {hostile:#x} at section offset {off} must fail"
+                );
+            }
+        }
+        // A hostile section *count* walks off the table and fails too.
+        let mut m = bytes.clone();
+        m[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(ModelBundle::from_bytes(&m).is_err());
+    }
+}
+
 /// The acceptance pin: serving from a saved bundle skips retraining and
 /// is bit-identical — window for window — to the retrain-at-startup
 /// path with the same seed/config.
 #[test]
 fn serving_from_saved_bundle_matches_retrain_at_startup() {
-    let (patient, bundle) = trained_bundle(7);
+    let (patient, bundle) = tiny_trained_patient(7);
 
     // Save → load: the artifact that `repro serve --model` deploys.
     let path = tmpfile("serve");
@@ -145,7 +306,7 @@ fn serving_from_saved_bundle_matches_retrain_at_startup() {
 /// and versions stay monotone through the registry.
 #[test]
 fn online_retrain_improves_or_preserves_and_versions_monotone() {
-    let (patient, bundle) = trained_bundle(3);
+    let (patient, bundle) = tiny_trained_patient(3);
     let (next, report) = pipeline::retrain_bundle(
         &bundle,
         patient.train_record(),
@@ -184,7 +345,7 @@ fn online_retrain_improves_or_preserves_and_versions_monotone() {
 /// `EngineHost` with submission-order delivery, zero queue drain.
 #[test]
 fn mid_stream_swap_changes_results_only_at_the_boundary() {
-    let (patient, v1) = trained_bundle(5);
+    let (patient, v1) = tiny_trained_patient(5);
     // v2: same encoder config, classes swapped — flips every decision.
     let mut v2 = v1.clone();
     v2.version = 2;
@@ -249,7 +410,7 @@ fn mid_stream_swap_changes_results_only_at_the_boundary() {
 /// the same published instance and swap together.
 #[test]
 fn two_sessions_of_one_patient_share_the_published_model() {
-    let (patient, bundle) = trained_bundle(9);
+    let (patient, bundle) = tiny_trained_patient(9);
     let specs = vec![
         StreamSpec {
             session_id: 1,
@@ -279,7 +440,7 @@ fn two_sessions_of_one_patient_share_the_published_model() {
 /// of silently running the second session on the first session's model.
 #[test]
 fn conflicting_bundles_for_one_patient_are_rejected() {
-    let (patient, bundle) = trained_bundle(13);
+    let (patient, bundle) = tiny_trained_patient(13);
     let mut other = bundle.clone();
     other.am = AssociativeMemory::new(other.am.classes[1], other.am.classes[0]);
     let specs = vec![

@@ -1,0 +1,165 @@
+//! Retrain-scheduler determinism tests: a planted false-alarm burst
+//! triggers exactly one retrain at a pinned window index, and the
+//! incremental (counter-plane) retrain scores bit-identically to a
+//! from-record retrain with the same epochs/seed.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use sparse_hdc_ieeg::coordinator::registry::ModelRegistry;
+use sparse_hdc_ieeg::coordinator::scheduler::{PatientWatch, RetrainPolicy, RetrainScheduler};
+use sparse_hdc_ieeg::hdc::classifier::Variant;
+use sparse_hdc_ieeg::pipeline::{self, RetrainOptions};
+use sparse_hdc_ieeg::testkit::{planted_false_alarm_stream, tiny_trained_patient};
+
+/// The satellite pin: a clean stream with one planted burst fires the
+/// policy exactly once, at an index derivable by hand. Policy: 25% over
+/// a 16-window estimator → the 4th burst window crosses (4/16 = 25%),
+/// so the trigger index is `burst_start + 4` (1-based outcome count).
+#[test]
+fn planted_burst_triggers_once_at_the_pinned_index() {
+    let policy = RetrainPolicy {
+        epochs: 2,
+        fa_window: 16,
+        fa_rate: 0.25,
+        cooldown: 10_000,
+        max_retrains: 1,
+    };
+    let burst_start = 120usize; // 0-based window index where the burst begins
+    let stream = planted_false_alarm_stream(300, burst_start, 12);
+
+    let mut watch = PatientWatch::new(&policy);
+    let mut triggers = Vec::new();
+    for (idx, &fa) in stream.iter().enumerate() {
+        if watch.observe(&policy, fa) {
+            triggers.push(idx);
+        }
+    }
+    // 0-based: the burst's 4th window sits at burst_start + 3.
+    assert_eq!(triggers, vec![burst_start + 3], "exactly one trigger, pinned");
+    assert_eq!(watch.retrains, 1);
+    assert_eq!(watch.windows_seen, 300);
+}
+
+/// The same stream through the full scheduler front-end (per-patient
+/// watch map + trigger log) — the log records the identical index, and
+/// an independent patient's clean stream stays untriggered.
+#[test]
+fn scheduler_trigger_log_matches_the_pure_watch() {
+    let policy = RetrainPolicy {
+        epochs: 2,
+        fa_window: 16,
+        fa_rate: 0.25,
+        cooldown: 10_000,
+        max_retrains: 1,
+    };
+    // No training records: triggers are logged, retrains report-skip.
+    let scheduler = RetrainScheduler::new(
+        policy,
+        Arc::new(ModelRegistry::new()),
+        None,
+        BTreeMap::new(),
+    )
+    .foreground();
+
+    let stream = planted_false_alarm_stream(300, 120, 12);
+    for &fa in &stream {
+        scheduler.observe(1, fa); // bursty patient
+        scheduler.observe(2, false); // clean patient
+    }
+    // 1-based window count: 120 clean + 4 burst windows = 124.
+    assert_eq!(scheduler.triggers(), vec![(1, 124)]);
+    assert_eq!(scheduler.retrains(1), 1);
+    assert_eq!(scheduler.retrains(2), 0);
+}
+
+/// The other satellite pin: resuming from a one-shot bundle's persisted
+/// counter planes is **bit-identical** to re-seeding from the record —
+/// same AM planes, same epoch trajectory, same persisted counters —
+/// because the stored planes *are* the from-record seeding state.
+#[test]
+fn incremental_retrain_bit_identical_to_from_record() {
+    let (patient, bundle) = tiny_trained_patient(17);
+    assert!(bundle.counters.is_some(), "one-shot training persists its planes");
+    let record = patient.train_record();
+
+    for epochs in [1usize, 4, 8] {
+        let opts = RetrainOptions {
+            max_epochs: epochs,
+            ..Default::default()
+        };
+        // Incremental: the counter path (bundle carries planes).
+        let (inc, inc_report) = pipeline::retrain_bundle(&bundle, record, &opts);
+        // From-record: force the fallback by stripping the planes.
+        let mut stripped = bundle.clone();
+        stripped.counters = None;
+        let (full, full_report) = pipeline::retrain_bundle(&stripped, record, &opts);
+
+        assert_eq!(inc.am.classes, full.am.classes, "epochs {epochs}: AM must be bit-identical");
+        assert_eq!(inc.version, full.version);
+        assert_eq!(inc.config, full.config);
+        assert_eq!(
+            inc.counters, full.counters,
+            "epochs {epochs}: persisted post-retrain planes must agree"
+        );
+        assert_eq!(inc_report.initial_errors, full_report.initial_errors);
+        assert_eq!(inc_report.best_errors, full_report.best_errors);
+        assert_eq!(inc_report.epochs.len(), full_report.epochs.len());
+        assert_eq!(inc.provenance.train_windows, full.provenance.train_windows);
+    }
+}
+
+/// A threshold re-tune invalidates the stored planes: the retrain must
+/// fall back to from-record seeding (different encoding ⇒ the planes
+/// cannot be reused), and the result equals the stripped-bundle path.
+#[test]
+fn retune_falls_back_to_from_record_seeding() {
+    let (patient, bundle) = tiny_trained_patient(19);
+    let record = patient.train_record();
+    let opts = RetrainOptions {
+        max_epochs: 2,
+        max_density: Some(0.10),
+        ..Default::default()
+    };
+    let (with_planes, _) = pipeline::retrain_bundle(&bundle, record, &opts);
+    let mut stripped = bundle.clone();
+    stripped.counters = None;
+    let (without_planes, _) = pipeline::retrain_bundle(&stripped, record, &opts);
+    assert_eq!(with_planes.am.classes, without_planes.am.classes);
+    assert_eq!(with_planes.config, without_planes.config);
+    assert_ne!(
+        with_planes.config.temporal_threshold, bundle.config.temporal_threshold,
+        "the 10%-density re-tune must actually move the threshold for this pin to bite"
+    );
+}
+
+/// Chained incremental retrains genuinely accumulate: every retrained
+/// bundle's persisted planes thin to exactly its published AM, so v3
+/// resumed from v2's planes starts from the state actually serving —
+/// not from v1's one-shot seeding.
+#[test]
+fn chained_retrains_resume_from_the_published_state() {
+    let (patient, v1) = tiny_trained_patient(23);
+    let record = patient.train_record();
+    let opts = RetrainOptions {
+        max_epochs: 4,
+        ..Default::default()
+    };
+    let (v2, _) = pipeline::retrain_bundle(&v1, record, &opts);
+    assert_eq!(v2.version, 2);
+    // Self-consistency: the persisted planes ARE the published model.
+    let resumed_am = sparse_hdc_ieeg::hdc::online::OnlineTrainer::from_counters(
+        Variant::Optimized,
+        v2.config.train_density,
+        v2.counters.as_ref().unwrap(),
+    )
+    .build_am();
+    assert_eq!(resumed_am.classes, v2.am.classes, "planes thin to the published AM");
+
+    let (v3, v3_report) = pipeline::retrain_bundle(&v2, record, &opts);
+    assert_eq!(v3.version, 3);
+    assert_eq!(v3.provenance.parent_version, 2);
+    // Keep-best across the chain: v3 never scores worse than v2 on the
+    // training windows it resumed from.
+    assert!(v3_report.best_errors <= v3_report.initial_errors);
+}
