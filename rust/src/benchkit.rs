@@ -288,14 +288,17 @@ pub struct BenchRecord {
 
 /// Minimal JSON scanner: just enough of the grammar for the documents
 /// [`Bench::to_json`] emits (objects, arrays, strings with escapes,
-/// numbers incl. exponents, `true`/`false`/`null`).
-struct JsonScanner<'a> {
+/// numbers incl. exponents, `true`/`false`/`null`). Crate-visible so the
+/// load generator's `loadgen/v1` reader
+/// ([`crate::transport::loadgen::parse_loadgen_json`]) reuses it instead
+/// of growing a second hand-rolled parser.
+pub(crate) struct JsonScanner<'a> {
     bytes: &'a [u8],
     pos: usize,
 }
 
 impl<'a> JsonScanner<'a> {
-    fn new(text: &'a str) -> Self {
+    pub(crate) fn new(text: &'a str) -> Self {
         JsonScanner {
             bytes: text.as_bytes(),
             pos: 0,
@@ -329,7 +332,7 @@ impl<'a> JsonScanner<'a> {
         Ok(())
     }
 
-    fn string(&mut self) -> crate::Result<String> {
+    pub(crate) fn string(&mut self) -> crate::Result<String> {
         self.expect(b'"')?;
         // Collect raw bytes and validate UTF-8 once at the end — pushing
         // `b as char` would decode multi-byte sequences as Latin-1.
@@ -376,7 +379,7 @@ impl<'a> JsonScanner<'a> {
 
     /// Parse any value; returns `Some(f64)` for numbers, `None` for
     /// everything else (nested containers are consumed and discarded).
-    fn value(&mut self) -> crate::Result<Option<f64>> {
+    pub(crate) fn value(&mut self) -> crate::Result<Option<f64>> {
         match self.peek()? {
             b'"' => {
                 self.string()?;
@@ -418,7 +421,7 @@ impl<'a> JsonScanner<'a> {
     }
 
     /// Consume an object, calling `field(self, key)` for every value.
-    fn object(
+    pub(crate) fn object(
         &mut self,
         mut field: impl FnMut(&mut Self, &str) -> crate::Result<()>,
     ) -> crate::Result<()> {
@@ -443,7 +446,7 @@ impl<'a> JsonScanner<'a> {
     }
 
     /// Consume an array, calling `elem` for every element.
-    fn array(
+    pub(crate) fn array(
         &mut self,
         mut elem: impl FnMut(&mut Self) -> crate::Result<()>,
     ) -> crate::Result<()> {

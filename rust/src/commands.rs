@@ -14,6 +14,7 @@ use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
 use sparse_hdc_ieeg::hwmodel::breakdown::{format_breakdown, format_comparison, format_table1};
 use sparse_hdc_ieeg::hwmodel::designs::{analyze, analyze_all, patient11_stimulus};
 use sparse_hdc_ieeg::pipeline;
+use sparse_hdc_ieeg::transport::loadgen;
 
 fn parse_variant(args: &Args) -> sparse_hdc_ieeg::Result<Variant> {
     let name = args.get_str("variant", "sparse-optimized");
@@ -107,6 +108,150 @@ pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     println!(
         "bench-diff: {} pairs compared, no kernel/* regression above {:.0}%",
         diffs.len(),
+        threshold * 100.0
+    );
+    Ok(())
+}
+
+/// `repro loadgen --addr HOST:PORT --data DIR [--patients LIST]
+/// [--sessions N] [--concurrency N] [--record K] [--chunk N]
+/// [--report FILE] [--allow-drops]`
+///
+/// Replay patient records as concurrent wire sessions against a
+/// `repro serve --listen` server and report throughput / latency /
+/// drops. Strict by default: any dropped window or failed session is an
+/// error (the CI scale smoke relies on this); `--allow-drops` downgrades
+/// both to report-only for overload experiments.
+pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
+    args.check_known(&[
+        "addr",
+        "data",
+        "patients",
+        "sessions",
+        "concurrency",
+        "record",
+        "chunk",
+        "report",
+        "allow-drops",
+    ])?;
+    let addr = args.require("addr")?.to_string();
+    let data = PathBuf::from(args.require("data")?);
+    let patient_ids: Vec<u32> = {
+        let list = args.get_list("patients");
+        if list.is_empty() {
+            vec![1, 2, 3, 4]
+        } else {
+            list.iter()
+                .map(|s| s.parse::<u32>())
+                .collect::<Result<_, _>>()?
+        }
+    };
+    let record_idx: usize = args.get_parse("record", 1usize)?;
+    let mut cfg = loadgen::LoadgenConfig {
+        sessions: args.get_parse("sessions", 64usize)?,
+        concurrency: args.get_parse("concurrency", 16usize)?,
+        ..Default::default()
+    };
+    cfg.client.chunk_samples = args.get_parse("chunk", cfg.client.chunk_samples)?;
+
+    // Same record the server replays in-process mode (`--record`,
+    // default 1), so wire results stay comparable run-to-run.
+    let mut records = Vec::new();
+    for &pid in &patient_ids {
+        let mut all = dataset::load_patient(&data, pid)?;
+        ensure!(
+            record_idx < all.len(),
+            "patient {pid} has {} records, --record {record_idx} is out of range",
+            all.len()
+        );
+        records.push((pid, all.swap_remove(record_idx).samples));
+    }
+
+    println!(
+        "loadgen: {} sessions x {} patients against {addr} ({} in flight)…",
+        cfg.sessions,
+        records.len(),
+        cfg.concurrency.min(cfg.sessions)
+    );
+    let report = loadgen::run(
+        &|| sparse_hdc_ieeg::transport::tcp::TcpTransport::connect(&addr),
+        &records,
+        &cfg,
+    )?;
+    println!("loadgen: {}", report.summary());
+    if let Some(path) = args.get("report") {
+        std::fs::write(path, report.to_json()).with_context(|| format!("write {path}"))?;
+        println!("loadgen: wrote {path}");
+    }
+    if !args.flag("allow-drops") {
+        ensure!(
+            report.drops == 0 && report.failures == 0,
+            "{} windows dropped, {} sessions failed (pass --allow-drops to downgrade)",
+            report.drops,
+            report.failures
+        );
+    }
+    Ok(())
+}
+
+/// `repro loadgen-diff <current.json> <baseline.json> [--threshold FRAC]`
+///
+/// Compare two loadgen/v1 reports. A baseline stub (`"sessions": 0`,
+/// never refreshed from a real run) gates nothing — the diff prints and
+/// passes, mirroring the empty-records bench-diff rule. Against a real
+/// baseline, fail when throughput fell (or p95 latency rose) by more
+/// than `--threshold` (default 0.50 — shared-runner load numbers are
+/// noisy; tighten once the trajectory stabilises).
+pub fn loadgen_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
+    args.check_known(&["threshold"])?;
+    ensure!(
+        args.positional.len() == 2,
+        "usage: repro loadgen-diff <current.json> <baseline.json> [--threshold FRAC]"
+    );
+    let threshold: f64 = args.get_parse("threshold", 0.50)?;
+    let read = |path: &str| -> sparse_hdc_ieeg::Result<loadgen::LoadgenReport> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        loadgen::parse_loadgen_json(&text).with_context(|| format!("parse {path}"))
+    };
+    let current = read(&args.positional[0])?;
+    let baseline = read(&args.positional[1])?;
+    println!("current:  {}", current.summary());
+    println!("baseline: {}", baseline.summary());
+    if loadgen::is_stub_report(&baseline) {
+        println!(
+            "loadgen-diff: baseline is the never-promoted stub (0 sessions) — advisory only"
+        );
+        return Ok(());
+    }
+    let mut regressions = Vec::new();
+    if baseline.windows_per_s > 0.0
+        && current.windows_per_s < baseline.windows_per_s * (1.0 - threshold)
+    {
+        regressions.push(format!(
+            "throughput fell {:.0}% ({:.0} → {:.0} windows/s)",
+            (1.0 - current.windows_per_s / baseline.windows_per_s) * 100.0,
+            baseline.windows_per_s,
+            current.windows_per_s
+        ));
+    }
+    if let (Some(cur), Some(base)) = (current.p95_latency_s, baseline.p95_latency_s) {
+        if base > 0.0 && cur > base * (1.0 + threshold) {
+            regressions.push(format!(
+                "p95 latency rose {:.0}% ({:.2} ms → {:.2} ms)",
+                (cur / base - 1.0) * 100.0,
+                base * 1e3,
+                cur * 1e3
+            ));
+        }
+    }
+    ensure!(
+        regressions.is_empty(),
+        "loadgen regression beyond {:.0}%: {}",
+        threshold * 100.0,
+        regressions.join("; ")
+    );
+    println!(
+        "loadgen-diff: within {:.0}% of baseline",
         threshold * 100.0
     );
     Ok(())

@@ -216,6 +216,18 @@ pub struct SystemConfig {
     /// Retrains allowed per patient per serve run
     /// (`[model] max_retrains`; 0 = unlimited).
     pub retrain_max: u64,
+    /// Wire-serve listen address (`[server] listen`, CLI `--listen`);
+    /// unset = in-process replay serving.
+    pub listen: Option<String>,
+    /// Writer-idle heartbeat interval, milliseconds (`[server]
+    /// heartbeat_ms`).
+    pub heartbeat_ms: u64,
+    /// Disconnect a connection sending no frames for this long,
+    /// milliseconds (`[server] staleness_ms`).
+    pub staleness_ms: u64,
+    /// Outbound frames buffered per connection before a slow consumer is
+    /// shed (`[server] conn_queue`).
+    pub conn_queue: usize,
 }
 
 impl Default for SystemConfig {
@@ -236,6 +248,10 @@ impl Default for SystemConfig {
             retrain_fa_window: 64,
             retrain_cooldown: 512,
             retrain_max: 1,
+            listen: None,
+            heartbeat_ms: 1000,
+            staleness_ms: 5000,
+            conn_queue: 256,
         }
     }
 }
@@ -275,6 +291,10 @@ impl SystemConfig {
         cfg.retrain_fa_window = file.get_parse("model.fa_window", cfg.retrain_fa_window)?;
         cfg.retrain_cooldown = file.get_parse("model.retrain_cooldown", cfg.retrain_cooldown)?;
         cfg.retrain_max = file.get_parse("model.max_retrains", cfg.retrain_max)?;
+        cfg.listen = file.get("server.listen").map(str::to_string);
+        cfg.heartbeat_ms = file.get_parse("server.heartbeat_ms", cfg.heartbeat_ms)?;
+        cfg.staleness_ms = file.get_parse("server.staleness_ms", cfg.staleness_ms)?;
+        cfg.conn_queue = file.get_parse("server.conn_queue", cfg.conn_queue)?;
         file.finish()?;
         Ok(cfg)
     }
@@ -310,6 +330,12 @@ fa_rate = 0.15
 fa_window = 32
 retrain_cooldown = 128
 max_retrains = 4
+
+[server]
+listen = "127.0.0.1:7070"
+heartbeat_ms = 500
+staleness_ms = 4000
+conn_queue = 32
 "#;
 
     #[test]
@@ -339,6 +365,10 @@ max_retrains = 4
         assert_eq!(cfg.retrain_fa_window, 32);
         assert_eq!(cfg.retrain_cooldown, 128);
         assert_eq!(cfg.retrain_max, 4);
+        assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(cfg.heartbeat_ms, 500);
+        assert_eq!(cfg.staleness_ms, 4000);
+        assert_eq!(cfg.conn_queue, 32);
         // untouched default
         assert_eq!(cfg.alarm_consecutive, 1);
     }
@@ -366,6 +396,10 @@ max_retrains = 4
         assert_eq!(cfg.retrain_epochs, 0);
         assert_eq!(cfg.retrain_fa_window, 64);
         assert_eq!(cfg.retrain_max, 1);
+        assert_eq!(cfg.listen, None);
+        assert_eq!(cfg.heartbeat_ms, 1000);
+        assert_eq!(cfg.staleness_ms, 5000);
+        assert_eq!(cfg.conn_queue, 256);
     }
 
     #[test]

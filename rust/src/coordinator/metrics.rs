@@ -250,6 +250,62 @@ impl ServingMetrics {
     }
 }
 
+/// Shared counters of the wire serving layer
+/// ([`crate::coordinator::wire`]). All fields are atomics: connection
+/// reader actors, per-connection writer threads and the completion
+/// dispatcher update them concurrently (relaxed ordering — these are
+/// statistics, not synchronization).
+#[derive(Debug, Default)]
+pub struct WireMetrics {
+    /// Connections accepted.
+    pub connections: std::sync::atomic::AtomicU64,
+    /// Sessions opened by a valid Subscribe.
+    pub sessions_started: std::sync::atomic::AtomicU64,
+    /// Sessions that reached an orderly end-of-stream Shutdown.
+    pub sessions_finished: std::sync::atomic::AtomicU64,
+    /// Frames received from clients.
+    pub frames_in: std::sync::atomic::AtomicU64,
+    /// Windows submitted to the engine pool.
+    pub windows_submitted: std::sync::atomic::AtomicU64,
+    /// Windows whose engine completion was processed.
+    pub windows_completed: std::sync::atomic::AtomicU64,
+    /// Prediction frames handed to connection writers.
+    pub predictions_sent: std::sync::atomic::AtomicU64,
+    /// Predictions dropped (shed consumers, failed batches).
+    pub predictions_dropped: std::sync::atomic::AtomicU64,
+    /// Slow consumers disconnected because their bounded queue filled.
+    pub slow_consumers_shed: std::sync::atomic::AtomicU64,
+    /// Connections disconnected for missing the staleness deadline.
+    pub stale_disconnects: std::sync::atomic::AtomicU64,
+    /// Heartbeats written during idle gaps.
+    pub heartbeats_sent: std::sync::atomic::AtomicU64,
+    /// Malformed / out-of-order / misdirected frames.
+    pub protocol_errors: std::sync::atomic::AtomicU64,
+}
+
+impl WireMetrics {
+    pub fn summary(&self) -> String {
+        use std::sync::atomic::Ordering::Relaxed;
+        format!(
+            "conns {} | sessions {}/{} done | frames in {} | windows {}/{} | \
+             predictions {} sent, {} dropped | shed {} | stale {} | heartbeats {} | \
+             protocol errors {}",
+            self.connections.load(Relaxed),
+            self.sessions_finished.load(Relaxed),
+            self.sessions_started.load(Relaxed),
+            self.frames_in.load(Relaxed),
+            self.windows_completed.load(Relaxed),
+            self.windows_submitted.load(Relaxed),
+            self.predictions_sent.load(Relaxed),
+            self.predictions_dropped.load(Relaxed),
+            self.slow_consumers_shed.load(Relaxed),
+            self.stale_disconnects.load(Relaxed),
+            self.heartbeats_sent.load(Relaxed),
+            self.protocol_errors.load(Relaxed),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,5 +396,17 @@ mod tests {
         m.latency.record(0.001);
         let s = m.summary();
         assert!(s.contains("windows 2/0"));
+    }
+
+    #[test]
+    fn wire_metrics_summary_smoke() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = WireMetrics::default();
+        m.connections.fetch_add(3, Relaxed);
+        m.sessions_started.fetch_add(2, Relaxed);
+        m.slow_consumers_shed.fetch_add(1, Relaxed);
+        let s = m.summary();
+        assert!(s.contains("conns 3"), "{s}");
+        assert!(s.contains("shed 1"), "{s}");
     }
 }

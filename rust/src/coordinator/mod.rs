@@ -21,7 +21,11 @@
 //! * [`detector`] — K-of-N alarm smoothing and onset events;
 //! * [`metrics`] — ingest/latency/throughput counters;
 //! * [`server`] — the orchestration loop gluing sources → sessions →
-//!   engines → events, with real-time pacing or max-speed replay.
+//!   engines → events, with real-time pacing or max-speed replay;
+//! * [`wire`] — the wire-level serving layer: actor-per-connection
+//!   framed streaming over any [`crate::transport::Transport`], with
+//!   heartbeat/staleness deadlines and slow-consumer shedding
+//!   (`serve --listen`).
 
 pub mod detector;
 pub mod metrics;
@@ -30,5 +34,6 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 pub mod session;
+pub mod wire;
 
 pub use server::{serve_command, Coordinator, StreamReport};

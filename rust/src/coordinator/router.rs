@@ -73,20 +73,14 @@ impl Router {
     }
 
     /// Route one chunk; completed window batches are appended to `out`.
-    /// Unknown session ids are an error (a production system would 404).
+    /// Unknown session ids are an error (a production system would 404),
+    /// as is a chunk that is not a whole number of multichannel frames.
     pub fn route(&mut self, chunk: &SampleChunk, out: &mut Vec<ReadyBatch>) -> crate::Result<()> {
         let session = self
             .sessions
             .get_mut(&chunk.session_id)
             .ok_or_else(|| crate::err!("unknown session {}", chunk.session_id))?;
-        let mut sample = [0f32; CHANNELS];
-        for t in 0..chunk.num_samples() {
-            sample.copy_from_slice(&chunk.samples[t * CHANNELS..(t + 1) * CHANNELS]);
-            if let Some(b) = session.push_sample(&sample) {
-                out.push(b);
-            }
-        }
-        Ok(())
+        session.push_samples(&chunk.samples, out)
     }
 }
 
@@ -134,6 +128,18 @@ mod tests {
             samples: vec![0.0; CHANNELS],
         };
         assert!(r.route(&chunk, &mut out).is_err());
+    }
+
+    #[test]
+    fn ragged_chunk_rejected() {
+        let mut r = router_with(&[1]);
+        let mut out = Vec::new();
+        let chunk = SampleChunk {
+            session_id: 1,
+            samples: vec![0.0; CHANNELS + 1],
+        };
+        let err = r.route(&chunk, &mut out).unwrap_err();
+        assert!(format!("{err:#}").contains("whole number"), "{err:#}");
     }
 
     #[test]

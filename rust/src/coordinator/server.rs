@@ -65,8 +65,10 @@ pub enum Backend {
     Pjrt { artifacts_dir: PathBuf },
 }
 
-/// Spawn the engine host for the selected backend.
-fn spawn_host(
+/// Spawn the engine host for the selected backend. Shared with the wire
+/// server ([`crate::coordinator::wire`]), which owns its host from a
+/// dispatcher thread.
+pub(crate) fn spawn_host(
     backend: &Backend,
     cfg: &ClassifierConfig,
     queue_depth: usize,
@@ -294,6 +296,7 @@ impl Coordinator {
                         codes: b.codes,
                         am: model.plane.clone(),
                         thresholds: vec![model.threshold() as i32; b.windows],
+                        version: model.version(),
                         submitted: Instant::now(),
                     });
                 }
@@ -501,6 +504,7 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "models-dir",
         "retrain-epochs",
         "retrain-fa-rate",
+        "listen",
     ])?;
     let data = PathBuf::from(args.require("data")?);
     let mut system = match args.get("config") {
@@ -664,6 +668,39 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
             record,
             bundle,
         });
+    }
+
+    // Wire mode: `--listen ADDR` (or `[server] listen`) serves the
+    // published models over framed TCP instead of replaying the local
+    // records in-process. Setup above is identical — same training /
+    // store recovery / registry publish — so a wire client streaming a
+    // record sees window-for-window the same predictions the in-process
+    // replay would produce. Retrain scheduling is an in-process-replay
+    // feature (it needs the annotation alongside the stream) and is not
+    // started here.
+    let listen = args
+        .get("listen")
+        .map(str::to_string)
+        .or_else(|| system.listen.clone());
+    if let Some(addr) = listen {
+        let backend = if system.use_pjrt {
+            Backend::Pjrt {
+                artifacts_dir: PathBuf::from(&artifacts),
+            }
+        } else {
+            Backend::Native
+        };
+        let mut wire_cfg = crate::coordinator::wire::WireConfig::from_system(&system);
+        wire_cfg.batch_windows = args.get_parse("batch", wire_cfg.batch_windows)?.max(1);
+        let transport = crate::transport::tcp::TcpTransport::bind(&addr)?;
+        let server =
+            crate::coordinator::wire::WireServer::start(Box::new(transport), &backend, &system, registry, wire_cfg)?;
+        // CI greps a redirected log for this line before pointing the
+        // load generator at the port — flush past the block buffering.
+        println!("listening on {}", server.local_addr());
+        use std::io::Write as _;
+        std::io::stdout().flush()?;
+        return server.run();
     }
 
     // False-alarm-driven retraining: sessions feed per-window outcomes

@@ -160,6 +160,28 @@ impl Session {
         }
     }
 
+    /// Feed a contiguous time-major sample run (`samples.len()` must be
+    /// a whole number of `CHANNELS`-channel frames), appending completed
+    /// micro-batches to `out` — the chunk-level entry point shared by
+    /// the in-process [`crate::coordinator::router::Router`] and the
+    /// wire connection actors, so both paths window identically by
+    /// construction.
+    pub fn push_samples(&mut self, samples: &[f32], out: &mut Vec<ReadyBatch>) -> crate::Result<()> {
+        crate::ensure!(
+            samples.len() % CHANNELS == 0,
+            "sample run of {} f32s is not a whole number of {CHANNELS}-channel frames",
+            samples.len()
+        );
+        let mut sample = [0f32; CHANNELS];
+        for frame in samples.chunks_exact(CHANNELS) {
+            sample.copy_from_slice(frame);
+            if let Some(b) = self.push_sample(&sample) {
+                out.push(b);
+            }
+        }
+        Ok(())
+    }
+
     /// Emit the pending (possibly partial) batch, if any — called at
     /// stream end so no completed window waits forever for the batch to
     /// fill.

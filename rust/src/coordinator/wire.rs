@@ -1,0 +1,637 @@
+//! Actor-per-connection wire serving: the coordinator behind a
+//! [`Transport`].
+//!
+//! Thread shape (SNIPPETS-style connection actors over the existing
+//! engine pool):
+//!
+//! * **accept loop** — polls [`Transport::accept`], spawns one reader
+//!   actor + one writer thread per connection;
+//! * **reader actor** — owns the connection's framed read half and its
+//!   coordinator [`Session`] (created on `Subscribe`), enforces frame
+//!   ordering and the staleness deadline, windows samples via the same
+//!   [`Session::push_samples`] the in-process router uses, and submits
+//!   engine jobs through a cloned
+//!   [`JobSender`](crate::runtime::engine_pool::JobSender) — engine
+//!   backpressure blocks *this* connection's intake, never the pool;
+//! * **writer thread** — drains the connection's bounded outbound queue
+//!   onto the wire, emitting heartbeats whenever the queue stays empty
+//!   for a heartbeat interval;
+//! * **dispatcher** — the single consumer of the engine host's
+//!   completions: turns [`WindowOutput`]s into `Prediction` frames
+//!   (bit-identical post-processing to the in-process path) and
+//!   `try_send`s them to the owning connection's queue. A full queue
+//!   means the consumer stopped draining: the connection is **shed**
+//!   (disconnected, its predictions dropped) instead of stalling the
+//!   engine pool — other sessions' outputs are unaffected.
+//!
+//! Ordering: per session, jobs are submitted from one thread in window
+//! order, the engine completes in submission order, the bounded queue
+//! and writer preserve it — so each client sees its predictions in
+//! exact window order, and the outputs pin window-for-window against
+//! [`crate::coordinator::server::Coordinator`]'s in-process replay.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::SystemConfig;
+use crate::coordinator::metrics::WireMetrics;
+use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::server::{spawn_host, Backend};
+use crate::coordinator::session::{ReadyBatch, Session};
+use crate::err;
+use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL};
+use crate::runtime::engine_pool::{EngineHost, Job, JobSender};
+use crate::runtime::WindowOutput;
+use crate::transport::frame::{Frame, FrameReader, ReadOutcome};
+use crate::transport::{Transport, WireRead, WireWrite};
+
+/// Reader-side poll tick: how often a blocked read wakes to check stop /
+/// close flags and the staleness deadline.
+const READ_TICK: Duration = Duration::from_millis(50);
+/// Accept-loop poll tick (bounds shutdown latency).
+const ACCEPT_TICK: Duration = Duration::from_millis(200);
+/// Dispatcher poll tick on the completions channel.
+const DISPATCH_TICK: Duration = Duration::from_millis(100);
+
+/// Wire-serving knobs (the `[server]` section of [`SystemConfig`]).
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    /// Writer emits a Heartbeat after this long with nothing to send.
+    pub heartbeat: Duration,
+    /// A connection sending no frames for this long is disconnected.
+    pub staleness: Duration,
+    /// Outbound frames buffered per connection before the consumer is
+    /// declared slow and shed.
+    pub conn_queue: usize,
+    /// Windows per engine micro-batch (same meaning as the in-process
+    /// coordinator's; outputs are bit-identical at any value).
+    pub batch_windows: usize,
+    /// Engine job queue depth (global backpressure bound).
+    pub engine_queue: usize,
+    /// Alarm policy: consecutive ictal windows (detector state lives in
+    /// the session even though wire clients do their own alarming).
+    pub alarm_consecutive: usize,
+}
+
+impl WireConfig {
+    pub fn from_system(system: &SystemConfig) -> WireConfig {
+        WireConfig {
+            heartbeat: Duration::from_millis(system.heartbeat_ms.max(1)),
+            staleness: Duration::from_millis(system.staleness_ms.max(1)),
+            conn_queue: system.conn_queue.max(1),
+            batch_windows: system.batch_windows.max(1),
+            engine_queue: system.queue_depth.max(1),
+            alarm_consecutive: system.alarm_consecutive,
+        }
+    }
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig::from_system(&SystemConfig::default())
+    }
+}
+
+/// Per-connection state shared between the reader actor, the writer
+/// thread and the dispatcher.
+struct ConnShared {
+    /// Bounded outbound frame queue (reader/dispatcher produce, writer
+    /// consumes). `try_send` only — a full queue is the shed signal,
+    /// never a stall.
+    out: SyncSender<Frame>,
+    /// Windows submitted to the engine for this connection.
+    submitted: AtomicU64,
+    /// Windows whose completion the dispatcher has processed (delivered
+    /// or dropped).
+    completed: AtomicU64,
+    /// Client sent its end-of-stream Shutdown — no more submissions.
+    draining: AtomicBool,
+    /// Final server Shutdown enqueued (exactly once).
+    finished: AtomicBool,
+    /// Torn down (shed / stale / error): every thread exits ASAP.
+    closed: AtomicBool,
+}
+
+impl ConnShared {
+    fn new(out: SyncSender<Frame>) -> Self {
+        ConnShared {
+            out,
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            finished: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Once the client has drained (end-of-stream received and every
+    /// submitted window completed), enqueue the final Shutdown exactly
+    /// once. Both the reader (after its last submit) and the dispatcher
+    /// (after each completion) call this — whichever observes both
+    /// conditions wins and returns `true` (then unregisters the entry).
+    fn maybe_finish(&self) -> bool {
+        if self.draining.load(SeqCst)
+            && self.completed.load(SeqCst) >= self.submitted.load(SeqCst)
+            && !self.finished.swap(true, SeqCst)
+        {
+            let _ = self.out.try_send(Frame::Shutdown {
+                reason: "end of stream".into(),
+            });
+            return true;
+        }
+        false
+    }
+}
+
+type ConnMap = Arc<Mutex<HashMap<u64, Arc<ConnShared>>>>;
+
+/// Handle to a running wire server.
+pub struct WireServer {
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<crate::Result<()>>>,
+    dispatch_handle: Option<JoinHandle<()>>,
+    metrics: Arc<WireMetrics>,
+    addr: String,
+}
+
+impl WireServer {
+    /// Start serving `registry`'s published models over `transport`.
+    ///
+    /// The engine host is spawned here (native or PJRT per `backend`,
+    /// encoding with `system.classifier`) and owned by the dispatcher
+    /// thread. Returns once the accept loop is live.
+    pub fn start(
+        mut transport: Box<dyn Transport>,
+        backend: &Backend,
+        system: &SystemConfig,
+        registry: Arc<ModelRegistry>,
+        cfg: WireConfig,
+    ) -> crate::Result<WireServer> {
+        transport.set_write_timeout(Some(cfg.staleness));
+        let addr = transport.local_addr();
+        let host = spawn_host(backend, &system.classifier, cfg.engine_queue)?;
+        let sender = host.sender();
+        let metrics = Arc::new(WireMetrics::default());
+        let conns: ConnMap = Arc::new(Mutex::new(HashMap::new()));
+        let outstanding = Arc::new(AtomicU64::new(0)); // engine jobs in flight
+        let stop = Arc::new(AtomicBool::new(false));
+        let next_session = Arc::new(AtomicU64::new(0));
+
+        let dispatch_handle = {
+            let (conns, metrics, outstanding, stop) =
+                (conns.clone(), metrics.clone(), outstanding.clone(), stop.clone());
+            std::thread::Builder::new()
+                .name("wire-dispatch".into())
+                .spawn(move || dispatch_loop(host, conns, metrics, outstanding, stop))?
+        };
+
+        let accept_handle = {
+            let (conns, metrics, stop) = (conns.clone(), metrics.clone(), stop.clone());
+            let cfg = cfg.clone();
+            std::thread::Builder::new()
+                .name("wire-accept".into())
+                .spawn(move || -> crate::Result<()> {
+                    let mut actors: Vec<JoinHandle<()>> = Vec::new();
+                    while !stop.load(SeqCst) {
+                        match transport.accept(ACCEPT_TICK)? {
+                            Some(conn) => {
+                                metrics.connections.fetch_add(1, Relaxed);
+                                let actor = ConnectionActor {
+                                    registry: registry.clone(),
+                                    sender: sender.clone(),
+                                    conns: conns.clone(),
+                                    metrics: metrics.clone(),
+                                    outstanding: outstanding.clone(),
+                                    next_session: next_session.clone(),
+                                    stop: stop.clone(),
+                                    cfg: cfg.clone(),
+                                };
+                                actors.push(
+                                    std::thread::Builder::new()
+                                        .name("wire-conn".into())
+                                        .spawn(move || actor.run(conn))?,
+                                );
+                            }
+                            None => {
+                                // Reap finished actors so a long-lived
+                                // server doesn't accumulate handles.
+                                actors.retain(|h| !h.is_finished());
+                            }
+                        }
+                    }
+                    // Shutdown: close every live connection, join actors.
+                    for shared in conns.lock().map_err(|_| err!("conns lock poisoned"))?.values()
+                    {
+                        shared.closed.store(true, SeqCst);
+                    }
+                    for h in actors {
+                        let _ = h.join();
+                    }
+                    Ok(())
+                })?
+        };
+
+        Ok(WireServer {
+            stop,
+            accept_handle: Some(accept_handle),
+            dispatch_handle: Some(dispatch_handle),
+            metrics,
+            addr,
+        })
+    }
+
+    /// The transport's resolved address (what clients dial).
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<WireMetrics> {
+        &self.metrics
+    }
+
+    /// Stop accepting, close connections, drain in-flight jobs, join
+    /// every thread, and return the final metrics snapshot.
+    pub fn shutdown(mut self) -> crate::Result<Arc<WireMetrics>> {
+        self.stop.store(true, SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            h.join().map_err(|_| err!("wire accept thread panicked"))??;
+        }
+        if let Some(h) = self.dispatch_handle.take() {
+            h.join().map_err(|_| err!("wire dispatch thread panicked"))?;
+        }
+        Ok(self.metrics.clone())
+    }
+
+    /// Serve until the process dies (`repro serve --listen` — the CI
+    /// smoke stops it with SIGTERM). Joins the accept loop, which only
+    /// returns on a transport error.
+    pub fn run(mut self) -> crate::Result<()> {
+        if let Some(h) = self.accept_handle.take() {
+            h.join().map_err(|_| err!("wire accept thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for WireServer {
+    fn drop(&mut self) {
+        self.stop.store(true, SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.dispatch_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Everything one connection's reader actor needs.
+struct ConnectionActor {
+    registry: Arc<ModelRegistry>,
+    sender: JobSender,
+    conns: ConnMap,
+    metrics: Arc<WireMetrics>,
+    outstanding: Arc<AtomicU64>,
+    next_session: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    cfg: WireConfig,
+}
+
+impl ConnectionActor {
+    fn run(self, conn: crate::transport::Duplex) {
+        let (mut reader, writer, _peer) = conn.split();
+        if reader.get_mut().set_read_timeout(Some(READ_TICK)).is_err() {
+            return;
+        }
+        let (out_tx, out_rx) = sync_channel::<Frame>(self.cfg.conn_queue);
+        let shared = Arc::new(ConnShared::new(out_tx));
+        {
+            // Writer thread: detached — it outlives the reader on the
+            // drain path (delivering queued predictions + the final
+            // Shutdown) and exits on its own via the Shutdown frame,
+            // the closed flag, or a bounded-write error.
+            let (shared, metrics) = (shared.clone(), self.metrics.clone());
+            let heartbeat = self.cfg.heartbeat;
+            let _ = std::thread::Builder::new()
+                .name("wire-write".into())
+                .spawn(move || writer_loop(writer, out_rx, heartbeat, shared, metrics));
+        }
+        let sid = self.read_loop(&mut reader, &shared);
+        // Non-drain exits (stale, shed, protocol error, EOF, server
+        // stop): unregister so the dispatcher stops delivering. The
+        // drain path unregisters via maybe_finish's winner instead.
+        if sid != 0 && shared.closed.load(SeqCst) {
+            if let Ok(mut map) = self.conns.lock() {
+                map.remove(&sid);
+            }
+        }
+    }
+
+    /// The reader actor proper; returns the session id (0 = never
+    /// subscribed).
+    fn read_loop(
+        &self,
+        reader: &mut FrameReader<Box<dyn WireRead>>,
+        shared: &Arc<ConnShared>,
+    ) -> u64 {
+        let mut session: Option<Session> = None;
+        let mut sid = 0u64;
+        let mut expected_seq = 0u64;
+        let mut last_rx = Instant::now();
+        let mut batches: Vec<ReadyBatch> = Vec::new();
+        loop {
+            if self.stop.load(SeqCst) || shared.closed.load(SeqCst) {
+                shared.closed.store(true, SeqCst);
+                return sid;
+            }
+            let outcome = match reader.read() {
+                Ok(o) => o,
+                Err(e) => {
+                    self.protocol_error(shared, format!("protocol error: {e:#}"));
+                    return sid;
+                }
+            };
+            match outcome {
+                ReadOutcome::Idle => {
+                    if last_rx.elapsed() >= self.cfg.staleness {
+                        self.metrics.stale_disconnects.fetch_add(1, Relaxed);
+                        let _ = shared.out.try_send(Frame::Shutdown {
+                            reason: format!(
+                                "stale: no frames within the {:?} staleness deadline",
+                                self.cfg.staleness
+                            ),
+                        });
+                        shared.closed.store(true, SeqCst);
+                        return sid;
+                    }
+                }
+                ReadOutcome::Eof => {
+                    shared.closed.store(true, SeqCst);
+                    return sid;
+                }
+                ReadOutcome::Frame(frame) => {
+                    last_rx = Instant::now();
+                    self.metrics.frames_in.fetch_add(1, Relaxed);
+                    match frame {
+                        Frame::Subscribe { patient } => {
+                            if session.is_some() {
+                                self.protocol_error(shared, "duplicate Subscribe".into());
+                                return sid;
+                            }
+                            let Some(model) = self.registry.current(patient) else {
+                                self.protocol_error(
+                                    shared,
+                                    format!("no model published for patient {patient}"),
+                                );
+                                return sid;
+                            };
+                            sid = self.next_session.fetch_add(1, SeqCst) + 1;
+                            let mut s =
+                                Session::new(sid, patient, model, self.cfg.alarm_consecutive);
+                            s.set_batch_windows(self.cfg.batch_windows);
+                            session = Some(s);
+                            if let Ok(mut map) = self.conns.lock() {
+                                map.insert(sid, shared.clone());
+                            }
+                            self.metrics.sessions_started.fetch_add(1, Relaxed);
+                        }
+                        Frame::Samples { seq, samples } => {
+                            let Some(s) = session.as_mut() else {
+                                self.protocol_error(shared, "Samples before Subscribe".into());
+                                return sid;
+                            };
+                            if seq != expected_seq {
+                                self.protocol_error(
+                                    shared,
+                                    format!("Samples seq {seq}, expected {expected_seq}"),
+                                );
+                                return sid;
+                            }
+                            expected_seq += 1;
+                            if let Err(e) = s.push_samples(&samples, &mut batches) {
+                                self.protocol_error(shared, format!("{e:#}"));
+                                return sid;
+                            }
+                            if let Err(e) = self.submit_batches(s, &mut batches, shared) {
+                                self.protocol_error(shared, format!("{e:#}"));
+                                return sid;
+                            }
+                        }
+                        Frame::Heartbeat { .. } => {}
+                        Frame::Shutdown { .. } => {
+                            // Orderly end-of-stream: flush the partial
+                            // batch, then drain — the dispatcher (or
+                            // this maybe_finish, if everything already
+                            // completed) sends the final Shutdown once
+                            // every submitted window is accounted for.
+                            let Some(s) = session.as_mut() else {
+                                shared.closed.store(true, SeqCst);
+                                return sid;
+                            };
+                            if let Some(b) = s.flush_batch() {
+                                batches.push(b);
+                            }
+                            if let Err(e) = self.submit_batches(s, &mut batches, shared) {
+                                self.protocol_error(shared, format!("{e:#}"));
+                                return sid;
+                            }
+                            shared.draining.store(true, SeqCst);
+                            if shared.maybe_finish() {
+                                self.metrics.sessions_finished.fetch_add(1, Relaxed);
+                                if let Ok(mut map) = self.conns.lock() {
+                                    map.remove(&sid);
+                                }
+                            }
+                            return sid;
+                        }
+                        Frame::Prediction { .. } => {
+                            self.protocol_error(
+                                shared,
+                                "client sent a server-side Prediction frame".into(),
+                            );
+                            return sid;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submit ready batches as engine jobs (blocking on a full engine
+    /// queue — per-connection backpressure).
+    fn submit_batches(
+        &self,
+        session: &mut Session,
+        batches: &mut Vec<ReadyBatch>,
+        shared: &ConnShared,
+    ) -> crate::Result<()> {
+        for b in batches.drain(..) {
+            // Hot-swap exactly like the in-process path: refresh at
+            // batch-creation time; in-flight jobs keep their own Arc.
+            session.refresh_model(&self.registry)?;
+            let model = session.model();
+            let windows = b.windows as u64;
+            let job = Job {
+                tag: b.session_id,
+                seq: b.seq0,
+                codes: b.codes,
+                am: model.plane.clone(),
+                thresholds: vec![model.threshold() as i32; b.windows],
+                version: model.version(),
+                submitted: Instant::now(),
+            };
+            shared.submitted.fetch_add(windows, SeqCst);
+            self.outstanding.fetch_add(1, SeqCst);
+            self.metrics.windows_submitted.fetch_add(windows, Relaxed);
+            if self.sender.submit(job).is_err() {
+                self.outstanding.fetch_sub(1, SeqCst);
+                crate::bail!("engine worker has shut down");
+            }
+        }
+        Ok(())
+    }
+
+    fn protocol_error(&self, shared: &ConnShared, reason: String) {
+        self.metrics.protocol_errors.fetch_add(1, Relaxed);
+        let _ = shared.out.try_send(Frame::Shutdown { reason });
+        shared.closed.store(true, SeqCst);
+    }
+}
+
+/// Per-connection writer: drains the bounded queue onto the wire,
+/// heartbeats through idle gaps, exits on the final Shutdown frame, the
+/// closed flag, or a write error (bounded by the transport's write
+/// timeout — a stalled peer cannot hold this thread forever).
+fn writer_loop(
+    mut writer: Box<dyn WireWrite>,
+    out_rx: Receiver<Frame>,
+    heartbeat: Duration,
+    shared: Arc<ConnShared>,
+    metrics: Arc<WireMetrics>,
+) {
+    let mut hb_seq = 0u64;
+    loop {
+        match out_rx.recv_timeout(heartbeat) {
+            Ok(frame) => {
+                let last = matches!(frame, Frame::Shutdown { .. });
+                if crate::transport::frame::write_frame(&mut writer, &frame).is_err() {
+                    shared.closed.store(true, SeqCst);
+                    return;
+                }
+                if matches!(frame, Frame::Prediction { .. }) {
+                    metrics.predictions_sent.fetch_add(1, Relaxed);
+                }
+                if last {
+                    return;
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if shared.closed.load(SeqCst) {
+                    return;
+                }
+                hb_seq += 1;
+                if crate::transport::frame::write_frame(
+                    &mut writer,
+                    &Frame::Heartbeat { seq: hb_seq },
+                )
+                .is_err()
+                {
+                    shared.closed.store(true, SeqCst);
+                    return;
+                }
+                metrics.heartbeats_sent.fetch_add(1, Relaxed);
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Identical post-processing to the in-process coordinator's `finish`
+/// (the pinning contract: one definition of the label per layer, same
+/// tie-breaking, same margin).
+fn prediction_frame(window: u64, version: u64, out: &WindowOutput) -> Frame {
+    Frame::Prediction {
+        window,
+        is_ictal: out.scores[CLASS_ICTAL] > out.scores[CLASS_INTERICTAL],
+        margin: out.margin(),
+        model_version: version,
+    }
+}
+
+/// The single completions consumer: owns the engine host, fans
+/// completions out to connection queues, sheds slow consumers.
+fn dispatch_loop(
+    host: EngineHost,
+    conns: ConnMap,
+    metrics: Arc<WireMetrics>,
+    outstanding: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        match host.completions.recv_timeout(DISPATCH_TICK) {
+            Ok(c) => {
+                outstanding.fetch_sub(1, SeqCst);
+                let windows = c.windows as u64;
+                metrics.windows_completed.fetch_add(windows, Relaxed);
+                let shared = match conns.lock() {
+                    Ok(map) => map.get(&c.tag).cloned(),
+                    Err(_) => None,
+                };
+                let Some(shared) = shared else {
+                    // Connection already torn down (shed / stale / gone):
+                    // its windows are drops, not deliveries.
+                    metrics.predictions_dropped.fetch_add(windows, Relaxed);
+                    continue;
+                };
+                let mut shed = false;
+                match &c.outputs {
+                    Ok(outs) => {
+                        for (k, out) in outs.iter().enumerate() {
+                            if shed {
+                                metrics.predictions_dropped.fetch_add(1, Relaxed);
+                                continue;
+                            }
+                            let frame = prediction_frame(c.seq + k as u64, c.version, out);
+                            if shared.out.try_send(frame).is_err() {
+                                // Full (slow consumer) or writer gone:
+                                // either way this consumer is done.
+                                shed = true;
+                                metrics.predictions_dropped.fetch_add(1, Relaxed);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        metrics.predictions_dropped.fetch_add(windows, Relaxed);
+                        eprintln!(
+                            "wire batch failed (session {}, seq {}, {} windows): {e:#}",
+                            c.tag, c.seq, c.windows
+                        );
+                    }
+                }
+                shared.completed.fetch_add(windows, SeqCst);
+                if shed {
+                    metrics.slow_consumers_shed.fetch_add(1, Relaxed);
+                    shared.closed.store(true, SeqCst);
+                    if let Ok(mut map) = conns.lock() {
+                        map.remove(&c.tag);
+                    }
+                } else if shared.maybe_finish() {
+                    metrics.sessions_finished.fetch_add(1, Relaxed);
+                    if let Ok(mut map) = conns.lock() {
+                        map.remove(&c.tag);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(SeqCst) && outstanding.load(SeqCst) == 0 {
+                    return; // dropping `host` joins the engine worker
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}

@@ -25,7 +25,12 @@
 //!   frame batching, routing, detector post-processing, metrics,
 //!   backpressure, and the versioned model registry (hot-swappable
 //!   [`hdc::model::ModelBundle`] artifacts, online retraining via
-//!   [`hdc::online`]).
+//!   [`hdc::online`]), and the wire server ([`coordinator::wire`]).
+//! * [`transport`] — the wire layer beneath the coordinator: a versioned
+//!   binary frame codec (same magic + length-prefix discipline as the
+//!   model-bundle format), a [`transport::Transport`] trait with
+//!   in-memory duplex and framed-TCP implementations, the streaming
+//!   client, and the load generator behind `repro loadgen`.
 //! * [`evalpool`] — the sharded evaluation pool: deterministic-order
 //!   parallel map over (variant × density × patient) jobs, used by the
 //!   sweep commands and the coordinator's session setup.
@@ -78,6 +83,7 @@ pub mod evalpool;
 pub mod data;
 pub mod hwmodel;
 pub mod runtime;
+pub mod transport;
 pub mod coordinator;
 pub mod cli;
 pub mod config;

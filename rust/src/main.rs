@@ -44,6 +44,8 @@ fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         Some("table1") => commands::table1(args),
         Some("ablate-thinning") => commands::ablate_thinning(args),
         Some("bench-diff") => commands::bench_diff(args),
+        Some("loadgen") => commands::loadgen(args),
+        Some("loadgen-diff") => commands::loadgen_diff(args),
         Some("help") | None => {
             print_usage();
             Ok(())
@@ -67,6 +69,7 @@ data / model:
   serve     --data DIR [--config FILE] [--patients LIST] [--model FILE]
             [--models-dir DIR] [--retrain-epochs N] [--retrain-fa-rate R]
             [--use-pjrt] [--realtime] [--batch N] [--chunk N]
+            [--listen ADDR]     serve framed TCP instead of in-process replay
 
 paper experiments:
   fig1c     [--windows N]                 naive sparse breakdown (Fig. 1c)
@@ -78,6 +81,11 @@ paper experiments:
 tooling:
   bench-diff <current.json> <baseline.json> [--threshold FRAC]
             compare two benchkit/v1 runs; fail on kernel/* median regressions
+  loadgen   --addr HOST:PORT --data DIR [--patients LIST] [--sessions N]
+            [--concurrency N] [--record K] [--chunk N] [--report FILE]
+            [--allow-drops]   replay concurrent wire sessions, report loadgen/v1
+  loadgen-diff <current.json> <baseline.json> [--threshold FRAC]
+            compare two loadgen/v1 reports (stub baseline = advisory)
 
 variants: dense-baseline | sparse-baseline | sparse-compim | sparse-optimized
 "#

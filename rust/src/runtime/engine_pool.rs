@@ -133,6 +133,10 @@ pub struct Job {
     pub am: Arc<AmPlane>,
     /// One temporal thinning threshold per window — the batch size.
     pub thresholds: Vec<i32>,
+    /// Model version the windows are scored against — opaque to the
+    /// worker, echoed in the [`Completion`] so wire-level consumers can
+    /// label predictions truthfully (0 = unversioned).
+    pub version: u64,
     pub submitted: Instant,
 }
 
@@ -150,6 +154,7 @@ impl Job {
             codes,
             am,
             thresholds: vec![threshold],
+            version: 0,
             submitted: Instant::now(),
         }
     }
@@ -162,6 +167,8 @@ pub struct Completion {
     pub seq: u64,
     /// Windows the job carried (so failures account for every window).
     pub windows: usize,
+    /// The job's model-version label, echoed back.
+    pub version: u64,
     pub outputs: crate::Result<Vec<WindowOutput>>,
     pub submitted: Instant,
     pub finished: Instant,
@@ -231,6 +238,7 @@ impl EngineHost {
                                 tag: job.tag,
                                 seq: job.seq,
                                 windows: job.windows(),
+                                version: job.version,
                                 outputs,
                                 submitted: job.submitted,
                                 finished,
@@ -255,6 +263,41 @@ impl EngineHost {
         })
     }
 
+    /// Blocking submit (backpressure: waits while the queue is full).
+    pub fn submit(&self, job: Job) -> crate::Result<()> {
+        self.tx
+            .send(job)
+            .map_err(|_| err!("engine worker has shut down"))
+    }
+
+    /// Non-blocking submit; `Err(job)` when the queue is full.
+    pub fn try_submit(&self, job: Job) -> Result<(), Job> {
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(j)) | Err(TrySendError::Disconnected(j)) => Err(j),
+        }
+    }
+
+    /// A cloneable submission handle for multi-producer setups (one per
+    /// wire connection actor). Senders share the host's bounded queue —
+    /// backpressure is global — and completions still arrive on the
+    /// host's single `completions` receiver in submission order per
+    /// sender. Dropping every sender does *not* stop the worker; the
+    /// host's own queue handle keeps it alive until the host drops.
+    pub fn sender(&self) -> JobSender {
+        JobSender {
+            tx: self.tx.clone(),
+        }
+    }
+}
+
+/// Cloneable job-submission handle ([`EngineHost::sender`]).
+#[derive(Clone)]
+pub struct JobSender {
+    tx: SyncSender<Job>,
+}
+
+impl JobSender {
     /// Blocking submit (backpressure: waits while the queue is full).
     pub fn submit(&self, job: Job) -> crate::Result<()> {
         self.tx
@@ -423,6 +466,7 @@ mod tests {
                 codes: s.codes.clone(),
                 am: s.am.clone(),
                 thresholds: s.thresholds.clone(),
+                version: 3,
                 submitted: Instant::now(),
             })
             .unwrap();
@@ -436,6 +480,7 @@ mod tests {
         for (s, c) in sent.iter().zip(&completions) {
             assert_eq!((c.tag, c.seq), (s.tag, s.seq), "submission order kept");
             assert_eq!(c.windows, s.thresholds.len());
+            assert_eq!(c.version, 3, "version label echoed through coalescing");
             let outs = c.outputs.as_ref().unwrap();
             assert_eq!(outs.len(), s.thresholds.len());
             for (w, &t) in s.thresholds.iter().enumerate() {
@@ -526,5 +571,42 @@ mod tests {
         // The completion channel recv synchronises with the worker's
         // sends, so the counter read is ordered after every decode.
         assert_eq!(am.decode_count(), 1, "decode must happen exactly once");
+    }
+
+    #[test]
+    fn cloned_senders_feed_one_worker() {
+        // The wire server's multi-producer shape: N actor threads each
+        // own a JobSender clone; every job completes on the host's
+        // single completions receiver.
+        let host = spawn_native(8);
+        let am = zero_am();
+        let mut rng = Xoshiro256::new(0x5E4D);
+        let windows: Vec<Vec<u8>> = (0..6).map(|_| random_window(&mut rng)).collect();
+        let handles: Vec<_> = windows
+            .iter()
+            .enumerate()
+            .map(|(i, codes)| {
+                let sender = host.sender();
+                let am = am.clone();
+                let codes = codes.clone();
+                std::thread::spawn(move || {
+                    let mut job = Job::single(i as u64, 0, codes, am, 130);
+                    job.version = 7;
+                    sender.submit(job).unwrap();
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut tags = Vec::new();
+        for _ in 0..windows.len() {
+            let c = host.completions.recv().unwrap();
+            assert!(c.outputs.is_ok());
+            assert_eq!(c.version, 7);
+            tags.push(c.tag);
+        }
+        tags.sort_unstable();
+        assert_eq!(tags, vec![0, 1, 2, 3, 4, 5]);
     }
 }

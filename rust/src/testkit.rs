@@ -141,6 +141,73 @@ pub fn tiny_trained_patient(
     (patient, bundle)
 }
 
+/// A random wire frame of every kind — the shared generator of the
+/// codec round-trip / corruption property suites. Samples runs are kept
+/// small (≤ 4 multichannel samples) so byte-level corruption sweeps stay
+/// fast; the codec's size limits have their own directed tests.
+pub fn wire_frame(g: &mut Gen) -> crate::transport::frame::Frame {
+    use crate::transport::frame::Frame;
+    match g.usize_below(5) {
+        0 => Frame::Subscribe {
+            patient: g.u64() as u32,
+        },
+        1 => {
+            let n = g.range(0, 4);
+            Frame::Samples {
+                seq: g.u64(),
+                samples: g.vec(n * crate::params::CHANNELS, |g| {
+                    // Random mantissa + sign with a fixed finite
+                    // exponent: the codec moves f32 bits, not values,
+                    // but the round-trip asserts equality, so NaN (the
+                    // one bit pattern where x != x) must not appear.
+                    f32::from_bits(((g.u64() as u32) & !0x7F80_0000) | 0x3F80_0000)
+                }),
+            }
+        }
+        2 => Frame::Prediction {
+            window: g.u64(),
+            is_ictal: g.bool(0.5),
+            margin: g.u64() as i64,
+            model_version: g.u64(),
+        },
+        3 => Frame::Heartbeat { seq: g.u64() },
+        _ => Frame::Shutdown {
+            reason: match g.usize_below(3) {
+                0 => String::new(),
+                1 => "end of stream".to_string(),
+                _ => "reason with unicode — π≈3.14159".to_string(),
+            },
+        },
+    }
+}
+
+/// A [`std::io::Read`] wrapper that returns at most `max_step` bytes per
+/// call (driven by its own tiny RNG) — exercises partial-read
+/// reassembly in stream decoders the way a congested socket would.
+pub struct TrickleReader<R> {
+    inner: R,
+    rng: Xoshiro256,
+    max_step: usize,
+}
+
+impl<R: std::io::Read> TrickleReader<R> {
+    pub fn new(inner: R, seed: u64, max_step: usize) -> Self {
+        TrickleReader {
+            inner,
+            rng: Xoshiro256::new(seed),
+            max_step: max_step.max(1),
+        }
+    }
+}
+
+impl<R: std::io::Read> std::io::Read for TrickleReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let step = 1 + self.rng.next_below(self.max_step as u64) as usize;
+        let n = step.min(buf.len());
+        self.inner.read(&mut buf[..n])
+    }
+}
+
 /// A unique scratch directory under the system temp dir (removed first
 /// if a previous run left one). Unique per (tag, process, thread), so
 /// parallel test binaries and threads never collide. Not auto-deleted —

@@ -1,0 +1,210 @@
+//! Streaming client: replay one record over a wire connection and
+//! collect the server's predictions.
+//!
+//! One call = one session: `Subscribe`, chunked `Samples` frames in
+//! sequence order, a closing `Shutdown`, then the server's final
+//! `Shutdown` after the last prediction. A reader thread drains
+//! predictions concurrently with the sample writes — without it, a
+//! client pushing a long record while its predictions queue up would
+//! look exactly like the slow consumer the server sheds.
+//!
+//! Latency accounting: the writer records an `Instant` each time the
+//! samples it has sent complete one more prediction window; the reader
+//! pairs predictions (which arrive in window order — the wire layer's
+//! ordering guarantee) with those marks, so each prediction's latency is
+//! "window fully on the wire → prediction frame read back".
+
+use std::sync::mpsc::{channel, Receiver};
+use std::time::{Duration, Instant};
+
+use crate::ensure;
+use crate::params::{CHANNELS, FRAMES_PER_PREDICTION};
+use crate::transport::frame::{write_frame, Frame, FrameReader, ReadOutcome, MAX_SAMPLES_PER_FRAME};
+use crate::transport::{Duplex, WireRead, WireWrite};
+
+/// Client-side streaming knobs.
+#[derive(Clone, Debug)]
+pub struct StreamClientConfig {
+    /// Multichannel samples per `Samples` frame (clamped to the frame
+    /// cap). The server windows identically at any chunking — the LBP
+    /// front-end is per-sample — so this only shapes wire traffic.
+    pub chunk_samples: usize,
+    /// Reader poll tick.
+    pub read_timeout: Duration,
+    /// Give up if the server goes silent (no frame of any kind, not even
+    /// a heartbeat) for this long.
+    pub silence_deadline: Duration,
+}
+
+impl Default for StreamClientConfig {
+    fn default() -> Self {
+        StreamClientConfig {
+            chunk_samples: 256,
+            read_timeout: Duration::from_millis(25),
+            silence_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// One `Prediction` frame, as received.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WirePrediction {
+    pub window: u64,
+    pub is_ictal: bool,
+    pub margin: i64,
+    pub model_version: u64,
+}
+
+/// Everything one streamed session produced.
+#[derive(Debug)]
+pub struct StreamOutcome {
+    pub predictions: Vec<WirePrediction>,
+    /// Reason carried by the server's closing `Shutdown`; `None` when
+    /// the connection ended with EOF instead (e.g. the server shed us).
+    pub shutdown_reason: Option<String>,
+    pub heartbeats: u64,
+    /// Window-complete-on-wire → prediction-read latencies, one per
+    /// received prediction, in prediction order.
+    pub latencies: Vec<Duration>,
+    /// A sample write failed mid-stream (server hung up on us); the
+    /// predictions received up to that point are still returned.
+    pub send_error: Option<String>,
+    /// Windows fully written to the wire (the denominator for drops).
+    pub windows_sent: u64,
+}
+
+impl StreamOutcome {
+    /// Windows the server never answered (shed/dropped).
+    pub fn dropped(&self) -> u64 {
+        self.windows_sent.saturating_sub(self.predictions.len() as u64)
+    }
+}
+
+/// Stream `samples` (time-major, whole multichannel frames) as
+/// `patient`'s session over `conn`; returns once the server closes the
+/// stream (or goes silent past the deadline).
+pub fn stream_record(
+    conn: Duplex,
+    patient: u32,
+    samples: &[f32],
+    cfg: &StreamClientConfig,
+) -> crate::Result<StreamOutcome> {
+    ensure!(
+        samples.len() % CHANNELS == 0,
+        "record of {} f32s is not a whole number of {CHANNELS}-channel samples",
+        samples.len()
+    );
+    let (mut reader, mut writer, _peer) = conn.split();
+    reader.get_mut().set_read_timeout(Some(cfg.read_timeout))?;
+    let (mark_tx, mark_rx) = channel::<Instant>();
+    let silence = cfg.silence_deadline;
+    let reader_handle = std::thread::Builder::new()
+        .name("wire-client-read".into())
+        .spawn(move || read_predictions(reader, mark_rx, silence))?;
+
+    let chunk = cfg.chunk_samples.clamp(1, MAX_SAMPLES_PER_FRAME);
+    let mut send_error = None;
+    let mut windows_sent = 0u64;
+    let mut sent_samples = 0usize; // multichannel samples on the wire
+    let result = (|| -> crate::Result<()> {
+        write_frame(&mut writer, &Frame::Subscribe { patient })?;
+        for (seq, run) in samples.chunks(chunk * CHANNELS).enumerate() {
+            write_frame(
+                &mut writer,
+                &Frame::Samples {
+                    seq: seq as u64,
+                    samples: run.to_vec(),
+                },
+            )?;
+            let prev_windows = sent_samples / FRAMES_PER_PREDICTION;
+            sent_samples += run.len() / CHANNELS;
+            let now_windows = sent_samples / FRAMES_PER_PREDICTION;
+            for _ in prev_windows..now_windows {
+                windows_sent += 1;
+                let _ = mark_tx.send(Instant::now());
+            }
+        }
+        write_frame(
+            &mut writer,
+            &Frame::Shutdown {
+                reason: "end of stream".into(),
+            },
+        )?;
+        Ok(())
+    })();
+    if let Err(e) = result {
+        // Server hung up mid-write (shed / stale / protocol error): the
+        // reader still drains whatever was delivered before the close.
+        send_error = Some(format!("{e:#}"));
+    }
+    drop(mark_tx);
+
+    let mut outcome = reader_handle
+        .join()
+        .map_err(|_| crate::err!("wire client reader thread panicked"))??;
+    outcome.send_error = send_error;
+    outcome.windows_sent = windows_sent;
+    Ok(outcome)
+}
+
+fn read_predictions(
+    mut reader: FrameReader<Box<dyn WireRead>>,
+    marks: Receiver<Instant>,
+    silence_deadline: Duration,
+) -> crate::Result<StreamOutcome> {
+    let mut outcome = StreamOutcome {
+        predictions: Vec::new(),
+        shutdown_reason: None,
+        heartbeats: 0,
+        latencies: Vec::new(),
+        send_error: None,
+        windows_sent: 0,
+    };
+    let mut last_frame = Instant::now();
+    loop {
+        match reader.read()? {
+            ReadOutcome::Idle => {
+                ensure!(
+                    last_frame.elapsed() < silence_deadline,
+                    "server went silent for {silence_deadline:?} \
+                     ({} predictions received)",
+                    outcome.predictions.len()
+                );
+            }
+            ReadOutcome::Eof => return Ok(outcome),
+            ReadOutcome::Frame(frame) => {
+                last_frame = Instant::now();
+                match frame {
+                    Frame::Prediction {
+                        window,
+                        is_ictal,
+                        margin,
+                        model_version,
+                    } => {
+                        // Predictions arrive in window order, and a
+                        // window's mark is sent before the server can
+                        // have seen its samples — so the matching mark
+                        // is always already queued.
+                        if let Ok(mark) = marks.try_recv() {
+                            outcome.latencies.push(mark.elapsed());
+                        }
+                        outcome.predictions.push(WirePrediction {
+                            window,
+                            is_ictal,
+                            margin,
+                            model_version,
+                        });
+                    }
+                    Frame::Heartbeat { .. } => outcome.heartbeats += 1,
+                    Frame::Shutdown { reason } => {
+                        outcome.shutdown_reason = Some(reason);
+                        return Ok(outcome);
+                    }
+                    Frame::Subscribe { .. } | Frame::Samples { .. } => {
+                        crate::bail!("server sent a client-side frame: {}", frame.kind_name())
+                    }
+                }
+            }
+        }
+    }
+}

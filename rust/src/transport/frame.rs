@@ -1,0 +1,547 @@
+//! Versioned binary wire-frame codec for the streaming service.
+//!
+//! Same discipline as the `ModelBundle` container
+//! ([`crate::hdc::model`]): magic + format version up front, explicit
+//! little-endian integers, every length validated *before* it sizes an
+//! allocation, and a decoder that is total — corrupt bytes produce an
+//! `Err`, never a panic, never an unbounded `Vec`. One frame on the
+//! wire:
+//!
+//! ```text
+//! "HDCW" (4) | version u8 | kind u8 | payload_len u32 LE | payload
+//! ```
+//!
+//! | kind | frame        | payload                                           |
+//! |------|--------------|---------------------------------------------------|
+//! | 1    | `Subscribe`  | `patient u32`                                     |
+//! | 2    | `Samples`    | `seq u64, n u32, n*CHANNELS f32 bits` (time-major)|
+//! | 3    | `Prediction` | `window u64, model_version u64, margin i64, label u8` |
+//! | 4    | `Heartbeat`  | `seq u64`                                         |
+//! | 5    | `Shutdown`   | `len u32, len bytes UTF-8 reason`                 |
+//!
+//! Streams are reassembled by [`FrameDecoder`], which accepts arbitrary
+//! byte chunks (TCP segments, pipe writes) and yields whole frames —
+//! partial reads never corrupt framing, they just return `Ok(None)`
+//! until the rest arrives.
+
+use std::io::Write;
+
+use crate::params::CHANNELS;
+use crate::{bail, ensure, err};
+
+/// Wire magic, first 4 bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"HDCW";
+/// Wire format version (bump on any layout change).
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed header size: magic + version + kind + payload length.
+pub const HEADER_LEN: usize = 10;
+/// Hard payload cap — enforced from the header alone, so a corrupt or
+/// hostile length can never size an allocation past this.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+/// Largest multichannel sample count one `Samples` frame can carry.
+pub const MAX_SAMPLES_PER_FRAME: usize = (MAX_PAYLOAD - 12) / (CHANNELS * 4);
+
+const KIND_SUBSCRIBE: u8 = 1;
+const KIND_SAMPLES: u8 = 2;
+const KIND_PREDICTION: u8 = 3;
+const KIND_HEARTBEAT: u8 = 4;
+const KIND_SHUTDOWN: u8 = 5;
+
+/// One protocol frame (either direction; the server only accepts
+/// client-side kinds and vice versa — direction is policed by the
+/// connection actor, not the codec).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Client → server: open a session for this patient's published model.
+    Subscribe { patient: u32 },
+    /// Client → server: a contiguous time-major run of multichannel
+    /// samples. `seq` numbers the *frames* (0, 1, 2, …) so the server can
+    /// reject gaps and reordering.
+    Samples { seq: u64, samples: Vec<f32> },
+    /// Server → client: one window's classification.
+    Prediction {
+        window: u64,
+        is_ictal: bool,
+        margin: i64,
+        model_version: u64,
+    },
+    /// Either direction: liveness while no data flows.
+    Heartbeat { seq: u64 },
+    /// Either direction: orderly close with a reason.
+    Shutdown { reason: String },
+}
+
+impl Frame {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Subscribe { .. } => KIND_SUBSCRIBE,
+            Frame::Samples { .. } => KIND_SAMPLES,
+            Frame::Prediction { .. } => KIND_PREDICTION,
+            Frame::Heartbeat { .. } => KIND_HEARTBEAT,
+            Frame::Shutdown { .. } => KIND_SHUTDOWN,
+        }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Frame::Subscribe { .. } => "Subscribe",
+            Frame::Samples { .. } => "Samples",
+            Frame::Prediction { .. } => "Prediction",
+            Frame::Heartbeat { .. } => "Heartbeat",
+            Frame::Shutdown { .. } => "Shutdown",
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            Frame::Subscribe { patient } => patient.to_le_bytes().to_vec(),
+            Frame::Samples { seq, samples } => {
+                let mut p = Vec::with_capacity(12 + samples.len() * 4);
+                p.extend_from_slice(&seq.to_le_bytes());
+                let n = samples.len() / CHANNELS;
+                p.extend_from_slice(&(n as u32).to_le_bytes());
+                for s in samples {
+                    p.extend_from_slice(&s.to_bits().to_le_bytes());
+                }
+                p
+            }
+            Frame::Prediction {
+                window,
+                is_ictal,
+                margin,
+                model_version,
+            } => {
+                let mut p = Vec::with_capacity(25);
+                p.extend_from_slice(&window.to_le_bytes());
+                p.extend_from_slice(&model_version.to_le_bytes());
+                p.extend_from_slice(&margin.to_le_bytes());
+                p.push(*is_ictal as u8);
+                p
+            }
+            Frame::Heartbeat { seq } => seq.to_le_bytes().to_vec(),
+            Frame::Shutdown { reason } => {
+                let mut p = Vec::with_capacity(4 + reason.len());
+                p.extend_from_slice(&(reason.len() as u32).to_le_bytes());
+                p.extend_from_slice(reason.as_bytes());
+                p
+            }
+        }
+    }
+
+    /// Serialize to header + payload. Panics only on frames the sender
+    /// itself built malformed (a `Samples` run that is not a whole number
+    /// of multichannel frames, or an oversize payload) — encoding never
+    /// sees untrusted input.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        if let Frame::Samples { samples, .. } = self {
+            assert!(
+                samples.len() % CHANNELS == 0,
+                "Samples run of {} f32s is not a whole number of {CHANNELS}-channel frames",
+                samples.len()
+            );
+            assert!(
+                samples.len() / CHANNELS <= MAX_SAMPLES_PER_FRAME,
+                "Samples frame of {} exceeds MAX_SAMPLES_PER_FRAME ({MAX_SAMPLES_PER_FRAME})",
+                samples.len() / CHANNELS
+            );
+        }
+        let payload = self.payload();
+        assert!(payload.len() <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
+        let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(WIRE_VERSION);
+        out.push(self.kind());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    /// Decode a payload whose header already passed [`FrameDecoder`]'s
+    /// checks. Total: every malformed payload is an `Err`.
+    pub fn decode_payload(kind: u8, payload: &[u8]) -> crate::Result<Frame> {
+        let mut r = Reader {
+            buf: payload,
+            pos: 0,
+        };
+        let frame = match kind {
+            KIND_SUBSCRIBE => Frame::Subscribe { patient: r.u32()? },
+            KIND_SAMPLES => {
+                let seq = r.u64()?;
+                let n = r.u32()? as usize;
+                ensure!(
+                    n <= MAX_SAMPLES_PER_FRAME,
+                    "Samples frame claims {n} samples (max {MAX_SAMPLES_PER_FRAME})"
+                );
+                let bytes = r.take(n * CHANNELS * 4)?;
+                let samples = bytes
+                    .chunks_exact(4)
+                    .map(|b| f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+                    .collect();
+                Frame::Samples { seq, samples }
+            }
+            KIND_PREDICTION => {
+                let window = r.u64()?;
+                let model_version = r.u64()?;
+                let margin = r.i64()?;
+                let label = r.u8()?;
+                ensure!(label <= 1, "Prediction label byte {label} is not 0/1");
+                Frame::Prediction {
+                    window,
+                    is_ictal: label == 1,
+                    margin,
+                    model_version,
+                }
+            }
+            KIND_HEARTBEAT => Frame::Heartbeat { seq: r.u64()? },
+            KIND_SHUTDOWN => {
+                let len = r.u32()? as usize;
+                let bytes = r.take(len)?;
+                let reason = std::str::from_utf8(bytes)
+                    .map_err(|_| err!("Shutdown reason is not UTF-8"))?
+                    .to_string();
+                Frame::Shutdown { reason }
+            }
+            other => bail!("unknown frame kind {other}"),
+        };
+        r.finish(frame.kind_name())?;
+        Ok(frame)
+    }
+}
+
+/// Write one frame and flush it onto the wire.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> crate::Result<()> {
+    w.write_all(&frame.to_bytes())
+        .map_err(|e| err!("write {} frame: {e}", frame.kind_name()))?;
+    w.flush().map_err(|e| err!("flush {} frame: {e}", frame.kind_name()))
+}
+
+/// Bounds-checked payload cursor (the wire twin of the bundle format's
+/// reader): every read is validated against the remaining bytes, and
+/// [`Self::finish`] rejects trailing garbage.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> crate::Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "payload truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> crate::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> crate::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn i64(&mut self) -> crate::Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    fn finish(&self, kind: &str) -> crate::Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "{kind} payload has {} trailing bytes",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// Incremental stream reassembler: feed arbitrary byte chunks with
+/// [`Self::extend`], pull whole frames with [`Self::next_frame`].
+///
+/// Header validation (magic, version, payload bound) happens as soon as
+/// [`HEADER_LEN`] bytes are buffered — a hostile length is rejected
+/// *before* the decoder waits for (or allocates) that many bytes. After
+/// an `Err` the stream is unrecoverable by design: framing is lost, the
+/// connection must close.
+#[derive(Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    pos: usize,
+}
+
+/// Compact the consumed prefix once it grows past this (amortizes the
+/// memmove instead of paying it per frame).
+const COMPACT_THRESHOLD: usize = 64 * 1024;
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        FrameDecoder::default()
+    }
+
+    /// Buffer more stream bytes.
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as frames.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// True at a frame boundary (no partial frame pending) — an EOF here
+    /// is orderly, an EOF mid-frame is truncation.
+    pub fn is_empty(&self) -> bool {
+        self.buffered() == 0
+    }
+
+    /// Next whole frame, `Ok(None)` when more bytes are needed.
+    pub fn next_frame(&mut self) -> crate::Result<Option<Frame>> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < HEADER_LEN {
+            self.compact();
+            return Ok(None);
+        }
+        ensure!(
+            avail[..4] == MAGIC,
+            "bad frame magic {:02x?} (stream desynchronized or not HDCW)",
+            &avail[..4]
+        );
+        let version = avail[4];
+        ensure!(
+            version == WIRE_VERSION,
+            "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+        );
+        let kind = avail[5];
+        let len = u32::from_le_bytes([avail[6], avail[7], avail[8], avail[9]]) as usize;
+        ensure!(
+            len <= MAX_PAYLOAD,
+            "frame payload length {len} exceeds the {MAX_PAYLOAD}-byte cap"
+        );
+        if avail.len() < HEADER_LEN + len {
+            self.compact();
+            return Ok(None);
+        }
+        let frame = Frame::decode_payload(kind, &avail[HEADER_LEN..HEADER_LEN + len])?;
+        self.pos += HEADER_LEN + len;
+        if self.pos == self.buf.len() {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= COMPACT_THRESHOLD {
+            self.compact();
+        }
+        Ok(Some(frame))
+    }
+
+    fn compact(&mut self) {
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+    }
+}
+
+/// One read attempt's outcome ([`FrameReader::read`]).
+pub enum ReadOutcome {
+    /// A whole frame arrived.
+    Frame(Frame),
+    /// Orderly end of stream (at a frame boundary).
+    Eof,
+    /// The read timed out with no (complete) frame — the caller's chance
+    /// to check deadlines and stop flags.
+    Idle,
+}
+
+/// Blocking frame reader over any byte stream: couples an `io::Read`
+/// with a [`FrameDecoder`], mapping timeouts to [`ReadOutcome::Idle`]
+/// (so a read timeout mid-frame loses nothing — the partial bytes stay
+/// buffered) and EOF-mid-frame to an error.
+pub struct FrameReader<R> {
+    inner: R,
+    decoder: FrameDecoder,
+    chunk: [u8; 4096],
+}
+
+impl<R: std::io::Read> FrameReader<R> {
+    pub fn new(inner: R) -> Self {
+        FrameReader {
+            inner,
+            decoder: FrameDecoder::new(),
+            chunk: [0; 4096],
+        }
+    }
+
+    /// The underlying stream (to set read timeouts).
+    pub fn get_mut(&mut self) -> &mut R {
+        &mut self.inner
+    }
+
+    pub fn read(&mut self) -> crate::Result<ReadOutcome> {
+        loop {
+            if let Some(frame) = self.decoder.next_frame()? {
+                return Ok(ReadOutcome::Frame(frame));
+            }
+            match self.inner.read(&mut self.chunk) {
+                Ok(0) => {
+                    ensure!(
+                        self.decoder.is_empty(),
+                        "stream truncated mid-frame ({} bytes pending)",
+                        self.decoder.buffered()
+                    );
+                    return Ok(ReadOutcome::Eof);
+                }
+                Ok(n) => self.decoder.extend(&self.chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(ReadOutcome::Idle);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => bail!("stream read failed: {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Subscribe { patient: 7 },
+            Frame::Samples {
+                seq: 3,
+                samples: vec![0.25f32; 2 * CHANNELS],
+            },
+            Frame::Prediction {
+                window: 41,
+                is_ictal: true,
+                margin: -17,
+                model_version: 2,
+            },
+            Frame::Heartbeat { seq: 9 },
+            Frame::Shutdown {
+                reason: "end of stream".into(),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_kind_round_trips() {
+        for f in sample_frames() {
+            let bytes = f.to_bytes();
+            let mut d = FrameDecoder::new();
+            d.extend(&bytes);
+            let got = d.next_frame().unwrap().expect("whole frame buffered");
+            assert_eq!(got, f, "{} round trip", f.kind_name());
+            assert!(d.is_empty());
+        }
+    }
+
+    #[test]
+    fn decoder_reassembles_byte_by_byte() {
+        let frames = sample_frames();
+        let stream: Vec<u8> = frames.iter().flat_map(|f| f.to_bytes()).collect();
+        let mut d = FrameDecoder::new();
+        let mut got = Vec::new();
+        for &b in &stream {
+            d.extend(&[b]);
+            while let Some(f) = d.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let mut bytes = Frame::Heartbeat { seq: 1 }.to_bytes();
+        bytes[0] ^= 0xFF;
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        assert!(d.next_frame().is_err());
+
+        let mut bytes = Frame::Heartbeat { seq: 1 }.to_bytes();
+        bytes[4] = WIRE_VERSION + 1;
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        let err = format!("{:#}", d.next_frame().unwrap_err());
+        assert!(err.contains("wire version"), "{err}");
+    }
+
+    #[test]
+    fn oversize_length_rejected_from_header_alone() {
+        // Only the 10 header bytes arrive; the claimed payload never
+        // does. The decoder must reject it immediately instead of
+        // waiting for (or allocating) 4 GiB.
+        let mut bytes = Frame::Heartbeat { seq: 1 }.to_bytes();
+        bytes[6..10].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes[..HEADER_LEN]);
+        let err = format!("{:#}", d.next_frame().unwrap_err());
+        assert!(err.contains("cap"), "{err}");
+    }
+
+    #[test]
+    fn samples_count_must_match_payload() {
+        let f = Frame::Samples {
+            seq: 0,
+            samples: vec![1.0; CHANNELS],
+        };
+        let mut bytes = f.to_bytes();
+        // Claim 2 samples while carrying 1: truncated payload error.
+        bytes[HEADER_LEN + 8..HEADER_LEN + 12].copy_from_slice(&2u32.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn prediction_label_must_be_boolean() {
+        let f = Frame::Prediction {
+            window: 0,
+            is_ictal: false,
+            margin: 0,
+            model_version: 1,
+        };
+        let mut bytes = f.to_bytes();
+        *bytes.last_mut().unwrap() = 2;
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut bytes = Frame::Heartbeat { seq: 1 }.to_bytes();
+        bytes[5] = 99;
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn frame_reader_maps_eof_and_truncation() {
+        let stream = Frame::Heartbeat { seq: 5 }.to_bytes();
+        let mut r = FrameReader::new(std::io::Cursor::new(stream.clone()));
+        assert!(matches!(r.read().unwrap(), ReadOutcome::Frame(Frame::Heartbeat { seq: 5 })));
+        assert!(matches!(r.read().unwrap(), ReadOutcome::Eof));
+
+        // EOF mid-frame is truncation, not an orderly end.
+        let mut r = FrameReader::new(std::io::Cursor::new(stream[..stream.len() - 1].to_vec()));
+        assert!(r.read().is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Load generator: replay many concurrent patient streams against a
+//! wire server and report throughput / latency / drop counts
+//! (`repro loadgen`, and the CI scale smoke).
+//!
+//! A fixed worker pool pulls session indices off a shared counter until
+//! `sessions` streams have run — so "2000 sessions over 32 workers" is
+//! 2000 sequential-per-worker streams with 32 in flight at any moment,
+//! the same discipline the evalpool uses for sweeps. Each stream is a
+//! full client session ([`stream_record`]): subscribe, chunked samples,
+//! drain predictions, orderly shutdown.
+//!
+//! The report is a versioned `loadgen/v1` JSON document (same
+//! schema-tag discipline as `benchkit/v1`), diffable across runs with
+//! `repro loadgen-diff`. A committed baseline with `"sessions": 0` is
+//! the "no baseline yet" stub — the diff reports but does not gate.
+
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::benchkit::JsonScanner;
+use crate::ensure;
+use crate::transport::client::{stream_record, StreamClientConfig};
+use crate::transport::Duplex;
+
+/// Load-run shape.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Total streamed sessions.
+    pub sessions: usize,
+    /// Worker threads (sessions in flight at once).
+    pub concurrency: usize,
+    pub client: StreamClientConfig,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            sessions: 64,
+            concurrency: 16,
+            client: StreamClientConfig::default(),
+        }
+    }
+}
+
+/// Aggregated outcome of one load run (`loadgen/v1`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LoadgenReport {
+    /// Sessions that ran to an orderly end-of-stream shutdown.
+    pub sessions: u64,
+    /// Sessions that errored or were cut off (shed, stale, EOF).
+    pub failures: u64,
+    pub windows_sent: u64,
+    /// Predictions received back.
+    pub windows: u64,
+    /// Windows never answered (`windows_sent - windows`).
+    pub drops: u64,
+    pub heartbeats: u64,
+    pub elapsed_s: f64,
+    /// Predictions received per wall-clock second.
+    pub windows_per_s: f64,
+    /// Window-on-wire → prediction-read latency percentiles; `None`
+    /// until any prediction arrives.
+    pub p50_latency_s: Option<f64>,
+    pub p95_latency_s: Option<f64>,
+}
+
+impl LoadgenReport {
+    pub fn summary(&self) -> String {
+        let lat = |v: Option<f64>| match v {
+            Some(s) => format!("{:.2} ms", s * 1e3),
+            None => "—".to_string(),
+        };
+        format!(
+            "{} sessions ({} failed) | {}/{} windows answered, {} dropped | \
+             {:.0} windows/s | p50 {} p95 {} | {} heartbeats | {:.2} s",
+            self.sessions,
+            self.failures,
+            self.windows,
+            self.windows_sent,
+            self.drops,
+            self.windows_per_s,
+            lat(self.p50_latency_s),
+            lat(self.p95_latency_s),
+            self.heartbeats,
+            self.elapsed_s
+        )
+    }
+
+    /// Serialize as a `loadgen/v1` document.
+    pub fn to_json(&self) -> String {
+        let num = |v: Option<f64>| match v {
+            Some(s) => format!("{s:.9}"),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\n  \"schema\": \"loadgen/v1\",\n  \"sessions\": {},\n  \"failures\": {},\n  \
+             \"windows_sent\": {},\n  \"windows\": {},\n  \"drops\": {},\n  \
+             \"heartbeats\": {},\n  \"elapsed_s\": {:.6},\n  \"windows_per_s\": {:.3},\n  \
+             \"p50_latency_s\": {},\n  \"p95_latency_s\": {}\n}}\n",
+            self.sessions,
+            self.failures,
+            self.windows_sent,
+            self.windows,
+            self.drops,
+            self.heartbeats,
+            self.elapsed_s,
+            self.windows_per_s,
+            num(self.p50_latency_s),
+            num(self.p95_latency_s),
+        )
+    }
+}
+
+/// Parse a `loadgen/v1` document back (for `repro loadgen-diff` and the
+/// CI gate).
+pub fn parse_loadgen_json(text: &str) -> crate::Result<LoadgenReport> {
+    let mut scanner = JsonScanner::new(text);
+    let mut schema = None;
+    let mut report = LoadgenReport::default();
+    scanner.object(|s, key| {
+        match key {
+            "schema" => schema = Some(s.string()?),
+            "sessions" => report.sessions = s.value()?.unwrap_or(0.0) as u64,
+            "failures" => report.failures = s.value()?.unwrap_or(0.0) as u64,
+            "windows_sent" => report.windows_sent = s.value()?.unwrap_or(0.0) as u64,
+            "windows" => report.windows = s.value()?.unwrap_or(0.0) as u64,
+            "drops" => report.drops = s.value()?.unwrap_or(0.0) as u64,
+            "heartbeats" => report.heartbeats = s.value()?.unwrap_or(0.0) as u64,
+            "elapsed_s" => report.elapsed_s = s.value()?.unwrap_or(0.0),
+            "windows_per_s" => report.windows_per_s = s.value()?.unwrap_or(0.0),
+            "p50_latency_s" => report.p50_latency_s = s.value()?,
+            "p95_latency_s" => report.p95_latency_s = s.value()?,
+            _ => {
+                s.value()?; // forward-compatible: skip unknown fields
+            }
+        }
+        Ok(())
+    })?;
+    ensure!(
+        schema.as_deref() == Some("loadgen/v1"),
+        "not a loadgen/v1 document (schema {schema:?})"
+    );
+    Ok(report)
+}
+
+/// A committed baseline that has never been refreshed from a real run
+/// (the `"sessions": 0` stub): diffs against it are advisory.
+pub fn is_stub_report(report: &LoadgenReport) -> bool {
+    report.sessions == 0
+}
+
+fn percentile(sorted: &[f64], q: f64) -> Option<f64> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    Some(sorted[idx.min(sorted.len() - 1)])
+}
+
+/// Run the load: `cfg.sessions` streams of `records` (round-robin by
+/// session index) over connections from `connect`, `cfg.concurrency` in
+/// flight. `connect` is called once per session, from worker threads.
+pub fn run(
+    connect: &(dyn Fn() -> crate::Result<Duplex> + Sync),
+    records: &[(u32, Vec<f32>)],
+    cfg: &LoadgenConfig,
+) -> crate::Result<LoadgenReport> {
+    ensure!(!records.is_empty(), "loadgen needs at least one record");
+    ensure!(cfg.sessions > 0, "loadgen needs at least one session");
+    let next = AtomicUsize::new(0);
+    let agg = Mutex::new((LoadgenReport::default(), Vec::<Duration>::new()));
+    let workers = cfg.concurrency.clamp(1, cfg.sessions);
+    let started = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                let mut ok = 0u64;
+                let mut failed = 0u64;
+                let mut windows_sent = 0u64;
+                let mut windows = 0u64;
+                let mut heartbeats = 0u64;
+                let mut latencies = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Relaxed);
+                    if i >= cfg.sessions {
+                        break;
+                    }
+                    let (patient, samples) = &records[i % records.len()];
+                    let outcome = connect()
+                        .and_then(|conn| stream_record(conn, *patient, samples, &cfg.client));
+                    match outcome {
+                        Ok(o) => {
+                            // Orderly end = the server's final Shutdown
+                            // with no mid-stream write failure.
+                            if o.shutdown_reason.is_some() && o.send_error.is_none() {
+                                ok += 1;
+                            } else {
+                                failed += 1;
+                            }
+                            windows_sent += o.windows_sent;
+                            windows += o.predictions.len() as u64;
+                            heartbeats += o.heartbeats;
+                            latencies.extend(o.latencies);
+                        }
+                        Err(_) => failed += 1,
+                    }
+                }
+                let mut agg = agg.lock().expect("loadgen aggregate lock");
+                agg.0.sessions += ok;
+                agg.0.failures += failed;
+                agg.0.windows_sent += windows_sent;
+                agg.0.windows += windows;
+                agg.0.heartbeats += heartbeats;
+                agg.1.extend(latencies);
+            });
+        }
+    });
+    let elapsed = started.elapsed().as_secs_f64();
+    let (mut report, latencies) = agg.into_inner().map_err(|_| crate::err!("worker panicked"))?;
+    let mut secs: Vec<f64> = latencies.iter().map(|d| d.as_secs_f64()).collect();
+    secs.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    report.drops = report.windows_sent.saturating_sub(report.windows);
+    report.elapsed_s = elapsed;
+    report.windows_per_s = if elapsed > 0.0 {
+        report.windows as f64 / elapsed
+    } else {
+        0.0
+    };
+    report.p50_latency_s = percentile(&secs, 0.50);
+    report.p95_latency_s = percentile(&secs, 0.95);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_round_trips() {
+        let report = LoadgenReport {
+            sessions: 64,
+            failures: 1,
+            windows_sent: 1792,
+            windows: 1764,
+            drops: 28,
+            heartbeats: 3,
+            elapsed_s: 2.5,
+            windows_per_s: 705.6,
+            p50_latency_s: Some(0.0021),
+            p95_latency_s: Some(0.0134),
+        };
+        let parsed = parse_loadgen_json(&report.to_json()).unwrap();
+        assert_eq!(parsed.sessions, 64);
+        assert_eq!(parsed.failures, 1);
+        assert_eq!(parsed.windows_sent, 1792);
+        assert_eq!(parsed.windows, 1764);
+        assert_eq!(parsed.drops, 28);
+        assert_eq!(parsed.heartbeats, 3);
+        assert!((parsed.elapsed_s - 2.5).abs() < 1e-9);
+        assert!((parsed.windows_per_s - 705.6).abs() < 1e-6);
+        assert!((parsed.p50_latency_s.unwrap() - 0.0021).abs() < 1e-12);
+        assert!((parsed.p95_latency_s.unwrap() - 0.0134).abs() < 1e-12);
+    }
+
+    #[test]
+    fn null_latencies_round_trip_and_stub_detected() {
+        let report = LoadgenReport::default();
+        let text = report.to_json();
+        assert!(text.contains("\"p95_latency_s\": null"), "{text}");
+        let parsed = parse_loadgen_json(&text).unwrap();
+        assert_eq!(parsed.p50_latency_s, None);
+        assert_eq!(parsed.p95_latency_s, None);
+        assert!(is_stub_report(&parsed));
+        assert!(!is_stub_report(&LoadgenReport {
+            sessions: 1,
+            ..Default::default()
+        }));
+    }
+
+    #[test]
+    fn wrong_schema_rejected() {
+        let err = parse_loadgen_json("{\"schema\": \"benchkit/v1\", \"records\": []}");
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn unknown_fields_are_skipped() {
+        let text = "{\"schema\": \"loadgen/v1\", \"sessions\": 3, \
+                    \"future_field\": {\"nested\": [1, 2]}, \"windows\": 9}";
+        let parsed = parse_loadgen_json(text).unwrap();
+        assert_eq!(parsed.sessions, 3);
+        assert_eq!(parsed.windows, 9);
+    }
+
+    #[test]
+    fn percentiles_pick_from_sorted_tail() {
+        let sorted: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&sorted, 0.50), Some(51.0));
+        assert_eq!(percentile(&sorted, 0.95), Some(95.0));
+        assert_eq!(percentile(&[], 0.95), None);
+        assert_eq!(percentile(&[7.0], 0.95), Some(7.0));
+    }
+}

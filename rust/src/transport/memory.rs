@@ -1,0 +1,273 @@
+//! In-memory transport: bounded byte pipes over `mpsc`, for
+//! deterministic wire tests with no sockets.
+//!
+//! [`MemoryTransport::new`] returns the acceptor plus a cloneable
+//! [`MemoryConnector`]; each `connect` builds two bounded byte pipes
+//! (one per direction) and hands the server its half through the accept
+//! queue. The pipes deliberately mimic the failure modes the TCP path
+//! has: reads honour a timeout (mapping to `WouldBlock`, which the frame
+//! reader surfaces as an idle tick), and writes to a peer that stopped
+//! draining error out after a bounded wait instead of stalling the
+//! writer forever — that error is exactly how the server detects a dead
+//! consumer.
+
+use std::io::{Read, Write};
+use std::sync::mpsc::{
+    channel, sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
+};
+use std::time::{Duration, Instant};
+
+use super::{Duplex, Transport, WireRead, WireWrite};
+use crate::err;
+
+/// Write chunks a pipe buffers before the writer blocks (then errors
+/// after its write timeout). Small enough that a stalled reader is
+/// detected quickly in tests, large enough that a healthy reader never
+/// notices.
+const DEFAULT_PIPE_DEPTH: usize = 64;
+/// How long a pipe write waits on a full pipe before declaring the peer
+/// dead.
+const DEFAULT_WRITE_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Read half of a byte pipe.
+pub struct PipeReader {
+    rx: Receiver<Vec<u8>>,
+    pending: Vec<u8>,
+    pos: usize,
+    timeout: Option<Duration>,
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        while self.pos >= self.pending.len() {
+            let chunk = match self.timeout {
+                None => match self.rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => return Ok(0), // writer gone: EOF
+                },
+                Some(t) => match self.rx.recv_timeout(t) {
+                    Ok(c) => c,
+                    Err(RecvTimeoutError::Timeout) => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::WouldBlock,
+                            "pipe read timed out",
+                        ));
+                    }
+                    Err(RecvTimeoutError::Disconnected) => return Ok(0),
+                },
+            };
+            self.pending = chunk;
+            self.pos = 0;
+        }
+        let n = buf.len().min(self.pending.len() - self.pos);
+        buf[..n].copy_from_slice(&self.pending[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+impl WireRead for PipeReader {
+    fn set_read_timeout(&mut self, timeout: Option<Duration>) -> crate::Result<()> {
+        self.timeout = timeout;
+        Ok(())
+    }
+}
+
+/// Write half of a byte pipe (bounded: blocks briefly on a full pipe,
+/// then errors — the in-memory analogue of a TCP write timeout).
+pub struct PipeWriter {
+    tx: SyncSender<Vec<u8>>,
+    write_timeout: Duration,
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        let mut chunk = buf.to_vec();
+        let t0 = Instant::now();
+        loop {
+            match self.tx.try_send(chunk) {
+                Ok(()) => return Ok(buf.len()),
+                Err(TrySendError::Full(c)) => {
+                    if t0.elapsed() >= self.write_timeout {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "pipe write timed out (peer not draining)",
+                        ));
+                    }
+                    chunk = c;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::BrokenPipe,
+                        "pipe peer closed",
+                    ));
+                }
+            }
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+impl WireWrite for PipeWriter {}
+
+fn byte_pipe(depth: usize, write_timeout: Duration) -> (PipeWriter, PipeReader) {
+    let (tx, rx) = sync_channel(depth.max(1));
+    (
+        PipeWriter { tx, write_timeout },
+        PipeReader {
+            rx,
+            pending: Vec::new(),
+            pos: 0,
+            timeout: None,
+        },
+    )
+}
+
+/// Build a connected duplex pair `(client, server)` over two byte pipes.
+pub fn duplex_pair(depth: usize, write_timeout: Duration) -> (Duplex, Duplex) {
+    let (c2s_w, c2s_r) = byte_pipe(depth, write_timeout);
+    let (s2c_w, s2c_r) = byte_pipe(depth, write_timeout);
+    let client = Duplex::new(Box::new(s2c_r), Box::new(c2s_w), "memory:server".into());
+    let server = Duplex::new(Box::new(c2s_r), Box::new(s2c_w), "memory:client".into());
+    (client, server)
+}
+
+/// Dialer for a [`MemoryTransport`] (cloneable, `Send` — one per client
+/// thread).
+#[derive(Clone)]
+pub struct MemoryConnector {
+    tx: Sender<Duplex>,
+}
+
+impl MemoryConnector {
+    /// Connect with default pipe bounds.
+    pub fn connect(&self) -> crate::Result<Duplex> {
+        self.connect_with(DEFAULT_PIPE_DEPTH, DEFAULT_WRITE_TIMEOUT)
+    }
+
+    /// Connect with explicit pipe depth / write timeout — tests shrink
+    /// these to force slow-consumer shedding with small streams.
+    pub fn connect_with(&self, depth: usize, write_timeout: Duration) -> crate::Result<Duplex> {
+        let (client, server) = duplex_pair(depth, write_timeout);
+        self.tx
+            .send(server)
+            .map_err(|_| err!("memory transport is no longer accepting"))?;
+        Ok(client)
+    }
+}
+
+/// The accept side of the in-memory transport.
+pub struct MemoryTransport {
+    incoming: Receiver<Duplex>,
+}
+
+impl MemoryTransport {
+    pub fn new() -> (MemoryTransport, MemoryConnector) {
+        let (tx, rx) = channel();
+        (MemoryTransport { incoming: rx }, MemoryConnector { tx })
+    }
+}
+
+impl Transport for MemoryTransport {
+    fn accept(&mut self, timeout: Duration) -> crate::Result<Option<Duplex>> {
+        match self.incoming.recv_timeout(timeout) {
+            Ok(conn) => Ok(Some(conn)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            // Every connector dropped: keep polling as a timeout — the
+            // server decides when to stop via its own flag.
+            Err(RecvTimeoutError::Disconnected) => {
+                std::thread::sleep(timeout);
+                Ok(None)
+            }
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        "memory".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{Frame, ReadOutcome};
+
+    #[test]
+    fn frames_cross_the_pipe_both_ways() {
+        let (mut transport, connector) = MemoryTransport::new();
+        let mut client = connector.connect().unwrap();
+        let mut server = transport
+            .accept(Duration::from_millis(200))
+            .unwrap()
+            .expect("queued connection");
+
+        client.send(&Frame::Subscribe { patient: 3 }).unwrap();
+        match server.recv().unwrap() {
+            ReadOutcome::Frame(Frame::Subscribe { patient }) => assert_eq!(patient, 3),
+            _ => panic!("expected Subscribe"),
+        }
+        server
+            .send(&Frame::Prediction {
+                window: 0,
+                is_ictal: false,
+                margin: -4,
+                model_version: 1,
+            })
+            .unwrap();
+        match client.recv().unwrap() {
+            ReadOutcome::Frame(Frame::Prediction { margin, .. }) => assert_eq!(margin, -4),
+            _ => panic!("expected Prediction"),
+        }
+    }
+
+    #[test]
+    fn read_timeout_is_idle_and_close_is_eof() {
+        let (mut transport, connector) = MemoryTransport::new();
+        let client = connector.connect().unwrap();
+        let mut server = transport
+            .accept(Duration::from_millis(200))
+            .unwrap()
+            .unwrap();
+        server
+            .set_read_timeout(Some(Duration::from_millis(10)))
+            .unwrap();
+        assert!(matches!(server.recv().unwrap(), ReadOutcome::Idle));
+        drop(client);
+        assert!(matches!(server.recv().unwrap(), ReadOutcome::Eof));
+    }
+
+    #[test]
+    fn bounded_write_to_a_stalled_reader_errors() {
+        let (client, _server) = duplex_pair(1, Duration::from_millis(20));
+        let mut client = client;
+        // Nobody reads `_server`'s inbound pipe; the depth-1 pipe fills
+        // after one write and the next must time out, not hang.
+        let big = Frame::Samples {
+            seq: 0,
+            samples: vec![0.0; crate::params::CHANNELS],
+        };
+        let mut failed = false;
+        for _ in 0..64 {
+            if client.send(&big).is_err() {
+                failed = true;
+                break;
+            }
+        }
+        assert!(failed, "writes to a stalled peer must error, not stall");
+    }
+
+    #[test]
+    fn accept_times_out_without_connections() {
+        let (mut transport, _connector) = MemoryTransport::new();
+        let t0 = Instant::now();
+        assert!(transport.accept(Duration::from_millis(30)).unwrap().is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

@@ -1,0 +1,96 @@
+//! Wire-level transport: how byte streams reach the coordinator.
+//!
+//! The serving stack is layered so the protocol logic never touches a
+//! socket directly:
+//!
+//! * [`frame`] — the versioned binary codec (magic + length-prefixed
+//!   payloads, total decode) and the [`frame::FrameDecoder`] stream
+//!   reassembler;
+//! * [`Transport`] — an acceptor of [`Duplex`] connections, implemented
+//!   by [`memory::MemoryTransport`] (in-process pipes, deterministic
+//!   tests) and [`tcp::TcpTransport`] (std `TcpListener`/`TcpStream`,
+//!   dependency-free);
+//! * [`client`] — the subscribe-stream-collect client used by tests and
+//!   the load generator;
+//! * [`loadgen`] — the replay load generator behind `repro loadgen` and
+//!   its `loadgen/v1` JSON report.
+//!
+//! The connection actors live on the server side, in
+//! [`crate::coordinator::wire`].
+
+pub mod client;
+pub mod frame;
+pub mod loadgen;
+pub mod memory;
+pub mod tcp;
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use frame::{write_frame, Frame, FrameReader, ReadOutcome};
+
+/// Readable half of a connection. A read timeout turns blocking reads
+/// into [`ReadOutcome::Idle`] ticks — the actor's chance to check
+/// staleness deadlines and stop flags without losing buffered bytes.
+pub trait WireRead: Read + Send {
+    fn set_read_timeout(&mut self, timeout: Option<Duration>) -> crate::Result<()>;
+}
+
+/// Writable half of a connection. Implementations must *bound* a write
+/// to a stalled peer (write timeout / bounded pipe) — an error here is
+/// how a dead consumer is detected, never an indefinite stall.
+pub trait WireWrite: Write + Send {}
+
+/// One accepted or dialed connection: framed reader + raw writer.
+pub struct Duplex {
+    pub reader: FrameReader<Box<dyn WireRead>>,
+    pub writer: Box<dyn WireWrite>,
+    /// Human-readable peer label (address or pipe name) for logs.
+    pub peer: String,
+}
+
+impl Duplex {
+    pub fn new(read: Box<dyn WireRead>, write: Box<dyn WireWrite>, peer: String) -> Self {
+        Duplex {
+            reader: FrameReader::new(read),
+            writer: write,
+            peer,
+        }
+    }
+
+    /// Write one frame onto the wire (flushes).
+    pub fn send(&mut self, frame: &Frame) -> crate::Result<()> {
+        write_frame(&mut self.writer, frame)
+    }
+
+    /// Read the next frame / EOF / idle tick.
+    pub fn recv(&mut self) -> crate::Result<ReadOutcome> {
+        self.reader.read()
+    }
+
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> crate::Result<()> {
+        self.reader.get_mut().set_read_timeout(timeout)
+    }
+
+    /// Split into independently-owned halves (reader actor + writer
+    /// thread).
+    pub fn split(self) -> (FrameReader<Box<dyn WireRead>>, Box<dyn WireWrite>, String) {
+        (self.reader, self.writer, self.peer)
+    }
+}
+
+/// A connection acceptor the wire server polls.
+pub trait Transport: Send {
+    /// Wait up to `timeout` for the next connection; `Ok(None)` on
+    /// timeout (the server's chance to check its stop flag).
+    fn accept(&mut self, timeout: Duration) -> crate::Result<Option<Duplex>>;
+
+    /// The bound address clients dial (resolved, e.g. `127.0.0.1:43215`
+    /// after binding port 0) or a pipe label.
+    fn local_addr(&self) -> String;
+
+    /// Bound the time a write to an accepted connection may stall on a
+    /// non-draining peer. Default: transports without the notion ignore
+    /// it (the in-memory pipe bounds writes at construction instead).
+    fn set_write_timeout(&mut self, _timeout: Option<Duration>) {}
+}

@@ -1,0 +1,170 @@
+//! Length-prefixed framed TCP, dependency-free: std `TcpListener` /
+//! `TcpStream` behind the [`Transport`] trait.
+//!
+//! The listener runs non-blocking and is polled by [`TcpTransport::accept`]
+//! so the server's accept loop can observe its stop flag; accepted
+//! streams are switched back to blocking with explicit read/write
+//! timeouts (reads tick as [`crate::transport::frame::ReadOutcome::Idle`],
+//! bounded writes are how a non-draining peer is detected — the same
+//! failure surface the in-memory pipes model).
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use super::{Duplex, Transport, WireRead, WireWrite};
+use crate::err;
+use crate::error::Context;
+
+/// Poll interval while waiting for a connection on the non-blocking
+/// listener.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Readable half of a TCP connection (a `try_clone` of the stream).
+struct TcpRead(TcpStream);
+
+impl Read for TcpRead {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.0.read(buf)
+    }
+}
+
+impl WireRead for TcpRead {
+    fn set_read_timeout(&mut self, timeout: Option<Duration>) -> crate::Result<()> {
+        self.0
+            .set_read_timeout(timeout)
+            .map_err(|e| err!("set TCP read timeout: {e}"))
+    }
+}
+
+impl WireWrite for TcpStream {}
+
+/// Split a connected stream into a [`Duplex`] (reader clone + writer).
+fn duplex_from_stream(stream: TcpStream, peer: String) -> crate::Result<Duplex> {
+    stream.set_nodelay(true).ok(); // tiny frames; latency over batching
+    let read_half = stream
+        .try_clone()
+        .map_err(|e| err!("clone TCP stream for {peer}: {e}"))?;
+    Ok(Duplex::new(Box::new(TcpRead(read_half)), Box::new(stream), peer))
+}
+
+/// TCP acceptor bound to a local address.
+pub struct TcpTransport {
+    listener: TcpListener,
+    addr: SocketAddr,
+    write_timeout: Option<Duration>,
+}
+
+impl TcpTransport {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port — the
+    /// resolved port is in [`Transport::local_addr`]).
+    pub fn bind(addr: &str) -> crate::Result<TcpTransport> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| err!("set listener non-blocking: {e}"))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| err!("resolve bound address: {e}"))?;
+        Ok(TcpTransport {
+            listener,
+            addr,
+            write_timeout: None,
+        })
+    }
+
+    /// Dial a server.
+    pub fn connect(addr: &str) -> crate::Result<Duplex> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        duplex_from_stream(stream, addr.to_string())
+    }
+}
+
+impl Transport for TcpTransport {
+    fn accept(&mut self, timeout: Duration) -> crate::Result<Option<Duplex>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    // Accepted sockets must block (with timeouts), even
+                    // if the platform propagates the listener's
+                    // non-blocking flag.
+                    stream
+                        .set_nonblocking(false)
+                        .map_err(|e| err!("set accepted stream blocking: {e}"))?;
+                    if self.write_timeout.is_some() {
+                        stream
+                            .set_write_timeout(self.write_timeout)
+                            .map_err(|e| err!("set write timeout: {e}"))?;
+                    }
+                    return duplex_from_stream(stream, peer.to_string()).map(Some);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(err!("accept failed: {e}")),
+            }
+        }
+    }
+
+    fn local_addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    fn set_write_timeout(&mut self, timeout: Option<Duration>) {
+        self.write_timeout = timeout;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{Frame, ReadOutcome};
+
+    #[test]
+    fn ephemeral_bind_resolves_a_real_port() {
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        assert!(addr.starts_with("127.0.0.1:"));
+        assert_ne!(addr, "127.0.0.1:0", "port 0 must resolve");
+    }
+
+    #[test]
+    fn localhost_round_trip() {
+        let mut t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr();
+        let dialer = std::thread::spawn(move || {
+            let mut c = TcpTransport::connect(&addr).unwrap();
+            c.send(&Frame::Subscribe { patient: 11 }).unwrap();
+            match c.recv().unwrap() {
+                ReadOutcome::Frame(Frame::Heartbeat { seq }) => seq,
+                other => panic!(
+                    "expected Heartbeat, got {:?}",
+                    matches!(other, ReadOutcome::Eof)
+                ),
+            }
+        });
+        let mut server = t
+            .accept(Duration::from_secs(5))
+            .unwrap()
+            .expect("dialer connects");
+        match server.recv().unwrap() {
+            ReadOutcome::Frame(Frame::Subscribe { patient }) => assert_eq!(patient, 11),
+            _ => panic!("expected Subscribe"),
+        }
+        server.send(&Frame::Heartbeat { seq: 42 }).unwrap();
+        assert_eq!(dialer.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn accept_timeout_returns_none() {
+        let mut t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let t0 = Instant::now();
+        assert!(t.accept(Duration::from_millis(30)).unwrap().is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+}

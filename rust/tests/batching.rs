@@ -160,6 +160,7 @@ fn prop_host_with_coalescing_matches_serial_in_order() {
                 codes: s.codes.clone(),
                 am: s.am.clone(),
                 thresholds: s.thresholds.clone(),
+                version: 0,
                 submitted: std::time::Instant::now(),
             })
             .unwrap();

@@ -1,0 +1,457 @@
+//! End-to-end wire-serving suite: the framed streaming service must be
+//! a *transparent* transport over the in-process coordinator.
+//!
+//! The pinning contract (the tentpole's acceptance bar): for the same
+//! patient, record and published model, a wire client — over the
+//! in-memory duplex or real TCP, at any sample chunking — receives
+//! exactly the predictions the in-process [`Coordinator`] computes,
+//! window for window, label for label, margin for margin.
+//!
+//! The robustness contract: a consumer that stops draining is shed
+//! (disconnected, its predictions dropped) without perturbing any other
+//! session's output; a silent connection is heartbeated and then
+//! disconnected as stale; malformed or out-of-order frames close the
+//! connection with a reasoned `Shutdown`.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparse_hdc_ieeg::config::SystemConfig;
+use sparse_hdc_ieeg::coordinator::registry::ModelRegistry;
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec};
+use sparse_hdc_ieeg::coordinator::wire::{WireConfig, WireServer};
+use sparse_hdc_ieeg::data::metrics::WindowPrediction;
+use sparse_hdc_ieeg::data::synth::SynthPatient;
+use sparse_hdc_ieeg::hdc::model::ModelBundle;
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION};
+use sparse_hdc_ieeg::testkit::tiny_trained_patient;
+use sparse_hdc_ieeg::transport::client::{stream_record, StreamClientConfig, WirePrediction};
+use sparse_hdc_ieeg::transport::frame::{write_frame, Frame, ReadOutcome};
+use sparse_hdc_ieeg::transport::memory::MemoryTransport;
+use sparse_hdc_ieeg::transport::tcp::TcpTransport;
+use sparse_hdc_ieeg::transport::Duplex;
+
+/// The in-process ground truth: replay the patient's streaming record
+/// through the coordinator and return its per-window predictions.
+fn in_process_predictions(
+    pid: u32,
+    patient: &SynthPatient,
+    bundle: &ModelBundle,
+) -> Vec<WindowPrediction> {
+    let report = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![StreamSpec {
+            session_id: 1,
+            patient_id: pid,
+            record: patient.records[1].clone(),
+            bundle: bundle.clone(),
+        }])
+        .expect("in-process baseline run");
+    report.sessions[0].predictions.clone()
+}
+
+/// Window-for-window equality of wire predictions against the
+/// in-process baseline (order, label, margin, model version).
+fn assert_pinned(
+    tag: &str,
+    wire: &[WirePrediction],
+    baseline: &[WindowPrediction],
+    version: u64,
+) {
+    assert_eq!(wire.len(), baseline.len(), "{tag}: prediction count");
+    for (w, b) in wire.iter().zip(baseline) {
+        assert_eq!(w.window as usize, b.idx, "{tag}: window order");
+        assert_eq!(w.is_ictal, b.is_ictal, "{tag}: label for window {}", b.idx);
+        assert_eq!(w.margin, b.margin, "{tag}: margin for window {}", b.idx);
+        assert_eq!(w.model_version, version, "{tag}: model version for window {}", b.idx);
+    }
+}
+
+#[test]
+fn memory_wire_predictions_pin_to_in_process() {
+    let registry = Arc::new(ModelRegistry::new());
+    let mut fixtures = Vec::new();
+    for pid in [11u32, 12, 13] {
+        let (patient, bundle) = tiny_trained_patient(pid);
+        registry.ensure(pid, bundle.clone());
+        fixtures.push((pid, patient, bundle));
+    }
+    let (transport, connector) = MemoryTransport::new();
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        WireConfig::default(),
+    )
+    .unwrap();
+
+    // Three concurrent sessions, each chunking its samples differently —
+    // the LBP front-end is per-sample, so chunking must not matter.
+    let mut clients = Vec::new();
+    for ((pid, patient, _), chunk) in fixtures.iter().zip([100usize, 256, 1000]) {
+        let conn = connector.connect().unwrap();
+        let samples = patient.records[1].samples.clone();
+        let pid = *pid;
+        clients.push(std::thread::spawn(move || {
+            let cfg = StreamClientConfig {
+                chunk_samples: chunk,
+                ..Default::default()
+            };
+            stream_record(conn, pid, &samples, &cfg).unwrap()
+        }));
+    }
+    let outcomes: Vec<_> = clients.into_iter().map(|h| h.join().unwrap()).collect();
+    let metrics = server.shutdown().unwrap();
+
+    for ((pid, patient, bundle), outcome) in fixtures.iter().zip(&outcomes) {
+        assert_eq!(
+            outcome.shutdown_reason.as_deref(),
+            Some("end of stream"),
+            "patient {pid}"
+        );
+        assert!(
+            outcome.send_error.is_none(),
+            "patient {pid}: {:?}",
+            outcome.send_error
+        );
+        assert_eq!(outcome.dropped(), 0, "patient {pid}");
+        let windows = patient.records[1].samples.len() / (CHANNELS * FRAMES_PER_PREDICTION);
+        assert_eq!(outcome.predictions.len(), windows, "patient {pid}");
+        let baseline = in_process_predictions(*pid, patient, bundle);
+        assert_pinned(
+            &format!("patient {pid}"),
+            &outcome.predictions,
+            &baseline,
+            bundle.version,
+        );
+    }
+    assert_eq!(metrics.sessions_started.load(Relaxed), 3, "{}", metrics.summary());
+    assert_eq!(metrics.sessions_finished.load(Relaxed), 3, "{}", metrics.summary());
+    assert_eq!(metrics.predictions_dropped.load(Relaxed), 0, "{}", metrics.summary());
+    assert_eq!(metrics.slow_consumers_shed.load(Relaxed), 0, "{}", metrics.summary());
+    assert_eq!(metrics.stale_disconnects.load(Relaxed), 0, "{}", metrics.summary());
+    assert_eq!(metrics.protocol_errors.load(Relaxed), 0, "{}", metrics.summary());
+}
+
+#[test]
+fn tcp_wire_predictions_pin_to_in_process() {
+    let (patient, bundle) = tiny_trained_patient(21);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.ensure(21, bundle.clone());
+    let transport = TcpTransport::bind("127.0.0.1:0").unwrap();
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        WireConfig::default(),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let conn = TcpTransport::connect(&addr).unwrap();
+    let outcome = stream_record(
+        conn,
+        21,
+        &patient.records[1].samples,
+        &StreamClientConfig::default(),
+    )
+    .unwrap();
+    let metrics = server.shutdown().unwrap();
+
+    assert_eq!(outcome.shutdown_reason.as_deref(), Some("end of stream"));
+    assert!(outcome.send_error.is_none(), "{:?}", outcome.send_error);
+    assert_eq!(outcome.dropped(), 0);
+    let baseline = in_process_predictions(21, &patient, &bundle);
+    assert_pinned("tcp", &outcome.predictions, &baseline, bundle.version);
+    assert_eq!(metrics.sessions_finished.load(Relaxed), 1, "{}", metrics.summary());
+}
+
+#[test]
+fn overflowing_consumer_is_shed() {
+    let (patient, bundle) = tiny_trained_patient(31);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.ensure(31, bundle);
+    let (transport, connector) = MemoryTransport::new();
+    let mut cfg = WireConfig::default();
+    cfg.conn_queue = 2;
+    cfg.staleness = Duration::from_secs(60); // isolate shedding from staleness
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        cfg,
+    )
+    .unwrap();
+
+    // Depth-1 pipe with a long write timeout and a client that never
+    // reads: the server's writer jams holding two frames (one in the
+    // pipe, one in hand), the 2-slot connection queue fills, and the
+    // record's remaining windows (28 ≫ 4) force a `try_send` Full — the
+    // deterministic shed signal.
+    let conn = connector.connect_with(1, Duration::from_secs(30)).unwrap();
+    let (reader, mut writer, _peer) = conn.split();
+    let samples = patient.records[1].samples.clone();
+    let feeder = std::thread::spawn(move || {
+        let _ = write_frame(&mut writer, &Frame::Subscribe { patient: 31 });
+        for (seq, run) in samples.chunks(256 * CHANNELS).enumerate() {
+            let frame = Frame::Samples {
+                seq: seq as u64,
+                samples: run.to_vec(),
+            };
+            if write_frame(&mut writer, &frame).is_err() {
+                break; // server tore the stream down — expected after the shed
+            }
+        }
+        writer // hold the write half open so EOF cannot race the shed
+    });
+
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while server.metrics().slow_consumers_shed.load(Relaxed) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "no shed within 10 s: {}",
+            server.metrics().summary()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(reader); // unblock the server's jammed writer (broken pipe)
+    let _ = feeder.join();
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.slow_consumers_shed.load(Relaxed), 1, "{}", metrics.summary());
+    assert!(
+        metrics.predictions_dropped.load(Relaxed) >= 1,
+        "{}",
+        metrics.summary()
+    );
+    assert_eq!(metrics.sessions_finished.load(Relaxed), 0, "{}", metrics.summary());
+}
+
+#[test]
+fn stalled_consumer_is_isolated_from_healthy_sessions() {
+    let registry = Arc::new(ModelRegistry::new());
+    let (healthy_patient, healthy_bundle) = tiny_trained_patient(41);
+    let (stalled_patient, stalled_bundle) = tiny_trained_patient(42);
+    registry.ensure(41, healthy_bundle.clone());
+    registry.ensure(42, stalled_bundle);
+    let (transport, connector) = MemoryTransport::new();
+    let mut cfg = WireConfig::default();
+    cfg.staleness = Duration::from_secs(60); // the stall, not the clock, tears down
+    // conn_queue (default 256) exceeds the record's 28 windows, so the
+    // healthy session can never see a Full queue even if scheduling
+    // starves its writer — only the stalled consumer is torn down.
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        cfg,
+    )
+    .unwrap();
+
+    // Stalled: depth-1 pipe, 50 ms write timeout, never reads, never
+    // sends its closing Shutdown. The server writer jams on the second
+    // prediction, times out, and the connection is torn down mid-stream.
+    let stalled = connector
+        .connect_with(1, Duration::from_millis(50))
+        .unwrap();
+    let (mut stalled_reader, mut stalled_writer, _peer) = stalled.split();
+    let stalled_samples = stalled_patient.records[1].samples.clone();
+    let stalled_feed = std::thread::spawn(move || {
+        let _ = write_frame(&mut stalled_writer, &Frame::Subscribe { patient: 42 });
+        for (seq, run) in stalled_samples.chunks(256 * CHANNELS).enumerate() {
+            let frame = Frame::Samples {
+                seq: seq as u64,
+                samples: run.to_vec(),
+            };
+            if write_frame(&mut stalled_writer, &frame).is_err() {
+                break; // torn down — expected
+            }
+        }
+        stalled_writer
+    });
+
+    // Healthy: a complete client session, concurrent with the stall.
+    let healthy_conn = connector.connect().unwrap();
+    let healthy_samples = healthy_patient.records[1].samples.clone();
+    let healthy = std::thread::spawn(move || {
+        stream_record(healthy_conn, 41, &healthy_samples, &StreamClientConfig::default()).unwrap()
+    });
+
+    let outcome = healthy.join().unwrap();
+    let _ = stalled_feed.join();
+
+    // The healthy session is untouched: complete, orderly, pinned.
+    assert_eq!(outcome.shutdown_reason.as_deref(), Some("end of stream"));
+    assert!(outcome.send_error.is_none(), "{:?}", outcome.send_error);
+    assert_eq!(outcome.dropped(), 0);
+    let baseline = in_process_predictions(41, &healthy_patient, &healthy_bundle);
+    assert_pinned("healthy", &outcome.predictions, &baseline, healthy_bundle.version);
+
+    // The stalled session was disconnected mid-stream: it can only ever
+    // have received the frames that fit its jammed pipe, then EOF.
+    stalled_reader
+        .get_mut()
+        .set_read_timeout(Some(Duration::from_millis(25)))
+        .unwrap();
+    let windows =
+        stalled_patient.records[1].samples.len() / (CHANNELS * FRAMES_PER_PREDICTION);
+    let mut stalled_predictions = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        assert!(Instant::now() < deadline, "stalled connection never closed");
+        match stalled_reader.read() {
+            Ok(ReadOutcome::Frame(Frame::Prediction { .. })) => stalled_predictions += 1,
+            Ok(ReadOutcome::Frame(_)) | Ok(ReadOutcome::Idle) => {}
+            Ok(ReadOutcome::Eof) | Err(_) => break,
+        }
+    }
+    assert!(
+        stalled_predictions < windows,
+        "stalled consumer received all {windows} predictions despite never draining"
+    );
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.sessions_started.load(Relaxed), 2, "{}", metrics.summary());
+    assert_eq!(metrics.sessions_finished.load(Relaxed), 1, "{}", metrics.summary());
+}
+
+#[test]
+fn silent_session_gets_heartbeats_then_a_stale_disconnect() {
+    let (_patient, bundle) = tiny_trained_patient(51);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.ensure(51, bundle);
+    let (transport, connector) = MemoryTransport::new();
+    let mut cfg = WireConfig::default();
+    cfg.heartbeat = Duration::from_millis(50);
+    cfg.staleness = Duration::from_millis(400);
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        cfg,
+    )
+    .unwrap();
+
+    let conn = connector.connect().unwrap();
+    let (mut reader, mut writer, _peer) = conn.split();
+    reader
+        .get_mut()
+        .set_read_timeout(Some(Duration::from_millis(25)))
+        .unwrap();
+    write_frame(&mut writer, &Frame::Subscribe { patient: 51 }).unwrap();
+    // ... then silence: no samples, no heartbeats, nothing.
+    let mut heartbeats = 0u64;
+    let mut reason = None;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline && reason.is_none() {
+        match reader.read().unwrap() {
+            ReadOutcome::Frame(Frame::Heartbeat { .. }) => heartbeats += 1,
+            ReadOutcome::Frame(Frame::Shutdown { reason: r }) => reason = Some(r),
+            ReadOutcome::Frame(f) => panic!("unexpected frame: {}", f.kind_name()),
+            ReadOutcome::Idle => {}
+            ReadOutcome::Eof => break,
+        }
+    }
+    let metrics = server.shutdown().unwrap();
+    let reason = reason.expect("server must close a silent session with a reasoned Shutdown");
+    assert!(reason.contains("stale"), "unexpected reason: {reason}");
+    assert!(heartbeats >= 1, "the writer must heartbeat through idle gaps");
+    assert_eq!(metrics.stale_disconnects.load(Relaxed), 1, "{}", metrics.summary());
+}
+
+/// Send `frames`, then read until the server's reasoned `Shutdown`.
+fn expect_shutdown(conn: Duplex, frames: Vec<Frame>) -> String {
+    let (mut reader, mut writer, _peer) = conn.split();
+    reader
+        .get_mut()
+        .set_read_timeout(Some(Duration::from_millis(25)))
+        .unwrap();
+    for f in &frames {
+        write_frame(&mut writer, f).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while Instant::now() < deadline {
+        match reader.read().expect("readable until the server's Shutdown") {
+            ReadOutcome::Frame(Frame::Shutdown { reason }) => return reason,
+            ReadOutcome::Frame(_) | ReadOutcome::Idle => {}
+            ReadOutcome::Eof => panic!("EOF before the Shutdown frame"),
+        }
+    }
+    panic!("no Shutdown within 10 s");
+}
+
+#[test]
+fn protocol_errors_close_the_connection_with_a_reason() {
+    let (_patient, bundle) = tiny_trained_patient(61);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.ensure(61, bundle);
+    let (transport, connector) = MemoryTransport::new();
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        WireConfig::default(),
+    )
+    .unwrap();
+
+    let one_sample = vec![0.0f32; CHANNELS];
+
+    let r = expect_shutdown(
+        connector.connect().unwrap(),
+        vec![Frame::Samples {
+            seq: 0,
+            samples: one_sample.clone(),
+        }],
+    );
+    assert!(r.contains("Samples before Subscribe"), "{r}");
+
+    let r = expect_shutdown(
+        connector.connect().unwrap(),
+        vec![Frame::Subscribe { patient: 999 }],
+    );
+    assert!(r.contains("no model published for patient 999"), "{r}");
+
+    let r = expect_shutdown(
+        connector.connect().unwrap(),
+        vec![
+            Frame::Subscribe { patient: 61 },
+            Frame::Samples {
+                seq: 5,
+                samples: one_sample.clone(),
+            },
+        ],
+    );
+    assert!(r.contains("seq 5, expected 0"), "{r}");
+
+    let r = expect_shutdown(
+        connector.connect().unwrap(),
+        vec![
+            Frame::Subscribe { patient: 61 },
+            Frame::Subscribe { patient: 61 },
+        ],
+    );
+    assert!(r.contains("duplicate Subscribe"), "{r}");
+
+    let r = expect_shutdown(
+        connector.connect().unwrap(),
+        vec![
+            Frame::Subscribe { patient: 61 },
+            Frame::Prediction {
+                window: 0,
+                is_ictal: false,
+                margin: 0,
+                model_version: 1,
+            },
+        ],
+    );
+    assert!(r.contains("Prediction"), "{r}");
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.protocol_errors.load(Relaxed), 5, "{}", metrics.summary());
+    assert_eq!(metrics.sessions_finished.load(Relaxed), 0, "{}", metrics.summary());
+}
