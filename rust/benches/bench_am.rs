@@ -16,6 +16,7 @@ use sparse_hdc_ieeg::benchkit::{black_box, Bench};
 use sparse_hdc_ieeg::hdc::am::{AmPlane, AssociativeMemory, Metric};
 use sparse_hdc_ieeg::hdc::classifier::ClassifierConfig;
 use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::simd::KernelSet;
 use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, LBP_CODES};
 use sparse_hdc_ieeg::rng::Xoshiro256;
 use sparse_hdc_ieeg::runtime::native::NativeWindowEngine;
@@ -47,6 +48,24 @@ fn main() {
     b.bench_throughput("am/search-dense-batch/batch-256", 256.0, || {
         am.search_batch(black_box(&queries), Metric::Hamming)
     });
+
+    // --- dispatch pairs: fused two-class scoring, scalar vs SIMD --------
+    // `/simd` records are emitted only when runtime dispatch resolved to
+    // a non-scalar set (see bench_encoder.rs for the rationale).
+    let mut sets = vec![("scalar", KernelSet::scalar())];
+    let auto = KernelSet::auto();
+    if auto.name != "scalar" {
+        sets.push(("simd", auto));
+    }
+    let sparse_queries: Vec<Hv> = (0..256).map(|_| Hv::random(&mut rng, 0.25)).collect();
+    for &(tag, ks) in &sets {
+        b.bench_throughput(&format!("kernel/search-batch-256/{tag}"), 256.0, || {
+            am.search_batch_with(black_box(&sparse_queries), Metric::Overlap, ks)
+        });
+        b.bench_throughput(&format!("kernel/search-batch-dense-256/{tag}"), 256.0, || {
+            am.search_batch_with(black_box(&queries), Metric::Hamming, ks)
+        });
+    }
 
     // --- native engine: per-window run vs run_batch ---------------------
     // (encode dominates; the batch win here is the shared AM decode +

@@ -23,6 +23,7 @@ use sparse_hdc_ieeg::hdc::bundling::{
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Encoder, SparseEncoder, Variant};
 use sparse_hdc_ieeg::hdc::hv::Hv;
 use sparse_hdc_ieeg::hdc::imcache;
+use sparse_hdc_ieeg::hdc::simd::KernelSet;
 use sparse_hdc_ieeg::hdc::sparse::SparseHv;
 use sparse_hdc_ieeg::hdc::temporal::{TemporalAccumulator, TemporalAccumulatorReference};
 use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION, IM_SEED, LBP_CODES};
@@ -83,6 +84,38 @@ fn main() {
     }
     b.bench("kernel/temporal-thin/word-parallel", || full.peek(black_box(130)));
     b.bench("kernel/temporal-thin/reference", || full_ref.peek(black_box(130)));
+
+    // --- dispatch pairs: scalar vs the runtime-selected SIMD set --------
+    // The `/simd` records exist only when runtime dispatch resolved to a
+    // non-scalar set, so `repro bench-speedup` never sees a bogus
+    // scalar-vs-scalar 1.0x pair on machines without AVX2/NEON, and
+    // `repro bench-diff` never loses a baseline name across machines.
+    let mut sets = vec![("scalar", KernelSet::scalar())];
+    let auto = KernelSet::auto();
+    if auto.name != "scalar" {
+        sets.push(("simd", auto));
+    }
+    let dense_inputs: Vec<Hv> = (0..64).map(|_| Hv::random(&mut rng, 0.1)).collect();
+    for &(tag, ks) in &sets {
+        b.bench(&format!("kernel/spatial-bundle/{tag}"), || {
+            let mut acc = bundling::SpatialCounts::new();
+            for hv in &dense_inputs {
+                acc.add_hv_with(black_box(hv), ks);
+            }
+            acc.thin_with(2, ks)
+        });
+        b.bench(&format!("kernel/temporal-add16/{tag}"), || {
+            let mut acc = TemporalAccumulator::new();
+            for _ in 0..16 {
+                acc.add_with(black_box(&spatial), ks);
+            }
+            acc.frames()
+        });
+        b.bench(&format!("kernel/temporal-thin/{tag}"), || {
+            full.peek_with(black_box(130), ks)
+        });
+        b.bench(&format!("kernel/transpose-counts/{tag}"), || full.counts_with(ks));
+    }
 
     // --- item-memory cache vs regeneration -----------------------------
     // Touch the cache once so the cached bench measures the steady state.

@@ -562,6 +562,40 @@ pub fn diff_benchkit_records(current: &[BenchRecord], baseline: &[BenchRecord]) 
         .collect()
 }
 
+/// One scalar/SIMD dispatch pair measured within a single run
+/// (`kernel/<op>/scalar` matched with `kernel/<op>/simd`).
+#[derive(Clone, Debug)]
+pub struct SpeedupPair {
+    /// The shared prefix, e.g. `kernel/transpose-counts`.
+    pub name: String,
+    pub scalar_median_s: f64,
+    pub simd_median_s: f64,
+    /// `scalar / simd` medians (> 1 = SIMD faster).
+    pub speedup: f64,
+}
+
+/// Collect every `<prefix>/scalar` record with a `<prefix>/simd` sibling
+/// in the same record set (scalar order). The benches emit the `/simd`
+/// record only when runtime dispatch resolved to a non-scalar kernel set,
+/// so an empty result means the SIMD tier was inactive on this machine —
+/// `repro bench-speedup` treats that as an error, not a pass.
+pub fn speedup_pairs(records: &[BenchRecord]) -> Vec<SpeedupPair> {
+    records
+        .iter()
+        .filter_map(|s| {
+            let prefix = s.name.strip_suffix("/scalar")?;
+            let simd_name = format!("{prefix}/simd");
+            let v = records.iter().find(|r| r.name == simd_name)?;
+            Some(SpeedupPair {
+                name: prefix.to_string(),
+                scalar_median_s: s.median_s,
+                simd_median_s: v.median_s,
+                speedup: s.median_s / v.median_s,
+            })
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -716,6 +750,32 @@ mod tests {
         // kernel pair flags rather than slipping through.
         let weird = diff_benchkit_records(&[rec("kernel/z", 1.0e-6)], &[rec("kernel/z", 0.0)]);
         assert!(weird[0].is_regression(0.20));
+    }
+
+    #[test]
+    fn speedup_pairs_match_scalar_with_simd_sibling() {
+        let rec = |name: &str, median: f64| BenchRecord {
+            name: name.to_string(),
+            median_s: median,
+            mean_s: median,
+            throughput: None,
+        };
+        let records = vec![
+            rec("kernel/transpose-counts/scalar", 4.0e-6),
+            rec("kernel/transpose-counts/simd", 1.0e-6), // 4.0x
+            rec("kernel/temporal-add16/scalar", 2.0e-6), // no simd sibling
+            rec("kernel/search-batch-256/simd", 1.0e-6), // no scalar sibling
+            rec("window/e2e", 1.0e-3),                   // not a dispatch pair
+        ];
+        let pairs = speedup_pairs(&records);
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].name, "kernel/transpose-counts");
+        assert!((pairs[0].speedup - 4.0).abs() < 1e-9);
+        assert!((pairs[0].scalar_median_s - 4.0e-6).abs() < 1e-15);
+        assert!((pairs[0].simd_median_s - 1.0e-6).abs() < 1e-15);
+        // No pairs at all on a scalar-only run.
+        assert!(speedup_pairs(&records[2..4]).is_empty());
+        assert!(speedup_pairs(&[]).is_empty());
     }
 
     #[test]

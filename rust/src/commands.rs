@@ -37,9 +37,10 @@ fn classifier_config(args: &Args, variant: Variant) -> sparse_hdc_ieeg::Result<C
 ///
 /// Compare two benchkit/v1 documents pairwise (matched by record name)
 /// and fail when any `kernel/*` median regressed by more than
-/// `--threshold` (default 0.20 = 20%). CI runs this non-blocking against
-/// the committed trajectory point (`BENCH_encoder.json`); an empty
-/// baseline (no records yet) compares nothing and succeeds.
+/// `--threshold` (default 0.20 = 20%). The gate is blocking: an empty
+/// baseline (the pre-promotion stub) is an **error**, not a pass — CI
+/// self-promotes a stub via `scripts/promote-bench-baselines.sh` before
+/// running the diff, so there is always something real to gate against.
 pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&["threshold"])?;
     ensure!(
@@ -53,6 +54,13 @@ pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     };
     let current = read(&args.positional[0])?;
     let baseline = read(&args.positional[1])?;
+    ensure!(
+        !baseline.is_empty(),
+        "baseline {} has no records (the never-promoted stub) — promote a real run first: \
+         scripts/promote-bench-baselines.sh <dir with BENCH_*.current.json>, or commit the \
+         CI bench-baselines-promoted artifact",
+        args.positional[1]
+    );
 
     let diffs = benchkit::diff_benchkit_records(&current, &baseline);
     // Fail-closed on lost coverage: a baseline kernel/* bench with no
@@ -109,6 +117,71 @@ pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "bench-diff: {} pairs compared, no kernel/* regression above {:.0}%",
         diffs.len(),
         threshold * 100.0
+    );
+    Ok(())
+}
+
+/// `repro bench-speedup <run.json>... [--min-speedup X]`
+///
+/// Within-run SIMD gate: collect every `kernel/<op>/scalar` record with a
+/// `kernel/<op>/simd` sibling across the given benchkit/v1 documents and
+/// require the **best** pair to show at least `--min-speedup` (default
+/// 2.0×, scalar median / SIMD median). The benches emit `/simd` records
+/// only when runtime dispatch picked a non-scalar set, so on a machine
+/// without AVX2/NEON there are no pairs — that is an error here, not a
+/// pass: CI runners are x86_64 with AVX2 and the gate must not vanish
+/// silently.
+pub fn bench_speedup(args: &Args) -> sparse_hdc_ieeg::Result<()> {
+    args.check_known(&["min-speedup"])?;
+    ensure!(
+        !args.positional.is_empty(),
+        "usage: repro bench-speedup <run.json>... [--min-speedup X]"
+    );
+    let min_speedup: f64 = args.get_parse("min-speedup", 2.0)?;
+    let mut records = Vec::new();
+    for path in &args.positional {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path}"))?;
+        let parsed =
+            benchkit::parse_benchkit_json(&text).with_context(|| format!("parse {path}"))?;
+        records.extend(parsed);
+    }
+    let pairs = benchkit::speedup_pairs(&records);
+    ensure!(
+        !pairs.is_empty(),
+        "no kernel/*/scalar + kernel/*/simd pairs in {} record(s) — the SIMD tier was \
+         inactive (scalar-only machine, or HDC_KERNELS=scalar); this gate needs a SIMD-capable \
+         runner",
+        records.len()
+    );
+    println!(
+        "{:<40} {:>14} {:>14} {:>9}",
+        "kernel", "scalar med", "simd med", "speedup"
+    );
+    let mut best = 0usize;
+    for (i, p) in pairs.iter().enumerate() {
+        println!(
+            "{:<40} {:>11.3} µs {:>11.3} µs {:>8.2}x",
+            p.name,
+            p.scalar_median_s * 1e6,
+            p.simd_median_s * 1e6,
+            p.speedup
+        );
+        if p.speedup > pairs[best].speedup {
+            best = i;
+        }
+    }
+    let best = &pairs[best];
+    ensure!(
+        best.speedup.is_finite() && best.speedup >= min_speedup,
+        "best SIMD speedup is {:.2}x ({}) — below the {min_speedup:.1}x floor",
+        best.speedup,
+        best.name
+    );
+    println!(
+        "bench-speedup: best pair {} at {:.2}x (floor {min_speedup:.1}x), {} pair(s) measured",
+        best.name,
+        best.speedup,
+        pairs.len()
     );
     Ok(())
 }
@@ -196,9 +269,10 @@ pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
 
 /// `repro loadgen-diff <current.json> <baseline.json> [--threshold FRAC]`
 ///
-/// Compare two loadgen/v1 reports. A baseline stub (`"sessions": 0`,
-/// never refreshed from a real run) gates nothing — the diff prints and
-/// passes, mirroring the empty-records bench-diff rule. Against a real
+/// Compare two loadgen/v1 reports. The gate is blocking: a baseline
+/// stub (`"sessions": 0`, never refreshed from a real run) is an
+/// **error**, mirroring the empty-records bench-diff rule — CI promotes
+/// the fresh report over a stub before diffing. Against a real
 /// baseline, fail when throughput fell (or p95 latency rose) by more
 /// than `--threshold` (default 0.50 — shared-runner load numbers are
 /// noisy; tighten once the trajectory stabilises).
@@ -217,12 +291,13 @@ pub fn loadgen_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     let baseline = read(&args.positional[1])?;
     println!("current:  {}", current.summary());
     println!("baseline: {}", baseline.summary());
-    if loadgen::is_stub_report(&baseline) {
-        println!(
-            "loadgen-diff: baseline is the never-promoted stub (0 sessions) — advisory only"
-        );
-        return Ok(());
-    }
+    ensure!(
+        !loadgen::is_stub_report(&baseline),
+        "baseline {} is the never-promoted stub (0 sessions) — promote a real report first: \
+         scripts/promote-bench-baselines.sh <dir with loadgen.current.json>, or commit the \
+         CI loadgen-baseline-promoted artifact",
+        args.positional[1]
+    );
     let mut regressions = Vec::new();
     if baseline.windows_per_s > 0.0
         && current.windows_per_s < baseline.windows_per_s * (1.0 - threshold)
@@ -285,7 +360,7 @@ pub fn gen_data(args: &Args) -> sparse_hdc_ieeg::Result<()> {
 }
 
 /// `repro train --data DIR --patient ID [--variant V] [--max-density D]
-/// [--save FILE] [--retrain-epochs N]`
+/// [--save FILE] [--retrain-epochs N] [--kernels SET]`
 pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     args.check_known(&[
         "data",
@@ -298,7 +373,12 @@ pub fn train(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "out",
         "save",
         "retrain-epochs",
+        "kernels",
     ])?;
+    if let Some(name) = args.get("kernels") {
+        sparse_hdc_ieeg::hdc::simd::select(name)?;
+        println!("kernels: {}", sparse_hdc_ieeg::hdc::simd::active().name);
+    }
     let data = PathBuf::from(args.require("data")?);
     let pid: u32 = args.get_parse("patient", 1u32)?;
     let variant = parse_variant(args)?;

@@ -187,6 +187,10 @@ pub struct SystemConfig {
     /// Serve the encode hot path through the PJRT runtime (vs. the native
     /// golden model).
     pub use_pjrt: bool,
+    /// SIMD kernel set to pin (`[runtime] kernels`, CLI `--kernels`):
+    /// `scalar`, `avx2`, `neon` or `auto`. `None` = not specified, which
+    /// defers to the `HDC_KERNELS` env var / auto-detection.
+    pub kernels: Option<String>,
     /// Worker threads for the coordinator.
     pub workers: usize,
     /// Bounded queue depth per session (backpressure).
@@ -238,6 +242,7 @@ impl Default for SystemConfig {
             alarm_consecutive: 1,
             artifacts_dir: "artifacts".to_string(),
             use_pjrt: false,
+            kernels: None,
             workers: 2,
             queue_depth: 64,
             batch_windows: 4,
@@ -281,6 +286,18 @@ impl SystemConfig {
             .unwrap_or(&cfg.artifacts_dir)
             .to_string();
         cfg.use_pjrt = file.get_parse("runtime.use_pjrt", cfg.use_pjrt)?;
+        if let Some(k) = file.get("runtime.kernels") {
+            // Validate the *name* here (typo detection with the file in
+            // hand); whether this CPU supports the set is checked when
+            // the coordinator pins it via `hdc::simd::select`.
+            if !matches!(k, "scalar" | "avx2" | "neon" | "auto") {
+                bail!(
+                    "runtime.kernels: unknown kernel set {k:?} \
+                     (known: scalar, avx2, neon, auto)"
+                );
+            }
+            cfg.kernels = Some(k.to_string());
+        }
         cfg.workers = file.get_parse("coordinator.workers", cfg.workers)?;
         cfg.queue_depth = file.get_parse("coordinator.queue_depth", cfg.queue_depth)?;
         cfg.batch_windows = file.get_parse("coordinator.batch_windows", cfg.batch_windows)?;
@@ -321,6 +338,7 @@ batch_windows = 8
 [runtime]
 use_pjrt = true
 artifacts_dir = "artifacts"
+kernels = "auto"
 
 [model]
 path = "models/p1.hdcm"
@@ -358,6 +376,7 @@ conn_queue = 32
         assert_eq!(cfg.queue_depth, 128);
         assert_eq!(cfg.batch_windows, 8);
         assert!(cfg.use_pjrt);
+        assert_eq!(cfg.kernels.as_deref(), Some("auto"));
         assert_eq!(cfg.model_path.as_deref(), Some("models/p1.hdcm"));
         assert_eq!(cfg.model_dir.as_deref(), Some("models/fleet"));
         assert_eq!(cfg.retrain_epochs, 3);
@@ -386,11 +405,24 @@ conn_queue = 32
     }
 
     #[test]
+    fn unknown_kernel_set_errors() {
+        let f = ConfigFile::parse("[runtime]\nkernels = \"avx512\"").unwrap();
+        let err = SystemConfig::from_file(&f).unwrap_err();
+        assert!(format!("{err:#}").contains("avx512"), "{err:#}");
+        for good in ["scalar", "avx2", "neon", "auto"] {
+            let f = ConfigFile::parse(&format!("[runtime]\nkernels = \"{good}\"")).unwrap();
+            let cfg = SystemConfig::from_file(&f).unwrap();
+            assert_eq!(cfg.kernels.as_deref(), Some(good));
+        }
+    }
+
+    #[test]
     fn empty_config_gives_defaults() {
         let f = ConfigFile::parse("").unwrap();
         let cfg = SystemConfig::from_file(&f).unwrap();
         assert_eq!(cfg.variant, Variant::Optimized);
         assert_eq!(cfg.classifier.temporal_threshold, 130);
+        assert_eq!(cfg.kernels, None);
         assert_eq!(cfg.model_path, None);
         assert_eq!(cfg.model_dir, None);
         assert_eq!(cfg.retrain_epochs, 0);

@@ -505,6 +505,7 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "retrain-epochs",
         "retrain-fa-rate",
         "listen",
+        "kernels",
     ])?;
     let data = PathBuf::from(args.require("data")?);
     let mut system = match args.get("config") {
@@ -515,6 +516,17 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     if args.flag("use-pjrt") {
         system.use_pjrt = true;
     }
+    // Pin the SIMD kernel set before any encode/score work touches it:
+    // CLI `--kernels` wins over `[runtime] kernels`; with neither, the
+    // first kernel call resolves HDC_KERNELS / auto-detection lazily.
+    let kernels_choice = args
+        .get("kernels")
+        .map(str::to_string)
+        .or_else(|| system.kernels.clone());
+    if let Some(name) = &kernels_choice {
+        crate::hdc::simd::select(name)?;
+    }
+    println!("kernels: {}", crate::hdc::simd::active().name);
     let artifacts = args.get_str("artifacts", &system.artifacts_dir);
     let record_idx: usize = args.get_parse("record", 1usize)?;
     let retrain_epochs: usize = args.get_parse("retrain-epochs", system.retrain_epochs)?;

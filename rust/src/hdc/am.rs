@@ -25,7 +25,8 @@ use std::sync::OnceLock;
 use crate::ensure;
 use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL, DIM, NUM_CLASSES};
 
-use super::hv::{Hv, WORDS};
+use super::hv::Hv;
+use super::simd::{self, KernelSet};
 
 /// The associative memory for the 2-class seizure detector.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -98,35 +99,39 @@ impl AssociativeMemory {
     /// N calls to [`Self::search`] / [`Self::search_dense`] at every
     /// batch size (including 0 and 1) — `tests/batching.rs` pins this.
     pub fn search_batch(&self, queries: &[Hv], metric: Metric) -> Vec<SearchResult> {
+        self.search_batch_with(queries, metric, simd::active())
+    }
+
+    /// [`Self::search_batch`] with an explicit kernel set (benches and
+    /// the bit-exactness fuzz run scalar and SIMD side by side).
+    pub fn search_batch_with(
+        &self,
+        queries: &[Hv],
+        metric: Metric,
+        ks: &KernelSet,
+    ) -> Vec<SearchResult> {
         queries
             .iter()
-            .map(|q| SearchResult::from_scores(self.score2(q, metric)))
+            .map(|q| SearchResult::from_scores(self.score2_with(q, metric, ks)))
             .collect()
     }
 
     /// Fused two-class scoring: one pass over the query words produces
     /// both class scores — the software mirror of the hardware's 2-cycle
-    /// AND-popcount array reusing the loaded AM row.
+    /// AND-popcount array reusing the loaded AM row. The word loop is the
+    /// kernel set's fused AND/XOR-popcount (vectorized under AVX2/NEON).
     fn score2(&self, query: &Hv, metric: Metric) -> [u32; NUM_CLASSES] {
-        let c0 = &self.classes[CLASS_INTERICTAL].words;
-        let c1 = &self.classes[CLASS_ICTAL].words;
-        let (mut s0, mut s1) = (0u32, 0u32);
+        self.score2_with(query, metric, simd::active())
+    }
+
+    fn score2_with(&self, query: &Hv, metric: Metric, ks: &KernelSet) -> [u32; NUM_CLASSES] {
+        let c0 = &self.classes[CLASS_INTERICTAL];
+        let c1 = &self.classes[CLASS_ICTAL];
         match metric {
-            Metric::Overlap => {
-                for w in 0..WORDS {
-                    let q = query.words[w];
-                    s0 += (q & c0[w]).count_ones();
-                    s1 += (q & c1[w]).count_ones();
-                }
-                [s0, s1]
-            }
+            Metric::Overlap => (ks.overlap2)(query, c0, c1),
             Metric::Hamming => {
-                for w in 0..WORDS {
-                    let q = query.words[w];
-                    s0 += (q ^ c0[w]).count_ones();
-                    s1 += (q ^ c1[w]).count_ones();
-                }
-                [DIM as u32 - s0, DIM as u32 - s1]
+                let [d0, d1] = (ks.hamming2)(query, c0, c1);
+                [DIM as u32 - d0, DIM as u32 - d1]
             }
         }
     }

@@ -5,10 +5,16 @@
 //! accumulator ([`super::temporal::TemporalAccumulator`], 8 planes) —
 //! store per-element counts as `N` bit planes over the 16 × u64 HV
 //! words: plane `b` holds bit `b` of the counts of elements
-//! `w*64..w*64+64`. The three operations they share live here,
-//! parameterized on the plane count, so the carry-save adder, the
-//! magnitude comparator and the transpose have exactly one
-//! implementation each.
+//! `w*64..w*64+64`. The operations they share live here, so the
+//! carry-save adder, the magnitude comparator and the transpose have
+//! exactly one scalar implementation each.
+//!
+//! Two shapes are exposed: the original const-generic per-word helpers
+//! (kept as the always-available reference semantics) and whole-HV
+//! kernels over *plane slices* (`&[[u64; WORDS]]`). The slice shape is
+//! what the runtime-dispatched SIMD tier ([`super::simd`]) mirrors —
+//! every [`super::simd::KernelSet`] entry is pinned bit-exact against
+//! the slice kernels in this file.
 
 use crate::params::DIM;
 
@@ -33,17 +39,68 @@ pub fn ripple_add<const N: usize>(planes: &mut [[u64; WORDS]; N], w: usize, bits
     carry
 }
 
+/// Whole-HV carry-save add of the set bits of `hv` into every word
+/// column at once. Returns the OR of the per-column carries out of the
+/// top plane — `0` unless at least one counter wrapped. This is the
+/// scalar `KernelSet::plane_add` kernel; spatial bundling asserts the
+/// carry is zero (fan-in bounded by construction).
+pub fn plane_add(planes: &mut [[u64; WORDS]], hv: &Hv) -> u64 {
+    let mut spilled = 0u64;
+    for (w, &bits) in hv.words.iter().enumerate() {
+        let mut carry = bits;
+        for plane in planes.iter_mut() {
+            if carry == 0 {
+                break;
+            }
+            let sum = plane[w] ^ carry;
+            carry &= plane[w];
+            plane[w] = sum;
+        }
+        spilled |= carry;
+    }
+    spilled
+}
+
+/// [`plane_add`] with temporal saturation semantics: any column whose
+/// counter wraps is clamped back to all-ones (`2^N - 1`) instead of
+/// wrapping to the small residue the ripple left behind. This is the
+/// scalar `KernelSet::plane_add_saturating` kernel.
+pub fn plane_add_saturating(planes: &mut [[u64; WORDS]], hv: &Hv) {
+    for (w, &bits) in hv.words.iter().enumerate() {
+        let mut carry = bits;
+        for plane in planes.iter_mut() {
+            if carry == 0 {
+                break;
+            }
+            let sum = plane[w] ^ carry;
+            carry &= plane[w];
+            plane[w] = sum;
+        }
+        if carry != 0 {
+            for plane in planes.iter_mut() {
+                plane[w] |= carry;
+            }
+        }
+    }
+}
+
 /// Branchless word-level `count >= threshold` over bit-sliced planes:
 /// walk the planes MSB→LSB keeping per-column "greater" /
 /// "equal-so-far" masks. Caller handles the trivial thresholds
 /// (`0` → all ones, `>= 1 << N` → all zeros).
 pub fn ge_threshold<const N: usize>(planes: &[[u64; WORDS]; N], threshold: u64) -> Hv {
-    debug_assert!(threshold >= 1 && threshold < (1u64 << N));
+    ge_threshold_planes(planes, threshold)
+}
+
+/// Slice-shaped [`ge_threshold`] — the scalar `KernelSet::ge_threshold`
+/// kernel (fn pointers need a monomorphic signature).
+pub fn ge_threshold_planes(planes: &[[u64; WORDS]], threshold: u64) -> Hv {
+    debug_assert!(threshold >= 1 && threshold < (1u64 << planes.len()));
     let mut out = Hv::zero();
     for w in 0..WORDS {
         let mut gt = 0u64;
         let mut eq = u64::MAX;
-        for b in (0..N).rev() {
+        for b in (0..planes.len()).rev() {
             let p = planes[b][w];
             if (threshold >> b) & 1 == 1 {
                 eq &= p;
@@ -59,6 +116,12 @@ pub fn ge_threshold<const N: usize>(planes: &[[u64; WORDS]; N], threshold: u64) 
 /// Transpose bit-sliced planes back to per-element counts (diagnostic /
 /// tuning path — the hot paths never materialize this).
 pub fn transpose_counts<const N: usize>(planes: &[[u64; WORDS]; N]) -> Box<[u16; DIM]> {
+    transpose_counts_planes(planes)
+}
+
+/// Slice-shaped [`transpose_counts`] — the scalar
+/// `KernelSet::transpose_counts` kernel.
+pub fn transpose_counts_planes(planes: &[[u64; WORDS]]) -> Box<[u16; DIM]> {
     let mut out = Box::new([0u16; DIM]);
     for w in 0..WORDS {
         for (b, plane) in planes.iter().enumerate() {

@@ -28,6 +28,7 @@ use crate::params::{CHANNELS, DIM, SEG_LEN};
 
 use super::bitplanes;
 use super::hv::{Hv, WORDS, WORDS_PER_SEG};
+use super::simd::{self, KernelSet};
 use super::sparse::SparseHv;
 
 /// Bit planes of one [`SpatialCounts`]: counts reach at most the fan-in
@@ -71,12 +72,17 @@ impl SpatialCounts {
         self.inputs
     }
 
-    /// Add one bit-domain HV: word-wise ripple-carry across the planes.
+    /// Add one bit-domain HV: word-wise ripple-carry across the planes,
+    /// through the process-wide [`simd::active`] kernel set.
     pub fn add_hv(&mut self, hv: &Hv) {
-        for (w, &word) in hv.words.iter().enumerate() {
-            let carry = bitplanes::ripple_add(&mut self.planes, w, word);
-            assert_eq!(carry, 0, "spatial counter overflow (> 127 inputs)");
-        }
+        self.add_hv_with(hv, simd::active());
+    }
+
+    /// [`Self::add_hv`] with an explicit kernel set (benches and the
+    /// bit-exactness fuzz run scalar and SIMD side by side).
+    pub fn add_hv_with(&mut self, hv: &Hv, ks: &KernelSet) {
+        let carry = (ks.plane_add)(&mut self.planes, hv);
+        assert_eq!(carry, 0, "spatial counter overflow (> 127 inputs)");
         self.inputs += 1;
     }
 
@@ -95,19 +101,29 @@ impl SpatialCounts {
     /// Thin to a binary HV (`count >= threshold`) with the branchless
     /// word-level magnitude comparator ([`bitplanes::ge_threshold`]).
     pub fn thin(&self, threshold: u16) -> Hv {
+        self.thin_with(threshold, simd::active())
+    }
+
+    /// [`Self::thin`] with an explicit kernel set.
+    pub fn thin_with(&self, threshold: u16, ks: &KernelSet) -> Hv {
         if threshold == 0 {
             return Hv::ones();
         }
         if (threshold as usize) >= (1 << SPATIAL_PLANES) {
             return Hv::zero();
         }
-        bitplanes::ge_threshold(&self.planes, threshold as u64)
+        (ks.ge_threshold)(&self.planes, threshold as u64)
     }
 
     /// Transpose back to per-element counts (diagnostics / the activity
     /// model; the hot path never materializes this).
     pub fn counts(&self) -> Box<[u16; DIM]> {
-        bitplanes::transpose_counts(&self.planes)
+        self.counts_with(simd::active())
+    }
+
+    /// [`Self::counts`] with an explicit kernel set.
+    pub fn counts_with(&self, ks: &KernelSet) -> Box<[u16; DIM]> {
+        (ks.transpose_counts)(&self.planes)
     }
 }
 

@@ -13,6 +13,8 @@
 //!   memories (seed-keyed), making encoder construction cheap.
 //! * [`bitplanes`] — shared bit-sliced counter primitives (carry-save
 //!   ripple add, word-level magnitude comparator, transpose).
+//! * [`simd`] — runtime-dispatched SIMD tier (AVX2/NEON) over the
+//!   bitplanes + scoring kernels, scalar always available.
 //! * [`bundling`] — spatial bundling: adder trees + thinning (baseline) and
 //!   OR trees (optimized, §III-B).
 //! * [`temporal`] — the 256-frame temporal encoder with 8-bit counters.
@@ -26,6 +28,7 @@
 
 pub mod hv;
 pub mod bitplanes;
+pub mod simd;
 pub mod sparse;
 pub mod dense;
 pub mod im;

@@ -1,0 +1,271 @@
+//! Runtime-dispatched SIMD kernel tier.
+//!
+//! The bit-sliced hot loops — carry-save spatial bundling, the 8-plane
+//! temporal accumulator, the `ge_threshold` magnitude comparator, the
+//! count transpose, and the fused AND/XOR-popcount class scoring in
+//! [`super::am::AssociativeMemory::search_batch`] — all run through a
+//! [`KernelSet`]: a struct of monomorphic function pointers selected
+//! once per process. Three sets exist:
+//!
+//! | set      | arch    | gate                                  |
+//! |----------|---------|---------------------------------------|
+//! | `scalar` | any     | always available (the reference tier) |
+//! | `avx2`   | x86_64  | `is_x86_feature_detected!("avx2")`    |
+//! | `neon`   | aarch64 | `is_aarch64_feature_detected!("neon")`|
+//!
+//! Selection order: an explicit [`select`] (from `--kernels` /
+//! `[runtime] kernels` config) wins; otherwise the `HDC_KERNELS` env
+//! var (`scalar|avx2|neon|auto`); otherwise [`KernelSet::auto`] picks
+//! the widest supported set. The choice is pinned in a `OnceLock` so
+//! every hot path pays one relaxed load, not a feature probe.
+//!
+//! Every non-scalar set is pinned bit-exact against the scalar kernels
+//! (which are the `bitplanes.rs` slice functions) by the property fuzz
+//! in `tests/kernels.rs`, and the `unsafe` intrinsics below are
+//! additionally machine-checked by the scheduled `sanitize` CI job.
+
+use std::sync::OnceLock;
+
+use crate::params::DIM;
+use crate::{bail, ensure};
+
+use super::hv::{Hv, WORDS};
+use super::bitplanes;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// One tier of word-parallel kernels. All entries are plain `fn`
+/// pointers (monomorphic, slice-shaped) so a set is a value — benches
+/// and tests can run two sets side by side regardless of which one
+/// [`active`] pinned.
+pub struct KernelSet {
+    /// `"scalar"`, `"avx2"` or `"neon"` — stable names used by the
+    /// `kernels =` config key, `HDC_KERNELS`, and bench record names.
+    pub name: &'static str,
+    /// Carry-save add of `hv` into N bit-sliced planes; returns the OR
+    /// of per-column carry-outs (`0` unless a counter wrapped).
+    pub plane_add: fn(&mut [[u64; WORDS]], &Hv) -> u64,
+    /// [`Self::plane_add`] with saturate-to-max semantics on overflow
+    /// (the temporal accumulator's clamp at `2^N - 1`).
+    pub plane_add_saturating: fn(&mut [[u64; WORDS]], &Hv),
+    /// Word-level `count >= threshold`; caller handles the trivial
+    /// thresholds (`0`, `>= 2^N`) before dispatching.
+    pub ge_threshold: fn(&[[u64; WORDS]], u64) -> Hv,
+    /// Bit-sliced planes → per-element `u16` counts.
+    pub transpose_counts: fn(&[[u64; WORDS]]) -> Box<[u16; DIM]>,
+    /// Fused two-class AND-popcount: `[q·c0, q·c1]` overlaps.
+    pub overlap2: fn(&Hv, &Hv, &Hv) -> [u32; 2],
+    /// Fused two-class XOR-popcount: `[d(q,c0), d(q,c1)]` Hamming
+    /// distances (raw — the AM converts to scores).
+    pub hamming2: fn(&Hv, &Hv, &Hv) -> [u32; 2],
+}
+
+fn scalar_overlap2(q: &Hv, c0: &Hv, c1: &Hv) -> [u32; 2] {
+    let mut s0 = 0u32;
+    let mut s1 = 0u32;
+    for w in 0..WORDS {
+        let qw = q.words[w];
+        s0 += (qw & c0.words[w]).count_ones();
+        s1 += (qw & c1.words[w]).count_ones();
+    }
+    [s0, s1]
+}
+
+fn scalar_hamming2(q: &Hv, c0: &Hv, c1: &Hv) -> [u32; 2] {
+    let mut s0 = 0u32;
+    let mut s1 = 0u32;
+    for w in 0..WORDS {
+        let qw = q.words[w];
+        s0 += (qw ^ c0.words[w]).count_ones();
+        s1 += (qw ^ c1.words[w]).count_ones();
+    }
+    [s0, s1]
+}
+
+static SCALAR: KernelSet = KernelSet {
+    name: "scalar",
+    plane_add: bitplanes::plane_add,
+    plane_add_saturating: bitplanes::plane_add_saturating,
+    ge_threshold: bitplanes::ge_threshold_planes,
+    transpose_counts: bitplanes::transpose_counts_planes,
+    overlap2: scalar_overlap2,
+    hamming2: scalar_hamming2,
+};
+
+impl KernelSet {
+    /// The always-available scalar reference tier.
+    pub fn scalar() -> &'static KernelSet {
+        &SCALAR
+    }
+
+    /// The widest set this CPU supports (what `kernels = auto` picks).
+    pub fn auto() -> &'static KernelSet {
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            return &avx2::SET;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return &neon::SET;
+        }
+        &SCALAR
+    }
+
+    /// Every set this CPU supports, scalar first. Tests iterate this to
+    /// pin each available tier against scalar.
+    pub fn supported() -> Vec<&'static KernelSet> {
+        let mut sets = vec![&SCALAR];
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("avx2") {
+            sets.push(&avx2::SET);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            sets.push(&neon::SET);
+        }
+        sets
+    }
+
+    /// Resolve a config/env name. Errors on unknown names and on sets
+    /// the running CPU (or this build's target arch) cannot execute —
+    /// never silently falls back, so a CI leg forcing `avx2` cannot
+    /// fake-pass on scalar hardware.
+    pub fn by_name(name: &str) -> crate::Result<&'static KernelSet> {
+        match name {
+            "auto" => Ok(Self::auto()),
+            "scalar" => Ok(&SCALAR),
+            "avx2" => by_name_avx2(),
+            "neon" => by_name_neon(),
+            other => bail!("unknown kernel set {other:?} (known: scalar, avx2, neon, auto)"),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn by_name_avx2() -> crate::Result<&'static KernelSet> {
+    ensure!(
+        is_x86_feature_detected!("avx2"),
+        "kernels = avx2: this CPU does not report AVX2 (use scalar or auto)"
+    );
+    Ok(&avx2::SET)
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn by_name_avx2() -> crate::Result<&'static KernelSet> {
+    bail!(
+        "kernels = avx2 requires an x86_64 build (this target is {})",
+        std::env::consts::ARCH
+    )
+}
+
+#[cfg(target_arch = "aarch64")]
+fn by_name_neon() -> crate::Result<&'static KernelSet> {
+    ensure!(
+        std::arch::is_aarch64_feature_detected!("neon"),
+        "kernels = neon: this CPU does not report NEON (use scalar or auto)"
+    );
+    Ok(&neon::SET)
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn by_name_neon() -> crate::Result<&'static KernelSet> {
+    bail!(
+        "kernels = neon requires an aarch64 build (this target is {})",
+        std::env::consts::ARCH
+    )
+}
+
+static ACTIVE: OnceLock<&'static KernelSet> = OnceLock::new();
+
+/// The process-wide kernel set. First use pins it: `HDC_KERNELS` if
+/// set (a bad value panics loudly rather than silently downgrading a
+/// forced-SIMD test run), else [`KernelSet::auto`].
+pub fn active() -> &'static KernelSet {
+    ACTIVE.get_or_init(|| match std::env::var("HDC_KERNELS") {
+        Ok(name) => match KernelSet::by_name(name.trim()) {
+            Ok(set) => set,
+            Err(e) => panic!("HDC_KERNELS={}: {e}", name.trim()),
+        },
+        Err(_) => KernelSet::auto(),
+    })
+}
+
+/// Pin the process-wide set by name (CLI `--kernels` / config
+/// `[runtime] kernels`). Explicit selection outranks `HDC_KERNELS`
+/// when it gets there first; if something already pinned a *different*
+/// set this errors instead of switching mid-flight (published models
+/// and benches assume one set per process).
+pub fn select(name: &str) -> crate::Result<&'static KernelSet> {
+    let want = KernelSet::by_name(name)?;
+    let got = ACTIVE.get_or_init(|| want);
+    ensure!(
+        got.name == want.name,
+        "kernel set already pinned to {} for this process; cannot re-select {} \
+         (set it once, before first use)",
+        got.name,
+        want.name
+    );
+    Ok(got)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_supported_and_auto_is_one_of_them() {
+        let names: Vec<&str> = KernelSet::supported().iter().map(|s| s.name).collect();
+        assert_eq!(names[0], "scalar");
+        assert!(names.contains(&KernelSet::auto().name));
+        // by_name round-trips every supported set.
+        for set in KernelSet::supported() {
+            assert_eq!(KernelSet::by_name(set.name).unwrap().name, set.name);
+        }
+        assert_eq!(KernelSet::by_name("auto").unwrap().name, KernelSet::auto().name);
+        assert!(KernelSet::by_name("avx512").is_err());
+    }
+
+    #[test]
+    fn select_is_sticky() {
+        // Whatever pinned the set first (env or another test), re-selecting
+        // the same name is idempotent and a *different* supported name errors.
+        let current = active();
+        assert_eq!(select(current.name).unwrap().name, current.name);
+        if let Some(other) = KernelSet::supported()
+            .into_iter()
+            .find(|s| s.name != current.name)
+        {
+            assert!(select(other.name).is_err());
+        }
+    }
+
+    #[test]
+    fn fused_two_class_scoring_matches_hv_methods() {
+        let mut q = Hv::zero();
+        let mut c0 = Hv::zero();
+        let mut c1 = Hv::zero();
+        for w in 0..WORDS {
+            let w64 = w as u64;
+            q.words[w] = 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(w64 | 1);
+            c0.words[w] = 0xbf58_476d_1ce4_e5b9u64.rotate_left(w as u32) ^ w64;
+            c1.words[w] = 0x94d0_49bb_1331_11ebu64.wrapping_add(w64 << 7);
+        }
+        for set in KernelSet::supported() {
+            assert_eq!(
+                (set.overlap2)(&q, &c0, &c1),
+                [q.overlap(&c0), q.overlap(&c1)],
+                "overlap2 set {}",
+                set.name
+            );
+            assert_eq!(
+                (set.hamming2)(&q, &c0, &c1),
+                [q.hamming(&c0), q.hamming(&c1)],
+                "hamming2 set {}",
+                set.name
+            );
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! NEON kernels: 2 × u64 lanes per `uint64x2_t`, 8 vectors per HV.
+//!
+//! NEON is mandatory on aarch64, but this set still flows through the
+//! same detection gate as AVX2 (`is_aarch64_feature_detected!`) so the
+//! dispatch story is uniform. Every function is
+//! `#[target_feature(enable = "neon")]` and only reachable through
+//! [`super::KernelSet`] values handed out after that detection —
+//! that is the safety argument for the `unsafe` blocks in the
+//! wrappers. Popcount uses `vcnt` (per-byte population count), the
+//! instruction the ISSUE's "vcnt-based vectorized popcount" names.
+//!
+//! This file only compiles on aarch64 (`#[cfg]` in `mod.rs`); x86 CI
+//! covers it for format/review only, so keep it conservative.
+
+use std::arch::aarch64::*;
+
+use crate::params::DIM;
+
+use super::super::hv::{Hv, WORDS};
+use super::KernelSet;
+
+pub(super) static SET: KernelSet = KernelSet {
+    name: "neon",
+    plane_add,
+    plane_add_saturating,
+    ge_threshold,
+    transpose_counts,
+    overlap2,
+    hamming2,
+};
+
+/// u64 lanes per vector; WORDS = 16 → 8 vectors per HV.
+const LANES: usize = 2;
+const VECS: usize = WORDS / LANES;
+
+fn plane_add(planes: &mut [[u64; WORDS]], hv: &Hv) -> u64 {
+    // SAFETY: SET is only exposed after NEON detection (module doc).
+    unsafe { plane_add_impl(planes, hv) }
+}
+
+fn plane_add_saturating(planes: &mut [[u64; WORDS]], hv: &Hv) {
+    // SAFETY: SET is only exposed after NEON detection (module doc).
+    unsafe { plane_add_saturating_impl(planes, hv) }
+}
+
+fn ge_threshold(planes: &[[u64; WORDS]], threshold: u64) -> Hv {
+    // SAFETY: SET is only exposed after NEON detection (module doc).
+    unsafe { ge_threshold_impl(planes, threshold) }
+}
+
+fn transpose_counts(planes: &[[u64; WORDS]]) -> Box<[u16; DIM]> {
+    // SAFETY: SET is only exposed after NEON detection (module doc).
+    unsafe { transpose_counts_impl(planes) }
+}
+
+fn overlap2(q: &Hv, c0: &Hv, c1: &Hv) -> [u32; 2] {
+    // SAFETY: SET is only exposed after NEON detection (module doc).
+    unsafe { overlap2_impl(q, c0, c1) }
+}
+
+fn hamming2(q: &Hv, c0: &Hv, c1: &Hv) -> [u32; 2] {
+    // SAFETY: SET is only exposed after NEON detection (module doc).
+    unsafe { hamming2_impl(q, c0, c1) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn is_zero(v: uint64x2_t) -> bool {
+    (vgetq_lane_u64::<0>(v) | vgetq_lane_u64::<1>(v)) == 0
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn plane_add_impl(planes: &mut [[u64; WORDS]], hv: &Hv) -> u64 {
+    let mut spilled = 0u64;
+    for v in 0..VECS {
+        let off = v * LANES;
+        let mut carry = vld1q_u64(hv.words[off..].as_ptr());
+        for plane in planes.iter_mut() {
+            if is_zero(carry) {
+                break;
+            }
+            let p = vld1q_u64(plane[off..].as_ptr());
+            vst1q_u64(plane[off..].as_mut_ptr(), veorq_u64(p, carry));
+            carry = vandq_u64(p, carry);
+        }
+        spilled |= vgetq_lane_u64::<0>(carry) | vgetq_lane_u64::<1>(carry);
+    }
+    spilled
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn plane_add_saturating_impl(planes: &mut [[u64; WORDS]], hv: &Hv) {
+    for v in 0..VECS {
+        let off = v * LANES;
+        let mut carry = vld1q_u64(hv.words[off..].as_ptr());
+        for plane in planes.iter_mut() {
+            if is_zero(carry) {
+                break;
+            }
+            let p = vld1q_u64(plane[off..].as_ptr());
+            vst1q_u64(plane[off..].as_mut_ptr(), veorq_u64(p, carry));
+            carry = vandq_u64(p, carry);
+        }
+        // Clamp wrapped columns back to all-ones across every plane.
+        if !is_zero(carry) {
+            for plane in planes.iter_mut() {
+                let p = vld1q_u64(plane[off..].as_ptr());
+                vst1q_u64(plane[off..].as_mut_ptr(), vorrq_u64(p, carry));
+            }
+        }
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn ge_threshold_impl(planes: &[[u64; WORDS]], threshold: u64) -> Hv {
+    debug_assert!(threshold >= 1 && threshold < (1u64 << planes.len()));
+    let mut out = Hv::zero();
+    for v in 0..VECS {
+        let off = v * LANES;
+        let mut gt = vdupq_n_u64(0);
+        let mut eq = vdupq_n_u64(u64::MAX);
+        for (b, plane) in planes.iter().enumerate().rev() {
+            let p = vld1q_u64(plane[off..].as_ptr());
+            if (threshold >> b) & 1 == 1 {
+                eq = vandq_u64(eq, p);
+            } else {
+                gt = vorrq_u64(gt, vandq_u64(eq, p));
+            }
+        }
+        vst1q_u64(out.words[off..].as_mut_ptr(), vorrq_u64(gt, eq));
+    }
+    out
+}
+
+/// Per-lane bit masks for the 8 u16 lanes of one vector.
+#[rustfmt::skip]
+const LANE_BITS: [u16; 8] = [
+    0x0001, 0x0002, 0x0004, 0x0008, 0x0010, 0x0020, 0x0040, 0x0080,
+];
+
+#[target_feature(enable = "neon")]
+unsafe fn transpose_counts_impl(planes: &[[u64; WORDS]]) -> Box<[u16; DIM]> {
+    let mut out = Box::new([0u16; DIM]);
+    let lane_bits = vld1q_u16(LANE_BITS.as_ptr());
+    for w in 0..WORDS {
+        // 64 elements per word = 8 chunks of 8 u16 lanes: broadcast
+        // each 8-bit chunk, `vtst` every lane's bit, weight by 1 << b.
+        for c in 0..8 {
+            let mut acc = vdupq_n_u16(0);
+            for (b, plane) in planes.iter().enumerate() {
+                let chunk = ((plane[w] >> (c * 8)) & 0xFF) as u16;
+                let hits = vtstq_u16(vdupq_n_u16(chunk), lane_bits);
+                acc = vorrq_u16(acc, vandq_u16(hits, vdupq_n_u16(1 << b)));
+            }
+            vst1q_u16(out[w * 64 + c * 8..].as_mut_ptr(), acc);
+        }
+    }
+    out
+}
+
+/// `vcnt` popcount of one 128-bit vector, summed to a scalar (≤ 128,
+/// so the byte-sum `vaddvq_u8` cannot overflow).
+#[target_feature(enable = "neon")]
+unsafe fn popcount128(v: uint64x2_t) -> u32 {
+    vaddvq_u8(vcntq_u8(vreinterpretq_u8_u64(v))) as u32
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn overlap2_impl(q: &Hv, c0: &Hv, c1: &Hv) -> [u32; 2] {
+    let mut s0 = 0u32;
+    let mut s1 = 0u32;
+    for v in 0..VECS {
+        let off = v * LANES;
+        let qv = vld1q_u64(q.words[off..].as_ptr());
+        s0 += popcount128(vandq_u64(qv, vld1q_u64(c0.words[off..].as_ptr())));
+        s1 += popcount128(vandq_u64(qv, vld1q_u64(c1.words[off..].as_ptr())));
+    }
+    [s0, s1]
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn hamming2_impl(q: &Hv, c0: &Hv, c1: &Hv) -> [u32; 2] {
+    let mut s0 = 0u32;
+    let mut s1 = 0u32;
+    for v in 0..VECS {
+        let off = v * LANES;
+        let qv = vld1q_u64(q.words[off..].as_ptr());
+        s0 += popcount128(veorq_u64(qv, vld1q_u64(c0.words[off..].as_ptr())));
+        s1 += popcount128(veorq_u64(qv, vld1q_u64(c1.words[off..].as_ptr())));
+    }
+    [s0, s1]
+}

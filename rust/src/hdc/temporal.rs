@@ -20,8 +20,8 @@
 
 use crate::params::{DIM, FRAMES_PER_PREDICTION, TEMPORAL_COUNTER_BITS, TEMPORAL_COUNTER_MAX};
 
-use super::bitplanes;
 use super::hv::{Hv, WORDS};
+use super::simd::{self, KernelSet};
 
 /// Bit planes of the temporal counters (8 in hardware).
 pub const TEMPORAL_PLANES: usize = TEMPORAL_COUNTER_BITS;
@@ -52,19 +52,17 @@ impl TemporalAccumulator {
 
     /// Add one spatial-encoder output frame. Counters saturate at 255
     /// exactly like the 8-bit hardware registers. Word-parallel
-    /// carry-save ripple — this runs once per clock cycle on the serving
-    /// hot path (§Perf L3-1).
+    /// carry-save ripple through the process-wide [`simd::active`]
+    /// kernel set — this runs once per clock cycle on the serving hot
+    /// path (§Perf L3-1).
     pub fn add(&mut self, frame: &Hv) {
-        for (w, &word) in frame.words.iter().enumerate() {
-            let carry = bitplanes::ripple_add(&mut self.planes, w, word);
-            if carry != 0 {
-                // Columns whose counter wrapped 255 → 0: saturate back to
-                // all-ones instead.
-                for plane in self.planes.iter_mut() {
-                    plane[w] |= carry;
-                }
-            }
-        }
+        self.add_with(frame, simd::active());
+    }
+
+    /// [`Self::add`] with an explicit kernel set (benches and the
+    /// bit-exactness fuzz run scalar and SIMD side by side).
+    pub fn add_with(&mut self, frame: &Hv, ks: &KernelSet) {
+        (ks.plane_add_saturating)(&mut self.planes, frame);
         self.frames += 1;
     }
 
@@ -81,7 +79,12 @@ impl TemporalAccumulator {
     /// Diagnostic / tuning path only — the hot path never materializes
     /// this (thinning reads the planes directly).
     pub fn counts(&self) -> Box<[u16; DIM]> {
-        bitplanes::transpose_counts(&self.planes)
+        self.counts_with(simd::active())
+    }
+
+    /// [`Self::counts`] with an explicit kernel set.
+    pub fn counts_with(&self, ks: &KernelSet) -> Box<[u16; DIM]> {
+        (ks.transpose_counts)(&self.planes)
     }
 
     /// Thin to a binary query HV (`count >= threshold`) and reset for the
@@ -94,16 +97,21 @@ impl TemporalAccumulator {
 
     /// Thin without resetting (used by training, which inspects several
     /// candidate thresholds over the same window). Branchless word-level
-    /// magnitude comparator ([`bitplanes::ge_threshold`]) — this is on
-    /// the per-window hot path (§Perf L3-2).
+    /// magnitude comparator — this is on the per-window hot path
+    /// (§Perf L3-2).
     pub fn peek(&self, threshold: u16) -> Hv {
+        self.peek_with(threshold, simd::active())
+    }
+
+    /// [`Self::peek`] with an explicit kernel set.
+    pub fn peek_with(&self, threshold: u16, ks: &KernelSet) -> Hv {
         if threshold == 0 {
             return Hv::ones();
         }
         if threshold > TEMPORAL_COUNTER_MAX {
             return Hv::zero();
         }
-        bitplanes::ge_threshold(&self.planes, threshold as u64)
+        (ks.ge_threshold)(&self.planes, threshold as u64)
     }
 
     pub fn reset(&mut self) {

@@ -44,6 +44,7 @@ fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         Some("table1") => commands::table1(args),
         Some("ablate-thinning") => commands::ablate_thinning(args),
         Some("bench-diff") => commands::bench_diff(args),
+        Some("bench-speedup") => commands::bench_speedup(args),
         Some("loadgen") => commands::loadgen(args),
         Some("loadgen-diff") => commands::loadgen_diff(args),
         Some("help") | None => {
@@ -63,12 +64,13 @@ USAGE: repro <subcommand> [options]
 data / model:
   gen-data  --out DIR [--patients N] [--records N] [--seed S]
   train     --data DIR --patient ID [--variant V] [--max-density D]
-            [--save FILE] [--retrain-epochs N] [--out FILE]
+            [--save FILE] [--retrain-epochs N] [--out FILE] [--kernels SET]
   model-info <bundle.hdcm | models-dir>   inspect a bundle / list a store
   detect    --data DIR --patient ID [--variant V] [--max-density D]
   serve     --data DIR [--config FILE] [--patients LIST] [--model FILE]
             [--models-dir DIR] [--retrain-epochs N] [--retrain-fa-rate R]
             [--use-pjrt] [--realtime] [--batch N] [--chunk N]
+            [--kernels SET]     pin the compute kernel set (scalar|avx2|neon|auto)
             [--listen ADDR]     serve framed TCP instead of in-process replay
 
 paper experiments:
@@ -81,11 +83,18 @@ paper experiments:
 tooling:
   bench-diff <current.json> <baseline.json> [--threshold FRAC]
             compare two benchkit/v1 runs; fail on kernel/* median regressions
+            (an empty/stub baseline is an error — promote a real run first)
+  bench-speedup <run.json>... [--min-speedup X]
+            within-run SIMD gate: best kernel/*/scalar vs /simd pair must
+            show at least X speedup (default 2.0)
   loadgen   --addr HOST:PORT --data DIR [--patients LIST] [--sessions N]
             [--concurrency N] [--record K] [--chunk N] [--report FILE]
             [--allow-drops]   replay concurrent wire sessions, report loadgen/v1
   loadgen-diff <current.json> <baseline.json> [--threshold FRAC]
-            compare two loadgen/v1 reports (stub baseline = advisory)
+            compare two loadgen/v1 reports (stub baseline = error)
+
+kernel sets: scalar | avx2 | neon | auto   (also: HDC_KERNELS env,
+            [runtime] kernels in the config file)
 
 variants: dense-baseline | sparse-baseline | sparse-compim | sparse-optimized
 "#

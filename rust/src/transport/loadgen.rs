@@ -12,7 +12,8 @@
 //! The report is a versioned `loadgen/v1` JSON document (same
 //! schema-tag discipline as `benchkit/v1`), diffable across runs with
 //! `repro loadgen-diff`. A committed baseline with `"sessions": 0` is
-//! the "no baseline yet" stub — the diff reports but does not gate.
+//! the "no baseline yet" stub — the diff refuses it; promote a real
+//! report over it first (`scripts/promote-bench-baselines.sh`).
 
 use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
 use std::sync::Mutex;
@@ -145,7 +146,8 @@ pub fn parse_loadgen_json(text: &str) -> crate::Result<LoadgenReport> {
 }
 
 /// A committed baseline that has never been refreshed from a real run
-/// (the `"sessions": 0` stub): diffs against it are advisory.
+/// (the `"sessions": 0` stub): `repro loadgen-diff` refuses to gate
+/// against it — promote a real report in its place first.
 pub fn is_stub_report(report: &LoadgenReport) -> bool {
     report.sessions == 0
 }

@@ -10,11 +10,15 @@
 use sparse_hdc_ieeg::data::metrics::AlarmPolicy;
 use sparse_hdc_ieeg::data::synth::{SynthConfig, SynthPatient};
 use sparse_hdc_ieeg::evalpool;
+use sparse_hdc_ieeg::hdc::am::{AssociativeMemory, Metric};
 use sparse_hdc_ieeg::hdc::bundling::{self, SpatialCounts, SPATIAL_PLANES};
 use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
-use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::hv::{Hv, WORDS};
+use sparse_hdc_ieeg::hdc::simd::{self, KernelSet};
 use sparse_hdc_ieeg::hdc::sparse::SparseHv;
-use sparse_hdc_ieeg::hdc::temporal::{TemporalAccumulator, TemporalAccumulatorReference};
+use sparse_hdc_ieeg::hdc::temporal::{
+    TemporalAccumulator, TemporalAccumulatorReference, TEMPORAL_PLANES,
+};
 use sparse_hdc_ieeg::params::{CHANNELS, TEMPORAL_COUNTER_MAX};
 use sparse_hdc_ieeg::pipeline::{self, PatientEval};
 use sparse_hdc_ieeg::testkit::{property, Gen};
@@ -140,6 +144,175 @@ fn temporal_saturation_pins_at_counter_max() {
     assert!(fast.counts().iter().all(|&c| c == TEMPORAL_COUNTER_MAX));
     assert_eq!(fast.peek(TEMPORAL_COUNTER_MAX), Hv::ones());
     assert_eq!(fast.peek(TEMPORAL_COUNTER_MAX + 1), Hv::zero());
+}
+
+// ---------------------------------------------------------------------
+// Kernel dispatch tier: every supported KernelSet == scalar, bit-exact
+// ---------------------------------------------------------------------
+
+/// Drive one kernel set and the scalar set through identical random
+/// workloads and assert bit-exact agreement on every output *and* every
+/// side channel (carry-out masks, plane state).
+fn assert_set_matches_scalar(ks: &KernelSet, g: &mut Gen) {
+    let scalar = KernelSet::scalar();
+
+    // Spatial 7-plane carry-save: same planes, same carry-out word per
+    // add — including forced overflow past 127 inputs (dense HVs drive
+    // most columns over the top well before add #130).
+    let mut a = [[0u64; WORDS]; SPATIAL_PLANES];
+    let mut b = a;
+    for i in 0..130 {
+        let hv = g.hv(0.9);
+        let spill_a = (ks.plane_add)(&mut a, &hv);
+        let spill_b = (scalar.plane_add)(&mut b, &hv);
+        assert_eq!(spill_a, spill_b, "{}: spatial carry-out, add #{i}", ks.name);
+    }
+    assert_eq!(a, b, "{}: spatial planes after overflow", ks.name);
+
+    // SpatialCounts round trip at sane input counts: counts + every
+    // reachable threshold (0 and 2^7 exercise the trivial-edge handling
+    // above the kernel, the rest the comparator itself).
+    let n = g.range(0, 127);
+    let mut fast = SpatialCounts::new();
+    let mut slow = SpatialCounts::new();
+    for _ in 0..n {
+        let hv = g.hv(g.f64() * 0.6);
+        fast.add_hv_with(&hv, ks);
+        slow.add_hv_with(&hv, scalar);
+    }
+    assert_eq!(*fast.counts_with(ks), *slow.counts_with(scalar), "{}: counts", ks.name);
+    for t in 0..=(1 << SPATIAL_PLANES) {
+        assert_eq!(fast.thin_with(t, ks), slow.thin_with(t, scalar), "{}: thin t={t}", ks.name);
+    }
+
+    // Temporal 8-plane saturating accumulate: deep past saturation, then
+    // every threshold including the 255 saturation edge and transposed
+    // counts.
+    let mut fast = TemporalAccumulator::new();
+    let mut slow = TemporalAccumulator::new();
+    let frames = g.range(1, 300);
+    for _ in 0..frames {
+        let f = g.hv(g.f64() * 0.8);
+        fast.add_with(&f, ks);
+        slow.add_with(&f, scalar);
+    }
+    assert_eq!(*fast.counts_with(ks), *slow.counts_with(scalar), "{}: temporal counts", ks.name);
+    for t in 0..=(TEMPORAL_COUNTER_MAX + 2) {
+        assert_eq!(
+            fast.peek_with(t, ks),
+            slow.peek_with(t, scalar),
+            "{}: temporal thin t={t}",
+            ks.name
+        );
+    }
+
+    // Raw ge_threshold / transpose over hand-packed plane state (the
+    // accumulators above never produce *arbitrary* plane bits; random
+    // planes do).
+    let mut planes = [[0u64; WORDS]; TEMPORAL_PLANES];
+    for plane in planes.iter_mut() {
+        for w in plane.iter_mut() {
+            *w = g.hv(0.5).words[0];
+        }
+    }
+    assert_eq!(
+        *(ks.transpose_counts)(&planes),
+        *(scalar.transpose_counts)(&planes),
+        "{}: transpose of random planes",
+        ks.name
+    );
+    for t in 1..=TEMPORAL_COUNTER_MAX {
+        assert_eq!(
+            (ks.ge_threshold)(&planes, t as u64),
+            (scalar.ge_threshold)(&planes, t as u64),
+            "{}: ge_threshold t={t} on random planes",
+            ks.name
+        );
+    }
+
+    // Fused two-class scoring against the Hv methods.
+    let q = g.hv(g.f64());
+    let c0 = g.hv(g.f64());
+    let c1 = g.hv(g.f64());
+    assert_eq!(
+        (ks.overlap2)(&q, &c0, &c1),
+        [q.overlap(&c0), q.overlap(&c1)],
+        "{}: overlap2",
+        ks.name
+    );
+    assert_eq!(
+        (ks.hamming2)(&q, &c0, &c1),
+        [q.hamming(&c0), q.hamming(&c1)],
+        "{}: hamming2",
+        ks.name
+    );
+}
+
+#[test]
+fn prop_every_supported_set_matches_scalar_bit_exactly() {
+    for ks in KernelSet::supported() {
+        property(&format!("kernel set {} == scalar", ks.name), 30, |g| {
+            assert_set_matches_scalar(ks, g);
+        });
+    }
+}
+
+/// The satellite's explicit form: whatever `auto()` resolved to on this
+/// machine agrees with scalar bit-exactly (redundant with the loop above
+/// when auto is in `supported()`, but this is the property the dispatch
+/// default actually relies on — keep it named).
+#[test]
+fn prop_auto_set_matches_scalar_bit_exactly() {
+    property("KernelSet::auto() == KernelSet::scalar()", 30, |g| {
+        assert_set_matches_scalar(KernelSet::auto(), g);
+    });
+}
+
+#[test]
+fn search_batch_matches_serial_oracle_at_edge_sizes() {
+    // Batch sizes 0 / 1 / odd / beyond the engine-pool queue depth (64),
+    // both metrics, every supported set: the batched fused path must
+    // agree with per-query scalar search exactly.
+    property("search_batch_with == per-query scalar", 10, |g: &mut Gen| {
+        let am = AssociativeMemory::new(g.hv(0.5), g.hv(0.5));
+        let scalar = KernelSet::scalar();
+        for &n in &[0usize, 1, 7, 129] {
+            let queries: Vec<Hv> = g.vec(n, |g| g.hv(0.25));
+            for metric in [Metric::Overlap, Metric::Hamming] {
+                let expect = am.search_batch_with(&queries, metric, scalar);
+                assert_eq!(expect.len(), n);
+                // The batched path itself matches the serial entry points.
+                let serial: Vec<_> = queries
+                    .iter()
+                    .map(|q| match metric {
+                        Metric::Overlap => am.search(q),
+                        Metric::Hamming => am.search_dense(q),
+                    })
+                    .collect();
+                assert_eq!(expect, serial, "batch {n}, {metric:?} vs serial");
+                for ks in KernelSet::supported() {
+                    let got = am.search_batch_with(&queries, metric, ks);
+                    assert_eq!(got, expect, "{}: batch {n}, {metric:?}", ks.name);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn active_set_honours_the_env_override() {
+    // The forced-kernel CI legs (`HDC_KERNELS=scalar` / `=avx2`) rely on
+    // this: the process-wide active set is exactly what the env asked
+    // for, or `auto()` when unset. A bad/unsupported value panics inside
+    // `active()` before this assert — which is also what the legs want
+    // (no silent downgrade to a set that wasn't exercised).
+    let active = simd::active();
+    match std::env::var("HDC_KERNELS") {
+        Ok(name) if name != "auto" => assert_eq!(active.name, name),
+        _ => assert_eq!(active.name, KernelSet::auto().name),
+    }
+    // And the pin is sticky: re-selecting the same name is fine.
+    simd::select(active.name).expect("re-selecting the active set is idempotent");
 }
 
 // ---------------------------------------------------------------------

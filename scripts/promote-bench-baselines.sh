@@ -1,17 +1,21 @@
 #!/usr/bin/env bash
-# Promote a CI run's bench-trajectory-json artifact to the committed
-# perf baselines (ROADMAP "Perf trajectory" item).
+# Promote a CI run's measured perf artifacts to the committed baselines
+# (ROADMAP "Perf trajectory" item): benchkit/v1 bench JSON and, when
+# present, the wire job's loadgen/v1 report.
 #
 # Usage:
-#   1. Download the `bench-trajectory-json` artifact from a CI run on the
-#      target commit (or run the benches locally:
+#   1. Download the `bench-trajectory-json` (and optionally
+#      `loadgen-report`) artifact from a CI run on the target commit —
+#      or run the benches locally:
 #      BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_encoder.current.json \
 #          cargo bench --bench bench_encoder
 #      BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_am.current.json \
 #          cargo bench --bench bench_am).
 #   2. ./scripts/promote-bench-baselines.sh [artifact-dir]
-#   3. Review the diff and commit — `repro bench-diff` then gates kernel/*
-#      medians against real numbers instead of the empty stubs.
+#   3. Review the diff and commit — `repro bench-diff` / `repro
+#      loadgen-diff` then gate against real numbers. Both refuse to run
+#      against a never-promoted stub baseline, so this promotion is not
+#      optional once the gates are in CI.
 set -euo pipefail
 
 src="${1:-.}"
@@ -34,4 +38,22 @@ promote() {
 promote BENCH_encoder
 promote BENCH_am
 
-echo "done — review with: git diff BENCH_encoder.json BENCH_am.json"
+# Wire-job loadgen report (sessions > 0 distinguishes a real report from
+# the committed stub).
+loadgen_current="$src/loadgen.current.json"
+if [[ -f "$loadgen_current" ]]; then
+    if ! grep -q '"schema": "loadgen/v1"' "$loadgen_current"; then
+        echo "refuse: $loadgen_current does not look like a loadgen/v1 report" >&2
+        exit 1
+    fi
+    if grep -Eq '"sessions": 0[,}[:space:]]' "$loadgen_current"; then
+        echo "refuse: $loadgen_current is itself a stub (0 sessions)" >&2
+        exit 1
+    fi
+    cp "$loadgen_current" "$root/LOADGEN_wire.json"
+    echo "promoted $loadgen_current -> $root/LOADGEN_wire.json"
+else
+    echo "skip: $loadgen_current not found" >&2
+fi
+
+echo "done — review with: git diff BENCH_encoder.json BENCH_am.json LOADGEN_wire.json"
