@@ -1,0 +1,102 @@
+//! Model-memory benchmarks: the fleet-scale registry paths behind
+//! `--cache-planes` / `[model] cache_planes`.
+//!
+//! ```bash
+//! cargo bench --bench bench_registry
+//! BENCH_FAST=1 BENCH_JSON=$PWD/BENCH_registry.json cargo bench --bench bench_registry
+//! ```
+//!
+//! The second form is what CI runs; the JSON feeds the `repro bench-diff`
+//! trajectory gate (`registry/*` records gate alongside `kernel/*`).
+//! Three paths, matching the serve lifecycle:
+//!
+//! - `registry/cold_open` — open + lazily index a fleet store (META/PROV
+//!   reads only, no plane decodes).
+//! - `registry/warm_hit`  — `plane()` on resident cache entries, the
+//!   steady-state serving path.
+//! - `registry/evict_redecode` — alternating two patients through a
+//!   budget-of-1 cache, the worst-case thrash (every touch evicts and
+//!   re-decodes).
+
+use sparse_hdc_ieeg::benchkit::{black_box, Bench};
+use sparse_hdc_ieeg::coordinator::registry::{ModelRegistry, ModelStore};
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::classifier::{ClassifierConfig, Variant};
+use sparse_hdc_ieeg::hdc::hv::Hv;
+use sparse_hdc_ieeg::hdc::model::{ModelBundle, Provenance};
+use sparse_hdc_ieeg::rng::Xoshiro256;
+use sparse_hdc_ieeg::testkit;
+
+const PATIENTS: u32 = 8;
+const VERSIONS: u64 = 4;
+
+fn patient_bundle(rng: &mut Xoshiro256, pid: u32, version: u64) -> ModelBundle {
+    let mut b = ModelBundle::new(
+        Variant::Optimized,
+        ClassifierConfig::optimized(),
+        AssociativeMemory::new(Hv::random(rng, 0.25), Hv::random(rng, 0.25)),
+        Provenance::default(),
+    );
+    b.version = version;
+    b.provenance.patient_id = pid;
+    b.provenance.parent_version = version - 1;
+    b
+}
+
+fn main() {
+    let mut b = Bench::new();
+    let mut rng = Xoshiro256::new(23);
+
+    // --- cold open: index a fleet store without decoding planes --------
+    let dir = testkit::scratch_dir("bench_registry_store");
+    {
+        let store = ModelStore::open(&dir).unwrap();
+        for pid in 1..=PATIENTS {
+            for v in 1..=VERSIONS {
+                store.save(&patient_bundle(&mut rng, pid, v)).unwrap();
+            }
+        }
+    }
+    b.bench_throughput(
+        "registry/cold_open",
+        (PATIENTS as u64 * VERSIONS) as f64,
+        || {
+            let store = ModelStore::open(black_box(&dir)).unwrap();
+            let peek = store.peek().unwrap();
+            assert_eq!(peek.recovered.len(), PATIENTS as usize);
+            peek.recovered.len()
+        },
+    );
+
+    // --- warm hit: steady-state serving on a resident cache ------------
+    let registry = ModelRegistry::with_cache_planes(PATIENTS as usize);
+    for pid in 1..=PATIENTS {
+        registry.publish(pid, patient_bundle(&mut rng, pid, 1)).unwrap();
+    }
+    // Prime: the timed loop below measures pure hits, not first decodes.
+    for pid in 1..=PATIENTS {
+        black_box(registry.current(pid).unwrap().plane());
+    }
+    b.bench_throughput("registry/warm_hit", PATIENTS as f64, || {
+        (1..=PATIENTS)
+            .map(|pid| registry.current(pid).unwrap().plane().i32s()[0])
+            .sum::<i32>()
+    });
+
+    // --- evict + re-decode: thrash a budget-of-1 cache ------------------
+    let thrash = ModelRegistry::with_cache_planes(1);
+    thrash.publish(1, patient_bundle(&mut rng, 1, 1)).unwrap();
+    thrash.publish(2, patient_bundle(&mut rng, 2, 1)).unwrap();
+    let first = thrash.current(1).unwrap();
+    let second = thrash.current(2).unwrap();
+    b.bench_throughput("registry/evict_redecode", 2.0, || {
+        // Each call misses, decodes, and evicts the other's plane.
+        black_box(first.plane().i32s()[0]) ^ black_box(second.plane().i32s()[0])
+    });
+    let stats = thrash.plane_cache().stats();
+    assert!(stats.evictions > 0, "thrash loop must actually evict");
+    assert!(stats.redecodes > 0, "thrash loop must actually re-decode");
+
+    std::fs::remove_dir_all(&dir).ok();
+    b.finish();
+}

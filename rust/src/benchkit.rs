@@ -534,15 +534,22 @@ pub struct BenchDiff {
     pub ratio: f64,
 }
 
+/// Record families that block the CI bench-diff gate. `kernel/*` covers
+/// the SIMD/scalar hot loops, `registry/*` the model-memory paths (cold
+/// open, warm cache hit, evict + re-decode). End-to-end names are
+/// tracked but too machine-noisy to fail on.
+pub fn gated_name(name: &str) -> bool {
+    name.starts_with("kernel/") || name.starts_with("registry/")
+}
+
 impl BenchDiff {
-    /// Regression = a `kernel/*` pair whose median slowed down by more
-    /// than `threshold` (0.20 = 20%). Only the kernel pairs gate: the
-    /// end-to-end numbers are tracked but too machine-noisy to fail on.
-    /// Fail-closed: a non-finite ratio (zero/NaN baseline — `> threshold`
-    /// catches +inf, the NaN check the rest) on a kernel pair counts as a
-    /// regression rather than slipping through.
+    /// Regression = a gated pair ([`gated_name`]) whose median slowed
+    /// down by more than `threshold` (0.20 = 20%). Fail-closed: a
+    /// non-finite ratio (zero/NaN baseline — `> threshold` catches +inf,
+    /// the NaN check the rest) on a gated pair counts as a regression
+    /// rather than slipping through.
     pub fn is_regression(&self, threshold: f64) -> bool {
-        self.name.starts_with("kernel/") && (self.ratio > 1.0 + threshold || self.ratio.is_nan())
+        gated_name(&self.name) && (self.ratio > 1.0 + threshold || self.ratio.is_nan())
     }
 }
 
@@ -732,20 +739,25 @@ mod tests {
             rec("kernel/b", 1.0e-6),
             rec("window/c", 1.0e-3),
             rec("kernel/gone", 1.0e-6),
+            rec("registry/warm_hit", 1.0e-6),
         ];
         let current = vec![
             rec("kernel/a", 1.1e-6),  // +10% — under the 20% gate
             rec("kernel/b", 1.5e-6),  // +50% — regression
-            rec("window/c", 900.0),   // huge, but not kernel/* — tracked only
+            rec("window/c", 900.0),   // huge, but not gated — tracked only
             rec("kernel/new", 1.0e-6), // unmatched — ignored
+            rec("registry/warm_hit", 2.0e-6), // +100% — registry/* gates too
         ];
         let diffs = diff_benchkit_records(&current, &baseline);
-        assert_eq!(diffs.len(), 3, "only names present in both runs pair up");
+        assert_eq!(diffs.len(), 4, "only names present in both runs pair up");
         let by_name = |n: &str| diffs.iter().find(|d| d.name == n).unwrap();
         assert!(!by_name("kernel/a").is_regression(0.20));
         assert!(by_name("kernel/a").is_regression(0.05));
         assert!(by_name("kernel/b").is_regression(0.20));
-        assert!(!by_name("window/c").is_regression(0.20), "non-kernel never gates");
+        assert!(!by_name("window/c").is_regression(0.20), "non-gated never gates");
+        assert!(by_name("registry/warm_hit").is_regression(0.20));
+        assert!(gated_name("registry/cold_open") && gated_name("kernel/a"));
+        assert!(!gated_name("window/c"));
         // Fail-closed: a pathological zero baseline (infinite ratio) on a
         // kernel pair flags rather than slipping through.
         let weird = diff_benchkit_records(&[rec("kernel/z", 1.0e-6)], &[rec("kernel/z", 0.0)]);

@@ -36,8 +36,8 @@ fn classifier_config(args: &Args, variant: Variant) -> sparse_hdc_ieeg::Result<C
 /// `repro bench-diff <current.json> <baseline.json> [--threshold FRAC]`
 ///
 /// Compare two benchkit/v1 documents pairwise (matched by record name)
-/// and fail when any `kernel/*` median regressed by more than
-/// `--threshold` (default 0.20 = 20%). The gate is blocking: an empty
+/// and fail when any gated (`kernel/*` or `registry/*`) median regressed
+/// by more than `--threshold` (default 0.20 = 20%). The gate is blocking: an empty
 /// baseline (the pre-promotion stub) is an **error**, not a pass — CI
 /// self-promotes a stub via `scripts/promote-bench-baselines.sh` before
 /// running the diff, so there is always something real to gate against.
@@ -63,12 +63,12 @@ pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     );
 
     let diffs = benchkit::diff_benchkit_records(&current, &baseline);
-    // Fail-closed on lost coverage: a baseline kernel/* bench with no
+    // Fail-closed on lost coverage: a baseline gated bench with no
     // counterpart in the current run (renamed, filtered out, crashed)
     // must not make the gate pass vacuously.
     let missing: Vec<&str> = baseline
         .iter()
-        .filter(|b| b.name.starts_with("kernel/"))
+        .filter(|b| benchkit::gated_name(&b.name))
         .filter(|b| !current.iter().any(|c| c.name == b.name))
         .map(|b| b.name.as_str())
         .collect();
@@ -108,13 +108,13 @@ pub fn bench_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     }
     ensure!(
         regressions == 0 && missing.is_empty(),
-        "{regressions} kernel/* median(s) regressed more than {:.0}% and {} kernel/* \
+        "{regressions} gated median(s) regressed more than {:.0}% and {} gated \
          baseline bench(es) are missing from the current run",
         threshold * 100.0,
         missing.len()
     );
     println!(
-        "bench-diff: {} pairs compared, no kernel/* regression above {:.0}%",
+        "bench-diff: {} pairs compared, no gated regression above {:.0}%",
         diffs.len(),
         threshold * 100.0
     );
@@ -457,6 +457,8 @@ pub fn model_info(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         // Read-only inspection: `peek` reports corrupt files but never
         // renames them — looking at a store must not change it (the
         // quarantine side effect belongs to `serve`'s recovery scan).
+        // Listing goes through lazy bundles: only META/CFGS/PROV are
+        // read, so peeking a fleet-sized store never decodes a plane.
         let store = sparse_hdc_ieeg::coordinator::registry::ModelStore::open(path)?;
         let scan = store.peek()?;
         ensure!(
@@ -470,11 +472,12 @@ pub fn model_info(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         for (pid, bundle) in &scan.recovered {
             println!(
                 "  patient {pid}: latest v{} (format {}, {} online epoch(s), counter planes {})",
-                bundle.version,
+                bundle.version(),
                 bundle.wire_format(),
-                bundle.provenance.epochs,
-                if bundle.counters.is_some() { "present" } else { "absent" },
+                bundle.provenance().epochs,
+                if bundle.has_counters() { "present" } else { "absent" },
             );
+            debug_assert_eq!(bundle.decode_count(), 0, "listing must stay lazy");
         }
         for q in &scan.quarantined {
             println!("  corrupt: {}", q.display());

@@ -220,6 +220,16 @@ pub struct SystemConfig {
     /// Retrains allowed per patient per serve run
     /// (`[model] max_retrains`; 0 = unlimited).
     pub retrain_max: u64,
+    /// Decoded associative-memory planes kept resident at once
+    /// (`[model] cache_planes`, CLI `--cache-planes`; 0 = unbounded).
+    /// Bounds serve-side model memory: planes past the budget are
+    /// evicted LRU and re-decoded from their bundle on the next touch.
+    pub cache_planes: usize,
+    /// Bundle versions kept on disk per patient (`[model]
+    /// max_versions_per_patient`, CLI `--max-model-versions`; 0 = keep
+    /// everything). The store GC runs at publish time and never removes
+    /// live, newest, or lineage-parent versions.
+    pub max_versions_per_patient: usize,
     /// Wire-serve listen address (`[server] listen`, CLI `--listen`);
     /// unset = in-process replay serving.
     pub listen: Option<String>,
@@ -253,6 +263,8 @@ impl Default for SystemConfig {
             retrain_fa_window: 64,
             retrain_cooldown: 512,
             retrain_max: 1,
+            cache_planes: 0,
+            max_versions_per_patient: 0,
             listen: None,
             heartbeat_ms: 1000,
             staleness_ms: 5000,
@@ -308,6 +320,11 @@ impl SystemConfig {
         cfg.retrain_fa_window = file.get_parse("model.fa_window", cfg.retrain_fa_window)?;
         cfg.retrain_cooldown = file.get_parse("model.retrain_cooldown", cfg.retrain_cooldown)?;
         cfg.retrain_max = file.get_parse("model.max_retrains", cfg.retrain_max)?;
+        cfg.cache_planes = file.get_parse("model.cache_planes", cfg.cache_planes)?;
+        cfg.max_versions_per_patient = file.get_parse(
+            "model.max_versions_per_patient",
+            cfg.max_versions_per_patient,
+        )?;
         cfg.listen = file.get("server.listen").map(str::to_string);
         cfg.heartbeat_ms = file.get_parse("server.heartbeat_ms", cfg.heartbeat_ms)?;
         cfg.staleness_ms = file.get_parse("server.staleness_ms", cfg.staleness_ms)?;
@@ -348,6 +365,8 @@ fa_rate = 0.15
 fa_window = 32
 retrain_cooldown = 128
 max_retrains = 4
+cache_planes = 2
+max_versions_per_patient = 6
 
 [server]
 listen = "127.0.0.1:7070"
@@ -384,6 +403,8 @@ conn_queue = 32
         assert_eq!(cfg.retrain_fa_window, 32);
         assert_eq!(cfg.retrain_cooldown, 128);
         assert_eq!(cfg.retrain_max, 4);
+        assert_eq!(cfg.cache_planes, 2);
+        assert_eq!(cfg.max_versions_per_patient, 6);
         assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(cfg.heartbeat_ms, 500);
         assert_eq!(cfg.staleness_ms, 4000);
@@ -428,6 +449,8 @@ conn_queue = 32
         assert_eq!(cfg.retrain_epochs, 0);
         assert_eq!(cfg.retrain_fa_window, 64);
         assert_eq!(cfg.retrain_max, 1);
+        assert_eq!(cfg.cache_planes, 0);
+        assert_eq!(cfg.max_versions_per_patient, 0);
         assert_eq!(cfg.listen, None);
         assert_eq!(cfg.heartbeat_ms, 1000);
         assert_eq!(cfg.staleness_ms, 5000);

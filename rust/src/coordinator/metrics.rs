@@ -185,6 +185,16 @@ pub struct ServingMetrics {
     pub false_positives: u64,
     /// Retrains the scheduler triggered during this run (all patients).
     pub retrains_triggered: u64,
+    /// Plane-cache lookups served from a resident decoded plane
+    /// ([`crate::coordinator::registry::PlaneCache`]).
+    pub plane_hits: u64,
+    /// Plane-cache lookups that had to decode (first touch of a version).
+    pub plane_misses: u64,
+    /// Decoded planes evicted to stay inside the `cache_planes` budget.
+    pub plane_evictions: u64,
+    /// Misses on a version that was decoded before — the cost of an
+    /// eviction paid back (each re-decode is also counted as a miss).
+    pub plane_redecodes: u64,
     pub latency: LatencyHistogram,
 }
 
@@ -208,8 +218,21 @@ impl ServingMetrics {
             model_swaps: 0,
             false_positives: 0,
             retrains_triggered: 0,
+            plane_hits: 0,
+            plane_misses: 0,
+            plane_evictions: 0,
+            plane_redecodes: 0,
             latency: LatencyHistogram::new(),
         }
+    }
+
+    /// Copy the end-of-run plane-cache counters in from the registry's
+    /// [`crate::coordinator::registry::PlaneCacheStats`] snapshot.
+    pub fn record_plane_cache(&mut self, stats: crate::coordinator::registry::PlaneCacheStats) {
+        self.plane_hits = stats.hits;
+        self.plane_misses = stats.misses;
+        self.plane_evictions = stats.evictions;
+        self.plane_redecodes = stats.redecodes;
     }
 
     pub fn elapsed_s(&self) -> f64 {
@@ -228,6 +251,7 @@ impl ServingMetrics {
         format!(
             "samples {} | windows {}/{} ({} failed) | alarms {} | FPs {} | stalls {} | \
              model swaps {} | retrains {} | \
+             plane cache {} hits {} misses {} evictions {} re-decodes | \
              window latency mean {:.2} ms p50 {:.2} ms p95 {:.2} ms p99 {:.2} ms max {:.2} ms | \
              {:.0} windows/s, {:.0} samples/s",
             self.samples_in,
@@ -239,6 +263,10 @@ impl ServingMetrics {
             self.backpressure_stalls,
             self.model_swaps,
             self.retrains_triggered,
+            self.plane_hits,
+            self.plane_misses,
+            self.plane_evictions,
+            self.plane_redecodes,
             self.latency.mean_s() * 1e3,
             self.latency.quantile_s(0.50) * 1e3,
             self.latency.quantile_s(0.95) * 1e3,
@@ -394,8 +422,15 @@ mod tests {
         m.samples_in = 100;
         m.windows_completed = 2;
         m.latency.record(0.001);
+        m.record_plane_cache(crate::coordinator::registry::PlaneCacheStats {
+            hits: 7,
+            misses: 3,
+            evictions: 2,
+            redecodes: 1,
+        });
         let s = m.summary();
         assert!(s.contains("windows 2/0"));
+        assert!(s.contains("plane cache 7 hits 3 misses 2 evictions 1 re-decodes"), "{s}");
     }
 
     #[test]

@@ -22,6 +22,21 @@
 //!   newer model reads differently from a double-publish bug, and
 //!   operators triage them differently.
 //!
+//! ## Plane memory ([`PlaneCache`])
+//!
+//! At fleet scale the registry must be a *cache*, not a map: a node
+//! serving many patients cannot keep every version's decoded [`AmPlane`]
+//! resident. [`PublishedModel`] therefore no longer owns its plane —
+//! [`PublishedModel::plane`] goes through the registry-wide
+//! [`PlaneCache`], a bounded LRU keyed by `(patient, version)` that
+//! decodes on miss and evicts strictly least-recently-used once the
+//! `[model] cache_planes` budget is exceeded (0 = unbounded, the
+//! default, preserving always-resident behavior). Eviction only drops
+//! the cache's own `Arc`: in-flight jobs hold plane clones, so a job
+//! mid-`run_batch` is never invalidated, and a re-decode rebuilds the
+//! plane from the same bundle bytes — bit-exact by construction and
+//! pinned window-for-window in `tests/plane_cache.rs`.
+//!
 //! ## Persistence ([`ModelStore`])
 //!
 //! The registry itself is memory-only; [`ModelStore`] is its durable
@@ -31,30 +46,184 @@
 //! the highest *valid* version per patient — quarantining corrupt files
 //! (renamed `*.corrupt`) and ignoring leftover temp files from a crashed
 //! publish — so `repro serve --models-dir` resumes exactly where the
-//! last publish left off.
+//! last publish left off. [`ModelStore::peek`] lists the same tree
+//! through [`LazyBundle`]s (META/CFGS/PROV only — no plane decode), and
+//! [`ModelStore::prune`] retires old versions on publish (renamed
+//! `*.pruned`, never unlinked) while keeping the recovery-newest
+//! version, live versions and their lineage parents.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::ensure;
 use crate::error::Context;
 use crate::hdc::am::AmPlane;
-use crate::hdc::model::ModelBundle;
+use crate::hdc::model::{LazyBundle, ModelBundle};
 
-/// A bundle as deployed: the artifact plus its decoded engine plane.
+/// Counter snapshot of a [`PlaneCache`] (see [`PlaneCache::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneCacheStats {
+    /// `plane()` calls served from the cache.
+    pub hits: u64,
+    /// First-ever decodes of a `(patient, version)` key.
+    pub misses: u64,
+    /// Planes dropped by the LRU to respect the budget.
+    pub evictions: u64,
+    /// Decodes of a key that was decoded before and evicted since —
+    /// the recompute the bounded budget trades memory for.
+    pub redecodes: u64,
+}
+
+struct CacheSlot {
+    plane: Arc<AmPlane>,
+    /// Last-use tick for LRU ordering.
+    used: u64,
+}
+
+struct CacheInner {
+    slots: BTreeMap<(u32, u64), CacheSlot>,
+    /// Keys ever decoded — distinguishes a first decode (miss) from a
+    /// post-eviction re-decode.
+    seen: BTreeSet<(u32, u64)>,
+    tick: u64,
+}
+
+/// Bounded LRU of decoded [`AmPlane`]s keyed by `(patient, version)`.
+///
+/// The software mirror of the paper's CompIM memory argument: keep the
+/// cheap index (the bundle) resident, regenerate the expensive decoded
+/// form on demand within a fixed budget. While a key is resident every
+/// [`Self::plane_for`] call returns the *same* `Arc` — preserving the
+/// engine host's Arc-identity coalescing — and eviction removes only the
+/// cache's reference, so planes held by in-flight jobs stay alive until
+/// those jobs complete.
+pub struct PlaneCache {
+    /// Maximum resident planes (0 = unbounded).
+    budget: usize,
+    inner: Mutex<CacheInner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    redecodes: AtomicU64,
+}
+
+impl PlaneCache {
+    pub fn unbounded() -> PlaneCache {
+        Self::with_budget(0)
+    }
+
+    /// A cache holding at most `budget` decoded planes (0 = unbounded).
+    pub fn with_budget(budget: usize) -> PlaneCache {
+        PlaneCache {
+            budget,
+            inner: Mutex::new(CacheInner {
+                slots: BTreeMap::new(),
+                seen: BTreeSet::new(),
+                tick: 0,
+            }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            redecodes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Planes currently resident (always ≤ budget when bounded).
+    pub fn resident(&self) -> usize {
+        self.lock().slots.len()
+    }
+
+    pub fn stats(&self) -> PlaneCacheStats {
+        PlaneCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            redecodes: self.redecodes.load(Ordering::Relaxed),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, CacheInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// The decoded plane for `(patient_id, bundle.version)`: cache hit,
+    /// or decode-and-insert (evicting the least-recently-used plane past
+    /// the budget). The decode is a pure function of the bundle bytes,
+    /// so an evicted-and-redecoded plane is bit-identical to the one it
+    /// replaces.
+    fn plane_for(&self, patient_id: u32, bundle: &ModelBundle) -> Arc<AmPlane> {
+        let key = (patient_id, bundle.version);
+        let mut inner = self.lock();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(slot) = inner.slots.get_mut(&key) {
+            slot.used = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return slot.plane.clone();
+        }
+        if inner.seen.insert(key) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.redecodes.fetch_add(1, Ordering::Relaxed);
+        }
+        let plane = Arc::new(AmPlane::from_bundle(bundle));
+        inner.slots.insert(key, CacheSlot { plane: plane.clone(), used: tick });
+        if self.budget > 0 {
+            while inner.slots.len() > self.budget {
+                // O(n) LRU scan: n is the (small) plane budget, not the
+                // fleet size, so a heap buys nothing here.
+                let lru = inner
+                    .slots
+                    .iter()
+                    .min_by_key(|(_, slot)| slot.used)
+                    .map(|(k, _)| *k)
+                    .expect("non-empty past-budget cache");
+                inner.slots.remove(&lru);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        plane
+    }
+}
+
+/// A bundle as deployed: the artifact plus a handle to the plane cache
+/// its decoded engine plane lives in.
 pub struct PublishedModel {
     pub bundle: ModelBundle,
-    /// Shared with every job submitted against this version ([`Arc`]
-    /// identity doubles as the engine host's coalescing key).
-    pub plane: Arc<AmPlane>,
+    /// Cache key — the *registry* patient id (test bundles may carry a
+    /// default provenance patient), paired with the bundle version.
+    key: (u32, u64),
+    cache: Arc<PlaneCache>,
 }
 
 impl PublishedModel {
+    /// A standalone model with its own private unbounded cache — tests,
+    /// benches and placeholder paths. Registry publishes go through
+    /// [`Self::cached`] so every model shares the registry-wide budget.
     pub fn new(bundle: ModelBundle) -> PublishedModel {
-        let plane = Arc::new(AmPlane::from_bundle(&bundle));
-        PublishedModel { bundle, plane }
+        let patient_id = bundle.provenance.patient_id;
+        Self::cached(patient_id, bundle, Arc::new(PlaneCache::unbounded()))
+    }
+
+    /// Wrap `bundle` for serving with its plane managed by `cache`.
+    pub fn cached(patient_id: u32, bundle: ModelBundle, cache: Arc<PlaneCache>) -> PublishedModel {
+        let key = (patient_id, bundle.version);
+        PublishedModel { bundle, key, cache }
+    }
+
+    /// The engine-ready plane: cache hit or re-decode. Shared with every
+    /// job submitted against this version — `Arc` identity doubles as
+    /// the engine host's coalescing key, and while the plane is resident
+    /// every call returns the same `Arc`. Jobs clone the `Arc`, so a
+    /// later eviction never invalidates work already in flight.
+    pub fn plane(&self) -> Arc<AmPlane> {
+        self.cache.plane_for(self.key.0, &self.bundle)
     }
 
     pub fn version(&self) -> u64 {
@@ -89,6 +258,7 @@ impl PublishedModel {
 pub struct ModelRegistry {
     slots: RwLock<BTreeMap<u32, Arc<PublishedModel>>>,
     publishes: AtomicU64,
+    cache: Arc<PlaneCache>,
 }
 
 impl Default for ModelRegistry {
@@ -98,11 +268,25 @@ impl Default for ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// A registry with an unbounded plane cache (every published plane
+    /// stays resident — the pre-fleet-scale behavior).
     pub fn new() -> ModelRegistry {
+        Self::with_cache_planes(0)
+    }
+
+    /// A registry whose decoded planes are bounded to `cache_planes`
+    /// resident at once (0 = unbounded). See [`PlaneCache`].
+    pub fn with_cache_planes(cache_planes: usize) -> ModelRegistry {
         ModelRegistry {
             slots: RwLock::new(BTreeMap::new()),
             publishes: AtomicU64::new(0),
+            cache: Arc::new(PlaneCache::with_budget(cache_planes)),
         }
+    }
+
+    /// The registry-wide plane cache (hit/miss/eviction observability).
+    pub fn plane_cache(&self) -> &PlaneCache {
+        &self.cache
     }
 
     fn read(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<u32, Arc<PublishedModel>>> {
@@ -125,7 +309,7 @@ impl ModelRegistry {
         patient_id: u32,
         bundle: ModelBundle,
     ) -> crate::Result<Arc<PublishedModel>> {
-        let model = Arc::new(PublishedModel::new(bundle));
+        let model = Arc::new(PublishedModel::cached(patient_id, bundle, self.cache.clone()));
         let mut slots = self.write();
         if let Some(current) = slots.get(&patient_id) {
             ensure!(
@@ -156,7 +340,7 @@ impl ModelRegistry {
                 return current.clone();
             }
         }
-        let model = Arc::new(PublishedModel::new(bundle));
+        let model = Arc::new(PublishedModel::cached(patient_id, bundle, self.cache.clone()));
         slots.insert(patient_id, model.clone());
         self.publishes.fetch_add(1, Ordering::Relaxed);
         model
@@ -205,6 +389,12 @@ impl ModelRegistry {
 /// scan falls back to the next-newest version.
 pub struct ModelStore {
     root: PathBuf,
+    /// Per-patient newest *valid* version, computed once at
+    /// [`Self::open`] with lazy (META/PROV-only) validation and kept
+    /// current by [`Self::save`] / [`Self::scan`] — so publish-time
+    /// [`Self::prune`] and repeated scans never re-read historical
+    /// bundle files per patient.
+    newest_valid: Mutex<BTreeMap<u32, u64>>,
 }
 
 /// Outcome of a [`ModelStore::scan`].
@@ -212,22 +402,80 @@ pub struct ModelStore {
 pub struct StoreScan {
     /// Highest valid version per patient.
     pub recovered: BTreeMap<u32, ModelBundle>,
-    /// Files that failed to load: renamed `*.corrupt` by [`ModelStore::scan`]
-    /// (the returned paths are the new names), reported at their original
-    /// paths by the read-only [`ModelStore::peek`].
+    /// Files that failed to load: renamed `*.corrupt` by
+    /// [`ModelStore::scan`] (the returned paths are the new names).
     pub quarantined: Vec<PathBuf>,
     /// Entries that are not versioned bundle files (leftover `.tmp`
-    /// publishes, foreign files, non-numeric directories) — left alone.
+    /// publishes, pruned versions, foreign files, non-numeric
+    /// directories) — left alone.
     pub ignored: Vec<PathBuf>,
 }
 
+/// Outcome of a read-only [`ModelStore::peek`]: the same per-patient
+/// newest-valid selection as [`StoreScan`], but each bundle is a
+/// [`LazyBundle`] — only META/CFGS/PROV are read, so listing a
+/// 10k-patient store never decodes a class HV or counter plane
+/// (asserted via [`LazyBundle::decode_count`]).
+#[derive(Default)]
+pub struct StorePeek {
+    /// Highest lazily-valid version per patient.
+    pub recovered: BTreeMap<u32, LazyBundle>,
+    /// Files that failed to open lazily, reported at their original
+    /// paths — peek never renames anything.
+    pub quarantined: Vec<PathBuf>,
+    /// Entries that are not versioned bundle files — left alone.
+    pub ignored: Vec<PathBuf>,
+}
+
+/// Candidate files per patient, newest version first, plus everything
+/// that is not a candidate.
+struct StoreWalk {
+    patients: BTreeMap<u32, Vec<(u64, PathBuf)>>,
+    ignored: Vec<PathBuf>,
+}
+
 impl ModelStore {
-    /// Open (creating if needed) a model store rooted at `root`.
+    /// Open (creating if needed) a model store rooted at `root`. The
+    /// per-patient newest-valid-version index is computed here, once,
+    /// through [`LazyBundle`]s — no plane or counter decode.
     pub fn open(root: impl Into<PathBuf>) -> crate::Result<ModelStore> {
         let root = root.into();
         std::fs::create_dir_all(&root)
             .with_context(|| format!("create model store {}", root.display()))?;
-        Ok(ModelStore { root })
+        let store = ModelStore {
+            root,
+            newest_valid: Mutex::new(BTreeMap::new()),
+        };
+        store.reindex()?;
+        Ok(store)
+    }
+
+    /// The cached newest valid version for a patient, if any.
+    pub fn newest_valid(&self, patient_id: u32) -> Option<u64> {
+        self.newest_lock().get(&patient_id).copied()
+    }
+
+    fn newest_lock(&self) -> std::sync::MutexGuard<'_, BTreeMap<u32, u64>> {
+        self.newest_valid.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Rebuild the newest-valid index with lazy validation (filename
+    /// version and directory patient must match META/PROV).
+    fn reindex(&self) -> crate::Result<()> {
+        let walk = self.walk()?;
+        let mut newest = BTreeMap::new();
+        for (pid, candidates) in walk.patients {
+            for (version, path) in candidates {
+                if let Ok(lazy) = LazyBundle::open(&path) {
+                    if lazy.version() == version && lazy.provenance().patient_id == pid {
+                        newest.insert(pid, version);
+                        break;
+                    }
+                }
+            }
+        }
+        *self.newest_lock() = newest;
+        Ok(())
     }
 
     pub fn root(&self) -> &Path {
@@ -287,26 +535,20 @@ impl ModelStore {
         if let Ok(d) = std::fs::File::open(&dir) {
             let _ = d.sync_all();
         }
+        // A completed save is by construction a valid bundle on disk —
+        // keep the newest-valid index current without re-reading it.
+        let mut newest = self.newest_lock();
+        let slot = newest.entry(patient_id).or_insert(bundle.version);
+        *slot = (*slot).max(bundle.version);
         Ok(path)
     }
 
-    /// Recover the highest valid version per patient (see the type-level
-    /// docs for the corruption / crash-leftover rules). Deterministic:
-    /// directory-read order never affects the result.
-    pub fn scan(&self) -> crate::Result<StoreScan> {
-        self.scan_inner(true)
-    }
-
-    /// Read-only [`Self::scan`]: corrupt files are *reported* under
-    /// `quarantined` at their original paths but never renamed.
-    /// Inspection tools (`repro model-info <dir>`) go through this so
-    /// that looking at a store cannot change it.
-    pub fn peek(&self) -> crate::Result<StoreScan> {
-        self.scan_inner(false)
-    }
-
-    fn scan_inner(&self, quarantine_corrupt: bool) -> crate::Result<StoreScan> {
-        let mut out = StoreScan::default();
+    /// Every versioned candidate file per patient (newest first), plus
+    /// the non-candidates. Deterministic: directory-read order never
+    /// affects the result.
+    fn walk(&self) -> crate::Result<StoreWalk> {
+        let mut patients = BTreeMap::new();
+        let mut ignored = Vec::new();
         let entries = std::fs::read_dir(&self.root)
             .with_context(|| format!("scan model store {}", self.root.display()))?;
         for entry in entries {
@@ -317,7 +559,7 @@ impl ModelStore {
                 .filter(|n| n.bytes().all(|b| b.is_ascii_digit()))
                 .and_then(|n| n.parse::<u32>().ok());
             let (Some(pid), true) = (pid, dir.is_dir()) else {
-                out.ignored.push(dir);
+                ignored.push(dir);
                 continue;
             };
             let mut candidates: Vec<(u64, PathBuf)> = Vec::new();
@@ -325,12 +567,29 @@ impl ModelStore {
                 let path = file?.path();
                 match path.file_name().and_then(|n| n.to_str()).and_then(parse_version_name) {
                     Some(version) => candidates.push((version, path)),
-                    None => out.ignored.push(path),
+                    None => ignored.push(path),
                 }
             }
             // Newest first; the first candidate that loads cleanly wins,
             // older versions stay on disk untouched (history).
             candidates.sort_by(|a, b| b.0.cmp(&a.0));
+            patients.insert(pid, candidates);
+        }
+        Ok(StoreWalk { patients, ignored })
+    }
+
+    /// Recover the highest valid version per patient (see the type-level
+    /// docs for the corruption / crash-leftover rules). Fully validates
+    /// (and decodes) the winning bundle per patient — this is the path
+    /// that actually serves models — and refreshes the newest-valid
+    /// index with its findings.
+    pub fn scan(&self) -> crate::Result<StoreScan> {
+        let walk = self.walk()?;
+        let mut out = StoreScan {
+            ignored: walk.ignored,
+            ..StoreScan::default()
+        };
+        for (pid, candidates) in walk.patients {
             for (version, path) in candidates {
                 match ModelBundle::load(&path) {
                     Ok(b) if b.version == version && b.provenance.patient_id == pid => {
@@ -339,15 +598,114 @@ impl ModelStore {
                     }
                     // Parses but lies about its name (wrong version or
                     // patient): as untrustworthy as a corrupt file.
-                    Ok(_) | Err(_) => out.quarantined.push(if quarantine_corrupt {
-                        quarantine(&path)
-                    } else {
-                        path
-                    }),
+                    Ok(_) | Err(_) => out.quarantined.push(quarantine(&path)),
+                }
+            }
+            let mut newest = self.newest_lock();
+            match out.recovered.get(&pid) {
+                Some(b) => {
+                    newest.insert(pid, b.version);
+                }
+                None => {
+                    newest.remove(&pid);
                 }
             }
         }
         Ok(out)
+    }
+
+    /// Read-only listing through [`LazyBundle`]s: the same newest-valid
+    /// selection as [`Self::scan`], but only META/CFGS/PROV are ever
+    /// read — no `AmPlane`, no counter planes — and nothing on disk is
+    /// renamed. Inspection tools (`repro model-info <dir>`) go through
+    /// this so that looking at a store cannot change it (or blow its
+    /// memory budget).
+    pub fn peek(&self) -> crate::Result<StorePeek> {
+        let walk = self.walk()?;
+        let mut out = StorePeek {
+            ignored: walk.ignored,
+            ..StorePeek::default()
+        };
+        for (pid, candidates) in walk.patients {
+            for (version, path) in candidates {
+                match LazyBundle::open(&path) {
+                    Ok(b) if b.version() == version && b.provenance().patient_id == pid => {
+                        out.recovered.insert(pid, b);
+                        break;
+                    }
+                    Ok(_) | Err(_) => out.quarantined.push(path),
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Retention GC, run on publish: keep the newest `max_versions`
+    /// versions of `patient_id` (0 = keep everything — the default) plus,
+    /// always, the recovery target (newest valid version), every `live`
+    /// version currently serving, and the lineage parents of those
+    /// versions (walked through META/PROV lazy reads). Everything else
+    /// is renamed `<name>.pruned` — quarantine-style safety naming on
+    /// the delete path; nothing is ever unlinked. Returns the renamed
+    /// paths.
+    pub fn prune(
+        &self,
+        patient_id: u32,
+        max_versions: usize,
+        live: &[u64],
+    ) -> crate::Result<Vec<PathBuf>> {
+        if max_versions == 0 {
+            return Ok(Vec::new());
+        }
+        let dir = self.root.join(patient_id.to_string());
+        if !dir.is_dir() {
+            return Ok(Vec::new());
+        }
+        let mut candidates: Vec<(u64, PathBuf)> = Vec::new();
+        for file in std::fs::read_dir(&dir)
+            .with_context(|| format!("prune patient dir {}", dir.display()))?
+        {
+            let path = file?.path();
+            if let Some(version) =
+                path.file_name().and_then(|n| n.to_str()).and_then(parse_version_name)
+            {
+                candidates.push((version, path));
+            }
+        }
+        candidates.sort_by(|a, b| b.0.cmp(&a.0));
+
+        let mut keep: BTreeSet<u64> = live.iter().copied().collect();
+        keep.extend(self.newest_valid(patient_id));
+        // Lineage: a live version's parents stay recoverable, walked
+        // through the store without decoding a single plane.
+        let by_version: BTreeMap<u64, &Path> =
+            candidates.iter().map(|(v, p)| (*v, p.as_path())).collect();
+        let mut frontier: Vec<u64> = keep.iter().copied().collect();
+        while let Some(version) = frontier.pop() {
+            let Some(path) = by_version.get(&version) else { continue };
+            let Ok(lazy) = LazyBundle::open(path) else { continue };
+            let parent = lazy.provenance().parent_version;
+            if parent != 0 && keep.insert(parent) {
+                frontier.push(parent);
+            }
+        }
+        for (version, _) in candidates.iter().take(max_versions) {
+            keep.insert(*version);
+        }
+
+        let mut pruned = Vec::new();
+        for (version, path) in &candidates {
+            if keep.contains(version) {
+                continue;
+            }
+            let mut name = path.as_os_str().to_owned();
+            name.push(".pruned");
+            let target = PathBuf::from(name);
+            if std::fs::rename(path, &target).is_ok() {
+                pruned.push(target);
+            }
+        }
+        Ok(pruned)
     }
 }
 
@@ -471,7 +829,60 @@ mod tests {
         let reg = ModelRegistry::new();
         let v1 = reg.publish(1, bundle(1)).unwrap();
         let v2 = reg.publish(1, bundle(2)).unwrap();
-        assert!(!Arc::ptr_eq(&v1.plane, &v2.plane));
+        assert!(!Arc::ptr_eq(&v1.plane(), &v2.plane()));
+        // …while one version's plane is stable across calls (the other
+        // half of the same invariant: a version can coalesce with itself).
+        assert!(Arc::ptr_eq(&v1.plane(), &v1.plane()));
+    }
+
+    #[test]
+    fn plane_cache_hits_while_resident() {
+        let reg = ModelRegistry::with_cache_planes(4);
+        let m = reg.publish(7, bundle(1)).unwrap();
+        let first = m.plane();
+        let second = m.plane();
+        assert!(Arc::ptr_eq(&first, &second));
+        let stats = reg.plane_cache().stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.redecodes, 0);
+        assert_eq!(reg.plane_cache().resident(), 1);
+    }
+
+    #[test]
+    fn plane_cache_evicts_lru_and_redecodes_bit_exact() {
+        let reg = ModelRegistry::with_cache_planes(1);
+        let a = reg.publish(1, bundle(1)).unwrap();
+        let b = reg.publish(2, bundle(1)).unwrap();
+
+        let plane_a = a.plane(); // miss: decode a
+        let plane_b = b.plane(); // miss: decode b, evict a (budget 1)
+        assert_eq!(reg.plane_cache().resident(), 1);
+        let again_a = a.plane(); // redecode a, evict b
+        let stats = reg.plane_cache().stats();
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.evictions, 2);
+        assert_eq!(stats.redecodes, 1);
+        assert_eq!(reg.plane_cache().resident(), 1, "residency stays bounded");
+
+        // Eviction never invalidates in-flight Arcs, and a re-decode is
+        // bit-identical to the plane it replaces (fresh Arc, same bytes).
+        assert!(!Arc::ptr_eq(&plane_a, &again_a));
+        assert_eq!(plane_a.i32s(), again_a.i32s());
+        assert_eq!(plane_b.i32s(), b.plane().i32s());
+    }
+
+    #[test]
+    fn plane_cache_unbounded_never_evicts() {
+        let reg = ModelRegistry::new();
+        for pid in 1..=16 {
+            reg.publish(pid, bundle(1)).unwrap().plane();
+        }
+        let stats = reg.plane_cache().stats();
+        assert_eq!(stats.evictions, 0);
+        assert_eq!(stats.redecodes, 0);
+        assert_eq!(reg.plane_cache().resident(), 16);
     }
 
     fn store_dir(tag: &str) -> PathBuf {
@@ -550,7 +961,7 @@ mod tests {
         std::fs::write(&v2, b"torn write").unwrap();
 
         let peek = store.peek().unwrap();
-        assert_eq!(peek.recovered[&4].version, 1);
+        assert_eq!(peek.recovered[&4].version(), 1);
         assert_eq!(peek.quarantined, vec![v2.clone()], "reported at the original path");
         assert!(v2.exists(), "peek must not rename anything");
 
@@ -558,6 +969,111 @@ mod tests {
         let scan = store.scan().unwrap();
         assert!(!v2.exists());
         assert_eq!(scan.quarantined.len(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn peek_is_lazy_listings_never_decode_planes() {
+        let dir = store_dir("lazy_peek");
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            for pid in 1..=3 {
+                store.save(&patient_bundle(pid, 1)).unwrap();
+                store.save(&patient_bundle(pid, 2)).unwrap();
+            }
+        }
+        // Fresh open (cold index) + peek: the listing path must not
+        // decode a single AMPL/CNTP payload across the whole store.
+        let store = ModelStore::open(&dir).unwrap();
+        let peek = store.peek().unwrap();
+        assert_eq!(peek.recovered.len(), 3);
+        for (pid, lazy) in &peek.recovered {
+            assert_eq!(lazy.version(), 2);
+            assert_eq!(lazy.provenance().patient_id, *pid);
+            assert_eq!(lazy.decode_count(), 0, "listing decoded a heavy section");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_indexes_newest_valid_and_save_keeps_it_current() {
+        let dir = store_dir("newest");
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            store.save(&patient_bundle(9, 1)).unwrap();
+            store.save(&patient_bundle(9, 2)).unwrap();
+            assert_eq!(store.newest_valid(9), Some(2), "save updates the index");
+        }
+        // Re-open: the index is rebuilt lazily from disk. A truncated
+        // newer version is lazily invalid and must not win.
+        let v3 = patient_bundle(9, 3).to_bytes();
+        {
+            let store = ModelStore::open(&dir).unwrap();
+            assert_eq!(store.newest_valid(9), Some(2));
+            std::fs::write(store.version_path(9, 3), &v3[..v3.len() / 2]).unwrap();
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.newest_valid(9), Some(2));
+        // scan() quarantines the truncated v3 and confirms the index.
+        let scan = store.scan().unwrap();
+        assert_eq!(scan.recovered[&9].version, 2);
+        assert_eq!(store.newest_valid(9), Some(2));
+        assert_eq!(store.newest_valid(42), None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    fn lineage_bundle(pid: u32, version: u64, parent: u64) -> ModelBundle {
+        let mut b = patient_bundle(pid, version);
+        b.provenance.parent_version = parent;
+        b
+    }
+
+    #[test]
+    fn prune_keeps_newest_live_and_lineage() {
+        let dir = store_dir("prune");
+        let store = ModelStore::open(&dir).unwrap();
+        // v1 ← v2 ← v3 ← v4 ← v5 (each derived from the previous).
+        for v in 1..=5u64 {
+            store.save(&lineage_bundle(6, v, v - 1)).unwrap();
+        }
+        // Serving v3: keep = newest 1 (v5) ∪ live (v3) ∪ lineage of
+        // {v5, v3} = {v4, v2, v1} — nothing prunable in a full chain.
+        let pruned = store.prune(6, 1, &[3]).unwrap();
+        assert!(pruned.is_empty(), "{pruned:?}");
+
+        // Break the chain: v3 freshly trained (parent 0). Now keep =
+        // {v5, v4, v3} and v1/v2 are history.
+        store.save(&lineage_bundle(6, 3, 0)).unwrap();
+        let mut pruned = store.prune(6, 1, &[3]).unwrap();
+        pruned.sort();
+        assert_eq!(pruned.len(), 2, "{pruned:?}");
+        assert!(pruned[0].ends_with("v001.hdcm.pruned"), "{pruned:?}");
+        assert!(pruned[1].ends_with("v002.hdcm.pruned"), "{pruned:?}");
+        assert!(!store.version_path(6, 1).exists());
+        assert!(store.version_path(6, 3).exists());
+        assert!(store.version_path(6, 4).exists(), "v4 stays: lineage parent of newest v5");
+
+        // Pruned files leave the candidate namespace: scans ignore them.
+        let scan = store.scan().unwrap();
+        assert_eq!(scan.recovered[&6].version, 5);
+        assert!(scan.quarantined.is_empty());
+        assert_eq!(scan.ignored.len(), 2, "pruned files are ignored, not quarantined");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prune_zero_budget_is_a_no_op() {
+        let dir = store_dir("prune_off");
+        let store = ModelStore::open(&dir).unwrap();
+        for v in 1..=4u64 {
+            store.save(&patient_bundle(2, v)).unwrap();
+        }
+        assert!(store.prune(2, 0, &[4]).unwrap().is_empty());
+        for v in 1..=4u64 {
+            assert!(store.version_path(2, v).exists());
+        }
+        // An unknown patient is a no-op too, not an error.
+        assert!(store.prune(99, 1, &[1]).unwrap().is_empty());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -132,6 +132,9 @@ pub struct RetrainScheduler {
     watches: Mutex<BTreeMap<u32, PatientWatch>>,
     /// (patient, 1-based window index) of every trigger, in order.
     trigger_log: Mutex<Vec<(u32, u64)>>,
+    /// Store-GC budget applied after each persisted retrain: keep at
+    /// most this many bundle versions per patient (0 = keep everything).
+    max_versions: usize,
     /// Patients with a retrain currently executing. A trigger that lands
     /// while one is in flight is *not* re-launched (it would re-derive
     /// the same base version, burn a full retrain and then hit the
@@ -156,6 +159,7 @@ impl RetrainScheduler {
             registry,
             store,
             train,
+            max_versions: 0,
             background: true,
             watches: Mutex::new(BTreeMap::new()),
             trigger_log: Mutex::new(Vec::new()),
@@ -163,6 +167,15 @@ impl RetrainScheduler {
             threads: Mutex::new(Vec::new()),
             messages: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Prune the store to `max_versions` bundles per patient after each
+    /// persisted retrain (0 = keep everything). The prune never removes
+    /// the version just published, its lineage parents, or the newest
+    /// valid version — see [`ModelStore::prune`].
+    pub fn with_max_versions(mut self, max_versions: usize) -> Self {
+        self.max_versions = max_versions;
+        self
     }
 
     /// Run triggered retrains inline on the observing thread instead of
@@ -238,9 +251,18 @@ impl RetrainScheduler {
         let registry = self.registry.clone();
         let store = self.store.clone();
         let epochs = self.policy.epochs;
+        let max_versions = self.max_versions;
         let in_flight = self.in_flight.clone();
         let job = move || {
-            let msg = retrain_job(&registry, store.as_deref(), patient_id, base, &record, epochs);
+            let msg = retrain_job(
+                &registry,
+                store.as_deref(),
+                patient_id,
+                base,
+                &record,
+                epochs,
+                max_versions,
+            );
             Self::lock(&in_flight).remove(&patient_id);
             msg
         };
@@ -269,7 +291,8 @@ impl RetrainScheduler {
 }
 
 /// One triggered retrain, start to finish: derive v+1 (incrementally
-/// when the bundle carries counter planes), persist it, publish it.
+/// when the bundle carries counter planes), persist it, prune the store
+/// to the version budget, publish it.
 fn retrain_job(
     registry: &ModelRegistry,
     store: Option<&ModelStore>,
@@ -277,6 +300,7 @@ fn retrain_job(
     base: crate::hdc::model::ModelBundle,
     record: &Record,
     epochs: usize,
+    max_versions: usize,
 ) -> String {
     let opts = RetrainOptions {
         max_epochs: epochs,
@@ -285,15 +309,33 @@ fn retrain_job(
     let (mut next, report) = pipeline::retrain_bundle(&base, record, &opts);
     next.provenance.patient_id = patient_id;
     let version = next.version;
+    let mut pruned = 0usize;
     if let Some(store) = store {
         if let Err(e) = store.save(&next) {
             return format!("patient {patient_id}: persist of v{version} failed: {e:#}");
         }
+        if max_versions > 0 {
+            // The base version may still be serving in-flight jobs until
+            // the hot-swap lands — keep it live alongside the new one.
+            match store.prune(patient_id, max_versions, &[base.version, version]) {
+                Ok(paths) => pruned = paths.len(),
+                Err(e) => {
+                    return format!(
+                        "patient {patient_id}: store prune after v{version} failed: {e:#}"
+                    )
+                }
+            }
+        }
     }
+    let gc = if pruned > 0 {
+        format!(", pruned {pruned} stale bundle(s)")
+    } else {
+        String::new()
+    };
     match registry.publish(patient_id, next) {
         Ok(_) => format!(
             "patient {patient_id}: published model v{version} \
-             (training-window errors {} -> {})",
+             (training-window errors {} -> {}){gc}",
             report.initial_errors, report.best_errors
         ),
         Err(e) => format!("patient {patient_id}: publish of v{version} skipped: {e:#}"),

@@ -294,7 +294,7 @@ impl Coordinator {
                         tag: b.session_id,
                         seq: b.seq0,
                         codes: b.codes,
-                        am: model.plane.clone(),
+                        am: model.plane(),
                         thresholds: vec![model.threshold() as i32; b.windows],
                         version: model.version(),
                         submitted: Instant::now(),
@@ -360,6 +360,10 @@ impl Coordinator {
                 eval,
             });
         }
+        // End-of-run plane-cache accounting: every published model in
+        // this run shares the registry's cache, so its counters are the
+        // run's model-memory story (hits vs misses vs eviction churn).
+        metrics.record_plane_cache(registry.plane_cache().stats());
         Ok(StreamReport {
             sessions,
             metrics,
@@ -504,6 +508,8 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "models-dir",
         "retrain-epochs",
         "retrain-fa-rate",
+        "cache-planes",
+        "max-model-versions",
         "listen",
         "kernels",
     ])?;
@@ -531,6 +537,12 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     let record_idx: usize = args.get_parse("record", 1usize)?;
     let retrain_epochs: usize = args.get_parse("retrain-epochs", system.retrain_epochs)?;
     let retrain_fa_rate: f64 = args.get_parse("retrain-fa-rate", system.retrain_fa_rate)?;
+    // Model-memory knobs: a plane budget bounds decoded associative
+    // memories resident at once (0 = unbounded), and a version budget
+    // garbage-collects stale bundle files at publish time (0 = keep all).
+    let cache_planes: usize = args.get_parse("cache-planes", system.cache_planes)?;
+    let max_model_versions: usize =
+        args.get_parse("max-model-versions", system.max_versions_per_patient)?;
 
     // Durable model store: `--models-dir` / `[model] dir`. Opening scans
     // the tree once — the recovered bundles (highest valid version per
@@ -633,7 +645,10 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         Some(spec)
     });
 
-    let registry = Arc::new(ModelRegistry::new());
+    let registry = Arc::new(ModelRegistry::with_cache_planes(cache_planes));
+    if cache_planes > 0 {
+        println!("plane cache: budget {cache_planes} decoded plane(s), LRU eviction");
+    }
     let mut streams = Vec::new();
     let mut train_records: std::collections::BTreeMap<u32, Record> = Default::default();
     for (i, spec) in specs.into_iter().enumerate() {
@@ -667,6 +682,14 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         // are already the store's newest — no rewrite.
         if let (Some(store), false) = (&store, resumed) {
             store.save(&bundle)?;
+        }
+        // Store GC at publish time: versions past the per-patient budget
+        // are renamed aside (never the deployed, newest, or lineage
+        // versions — prune keeps those unconditionally).
+        if let (Some(store), true) = (&store, max_model_versions > 0) {
+            for p in store.prune(pid, max_model_versions, &[bundle.version])? {
+                println!("model store: pruned stale bundle {}", p.display());
+            }
         }
         // Publish the startup version *before* any retrain can publish
         // its successor, so version monotonicity holds per patient.
@@ -721,18 +744,21 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     // bundle's counter planes) that persists + publishes v+1 mid-stream
     // through the hot-swap path.
     let scheduler = if retrain_epochs > 0 {
-        Some(Arc::new(RetrainScheduler::new(
-            RetrainPolicy {
-                epochs: retrain_epochs,
-                fa_window: system.retrain_fa_window,
-                fa_rate: retrain_fa_rate,
-                cooldown: system.retrain_cooldown,
-                max_retrains: system.retrain_max,
-            },
-            registry.clone(),
-            store.clone(),
-            train_records,
-        )))
+        Some(Arc::new(
+            RetrainScheduler::new(
+                RetrainPolicy {
+                    epochs: retrain_epochs,
+                    fa_window: system.retrain_fa_window,
+                    fa_rate: retrain_fa_rate,
+                    cooldown: system.retrain_cooldown,
+                    max_retrains: system.retrain_max,
+                },
+                registry.clone(),
+                store.clone(),
+                train_records,
+            )
+            .with_max_versions(max_model_versions),
+        ))
     } else {
         None
     };

@@ -479,7 +479,7 @@ impl ConnectionActor {
                 tag: b.session_id,
                 seq: b.seq0,
                 codes: b.codes,
-                am: model.plane.clone(),
+                am: model.plane(),
                 thresholds: vec![model.threshold() as i32; b.windows],
                 version: model.version(),
                 submitted: Instant::now(),

@@ -252,91 +252,12 @@ impl ModelBundle {
             let payload = r
                 .take(len)
                 .with_context(|| format!("section {:?}", tag_name(&tag)))?;
-            let mut pr = Reader::new(payload);
             match &tag {
-                b"META" => {
-                    let version = pr.u64()?;
-                    ensure!(version >= 1, "model version 0 (must be >= 1)");
-                    let name = pr.string()?;
-                    let variant = Variant::from_name(&name)
-                        .with_context(|| format!("unknown variant {name:?} in model bundle"))?;
-                    pr.finish("META")?;
-                    meta = Some((version, variant));
-                }
-                b"CFGS" => {
-                    let seed = pr.u64()?;
-                    let spatial_threshold = pr.u16()?;
-                    let temporal_threshold = pr.u16()?;
-                    let train_density = f64::from_bits(pr.u64()?);
-                    pr.finish("CFGS")?;
-                    cfgs = Some(ClassifierConfig {
-                        seed,
-                        spatial_threshold,
-                        temporal_threshold,
-                        train_density,
-                    });
-                }
-                b"AMPL" => {
-                    let classes = pr.u32()? as usize;
-                    let dim = pr.u32()? as usize;
-                    ensure!(
-                        classes == NUM_CLASSES && dim == DIM,
-                        "model bundle is {classes} classes × {dim} dims, \
-                         this build expects {NUM_CLASSES} × {DIM}"
-                    );
-                    let mut hvs = [Hv::zero(); NUM_CLASSES];
-                    for hv in hvs.iter_mut() {
-                        let raw: &[u8; DIM / 8] =
-                            pr.take(DIM / 8)?.try_into().expect("fixed-size slice");
-                        *hv = Hv::from_bytes(raw);
-                    }
-                    pr.finish("AMPL")?;
-                    ampl = Some(AssociativeMemory::new(hvs[0], hvs[1]));
-                }
-                b"PROV" => {
-                    let patient_id = pr.u32()?;
-                    let epochs = pr.u32()?;
-                    let parent_version = pr.u64()?;
-                    let mut train_windows = [0u64; NUM_CLASSES];
-                    for w in train_windows.iter_mut() {
-                        *w = pr.u64()?;
-                    }
-                    let note = pr.string()?;
-                    pr.finish("PROV")?;
-                    prov = Some(Provenance {
-                        patient_id,
-                        epochs,
-                        parent_version,
-                        train_windows,
-                        note,
-                    });
-                }
-                b"CNTP" => {
-                    let classes = pr.u32()? as usize;
-                    let dim = pr.u32()? as usize;
-                    ensure!(
-                        classes == NUM_CLASSES && dim == DIM,
-                        "counter planes are {classes} classes × {dim} dims, \
-                         this build expects {NUM_CLASSES} × {DIM}"
-                    );
-                    let mut windows = [0u64; NUM_CLASSES];
-                    for w in windows.iter_mut() {
-                        *w = pr.u64()?;
-                    }
-                    // Fixed-size allocation: the payload length was
-                    // already bounds-checked against the file, and the
-                    // planes are DIM × u32 by construction — nothing here
-                    // allocates from an attacker-controlled length.
-                    let mut counts = [Box::new([0u32; DIM]), Box::new([0u32; DIM])];
-                    for plane in counts.iter_mut() {
-                        let raw = pr.take(DIM * 4)?;
-                        for (slot, chunk) in plane.iter_mut().zip(raw.chunks_exact(4)) {
-                            *slot = u32::from_le_bytes(chunk.try_into().expect("4 bytes"));
-                        }
-                    }
-                    pr.finish("CNTP")?;
-                    cntp = Some(CounterPlanes { counts, windows });
-                }
+                b"META" => meta = Some(decode_meta(payload)?),
+                b"CFGS" => cfgs = Some(decode_cfgs(payload)?),
+                b"AMPL" => ampl = Some(decode_ampl(payload)?),
+                b"PROV" => prov = Some(decode_prov(payload)?),
+                b"CNTP" => cntp = Some(decode_cntp(payload)?),
                 _ => {} // unknown section: skip (forward compatibility)
             }
         }
@@ -373,47 +294,19 @@ impl ModelBundle {
 
     /// Human-readable summary (`repro model-info`).
     pub fn describe(&self) -> String {
-        let p = &self.provenance;
-        let lineage = if p.parent_version == 0 {
-            "freshly trained".to_string()
-        } else {
-            format!("derived from v{}", p.parent_version)
-        };
-        let counters = match &self.counters {
-            Some(c) => format!(
-                "present ({}/{} windows — incremental retrain resumes here)",
-                c.windows[0], c.windows[1]
-            ),
-            None => "absent (format-1 artifact — retrains re-seed from a record)".to_string(),
-        };
-        format!(
-            "model bundle v{} (format {fmt})\n\
-             \x20 variant            : {}\n\
-             \x20 encoder seed       : {:#018x}\n\
-             \x20 spatial threshold  : {}\n\
-             \x20 temporal threshold : {}\n\
-             \x20 train density      : {:.3}\n\
-             \x20 class densities    : interictal {:.1}% / ictal {:.1}%\n\
-             \x20 provenance         : patient {}, {} online epoch(s), {}, \
-             windows {}/{}\n\
-             \x20 counter planes     : {}\n\
-             \x20 note               : {}",
-            self.version,
-            self.variant.name(),
-            self.config.seed,
-            self.config.spatial_threshold,
-            self.config.temporal_threshold,
-            self.config.train_density,
+        let densities = format!(
+            "interictal {:.1}% / ictal {:.1}%",
             self.am.classes[0].density() * 100.0,
-            self.am.classes[1].density() * 100.0,
-            p.patient_id,
-            p.epochs,
-            lineage,
-            p.train_windows[0],
-            p.train_windows[1],
-            counters,
-            if p.note.is_empty() { "—" } else { &p.note },
-            fmt = self.wire_format(),
+            self.am.classes[1].density() * 100.0
+        );
+        describe_parts(
+            self.version,
+            self.wire_format(),
+            self.variant,
+            &self.config,
+            &densities,
+            &self.provenance,
+            &counters_text(self.counters.as_ref()),
         )
     }
 }
@@ -424,6 +317,450 @@ impl AmPlane {
     /// plane decode (see [`AmPlane::from_memory`]).
     pub fn from_bundle(bundle: &ModelBundle) -> AmPlane {
         AmPlane::from_memory(&bundle.am)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-section payload decoders, shared between the eager [`ModelBundle::
+// from_bytes`] path and the lazy [`LazyBundle`] path so the two can never
+// drift.
+
+fn decode_meta(payload: &[u8]) -> crate::Result<(u64, Variant)> {
+    let mut pr = Reader::new(payload);
+    let version = pr.u64()?;
+    ensure!(version >= 1, "model version 0 (must be >= 1)");
+    let name = pr.string()?;
+    let variant = Variant::from_name(&name)
+        .with_context(|| format!("unknown variant {name:?} in model bundle"))?;
+    pr.finish("META")?;
+    Ok((version, variant))
+}
+
+fn decode_cfgs(payload: &[u8]) -> crate::Result<ClassifierConfig> {
+    let mut pr = Reader::new(payload);
+    let seed = pr.u64()?;
+    let spatial_threshold = pr.u16()?;
+    let temporal_threshold = pr.u16()?;
+    let train_density = f64::from_bits(pr.u64()?);
+    pr.finish("CFGS")?;
+    Ok(ClassifierConfig {
+        seed,
+        spatial_threshold,
+        temporal_threshold,
+        train_density,
+    })
+}
+
+fn decode_ampl(payload: &[u8]) -> crate::Result<AssociativeMemory> {
+    let mut pr = Reader::new(payload);
+    let classes = pr.u32()? as usize;
+    let dim = pr.u32()? as usize;
+    ensure!(
+        classes == NUM_CLASSES && dim == DIM,
+        "model bundle is {classes} classes × {dim} dims, \
+         this build expects {NUM_CLASSES} × {DIM}"
+    );
+    let mut hvs = [Hv::zero(); NUM_CLASSES];
+    for hv in hvs.iter_mut() {
+        let raw: &[u8; DIM / 8] = pr.take(DIM / 8)?.try_into().expect("fixed-size slice");
+        *hv = Hv::from_bytes(raw);
+    }
+    pr.finish("AMPL")?;
+    Ok(AssociativeMemory::new(hvs[0], hvs[1]))
+}
+
+fn decode_prov(payload: &[u8]) -> crate::Result<Provenance> {
+    let mut pr = Reader::new(payload);
+    let patient_id = pr.u32()?;
+    let epochs = pr.u32()?;
+    let parent_version = pr.u64()?;
+    let mut train_windows = [0u64; NUM_CLASSES];
+    for w in train_windows.iter_mut() {
+        *w = pr.u64()?;
+    }
+    let note = pr.string()?;
+    pr.finish("PROV")?;
+    Ok(Provenance {
+        patient_id,
+        epochs,
+        parent_version,
+        train_windows,
+        note,
+    })
+}
+
+fn decode_cntp(payload: &[u8]) -> crate::Result<CounterPlanes> {
+    let mut pr = Reader::new(payload);
+    let classes = pr.u32()? as usize;
+    let dim = pr.u32()? as usize;
+    ensure!(
+        classes == NUM_CLASSES && dim == DIM,
+        "counter planes are {classes} classes × {dim} dims, \
+         this build expects {NUM_CLASSES} × {DIM}"
+    );
+    let mut windows = [0u64; NUM_CLASSES];
+    for w in windows.iter_mut() {
+        *w = pr.u64()?;
+    }
+    // Fixed-size allocation: the payload length was already bounds-checked
+    // against the file, and the planes are DIM × u32 by construction —
+    // nothing here allocates from an attacker-controlled length.
+    let mut counts = [Box::new([0u32; DIM]), Box::new([0u32; DIM])];
+    for plane in counts.iter_mut() {
+        let raw = pr.take(DIM * 4)?;
+        for (slot, chunk) in plane.iter_mut().zip(raw.chunks_exact(4)) {
+            *slot = u32::from_le_bytes(chunk.try_into().expect("4 bytes"));
+        }
+    }
+    pr.finish("CNTP")?;
+    Ok(CounterPlanes { counts, windows })
+}
+
+fn counters_text(c: Option<&CounterPlanes>) -> String {
+    match c {
+        Some(c) => format!(
+            "present ({}/{} windows — incremental retrain resumes here)",
+            c.windows[0], c.windows[1]
+        ),
+        None => "absent (format-1 artifact — retrains re-seed from a record)".to_string(),
+    }
+}
+
+fn describe_parts(
+    version: u64,
+    format: u32,
+    variant: Variant,
+    config: &ClassifierConfig,
+    densities: &str,
+    p: &Provenance,
+    counters: &str,
+) -> String {
+    let lineage = if p.parent_version == 0 {
+        "freshly trained".to_string()
+    } else {
+        format!("derived from v{}", p.parent_version)
+    };
+    format!(
+        "model bundle v{version} (format {format})\n\
+         \x20 variant            : {}\n\
+         \x20 encoder seed       : {:#018x}\n\
+         \x20 spatial threshold  : {}\n\
+         \x20 temporal threshold : {}\n\
+         \x20 train density      : {:.3}\n\
+         \x20 class densities    : {densities}\n\
+         \x20 provenance         : patient {}, {} online epoch(s), {lineage}, \
+         windows {}/{}\n\
+         \x20 counter planes     : {counters}\n\
+         \x20 note               : {}",
+        variant.name(),
+        config.seed,
+        config.spatial_threshold,
+        config.temporal_threshold,
+        config.train_density,
+        p.patient_id,
+        p.epochs,
+        p.train_windows[0],
+        p.train_windows[1],
+        if p.note.is_empty() { "—" } else { &p.note },
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Lazy, section-indexed bundle access.
+
+/// One entry of a bundle's section table: where a section's payload lives,
+/// recorded without reading it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SectionSpan {
+    /// Section tag (`META`, `CFGS`, `AMPL`, `PROV`, `CNTP`, or unknown).
+    pub tag: [u8; 4],
+    /// Absolute payload offset from the start of the bundle.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u32,
+}
+
+/// The `HDCM` header plus section table of a bundle, built in **one
+/// bounds-checked pass that never reads a payload byte**: per section only
+/// the 8-byte tag + length header is read and the payload is seeked over.
+/// This is the CompIM principle applied to model memory — keep the cheap
+/// index resident, regenerate (decode) the expensive part on demand.
+#[derive(Clone, Debug)]
+pub struct BundleIndex {
+    /// On-disk format version (header field; `wire_format()` of the writer).
+    pub format: u32,
+    /// Sections in file order, unknown tags included.
+    pub sections: Vec<SectionSpan>,
+}
+
+impl BundleIndex {
+    /// Scan the header + section table of `src` (`total` = source length
+    /// in bytes). Every section span is validated against `total` before
+    /// being recorded, so a span can always be read back with a fixed-size
+    /// buffer no larger than the file itself.
+    pub fn scan<R: std::io::Read + std::io::Seek>(
+        src: &mut R,
+        total: u64,
+    ) -> crate::Result<BundleIndex> {
+        use std::io::SeekFrom;
+        src.seek(SeekFrom::Start(0)).context("seek model bundle header")?;
+        let mut header = [0u8; 12];
+        src.read_exact(&mut header).context("model bundle header")?;
+        ensure!(
+            header[..4] == MAGIC,
+            "not a model bundle: magic {:02x?} (expected {:02x?} — is this a `repro train --save` file?)",
+            &header[..4],
+            MAGIC
+        );
+        let format = u32::from_le_bytes(header[4..8].try_into().expect("4 bytes"));
+        ensure!(
+            (BASE_FORMAT_VERSION..=FORMAT_VERSION).contains(&format),
+            "model bundle format version {format}, this build reads \
+             {BASE_FORMAT_VERSION}..={FORMAT_VERSION} — re-save with a matching build"
+        );
+        let n_sections = u32::from_le_bytes(header[8..12].try_into().expect("4 bytes"));
+        let mut sections = Vec::new();
+        let mut offset = 12u64;
+        for i in 0..n_sections {
+            ensure!(
+                offset + 8 <= total,
+                "truncated model bundle: section {i} header at offset {offset}, \
+                 file is {total} bytes"
+            );
+            src.seek(SeekFrom::Start(offset)).context("seek section header")?;
+            let mut head = [0u8; 8];
+            src.read_exact(&mut head)
+                .with_context(|| format!("section {i} header"))?;
+            let tag: [u8; 4] = head[..4].try_into().expect("4-byte slice");
+            let len = u32::from_le_bytes(head[4..8].try_into().expect("4 bytes"));
+            let payload = offset + 8;
+            ensure!(
+                payload + len as u64 <= total,
+                "truncated model bundle: section {} wants {len} bytes at offset \
+                 {payload}, file is {total} bytes",
+                tag_name(&tag)
+            );
+            sections.push(SectionSpan { tag, offset: payload, len });
+            offset = payload + len as u64;
+        }
+        ensure!(
+            offset == total,
+            "{} trailing bytes after {} sections",
+            total - offset,
+            n_sections
+        );
+        Ok(BundleIndex { format, sections })
+    }
+
+    /// First section with `tag`, if present.
+    pub fn find(&self, tag: &[u8; 4]) -> Option<&SectionSpan> {
+        self.sections.iter().find(|s| &s.tag == tag)
+    }
+}
+
+/// Where a [`LazyBundle`] reads payloads back from.
+enum LazySource {
+    Bytes(Vec<u8>),
+    File(std::sync::Mutex<std::fs::File>),
+}
+
+impl LazySource {
+    fn read_span(&self, span: &SectionSpan) -> crate::Result<Vec<u8>> {
+        match self {
+            LazySource::Bytes(buf) => {
+                // Spans were validated against the buffer length at scan
+                // time and the buffer is owned, so this cannot overrun.
+                let start = span.offset as usize;
+                Ok(buf[start..start + span.len as usize].to_vec())
+            }
+            LazySource::File(file) => {
+                use std::io::{Read, Seek, SeekFrom};
+                let mut f = file.lock().unwrap_or_else(|e| e.into_inner());
+                f.seek(SeekFrom::Start(span.offset))
+                    .with_context(|| format!("seek section {}", tag_name(&span.tag)))?;
+                // Bounded by the file size observed at scan time; a file
+                // that shrank since then fails the read, never overreads.
+                let mut buf = vec![0u8; span.len as usize];
+                f.read_exact(&mut buf)
+                    .with_context(|| format!("read section {}", tag_name(&span.tag)))?;
+                Ok(buf)
+            }
+        }
+    }
+}
+
+/// A bundle opened through its [`BundleIndex`]: the small sections
+/// (`META`, `CFGS`, `PROV`) are decoded eagerly — they are what listings,
+/// recovery validation and lineage walks need — while the heavy sections
+/// (`AMPL`, `CNTP`) stay on disk until [`LazyBundle::am`] /
+/// [`LazyBundle::counters`] demand them via positioned reads. Peeking a
+/// 10k-patient store therefore never materializes a single class HV or
+/// counter plane; [`LazyBundle::decode_count`] proves it.
+pub struct LazyBundle {
+    index: BundleIndex,
+    source: LazySource,
+    version: u64,
+    variant: Variant,
+    config: ClassifierConfig,
+    provenance: Provenance,
+    am: std::sync::OnceLock<AssociativeMemory>,
+    counters: std::sync::OnceLock<CounterPlanes>,
+    decodes: std::sync::atomic::AtomicUsize,
+}
+
+impl LazyBundle {
+    /// Open `path` file-backed: scan the section table, decode the small
+    /// sections, keep the file handle for on-demand payload reads.
+    pub fn open(path: &Path) -> crate::Result<LazyBundle> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("open model bundle {}", path.display()))?;
+        let total = file
+            .metadata()
+            .with_context(|| format!("stat model bundle {}", path.display()))?
+            .len();
+        let index = BundleIndex::scan(&mut file, total)
+            .with_context(|| format!("parse model bundle {}", path.display()))?;
+        Self::from_parts(index, LazySource::File(std::sync::Mutex::new(file)))
+            .with_context(|| format!("parse model bundle {}", path.display()))
+    }
+
+    /// Open an in-memory serialization (tests, network payloads).
+    pub fn from_vec(bytes: Vec<u8>) -> crate::Result<LazyBundle> {
+        let total = bytes.len() as u64;
+        let mut cursor = std::io::Cursor::new(&bytes);
+        let index = BundleIndex::scan(&mut cursor, total)?;
+        Self::from_parts(index, LazySource::Bytes(bytes))
+    }
+
+    fn from_parts(index: BundleIndex, source: LazySource) -> crate::Result<LazyBundle> {
+        let meta = index.find(b"META").context("model bundle has no META section")?;
+        let (version, variant) = decode_meta(&source.read_span(meta)?)?;
+        let cfgs = index.find(b"CFGS").context("model bundle has no CFGS section")?;
+        let config = decode_cfgs(&source.read_span(cfgs)?)?;
+        let prov = index.find(b"PROV").context("model bundle has no PROV section")?;
+        let provenance = decode_prov(&source.read_span(prov)?)?;
+        // Required even though it stays undecoded: a bundle without an AM
+        // can never serve, so reject it at open rather than at first use.
+        index.find(b"AMPL").context("model bundle has no AMPL section")?;
+        Ok(LazyBundle {
+            index,
+            source,
+            version,
+            variant,
+            config,
+            provenance,
+            am: std::sync::OnceLock::new(),
+            counters: std::sync::OnceLock::new(),
+            decodes: std::sync::atomic::AtomicUsize::new(0),
+        })
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn variant(&self) -> Variant {
+        self.variant
+    }
+
+    pub fn config(&self) -> &ClassifierConfig {
+        &self.config
+    }
+
+    pub fn provenance(&self) -> &Provenance {
+        &self.provenance
+    }
+
+    /// The on-disk format version (the writer stamps 2 exactly when `CNTP`
+    /// is present, so this matches [`ModelBundle::wire_format`]).
+    pub fn wire_format(&self) -> u32 {
+        self.index.format
+    }
+
+    /// Whether a `CNTP` section exists — answered from the index alone,
+    /// without decoding it.
+    pub fn has_counters(&self) -> bool {
+        self.index.find(b"CNTP").is_some()
+    }
+
+    /// The section table this bundle was opened through.
+    pub fn index(&self) -> &BundleIndex {
+        &self.index
+    }
+
+    /// Heavy-section decodes performed so far (`AMPL` + `CNTP`). Listing
+    /// paths assert this stays 0.
+    pub fn decode_count(&self) -> usize {
+        self.decodes.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// The associative memory, decoded on first use and cached.
+    pub fn am(&self) -> crate::Result<&AssociativeMemory> {
+        if let Some(am) = self.am.get() {
+            return Ok(am);
+        }
+        let span = self.index.find(b"AMPL").context("model bundle has no AMPL section")?;
+        let am = decode_ampl(&self.source.read_span(span)?)?;
+        self.decodes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(self.am.get_or_init(|| am))
+    }
+
+    /// The counter planes, decoded on first use and cached; `Ok(None)`
+    /// when the bundle has no `CNTP` section.
+    pub fn counters(&self) -> crate::Result<Option<&CounterPlanes>> {
+        let Some(span) = self.index.find(b"CNTP") else {
+            return Ok(None);
+        };
+        if let Some(c) = self.counters.get() {
+            return Ok(Some(c));
+        }
+        let c = decode_cntp(&self.source.read_span(span)?)?;
+        self.decodes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Some(self.counters.get_or_init(|| c)))
+    }
+
+    /// Materialize the full [`ModelBundle`] (decodes whatever is still
+    /// lazy) — the recovery path that actually serves a model ends here.
+    pub fn load_full(&self) -> crate::Result<ModelBundle> {
+        Ok(ModelBundle {
+            version: self.version,
+            variant: self.variant,
+            config: self.config.clone(),
+            am: self.am()?.clone(),
+            provenance: self.provenance.clone(),
+            counters: self.counters()?.cloned(),
+        })
+    }
+
+    /// [`ModelBundle::describe`] parity from the small sections alone:
+    /// fields that would force a heavy decode report their lazy state
+    /// instead (and render identically once decoded).
+    pub fn describe(&self) -> String {
+        let densities = match self.am.get() {
+            Some(am) => format!(
+                "interictal {:.1}% / ictal {:.1}%",
+                am.classes[0].density() * 100.0,
+                am.classes[1].density() * 100.0
+            ),
+            None => "not decoded (lazy open)".to_string(),
+        };
+        let counters = if !self.has_counters() {
+            counters_text(None)
+        } else {
+            match self.counters.get() {
+                Some(c) => counters_text(Some(c)),
+                None => "present (not decoded — lazy open)".to_string(),
+            }
+        };
+        describe_parts(
+            self.version,
+            self.wire_format(),
+            self.variant,
+            &self.config,
+            &densities,
+            &self.provenance,
+            &counters,
+        )
     }
 }
 
@@ -679,5 +1016,105 @@ mod tests {
         let b = bundle(11);
         assert_eq!(b.next_version(), 4);
         assert_eq!(ModelBundle::new(b.variant, b.config, b.am, b.provenance).version, 1);
+    }
+
+    #[test]
+    fn bundle_index_records_sections_without_reading_payloads() {
+        let b = bundle_v2(30);
+        let bytes = b.to_bytes();
+        let mut cursor = std::io::Cursor::new(&bytes);
+        let idx = BundleIndex::scan(&mut cursor, bytes.len() as u64).unwrap();
+        assert_eq!(idx.format, FORMAT_VERSION);
+        let tags: Vec<&[u8; 4]> = idx.sections.iter().map(|s| &s.tag).collect();
+        assert_eq!(tags, [b"META", b"CFGS", b"AMPL", b"PROV", b"CNTP"]);
+        // Spans are exactly the written section payloads.
+        for span in &idx.sections {
+            let start = span.offset as usize;
+            assert!(start + span.len as usize <= bytes.len());
+            assert_eq!(&bytes[start - 8..start - 4], &span.tag);
+        }
+    }
+
+    #[test]
+    fn bundle_index_rejects_truncation_and_trailing_bytes() {
+        let bytes = bundle_v2(31).to_bytes();
+        for n in 0..bytes.len() {
+            let mut cursor = std::io::Cursor::new(&bytes[..n]);
+            assert!(
+                BundleIndex::scan(&mut cursor, n as u64).is_err(),
+                "prefix of {n}/{} bytes must be rejected",
+                bytes.len()
+            );
+        }
+        let mut extended = bytes.clone();
+        extended.push(0);
+        let mut cursor = std::io::Cursor::new(&extended);
+        let err = BundleIndex::scan(&mut cursor, extended.len() as u64).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+    }
+
+    #[test]
+    fn lazy_open_decodes_nothing_heavy() {
+        let b = bundle_v2(32);
+        let path = std::env::temp_dir().join(format!("hdc_lazy_{}.hdcm", std::process::id()));
+        b.save(&path).unwrap();
+        let lazy = LazyBundle::open(&path).unwrap();
+        // Everything a listing needs, straight from META/CFGS/PROV:
+        assert_eq!(lazy.version(), b.version);
+        assert_eq!(lazy.variant(), b.variant);
+        assert_eq!(lazy.config(), &b.config);
+        assert_eq!(lazy.provenance(), &b.provenance);
+        assert_eq!(lazy.wire_format(), b.wire_format());
+        assert!(lazy.has_counters());
+        assert!(lazy.describe().contains("not decoded"), "{}", lazy.describe());
+        assert_eq!(lazy.decode_count(), 0);
+        // Demanding the heavy sections decodes them — once each.
+        assert_eq!(lazy.am().unwrap(), &b.am);
+        assert_eq!(lazy.counters().unwrap(), b.counters.as_ref());
+        assert_eq!(lazy.decode_count(), 2);
+        assert_eq!(lazy.am().unwrap(), &b.am);
+        assert_eq!(lazy.decode_count(), 2);
+        // Fully decoded, describe() matches the eager bundle exactly.
+        assert_eq!(lazy.describe(), b.describe());
+        assert_eq!(lazy.load_full().unwrap(), b);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lazy_format1_bundle_has_no_counters() {
+        let b = bundle(33);
+        let lazy = LazyBundle::from_vec(b.to_bytes()).unwrap();
+        assert_eq!(lazy.wire_format(), BASE_FORMAT_VERSION);
+        assert!(!lazy.has_counters());
+        assert_eq!(lazy.counters().unwrap(), None);
+        assert_eq!(lazy.decode_count(), 0);
+        assert_eq!(lazy.load_full().unwrap(), b);
+        assert_eq!(lazy.decode_count(), 1); // AMPL only — no CNTP to decode
+    }
+
+    #[test]
+    fn lazy_rejects_missing_required_sections() {
+        let b = bundle(34);
+        let mut bytes = b.to_bytes();
+        // Rename AMPL so only META/CFGS/PROV remain known.
+        let pos = bytes.windows(4).position(|w| w == b"AMPL".as_slice()).unwrap();
+        bytes[pos..pos + 4].copy_from_slice(b"XXXX");
+        let err = LazyBundle::from_vec(bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("AMPL"), "{err:#}");
+    }
+
+    #[test]
+    fn lazy_corrupt_heavy_section_fails_at_decode_not_open() {
+        let b = bundle_v2(35);
+        let mut bytes = b.to_bytes();
+        // Corrupt the AMPL dim field: the open (index + small sections)
+        // must still succeed; the on-demand decode must fail actionably.
+        let pos = bytes.windows(4).position(|w| w == b"AMPL".as_slice()).unwrap();
+        bytes[pos + 8 + 4..pos + 8 + 8].copy_from_slice(&99u32.to_le_bytes());
+        let lazy = LazyBundle::from_vec(bytes).unwrap();
+        assert_eq!(lazy.version(), b.version);
+        let err = lazy.am().unwrap_err();
+        assert!(format!("{err:#}").contains("99"), "{err:#}");
+        assert_eq!(lazy.decode_count(), 0);
     }
 }

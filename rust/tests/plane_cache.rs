@@ -1,0 +1,171 @@
+//! Bounded plane-cache tests: serving through a budget-1
+//! [`PlaneCache`] must be **window-for-window identical** to unbounded
+//! serving — eviction and re-decode are memory events, never prediction
+//! events — and the PR-4 mid-stream hot-swap boundary must hold exactly
+//! even while eviction pressure churns the streaming patient's plane.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use sparse_hdc_ieeg::config::SystemConfig;
+use sparse_hdc_ieeg::coordinator::registry::ModelRegistry;
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec, StreamReport};
+use sparse_hdc_ieeg::data::synth::SynthPatient;
+use sparse_hdc_ieeg::hdc::am::AssociativeMemory;
+use sparse_hdc_ieeg::hdc::model::ModelBundle;
+use sparse_hdc_ieeg::testkit::tiny_trained_patient;
+
+/// Three patients, mid-stream v2 publish for patient 2 once at least 8
+/// windows are in flight — the same run twice, against an unbounded and
+/// a budget-`planes` registry.
+fn fleet_run(cache_planes: usize) -> (StreamReport, u64, u64) {
+    let fleet: Vec<(SynthPatient, ModelBundle)> =
+        (1..=3u32).map(tiny_trained_patient).collect();
+    let registry = Arc::new(if cache_planes == 0 {
+        ModelRegistry::new()
+    } else {
+        ModelRegistry::with_cache_planes(cache_planes)
+    });
+    // v2 for patient 2: classes swapped, so a drifted boundary would
+    // change predictions — the equality below is load-bearing.
+    let (_, v1_p2) = &fleet[1];
+    let mut v2 = v1_p2.clone();
+    v2.version = 2;
+    v2.provenance.parent_version = 1;
+    v2.am = AssociativeMemory::new(v1_p2.am.classes[1], v1_p2.am.classes[0]);
+
+    let streams: Vec<StreamSpec> = fleet
+        .iter()
+        .enumerate()
+        .map(|(i, (patient, bundle))| StreamSpec {
+            session_id: i as u64 + 1,
+            patient_id: i as u32 + 1,
+            record: patient.records[1].clone(),
+            bundle: bundle.clone(),
+        })
+        .collect();
+
+    let published = AtomicBool::new(false);
+    let reg = registry.clone();
+    let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+    let report = coordinator
+        .run_with_registry(streams, &registry, move |windows_submitted| {
+            if windows_submitted >= 8 && !published.swap(true, Ordering::Relaxed) {
+                reg.publish(2, v2.clone()).unwrap();
+            }
+        })
+        .unwrap();
+    let stats = registry.plane_cache().stats();
+    (report, stats.evictions, stats.redecodes)
+}
+
+/// The acceptance pin: `cache_planes = 1` over three patients with a
+/// mid-stream publish serves the exact windows (index, label, margin)
+/// and ends on the exact model versions the unbounded registry serves,
+/// while actually evicting and re-decoding along the way.
+#[test]
+fn budget_one_cache_is_window_for_window_identical_to_unbounded() {
+    let (unbounded, ev0, _) = fleet_run(0);
+    let (bounded, evictions, redecodes) = fleet_run(1);
+
+    assert_eq!(ev0, 0, "unbounded cache must never evict");
+    assert!(
+        evictions > 0,
+        "three patients round-robin through one slot must evict"
+    );
+    assert!(redecodes > 0, "evicted planes must be decoded again on re-touch");
+
+    assert_eq!(unbounded.sessions.len(), bounded.sessions.len());
+    for (u, b) in unbounded.sessions.iter().zip(&bounded.sessions) {
+        assert_eq!(u.session_id, b.session_id);
+        assert_eq!(u.model_version, b.model_version, "session {}", u.session_id);
+        assert_eq!(u.model_swaps, b.model_swaps, "session {}", u.session_id);
+        assert_eq!(
+            u.predictions, b.predictions,
+            "session {}: eviction must never change a window",
+            u.session_id
+        );
+    }
+    // The mid-stream publish really happened: patient 2 ends on v2.
+    assert_eq!(bounded.sessions[1].model_version, 2);
+    assert!(bounded.sessions[1].model_swaps >= 1);
+    assert_eq!(bounded.metrics.plane_evictions, evictions);
+    assert!(bounded.metrics.plane_redecodes > 0);
+    assert_eq!(unbounded.metrics.plane_evictions, 0);
+}
+
+/// The PR-4 hot-swap pin under eviction pressure: a budget-1 registry
+/// also holds two idle patients whose planes the tick hook touches every
+/// chunk, so the streaming patient's plane is evicted between batches —
+/// and the v1→v2 boundary must still land at window 4 exactly.
+#[test]
+fn swap_boundary_holds_under_eviction_pressure() {
+    let (patient, v1) = tiny_trained_patient(5);
+    let mut v2 = v1.clone();
+    v2.version = 2;
+    v2.provenance.parent_version = 1;
+    v2.am = AssociativeMemory::new(v1.am.classes[1], v1.am.classes[0]);
+
+    let spec = |bundle: ModelBundle| StreamSpec {
+        session_id: 1,
+        patient_id: 5,
+        record: patient.records[1].clone(),
+        bundle,
+    };
+    let run_pure = |b: ModelBundle| -> Vec<sparse_hdc_ieeg::data::metrics::WindowPrediction> {
+        Coordinator::new(SystemConfig::default(), Backend::Native)
+            .run(vec![spec(b)])
+            .unwrap()
+            .sessions
+            .remove(0)
+            .predictions
+    };
+    let preds_v1 = run_pure(v1.clone());
+    let preds_v2 = run_pure(v2.clone());
+    assert_ne!(preds_v1, preds_v2, "class-swapped model must predict differently");
+
+    let registry = Arc::new(ModelRegistry::with_cache_planes(1));
+    // Two idle neighbours share the single slot with the streaming
+    // patient; touching them from the hook evicts patient 5's plane.
+    let (_, idle6) = tiny_trained_patient(6);
+    let (_, idle7) = tiny_trained_patient(7);
+    registry.publish(6, idle6).unwrap();
+    registry.publish(7, idle7).unwrap();
+
+    let published = AtomicBool::new(false);
+    let reg = registry.clone();
+    let coordinator = Coordinator::new(SystemConfig::default(), Backend::Native);
+    let report = coordinator
+        .run_with_registry(vec![spec(v1.clone())], &registry, move |windows_submitted| {
+            // Evict patient 5 between every routed chunk…
+            reg.current(6).unwrap().plane();
+            reg.current(7).unwrap().plane();
+            // …and publish v2 after the first micro-batch (4 windows,
+            // the SystemConfig default), exactly as the PR-4 pin does.
+            if windows_submitted >= 4 && !published.swap(true, Ordering::Relaxed) {
+                reg.publish(5, v2.clone()).unwrap();
+            }
+        })
+        .unwrap();
+
+    let stats = registry.plane_cache().stats();
+    assert!(stats.evictions > 0, "the hook must thrash the single slot");
+    assert!(stats.redecodes > 0);
+    assert!(registry.plane_cache().resident() <= 1);
+
+    let session = &report.sessions[0];
+    assert_eq!(session.model_version, 2, "stream must end on the new version");
+    assert_eq!(session.model_swaps, 1);
+    assert_eq!(report.metrics.windows_failed, 0, "zero drain at the swap");
+    let boundary = 4usize;
+    assert_eq!(
+        &session.predictions[..boundary],
+        &preds_v1[..boundary],
+        "pre-boundary windows must come from v1 despite eviction churn"
+    );
+    assert_eq!(
+        &session.predictions[boundary..],
+        &preds_v2[boundary..],
+        "post-boundary windows must come from v2 despite eviction churn"
+    );
+}

@@ -37,6 +37,7 @@ promote() {
 
 promote BENCH_encoder
 promote BENCH_am
+promote BENCH_registry
 
 # Wire-job loadgen report (sessions > 0 distinguishes a real report from
 # the committed stub).
@@ -56,4 +57,4 @@ else
     echo "skip: $loadgen_current not found" >&2
 fi
 
-echo "done — review with: git diff BENCH_encoder.json BENCH_am.json LOADGEN_wire.json"
+echo "done — review with: git diff BENCH_encoder.json BENCH_am.json BENCH_registry.json LOADGEN_wire.json"
