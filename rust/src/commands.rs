@@ -188,7 +188,12 @@ pub fn bench_speedup(args: &Args) -> sparse_hdc_ieeg::Result<()> {
 
 /// `repro loadgen --addr HOST:PORT --data DIR [--patients LIST]
 /// [--sessions N] [--concurrency N] [--record K] [--chunk N]
-/// [--report FILE] [--allow-drops]`
+/// [--retries N] [--report FILE] [--allow-drops]`
+///
+/// `--retries` re-runs sessions a fleet dispatcher cut with a
+/// "re-leased" `Shutdown` (shard died mid-stream); only the final
+/// attempt counts, so a rebalance under load still reports
+/// every-window-answered-exactly-once.
 ///
 /// Replay patient records as concurrent wire sessions against a
 /// `repro serve --listen` server and report throughput / latency /
@@ -204,6 +209,7 @@ pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "concurrency",
         "record",
         "chunk",
+        "retries",
         "report",
         "allow-drops",
     ])?;
@@ -223,6 +229,7 @@ pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     let mut cfg = loadgen::LoadgenConfig {
         sessions: args.get_parse("sessions", 64usize)?,
         concurrency: args.get_parse("concurrency", 16usize)?,
+        retries: args.get_parse("retries", 0usize)?,
         ..Default::default()
     };
     cfg.client.chunk_samples = args.get_parse("chunk", cfg.client.chunk_samples)?;
@@ -330,6 +337,84 @@ pub fn loadgen_diff(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         threshold * 100.0
     );
     Ok(())
+}
+
+/// `repro dispatch --shards ADDR,ADDR[,...] [--listen HOST:PORT]
+/// [--place "PATIENT=SHARD,..."] [--lease-ms N] [--reap-ms N]
+/// [--wait-shards-s N] [--config FILE]`
+///
+/// Run the fleet dispatcher (`coordinator::fleet`): register the given
+/// `serve --listen` shards over control connections, then accept
+/// clients, place each `Subscribe` by the deterministic patient hash
+/// (plus `--place` overrides), lease the patient to its shard, and
+/// proxy the session frames. When a shard dies its patients re-lease to
+/// survivors on their next placement. CLI flags override the `[fleet]`
+/// config section key-for-key.
+pub fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
+    use sparse_hdc_ieeg::config::{ConfigFile, SystemConfig};
+    use sparse_hdc_ieeg::coordinator::fleet;
+    use sparse_hdc_ieeg::transport::tcp::TcpTransport;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    args.check_known(&[
+        "shards",
+        "listen",
+        "place",
+        "lease-ms",
+        "reap-ms",
+        "wait-shards-s",
+        "config",
+    ])?;
+    let mut system = match args.get("config") {
+        Some(path) => SystemConfig::from_file(&ConfigFile::load(std::path::Path::new(path))?)?,
+        None => SystemConfig::default(),
+    };
+    if let Some(place) = args.get("place") {
+        system.fleet_overrides = Some(place.to_string());
+    }
+    system.fleet_lease_ms = args.get_parse("lease-ms", system.fleet_lease_ms)?;
+    system.fleet_reap_ms = args.get_parse("reap-ms", system.fleet_reap_ms)?;
+
+    let shards: Vec<String> = {
+        let cli = args.get_list("shards");
+        if cli.is_empty() {
+            system
+                .fleet_shards
+                .as_deref()
+                .unwrap_or("")
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        } else {
+            cli
+        }
+    };
+    ensure!(
+        !shards.is_empty(),
+        "dispatch needs shard addresses: --shards HOST:PORT,HOST:PORT or [fleet] shards"
+    );
+    let listen = args
+        .get("listen")
+        .or(system.fleet_listen.as_deref())
+        .unwrap_or("127.0.0.1:0")
+        .to_string();
+    let wait_s: u64 = args.get_parse("wait-shards-s", 10u64)?;
+
+    let n_shards = shards.len();
+    let cfg = fleet::FleetConfig::from_system(&system, shards)?;
+    let transport = TcpTransport::bind(&listen)?;
+    let connect: fleet::Connector = Arc::new(|addr: &str| TcpTransport::connect(addr));
+    let dispatcher = fleet::FleetDispatcher::start(Box::new(transport), connect, cfg)?;
+    dispatcher.wait_live(n_shards, Duration::from_secs(wait_s.max(1)))?;
+    println!("dispatch: {n_shards} shards registered and live");
+    // The scripted harnesses (CI smoke, tests) scrape this exact line
+    // for the bound port — same contract as `serve --listen`.
+    println!("listening on {}", dispatcher.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+    dispatcher.run()
 }
 
 /// `repro gen-data --out DIR [--patients N] [--records N] [--seed S]`

@@ -242,6 +242,21 @@ pub struct SystemConfig {
     /// Outbound frames buffered per connection before a slow consumer is
     /// shed (`[server] conn_queue`).
     pub conn_queue: usize,
+    /// Dispatcher listen address (`[fleet] listen`, CLI
+    /// `dispatch --listen`); unset = bind `127.0.0.1:0`.
+    pub fleet_listen: Option<String>,
+    /// Comma-separated shard data-plane addresses, slot = position
+    /// (`[fleet] shards`, CLI `dispatch --shards`).
+    pub fleet_shards: Option<String>,
+    /// Explicit placement overrides, `patient=shard` pairs
+    /// (`[fleet] place`, CLI `dispatch --place`). Overrides win over the
+    /// placement hash.
+    pub fleet_overrides: Option<String>,
+    /// Lease TTL, milliseconds (`[fleet] lease_ms`): a patient lease not
+    /// renewed by session traffic for this long is reaped.
+    pub fleet_lease_ms: u64,
+    /// Lease reaper scan interval, milliseconds (`[fleet] reap_ms`).
+    pub fleet_reap_ms: u64,
 }
 
 impl Default for SystemConfig {
@@ -269,6 +284,11 @@ impl Default for SystemConfig {
             heartbeat_ms: 1000,
             staleness_ms: 5000,
             conn_queue: 256,
+            fleet_listen: None,
+            fleet_shards: None,
+            fleet_overrides: None,
+            fleet_lease_ms: 3000,
+            fleet_reap_ms: 500,
         }
     }
 }
@@ -329,6 +349,11 @@ impl SystemConfig {
         cfg.heartbeat_ms = file.get_parse("server.heartbeat_ms", cfg.heartbeat_ms)?;
         cfg.staleness_ms = file.get_parse("server.staleness_ms", cfg.staleness_ms)?;
         cfg.conn_queue = file.get_parse("server.conn_queue", cfg.conn_queue)?;
+        cfg.fleet_listen = file.get("fleet.listen").map(str::to_string);
+        cfg.fleet_shards = file.get("fleet.shards").map(str::to_string);
+        cfg.fleet_overrides = file.get("fleet.place").map(str::to_string);
+        cfg.fleet_lease_ms = file.get_parse("fleet.lease_ms", cfg.fleet_lease_ms)?;
+        cfg.fleet_reap_ms = file.get_parse("fleet.reap_ms", cfg.fleet_reap_ms)?;
         file.finish()?;
         Ok(cfg)
     }
@@ -373,6 +398,13 @@ listen = "127.0.0.1:7070"
 heartbeat_ms = 500
 staleness_ms = 4000
 conn_queue = 32
+
+[fleet]
+listen = "127.0.0.1:7100"
+shards = "127.0.0.1:7101,127.0.0.1:7102"
+place = "1=0,2=1"
+lease_ms = 2000
+reap_ms = 250
 "#;
 
     #[test]
@@ -409,6 +441,14 @@ conn_queue = 32
         assert_eq!(cfg.heartbeat_ms, 500);
         assert_eq!(cfg.staleness_ms, 4000);
         assert_eq!(cfg.conn_queue, 32);
+        assert_eq!(cfg.fleet_listen.as_deref(), Some("127.0.0.1:7100"));
+        assert_eq!(
+            cfg.fleet_shards.as_deref(),
+            Some("127.0.0.1:7101,127.0.0.1:7102")
+        );
+        assert_eq!(cfg.fleet_overrides.as_deref(), Some("1=0,2=1"));
+        assert_eq!(cfg.fleet_lease_ms, 2000);
+        assert_eq!(cfg.fleet_reap_ms, 250);
         // untouched default
         assert_eq!(cfg.alarm_consecutive, 1);
     }
@@ -455,6 +495,11 @@ conn_queue = 32
         assert_eq!(cfg.heartbeat_ms, 1000);
         assert_eq!(cfg.staleness_ms, 5000);
         assert_eq!(cfg.conn_queue, 256);
+        assert_eq!(cfg.fleet_listen, None);
+        assert_eq!(cfg.fleet_shards, None);
+        assert_eq!(cfg.fleet_overrides, None);
+        assert_eq!(cfg.fleet_lease_ms, 3000);
+        assert_eq!(cfg.fleet_reap_ms, 500);
     }
 
     #[test]

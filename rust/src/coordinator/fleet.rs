@@ -1,0 +1,905 @@
+//! Fleet dispatcher: the control plane over N
+//! [`WireServer`](crate::coordinator::wire::WireServer) shards.
+//!
+//! One dispatcher process owns **per-patient placement** across a fleet
+//! of worker shards, where each shard is the existing wire server
+//! ([`crate::coordinator::wire`]) over the shared `ModelStore`. The
+//! split mirrors the trace-dispatcher architecture the ROADMAP names:
+//!
+//! * **placement** — deterministic: an explicit override table first,
+//!   then [`fleet_place`] (a splitmix64 hash of the patient id modulo
+//!   the shard count). Placement only decides *routing*; every shard
+//!   publishes the full model set from the store, which is what makes
+//!   re-leasing a patient to any survivor safe.
+//! * **leasing** — each routed session grants (or renews) a lease
+//!   `patient → shard` in the [`LeaseTable`]. Leases are renewed by
+//!   every upstream frame and reaped by a background thread once they
+//!   outlive their TTL without renewal, so a crashed proxy session can
+//!   never pin a patient to a shard forever.
+//! * **shard health** — one monitor thread per shard keeps a control
+//!   connection registered via `ShardHello` (epoch-stamped, echoed by
+//!   the shard as the ack), heartbeats through it, and declares the
+//!   shard dead when the connection drops or goes silent. Death flips
+//!   the slot's live flag; the affected leases re-lease lazily — the
+//!   next `Subscribe` for such a patient lands on a surviving shard and
+//!   is counted as a rebalance.
+//! * **data path** — the dispatcher proxies at frame granularity: it
+//!   reads the client's `Subscribe`, places it, answers with a `Route`
+//!   frame naming the shard, forwards the `Subscribe`, then pumps frames
+//!   both ways. If the shard dies mid-session the client receives a
+//!   reasoned `Shutdown` naming the re-lease, and can simply replay the
+//!   session — per-window outputs are idempotent and the survivor serves
+//!   the same model version from the store, so a replay produces the
+//!   identical prediction stream (the rebalance pinning contract,
+//!   `tests/fleet.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::SystemConfig;
+use crate::coordinator::metrics::FleetMetrics;
+use crate::transport::frame::{Frame, ReadOutcome};
+use crate::transport::{Duplex, Transport};
+use crate::{ensure, err};
+
+/// Poll tick for proxied reads (bounds shutdown latency).
+const READ_TICK: Duration = Duration::from_millis(50);
+/// Accept-loop poll tick.
+const ACCEPT_TICK: Duration = Duration::from_millis(200);
+/// How long a dead shard's monitor waits before redialing.
+const REDIAL_BACKOFF: Duration = Duration::from_millis(500);
+/// Control-connection outbound queue depth (lease grants).
+const CONTROL_QUEUE: usize = 64;
+
+/// Deterministic placement: splitmix64 of the patient id, modulo the
+/// shard count. Stable across processes and restarts — the dispatcher
+/// and `serve --shard-of` agree by construction.
+pub fn fleet_place(patient: u32, shards: u32) -> u32 {
+    let mut z = (patient as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % shards.max(1) as u64) as u32
+}
+
+/// Placement with the override table consulted first.
+pub fn effective_place(patient: u32, shards: u32, overrides: &HashMap<u32, u32>) -> u32 {
+    overrides
+        .get(&patient)
+        .copied()
+        .unwrap_or_else(|| fleet_place(patient, shards))
+}
+
+/// Parse an override spec `"7=1,9=0"` (patient=shard pairs).
+pub fn parse_overrides(spec: &str) -> crate::Result<HashMap<u32, u32>> {
+    let mut map = HashMap::new();
+    for pair in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (p, s) = pair
+            .split_once('=')
+            .ok_or_else(|| err!("placement override {pair:?} is not patient=shard"))?;
+        let patient: u32 = p
+            .trim()
+            .parse()
+            .map_err(|_| err!("bad patient id in override {pair:?}"))?;
+        let shard: u32 = s
+            .trim()
+            .parse()
+            .map_err(|_| err!("bad shard slot in override {pair:?}"))?;
+        ensure!(
+            map.insert(patient, shard).is_none(),
+            "patient {patient} appears twice in the override spec"
+        );
+    }
+    Ok(map)
+}
+
+/// Parse a `serve --shard-of K/N` spec into (slot, shard count).
+pub fn parse_shard_of(spec: &str) -> crate::Result<(u32, u32)> {
+    let (k, n) = spec
+        .split_once('/')
+        .ok_or_else(|| err!("--shard-of {spec:?} is not K/N"))?;
+    let k: u32 = k.trim().parse().map_err(|_| err!("bad shard slot in {spec:?}"))?;
+    let n: u32 = n.trim().parse().map_err(|_| err!("bad shard count in {spec:?}"))?;
+    ensure!(n > 0, "--shard-of {spec:?} names zero shards");
+    ensure!(k < n, "--shard-of {spec:?}: slot {k} is out of range for {n} shards");
+    Ok((k, n))
+}
+
+/// Fleet knobs (the `[fleet]` section of [`SystemConfig`] plus the shard
+/// address list, which only the CLI / config can supply).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Data-plane addresses, one per shard slot (slot = index).
+    pub shards: Vec<String>,
+    /// Explicit placement overrides (patient → shard slot).
+    pub overrides: HashMap<u32, u32>,
+    /// Lease TTL: a lease not renewed for this long is reaped.
+    pub lease: Duration,
+    /// Reaper scan interval.
+    pub reap_tick: Duration,
+    /// Control-connection heartbeat cadence.
+    pub heartbeat: Duration,
+    /// A shard silent on its control connection for this long is dead.
+    pub staleness: Duration,
+}
+
+impl FleetConfig {
+    pub fn from_system(system: &SystemConfig, shards: Vec<String>) -> crate::Result<FleetConfig> {
+        ensure!(!shards.is_empty(), "fleet needs at least one shard address");
+        let overrides = match &system.fleet_overrides {
+            Some(spec) => parse_overrides(spec)?,
+            None => HashMap::new(),
+        };
+        for (&patient, &shard) in &overrides {
+            ensure!(
+                (shard as usize) < shards.len(),
+                "override {patient}={shard} names shard {shard}, but only {} shards are configured",
+                shards.len()
+            );
+        }
+        Ok(FleetConfig {
+            shards,
+            overrides,
+            lease: Duration::from_millis(system.fleet_lease_ms.max(1)),
+            reap_tick: Duration::from_millis(system.fleet_reap_ms.max(1)),
+            heartbeat: Duration::from_millis(system.heartbeat_ms.max(1)),
+            staleness: Duration::from_millis(system.staleness_ms.max(1)),
+        })
+    }
+}
+
+/// How to dial a shard address — `TcpTransport::connect` in production,
+/// a pipe-connector map in tests.
+pub type Connector = Arc<dyn Fn(&str) -> crate::Result<Duplex> + Send + Sync>;
+
+/// One lease: which shard serves a patient, until when.
+#[derive(Clone, Copy, Debug)]
+struct LeaseEntry {
+    shard: u32,
+    epoch: u64,
+    expires: Instant,
+}
+
+/// The dispatcher's lease table: `patient → (shard, epoch, expiry)`.
+/// Entries are inserted on placement, refreshed by every proxied
+/// upstream frame, and removed by the reaper once expired — a lease is
+/// exactly "this patient's sessions flowed through this shard recently".
+#[derive(Default)]
+pub struct LeaseTable {
+    inner: Mutex<HashMap<u32, LeaseEntry>>,
+}
+
+impl LeaseTable {
+    pub fn new() -> Self {
+        LeaseTable::default()
+    }
+
+    /// The shard currently leasing `patient` (expired or not — expiry is
+    /// the reaper's call, placement only cares who held it last).
+    pub fn current(&self, patient: u32) -> Option<u32> {
+        self.inner.lock().ok()?.get(&patient).map(|l| l.shard)
+    }
+
+    /// Grant or move a lease (placement decided by the caller).
+    pub fn insert(&self, patient: u32, shard: u32, epoch: u64, ttl: Duration) {
+        if let Ok(mut map) = self.inner.lock() {
+            map.insert(
+                patient,
+                LeaseEntry {
+                    shard,
+                    epoch,
+                    expires: Instant::now() + ttl,
+                },
+            );
+        }
+    }
+
+    /// Push the expiry out (a frame flowed). Returns false if the lease
+    /// is gone (reaped mid-session — the next grant re-creates it).
+    pub fn renew(&self, patient: u32, ttl: Duration) -> bool {
+        match self.inner.lock() {
+            Ok(mut map) => match map.get_mut(&patient) {
+                Some(l) => {
+                    l.expires = Instant::now() + ttl;
+                    true
+                }
+                None => false,
+            },
+            Err(_) => false,
+        }
+    }
+
+    /// Leases currently held by `shard`.
+    pub fn held_by(&self, shard: u32) -> Vec<u32> {
+        match self.inner.lock() {
+            Ok(map) => {
+                let mut v: Vec<u32> = map
+                    .iter()
+                    .filter(|(_, l)| l.shard == shard)
+                    .map(|(&p, _)| p)
+                    .collect();
+                v.sort_unstable();
+                v
+            }
+            Err(_) => Vec::new(),
+        }
+    }
+
+    /// Remove every lease that expired before `now`; returns the reaped
+    /// `(patient, shard)` pairs.
+    pub fn reap(&self, now: Instant) -> Vec<(u32, u32)> {
+        match self.inner.lock() {
+            Ok(mut map) => {
+                let dead: Vec<(u32, u32)> = map
+                    .iter()
+                    .filter(|(_, l)| l.expires <= now)
+                    .map(|(&p, l)| (p, l.shard))
+                    .collect();
+                for (p, _) in &dead {
+                    map.remove(p);
+                }
+                dead
+            }
+            Err(_) => Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().map(|m| m.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One shard slot: address, liveness, registration epoch, and the
+/// monitor-owned control-connection sender (lease grants ride on it).
+struct ShardSlot {
+    addr: String,
+    alive: AtomicBool,
+    epoch: AtomicU64,
+    control_tx: Mutex<Option<SyncSender<Frame>>>,
+}
+
+impl ShardSlot {
+    fn new(addr: String) -> Self {
+        ShardSlot {
+            addr,
+            alive: AtomicBool::new(false),
+            epoch: AtomicU64::new(0),
+            control_tx: Mutex::new(None),
+        }
+    }
+
+    /// Best-effort send on the control connection (drops when the shard
+    /// is between registrations — grants are advisory records, the lease
+    /// table is authoritative).
+    fn send_control(&self, frame: Frame) {
+        if let Ok(guard) = self.control_tx.lock() {
+            if let Some(tx) = guard.as_ref() {
+                let _ = tx.try_send(frame);
+            }
+        }
+    }
+}
+
+/// State shared by the accept loop, proxy sessions, shard monitors and
+/// the reaper.
+struct FleetInner {
+    shards: Vec<ShardSlot>,
+    leases: LeaseTable,
+    overrides: HashMap<u32, u32>,
+    metrics: FleetMetrics,
+    connect: Connector,
+    cfg: FleetConfig,
+    stop: AtomicBool,
+}
+
+impl FleetInner {
+    fn shard_count(&self) -> u32 {
+        self.shards.len() as u32
+    }
+
+    fn live_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.alive.load(SeqCst)).count()
+    }
+
+    fn mark_alive(&self, slot: usize, epoch: u64) {
+        if !self.shards[slot].alive.swap(true, SeqCst) {
+            self.metrics.shards_live.fetch_add(1, Relaxed);
+            eprintln!(
+                "fleet: shard {slot} ({}) registered, epoch {epoch}",
+                self.shards[slot].addr
+            );
+        }
+    }
+
+    fn mark_dead(&self, slot: usize, why: &str) {
+        if self.shards[slot].alive.swap(false, SeqCst) {
+            self.metrics.shards_live.fetch_sub(1, Relaxed);
+            self.metrics.shards_dead.fetch_add(1, Relaxed);
+            let held = self.leases.held_by(slot as u32);
+            eprintln!(
+                "fleet: shard {slot} ({}) dead ({why}); {} leased patients {:?} \
+                 will re-lease to survivors",
+                self.shards[slot].addr,
+                held.len(),
+                held
+            );
+        }
+        if let Ok(mut guard) = self.shards[slot].control_tx.lock() {
+            *guard = None;
+        }
+    }
+
+    /// Place `patient` on a live shard, granting / renewing / moving its
+    /// lease. Returns the chosen slot.
+    fn lease_for(&self, patient: u32) -> Option<u32> {
+        let n = self.shard_count();
+        let prior = self.leases.current(patient);
+        if let Some(held) = prior {
+            if self.shards[held as usize].alive.load(SeqCst) {
+                self.leases.renew(patient, self.cfg.lease);
+                self.metrics.leases_renewed.fetch_add(1, Relaxed);
+                return Some(held);
+            }
+        }
+        let preferred = effective_place(patient, n, &self.overrides);
+        for probe in 0..n {
+            let slot = (preferred + probe) % n;
+            if !self.shards[slot as usize].alive.load(SeqCst) {
+                continue;
+            }
+            let epoch = self.shards[slot as usize].epoch.load(SeqCst);
+            self.leases.insert(patient, slot, epoch, self.cfg.lease);
+            self.metrics.leases_granted.fetch_add(1, Relaxed);
+            self.shards[slot as usize].send_control(Frame::Lease {
+                patient,
+                shard: slot,
+                epoch,
+            });
+            if let Some(from) = prior {
+                if from != slot {
+                    self.metrics.rebalances.fetch_add(1, Relaxed);
+                    eprintln!(
+                        "fleet: patient {patient} re-leased from dead shard {from} \
+                         to shard {slot}"
+                    );
+                }
+            }
+            return Some(slot);
+        }
+        None
+    }
+}
+
+/// Handle to a running dispatcher.
+pub struct FleetDispatcher {
+    inner: Arc<FleetInner>,
+    accept_handle: Option<JoinHandle<crate::Result<()>>>,
+    monitor_handles: Vec<JoinHandle<()>>,
+    reaper_handle: Option<JoinHandle<()>>,
+    addr: String,
+}
+
+impl FleetDispatcher {
+    /// Start dispatching: register with every shard (monitors keep
+    /// retrying in the background), accept clients on `transport`, proxy
+    /// sessions by placement. Returns once the accept loop is live — use
+    /// [`Self::wait_live`] to block until shards have registered.
+    pub fn start(
+        mut transport: Box<dyn Transport>,
+        connect: Connector,
+        cfg: FleetConfig,
+    ) -> crate::Result<FleetDispatcher> {
+        transport.set_write_timeout(Some(cfg.staleness));
+        let addr = transport.local_addr();
+        let inner = Arc::new(FleetInner {
+            shards: cfg.shards.iter().cloned().map(ShardSlot::new).collect(),
+            leases: LeaseTable::new(),
+            overrides: cfg.overrides.clone(),
+            metrics: FleetMetrics::default(),
+            connect,
+            cfg,
+            stop: AtomicBool::new(false),
+        });
+
+        let mut monitor_handles = Vec::new();
+        for slot in 0..inner.shards.len() {
+            let inner = inner.clone();
+            monitor_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("fleet-monitor-{slot}"))
+                    .spawn(move || monitor_loop(&inner, slot))?,
+            );
+        }
+
+        let reaper_handle = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("fleet-reaper".into())
+                .spawn(move || reaper_loop(&inner))?
+        };
+
+        let accept_handle = {
+            let inner = inner.clone();
+            std::thread::Builder::new()
+                .name("fleet-accept".into())
+                .spawn(move || -> crate::Result<()> {
+                    let mut sessions: Vec<JoinHandle<()>> = Vec::new();
+                    while !inner.stop.load(SeqCst) {
+                        match transport.accept(ACCEPT_TICK)? {
+                            Some(conn) => {
+                                inner.metrics.client_connections.fetch_add(1, Relaxed);
+                                let inner = inner.clone();
+                                sessions.push(
+                                    std::thread::Builder::new()
+                                        .name("fleet-proxy".into())
+                                        .spawn(move || proxy_session(&inner, conn))?,
+                                );
+                            }
+                            None => sessions.retain(|h| !h.is_finished()),
+                        }
+                    }
+                    for h in sessions {
+                        let _ = h.join();
+                    }
+                    Ok(())
+                })?
+        };
+
+        Ok(FleetDispatcher {
+            inner,
+            accept_handle: Some(accept_handle),
+            monitor_handles,
+            reaper_handle: Some(reaper_handle),
+            addr,
+        })
+    }
+
+    /// The client-facing address.
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn metrics(&self) -> &FleetMetrics {
+        &self.inner.metrics
+    }
+
+    pub fn leases(&self) -> &LeaseTable {
+        &self.inner.leases
+    }
+
+    /// Block until at least `n` shards are registered and live.
+    pub fn wait_live(&self, n: usize, timeout: Duration) -> crate::Result<()> {
+        let deadline = Instant::now() + timeout;
+        while self.inner.live_count() < n {
+            ensure!(
+                Instant::now() < deadline,
+                "only {}/{n} shards registered within {timeout:?}",
+                self.inner.live_count()
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        Ok(())
+    }
+
+    /// Stop accepting, close sessions and monitors, join every thread.
+    pub fn shutdown(mut self) -> crate::Result<()> {
+        self.inner.stop.store(true, SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            h.join().map_err(|_| err!("fleet accept thread panicked"))??;
+        }
+        for h in self.monitor_handles.drain(..) {
+            h.join().map_err(|_| err!("fleet monitor thread panicked"))?;
+        }
+        if let Some(h) = self.reaper_handle.take() {
+            h.join().map_err(|_| err!("fleet reaper thread panicked"))?;
+        }
+        Ok(())
+    }
+
+    /// Dispatch until the process dies (`repro dispatch` — CI stops it
+    /// with a signal).
+    pub fn run(mut self) -> crate::Result<()> {
+        if let Some(h) = self.accept_handle.take() {
+            h.join().map_err(|_| err!("fleet accept thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for FleetDispatcher {
+    fn drop(&mut self) {
+        self.inner.stop.store(true, SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.monitor_handles.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reaper_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Keep one shard registered: dial, `ShardHello`, await the echo ack,
+/// then heartbeat / relay lease grants / watch for silence. Any failure
+/// marks the shard dead and redials after a backoff.
+fn monitor_loop(inner: &FleetInner, slot: usize) {
+    let addr = inner.shards[slot].addr.clone();
+    while !inner.stop.load(SeqCst) {
+        let mut conn = match (inner.connect)(&addr) {
+            Ok(c) => c,
+            Err(_) => {
+                inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+                sleep_responsive(inner, REDIAL_BACKOFF);
+                continue;
+            }
+        };
+        if conn.set_read_timeout(Some(READ_TICK)).is_err() {
+            sleep_responsive(inner, REDIAL_BACKOFF);
+            continue;
+        }
+        let epoch = inner.shards[slot].epoch.fetch_add(1, SeqCst) + 1;
+        let hello = Frame::ShardHello {
+            shard: slot as u32,
+            epoch,
+        };
+        if conn.send(&hello).is_err() || !await_hello_ack(inner, &mut conn, slot as u32, epoch) {
+            inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+            sleep_responsive(inner, REDIAL_BACKOFF);
+            continue;
+        }
+        let (tx, rx) = sync_channel::<Frame>(CONTROL_QUEUE);
+        if let Ok(mut guard) = inner.shards[slot].control_tx.lock() {
+            *guard = Some(tx);
+        }
+        inner.mark_alive(slot, epoch);
+
+        let mut last_rx = Instant::now();
+        let mut last_hb = Instant::now();
+        let mut hb_seq = 0u64;
+        let why = loop {
+            if inner.stop.load(SeqCst) {
+                break "dispatcher stopping";
+            }
+            // Relay queued lease grants onto the control connection.
+            while let Ok(frame) = rx.try_recv() {
+                if conn.send(&frame).is_err() {
+                    break;
+                }
+            }
+            if last_hb.elapsed() >= inner.cfg.heartbeat {
+                hb_seq += 1;
+                if conn.send(&Frame::Heartbeat { seq: hb_seq }).is_err() {
+                    break "control heartbeat write failed";
+                }
+                last_hb = Instant::now();
+            }
+            match conn.recv() {
+                Ok(ReadOutcome::Frame(_)) => last_rx = Instant::now(),
+                Ok(ReadOutcome::Idle) => {
+                    if last_rx.elapsed() >= inner.cfg.staleness {
+                        break "control connection stale";
+                    }
+                }
+                Ok(ReadOutcome::Eof) => break "control connection closed",
+                Err(_) => break "control connection error",
+            }
+        };
+        inner.mark_dead(slot, why);
+        if inner.stop.load(SeqCst) {
+            return;
+        }
+        sleep_responsive(inner, REDIAL_BACKOFF);
+    }
+}
+
+/// Wait (bounded by the staleness deadline) for the shard to echo our
+/// `ShardHello` registration.
+fn await_hello_ack(inner: &FleetInner, conn: &mut Duplex, shard: u32, epoch: u64) -> bool {
+    let deadline = Instant::now() + inner.cfg.staleness;
+    while Instant::now() < deadline && !inner.stop.load(SeqCst) {
+        match conn.recv() {
+            Ok(ReadOutcome::Frame(Frame::ShardHello { shard: s, epoch: e })) => {
+                return s == shard && e == epoch;
+            }
+            Ok(ReadOutcome::Frame(Frame::Shutdown { reason })) => {
+                eprintln!("fleet: shard {shard} rejected registration: {reason}");
+                return false;
+            }
+            Ok(ReadOutcome::Frame(_)) | Ok(ReadOutcome::Idle) => {}
+            Ok(ReadOutcome::Eof) | Err(_) => return false,
+        }
+    }
+    false
+}
+
+/// Reap expired leases on a fixed cadence.
+fn reaper_loop(inner: &FleetInner) {
+    while !inner.stop.load(SeqCst) {
+        sleep_responsive(inner, inner.cfg.reap_tick);
+        let reaped = inner.leases.reap(Instant::now());
+        if !reaped.is_empty() {
+            inner
+                .metrics
+                .leases_expired
+                .fetch_add(reaped.len() as u64, Relaxed);
+            eprintln!("fleet: reaped {} expired leases: {:?}", reaped.len(), reaped);
+        }
+    }
+}
+
+/// Sleep in stop-checking steps.
+fn sleep_responsive(inner: &FleetInner, total: Duration) {
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline && !inner.stop.load(SeqCst) {
+        std::thread::sleep(READ_TICK.min(deadline.saturating_duration_since(Instant::now())));
+    }
+}
+
+/// One proxied client session: read the `Subscribe`, place it, `Route`,
+/// forward, pump frames both ways until either side closes.
+fn proxy_session(inner: &Arc<FleetInner>, mut client: Duplex) {
+    if client.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
+    // First frame must be the Subscribe (heartbeats may precede it).
+    let deadline = Instant::now() + inner.cfg.staleness;
+    let patient = loop {
+        if inner.stop.load(SeqCst) || Instant::now() >= deadline {
+            let _ = client.send(&Frame::Shutdown {
+                reason: "no Subscribe within the staleness deadline".into(),
+            });
+            return;
+        }
+        match client.recv() {
+            Ok(ReadOutcome::Frame(Frame::Subscribe { patient })) => break patient,
+            Ok(ReadOutcome::Frame(Frame::Heartbeat { .. })) | Ok(ReadOutcome::Idle) => {}
+            Ok(ReadOutcome::Frame(f)) => {
+                let _ = client.send(&Frame::Shutdown {
+                    reason: format!("expected Subscribe, got {}", f.kind_name()),
+                });
+                return;
+            }
+            Ok(ReadOutcome::Eof) | Err(_) => return,
+        }
+    };
+
+    let Some(slot) = inner.lease_for(patient) else {
+        let _ = client.send(&Frame::Shutdown {
+            reason: format!("no live shard for patient {patient}"),
+        });
+        return;
+    };
+    let addr = inner.shards[slot as usize].addr.clone();
+    let mut shard_conn = match (inner.connect)(&addr) {
+        Ok(c) => c,
+        Err(_) => {
+            inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+            inner.mark_dead(slot as usize, "data dial failed");
+            let _ = client.send(&Frame::Shutdown {
+                reason: format!(
+                    "shard {slot} unreachable; patient {patient} will be re-leased"
+                ),
+            });
+            return;
+        }
+    };
+    if shard_conn.set_read_timeout(Some(READ_TICK)).is_err() {
+        return;
+    }
+    if client
+        .send(&Frame::Route {
+            patient,
+            shard: slot,
+            addr,
+        })
+        .is_err()
+    {
+        return;
+    }
+    inner.metrics.routes_sent.fetch_add(1, Relaxed);
+    if shard_conn.send(&Frame::Subscribe { patient }).is_err() {
+        inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+        inner.mark_dead(slot as usize, "Subscribe forward failed");
+        let _ = client.send(&Frame::Shutdown {
+            reason: format!("shard {slot} lost; patient {patient} will be re-leased"),
+        });
+        return;
+    }
+    inner.metrics.sessions_routed.fetch_add(1, Relaxed);
+
+    let (shard_reader, shard_writer, _) = shard_conn.split();
+    let (client_reader, mut client_writer, _) = client.split();
+    let done = Arc::new(AtomicBool::new(false));
+
+    // Downstream: shard → client (predictions, heartbeats, the final
+    // Shutdown). A shard-side EOF/error before the session's Shutdown is
+    // a mid-stream shard death: the client gets a reasoned Shutdown
+    // naming the re-lease and can replay the session against a survivor.
+    let downstream = {
+        let inner = inner.clone();
+        let done = done.clone();
+        let mut reader = shard_reader;
+        std::thread::Builder::new()
+            .name("fleet-down".into())
+            .spawn(move || {
+                loop {
+                    if done.load(SeqCst) || inner.stop.load(SeqCst) {
+                        return;
+                    }
+                    match reader.read() {
+                        Ok(ReadOutcome::Frame(frame)) => {
+                            let last = matches!(frame, Frame::Shutdown { .. });
+                            if let Frame::Shutdown { reason } = &frame {
+                                if reason == "end of stream" {
+                                    inner.metrics.leases_released.fetch_add(1, Relaxed);
+                                }
+                            }
+                            let failed = crate::transport::frame::write_frame(
+                                &mut client_writer,
+                                &frame,
+                            )
+                            .is_err();
+                            inner.metrics.frames_downstream.fetch_add(1, Relaxed);
+                            if last || failed {
+                                done.store(true, SeqCst);
+                                return;
+                            }
+                        }
+                        Ok(ReadOutcome::Idle) => {}
+                        Ok(ReadOutcome::Eof) | Err(_) => {
+                            if !done.swap(true, SeqCst) {
+                                inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+                                inner.mark_dead(slot as usize, "data connection lost");
+                                let _ = crate::transport::frame::write_frame(
+                                    &mut client_writer,
+                                    &Frame::Shutdown {
+                                        reason: format!(
+                                            "shard {slot} lost; patient {patient} will be \
+                                             re-leased to a surviving shard"
+                                        ),
+                                    },
+                                );
+                            }
+                            return;
+                        }
+                    }
+                }
+            })
+    };
+
+    // Upstream: client → shard. Every forwarded frame renews the lease.
+    let mut reader = client_reader;
+    let mut writer = shard_writer;
+    loop {
+        if done.load(SeqCst) || inner.stop.load(SeqCst) {
+            break;
+        }
+        match reader.read() {
+            Ok(ReadOutcome::Frame(frame)) => {
+                inner.leases.renew(patient, inner.cfg.lease);
+                if crate::transport::frame::write_frame(&mut writer, &frame).is_err() {
+                    // The shard hung up — downstream sees the same close
+                    // and notifies the client; nothing more to forward.
+                    break;
+                }
+                inner.metrics.frames_upstream.fetch_add(1, Relaxed);
+            }
+            Ok(ReadOutcome::Idle) => {
+                // A silent client is the shard's staleness call; its
+                // Shutdown flows back through the downstream pump.
+            }
+            Ok(ReadOutcome::Eof) | Err(_) => break,
+        }
+    }
+    drop(writer);
+    if let Ok(h) = downstream {
+        let _ = h.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_is_deterministic_and_in_range() {
+        for shards in 1..6u32 {
+            for patient in 0..200u32 {
+                let a = fleet_place(patient, shards);
+                let b = fleet_place(patient, shards);
+                assert_eq!(a, b, "placement must be stable");
+                assert!(a < shards, "slot {a} out of range for {shards} shards");
+            }
+        }
+        // The hash actually spreads: 200 patients over 4 shards never
+        // all land on one slot.
+        let mut counts = [0usize; 4];
+        for patient in 0..200u32 {
+            counts[fleet_place(patient, 4) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "degenerate spread {counts:?}");
+    }
+
+    #[test]
+    fn overrides_win_over_the_hash() {
+        let overrides: HashMap<u32, u32> = [(7, 3), (9, 0)].into_iter().collect();
+        assert_eq!(effective_place(7, 4, &overrides), 3);
+        assert_eq!(effective_place(9, 4, &overrides), 0);
+        let free = effective_place(11, 4, &overrides);
+        assert_eq!(free, fleet_place(11, 4));
+    }
+
+    #[test]
+    fn override_spec_parses_and_rejects() {
+        let map = parse_overrides("7=1, 9=0").unwrap();
+        assert_eq!(map.get(&7), Some(&1));
+        assert_eq!(map.get(&9), Some(&0));
+        assert_eq!(parse_overrides("").unwrap().len(), 0);
+        assert!(parse_overrides("7").is_err());
+        assert!(parse_overrides("x=1").is_err());
+        assert!(parse_overrides("7=y").is_err());
+        assert!(parse_overrides("7=1,7=2").is_err(), "duplicate patient");
+    }
+
+    #[test]
+    fn shard_of_spec_parses_and_rejects() {
+        assert_eq!(parse_shard_of("0/2").unwrap(), (0, 2));
+        assert_eq!(parse_shard_of("3/8").unwrap(), (3, 8));
+        assert!(parse_shard_of("2/2").is_err(), "slot out of range");
+        assert!(parse_shard_of("1/0").is_err(), "zero shards");
+        assert!(parse_shard_of("1").is_err());
+        assert!(parse_shard_of("a/b").is_err());
+    }
+
+    #[test]
+    fn lease_table_grant_renew_reap() {
+        let t = LeaseTable::new();
+        assert!(t.is_empty());
+        let ttl = Duration::from_millis(40);
+        t.insert(7, 1, 1, ttl);
+        t.insert(9, 0, 1, ttl);
+        assert_eq!(t.current(7), Some(1));
+        assert_eq!(t.held_by(1), vec![7]);
+        assert_eq!(t.held_by(0), vec![9]);
+        assert_eq!(t.len(), 2);
+        // Nothing is expired yet.
+        assert!(t.reap(Instant::now()).is_empty());
+        // Renewal pushes expiry out; a missing patient cannot renew.
+        assert!(t.renew(7, ttl));
+        assert!(!t.renew(1234, ttl));
+        // Far in the future, everything is reaped (sorted for the assert).
+        let mut reaped = t.reap(Instant::now() + Duration::from_secs(3600));
+        reaped.sort_unstable();
+        assert_eq!(reaped, vec![(7, 1), (9, 0)]);
+        assert!(t.is_empty());
+        assert_eq!(t.current(7), None);
+    }
+
+    #[test]
+    fn fleet_config_validates_overrides() {
+        let mut system = SystemConfig::default();
+        system.fleet_overrides = Some("1=0,2=1".into());
+        let cfg = FleetConfig::from_system(
+            &system,
+            vec!["a:1".into(), "b:2".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.overrides.len(), 2);
+        // An override naming a slot past the shard list is rejected.
+        system.fleet_overrides = Some("1=5".into());
+        assert!(FleetConfig::from_system(&system, vec!["a:1".into()]).is_err());
+        // No shards at all is rejected.
+        system.fleet_overrides = None;
+        assert!(FleetConfig::from_system(&system, Vec::new()).is_err());
+    }
+}

@@ -309,6 +309,10 @@ pub struct WireMetrics {
     pub heartbeats_sent: std::sync::atomic::AtomicU64,
     /// Malformed / out-of-order / misdirected frames.
     pub protocol_errors: std::sync::atomic::AtomicU64,
+    /// Dispatcher control connections registered via `ShardHello`.
+    pub control_hellos: std::sync::atomic::AtomicU64,
+    /// Lease grants acknowledged on control connections.
+    pub leases_acked: std::sync::atomic::AtomicU64,
 }
 
 impl WireMetrics {
@@ -317,7 +321,7 @@ impl WireMetrics {
         format!(
             "conns {} | sessions {}/{} done | frames in {} | windows {}/{} | \
              predictions {} sent, {} dropped | shed {} | stale {} | heartbeats {} | \
-             protocol errors {}",
+             protocol errors {} | control hellos {} | leases acked {}",
             self.connections.load(Relaxed),
             self.sessions_finished.load(Relaxed),
             self.sessions_started.load(Relaxed),
@@ -330,6 +334,67 @@ impl WireMetrics {
             self.stale_disconnects.load(Relaxed),
             self.heartbeats_sent.load(Relaxed),
             self.protocol_errors.load(Relaxed),
+            self.control_hellos.load(Relaxed),
+            self.leases_acked.load(Relaxed),
+        )
+    }
+}
+
+/// Shared counters of the fleet dispatcher
+/// ([`crate::coordinator::fleet`]). Same discipline as [`WireMetrics`]:
+/// plain atomics updated from the accept loop, per-session proxy threads,
+/// the shard monitors and the lease reaper — statistics, never
+/// synchronization.
+#[derive(Debug, Default)]
+pub struct FleetMetrics {
+    /// Client connections accepted by the dispatcher.
+    pub client_connections: std::sync::atomic::AtomicU64,
+    /// Sessions routed to a shard (Subscribe placed + proxied).
+    pub sessions_routed: std::sync::atomic::AtomicU64,
+    /// `Route` frames sent to clients.
+    pub routes_sent: std::sync::atomic::AtomicU64,
+    /// Leases granted (first placement of a patient on a shard).
+    pub leases_granted: std::sync::atomic::AtomicU64,
+    /// Lease renewals (frames flowing on an already-leased session).
+    pub leases_renewed: std::sync::atomic::AtomicU64,
+    /// Leases expired by the reaper (no renewal within the lease TTL).
+    pub leases_expired: std::sync::atomic::AtomicU64,
+    /// Leases released on orderly session end.
+    pub leases_released: std::sync::atomic::AtomicU64,
+    /// Patients re-leased to a surviving shard after their shard died.
+    pub rebalances: std::sync::atomic::AtomicU64,
+    /// Shards currently registered and live.
+    pub shards_live: std::sync::atomic::AtomicU64,
+    /// Shards declared dead (control connection lost or dial failed).
+    pub shards_dead: std::sync::atomic::AtomicU64,
+    /// Frames proxied client → shard.
+    pub frames_upstream: std::sync::atomic::AtomicU64,
+    /// Frames proxied shard → client.
+    pub frames_downstream: std::sync::atomic::AtomicU64,
+    /// Shard connection failures (dial errors, mid-session EOF/IO).
+    pub shard_conn_errors: std::sync::atomic::AtomicU64,
+}
+
+impl FleetMetrics {
+    pub fn summary(&self) -> String {
+        use std::sync::atomic::Ordering::Relaxed;
+        format!(
+            "clients {} | sessions routed {} | routes {} | leases {} granted, {} renewed, \
+             {} expired, {} released | rebalances {} | shards {} live, {} dead | \
+             frames {} up, {} down | shard errors {}",
+            self.client_connections.load(Relaxed),
+            self.sessions_routed.load(Relaxed),
+            self.routes_sent.load(Relaxed),
+            self.leases_granted.load(Relaxed),
+            self.leases_renewed.load(Relaxed),
+            self.leases_expired.load(Relaxed),
+            self.leases_released.load(Relaxed),
+            self.rebalances.load(Relaxed),
+            self.shards_live.load(Relaxed),
+            self.shards_dead.load(Relaxed),
+            self.frames_upstream.load(Relaxed),
+            self.frames_downstream.load(Relaxed),
+            self.shard_conn_errors.load(Relaxed),
         )
     }
 }
@@ -443,5 +508,20 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("conns 3"), "{s}");
         assert!(s.contains("shed 1"), "{s}");
+    }
+
+    #[test]
+    fn fleet_metrics_summary_smoke() {
+        use std::sync::atomic::Ordering::Relaxed;
+        let m = FleetMetrics::default();
+        m.client_connections.fetch_add(5, Relaxed);
+        m.leases_granted.fetch_add(4, Relaxed);
+        m.rebalances.fetch_add(1, Relaxed);
+        m.shards_live.store(2, Relaxed);
+        let s = m.summary();
+        assert!(s.contains("clients 5"), "{s}");
+        assert!(s.contains("leases 4 granted"), "{s}");
+        assert!(s.contains("rebalances 1"), "{s}");
+        assert!(s.contains("shards 2 live"), "{s}");
     }
 }

@@ -25,9 +25,14 @@
 //! * [`wire`] — the wire-level serving layer: actor-per-connection
 //!   framed streaming over any [`crate::transport::Transport`], with
 //!   heartbeat/staleness deadlines and slow-consumer shedding
-//!   (`serve --listen`).
+//!   (`serve --listen`);
+//! * [`fleet`] — the sharded control plane: a dispatcher that owns
+//!   per-patient placement across N wire-server shards, leases patients
+//!   with a heartbeat-renewed lease table + reaper, and re-leases a dead
+//!   shard's patients to survivors (`repro dispatch --shards`).
 
 pub mod detector;
+pub mod fleet;
 pub mod metrics;
 pub mod registry;
 pub mod router;

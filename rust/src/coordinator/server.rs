@@ -492,7 +492,8 @@ fn deploy_saved_bundle(path: &str, system: &mut SystemConfig) -> crate::Result<M
 
 /// `repro serve --data DIR [--patients LIST] [--model FILE]
 /// [--models-dir DIR] [--retrain-epochs N] [--retrain-fa-rate R]
-/// [--use-pjrt] [--realtime] [--config FILE] [--record K]`
+/// [--use-pjrt] [--realtime] [--config FILE] [--record K]
+/// [--listen ADDR] [--shard-of K/N]`
 pub fn serve_command(args: &Args) -> crate::Result<()> {
     args.check_known(&[
         "data",
@@ -511,6 +512,7 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "cache-planes",
         "max-model-versions",
         "listen",
+        "shard-of",
         "kernels",
     ])?;
     let data = PathBuf::from(args.require("data")?);
@@ -727,6 +729,16 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         };
         let mut wire_cfg = crate::coordinator::wire::WireConfig::from_system(&system);
         wire_cfg.batch_windows = args.get_parse("batch", wire_cfg.batch_windows)?.max(1);
+        // `--shard-of K/N` pins this server's shard identity for the
+        // fleet dispatcher's ShardHello handshake. It deliberately does
+        // NOT filter the served patients: every shard publishes every
+        // patient's model, which is what lets a dead shard's patients
+        // re-lease to any survivor and resume from the shared store.
+        if let Some(spec) = args.get("shard-of") {
+            let (slot, count) = crate::coordinator::fleet::parse_shard_of(spec)?;
+            wire_cfg.shard = Some(slot);
+            println!("shard: slot {slot} of {count}");
+        }
         let transport = crate::transport::tcp::TcpTransport::bind(&addr)?;
         let server =
             crate::coordinator::wire::WireServer::start(Box::new(transport), &backend, &system, registry, wire_cfg)?;

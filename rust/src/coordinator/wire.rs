@@ -75,6 +75,12 @@ pub struct WireConfig {
     /// Alarm policy: consecutive ictal windows (detector state lives in
     /// the session even though wire clients do their own alarming).
     pub alarm_consecutive: usize,
+    /// Placement slot when this server runs as a fleet shard
+    /// (`serve --shard-of K/N`): `ShardHello` control handshakes naming a
+    /// different slot are rejected, so a dispatcher can never register a
+    /// mis-addressed shard. `None` = standalone server, any hello is
+    /// acknowledged as addressed.
+    pub shard: Option<u32>,
 }
 
 impl WireConfig {
@@ -86,6 +92,7 @@ impl WireConfig {
             batch_windows: system.batch_windows.max(1),
             engine_queue: system.queue_depth.max(1),
             alarm_consecutive: system.alarm_consecutive,
+            shard: None,
         }
     }
 }
@@ -343,6 +350,11 @@ impl ConnectionActor {
         let mut expected_seq = 0u64;
         let mut last_rx = Instant::now();
         let mut batches: Vec<ReadyBatch> = Vec::new();
+        // Dispatcher control connection (opened with ShardHello): carries
+        // lease grants and heartbeats, never a data session, and is
+        // exempt from the staleness reaper — the dispatcher's own
+        // heartbeat cadence is its liveness contract.
+        let mut control = false;
         loop {
             if self.stop.load(SeqCst) || shared.closed.load(SeqCst) {
                 shared.closed.store(true, SeqCst);
@@ -357,7 +369,7 @@ impl ConnectionActor {
             };
             match outcome {
                 ReadOutcome::Idle => {
-                    if last_rx.elapsed() >= self.cfg.staleness {
+                    if !control && last_rx.elapsed() >= self.cfg.staleness {
                         self.metrics.stale_disconnects.fetch_add(1, Relaxed);
                         let _ = shared.out.try_send(Frame::Shutdown {
                             reason: format!(
@@ -378,6 +390,13 @@ impl ConnectionActor {
                     self.metrics.frames_in.fetch_add(1, Relaxed);
                     match frame {
                         Frame::Subscribe { patient } => {
+                            if control {
+                                self.protocol_error(
+                                    shared,
+                                    "Subscribe on a control connection".into(),
+                                );
+                                return sid;
+                            }
                             if session.is_some() {
                                 self.protocol_error(shared, "duplicate Subscribe".into());
                                 return sid;
@@ -452,6 +471,57 @@ impl ConnectionActor {
                             self.protocol_error(
                                 shared,
                                 "client sent a server-side Prediction frame".into(),
+                            );
+                            return sid;
+                        }
+                        Frame::ShardHello { shard, epoch } => {
+                            if session.is_some() {
+                                self.protocol_error(
+                                    shared,
+                                    "ShardHello on a data connection".into(),
+                                );
+                                return sid;
+                            }
+                            if let Some(own) = self.cfg.shard {
+                                if shard != own {
+                                    self.protocol_error(
+                                        shared,
+                                        format!(
+                                            "ShardHello for shard {shard}, this server is shard {own}"
+                                        ),
+                                    );
+                                    return sid;
+                                }
+                            }
+                            control = true;
+                            self.metrics.control_hellos.fetch_add(1, Relaxed);
+                            // Echo the hello back as the registration ack.
+                            let _ = shared.out.try_send(Frame::ShardHello { shard, epoch });
+                        }
+                        Frame::Lease {
+                            patient,
+                            shard,
+                            epoch,
+                        } => {
+                            if !control {
+                                self.protocol_error(
+                                    shared,
+                                    "Lease on a data connection".into(),
+                                );
+                                return sid;
+                            }
+                            self.metrics.leases_acked.fetch_add(1, Relaxed);
+                            // Echo the grant back as the ack.
+                            let _ = shared.out.try_send(Frame::Lease {
+                                patient,
+                                shard,
+                                epoch,
+                            });
+                        }
+                        Frame::Route { .. } => {
+                            self.protocol_error(
+                                shared,
+                                "client sent a dispatcher-side Route frame".into(),
                             );
                             return sid;
                         }

@@ -45,6 +45,7 @@ fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         Some("ablate-thinning") => commands::ablate_thinning(args),
         Some("bench-diff") => commands::bench_diff(args),
         Some("bench-speedup") => commands::bench_speedup(args),
+        Some("dispatch") => commands::dispatch(args),
         Some("loadgen") => commands::loadgen(args),
         Some("loadgen-diff") => commands::loadgen_diff(args),
         Some("help") | None => {
@@ -72,6 +73,10 @@ data / model:
             [--use-pjrt] [--realtime] [--batch N] [--chunk N]
             [--kernels SET]     pin the compute kernel set (scalar|avx2|neon|auto)
             [--listen ADDR]     serve framed TCP instead of in-process replay
+            [--shard-of K/N]    declare this server shard K of an N-shard fleet
+  dispatch  --shards ADDR,ADDR[,...] [--listen ADDR] [--place "P=S,..."]
+            [--lease-ms N] [--reap-ms N] [--wait-shards-s N] [--config FILE]
+            fleet dispatcher: place patients across shards, lease + re-lease
 
 paper experiments:
   fig1c     [--windows N]                 naive sparse breakdown (Fig. 1c)
@@ -88,8 +93,9 @@ tooling:
             within-run SIMD gate: best kernel/*/scalar vs /simd pair must
             show at least X speedup (default 2.0)
   loadgen   --addr HOST:PORT --data DIR [--patients LIST] [--sessions N]
-            [--concurrency N] [--record K] [--chunk N] [--report FILE]
-            [--allow-drops]   replay concurrent wire sessions, report loadgen/v1
+            [--concurrency N] [--record K] [--chunk N] [--retries N]
+            [--report FILE] [--allow-drops]
+            replay concurrent wire sessions, report loadgen/v1
   loadgen-diff <current.json> <baseline.json> [--threshold FRAC]
             compare two loadgen/v1 reports (stub baseline = error)
 

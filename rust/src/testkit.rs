@@ -147,7 +147,7 @@ pub fn tiny_trained_patient(
 /// fast; the codec's size limits have their own directed tests.
 pub fn wire_frame(g: &mut Gen) -> crate::transport::frame::Frame {
     use crate::transport::frame::Frame;
-    match g.usize_below(5) {
+    match g.usize_below(8) {
         0 => Frame::Subscribe {
             patient: g.u64() as u32,
         },
@@ -171,6 +171,24 @@ pub fn wire_frame(g: &mut Gen) -> crate::transport::frame::Frame {
             model_version: g.u64(),
         },
         3 => Frame::Heartbeat { seq: g.u64() },
+        4 => Frame::ShardHello {
+            shard: g.u64() as u32,
+            epoch: g.u64(),
+        },
+        5 => Frame::Lease {
+            patient: g.u64() as u32,
+            shard: g.u64() as u32,
+            epoch: g.u64(),
+        },
+        6 => Frame::Route {
+            patient: g.u64() as u32,
+            shard: g.u64() as u32,
+            addr: match g.usize_below(3) {
+                0 => String::new(),
+                1 => "127.0.0.1:7001".to_string(),
+                _ => "[::1]:65535".to_string(),
+            },
+        },
         _ => Frame::Shutdown {
             reason: match g.usize_below(3) {
                 0 => String::new(),

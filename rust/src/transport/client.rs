@@ -71,6 +71,10 @@ pub struct StreamOutcome {
     pub send_error: Option<String>,
     /// Windows fully written to the wire (the denominator for drops).
     pub windows_sent: u64,
+    /// Placement announced by a fleet dispatcher (`Route` frame): the
+    /// shard slot and data-plane address this session was proxied to.
+    /// `None` when talking to a shard or standalone server directly.
+    pub routed: Option<(u32, String)>,
 }
 
 impl StreamOutcome {
@@ -159,6 +163,7 @@ fn read_predictions(
         latencies: Vec::new(),
         send_error: None,
         windows_sent: 0,
+        routed: None,
     };
     let mut last_frame = Instant::now();
     loop {
@@ -200,7 +205,13 @@ fn read_predictions(
                         outcome.shutdown_reason = Some(reason);
                         return Ok(outcome);
                     }
-                    Frame::Subscribe { .. } | Frame::Samples { .. } => {
+                    Frame::Route { shard, addr, .. } => {
+                        outcome.routed = Some((shard, addr));
+                    }
+                    Frame::Subscribe { .. }
+                    | Frame::Samples { .. }
+                    | Frame::ShardHello { .. }
+                    | Frame::Lease { .. } => {
                         crate::bail!("server sent a client-side frame: {}", frame.kind_name())
                     }
                 }

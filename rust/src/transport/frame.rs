@@ -18,6 +18,9 @@
 //! | 3    | `Prediction` | `window u64, model_version u64, margin i64, label u8` |
 //! | 4    | `Heartbeat`  | `seq u64`                                         |
 //! | 5    | `Shutdown`   | `len u32, len bytes UTF-8 reason`                 |
+//! | 6    | `ShardHello` | `shard u32, epoch u64`                            |
+//! | 7    | `Lease`      | `patient u32, shard u32, epoch u64`               |
+//! | 8    | `Route`      | `patient u32, shard u32, len u32, len bytes addr` |
 //!
 //! Streams are reassembled by [`FrameDecoder`], which accepts arbitrary
 //! byte chunks (TCP segments, pipe writes) and yields whole frames —
@@ -46,6 +49,9 @@ const KIND_SAMPLES: u8 = 2;
 const KIND_PREDICTION: u8 = 3;
 const KIND_HEARTBEAT: u8 = 4;
 const KIND_SHUTDOWN: u8 = 5;
+const KIND_SHARD_HELLO: u8 = 6;
+const KIND_LEASE: u8 = 7;
+const KIND_ROUTE: u8 = 8;
 
 /// One protocol frame (either direction; the server only accepts
 /// client-side kinds and vice versa — direction is policed by the
@@ -69,6 +75,25 @@ pub enum Frame {
     Heartbeat { seq: u64 },
     /// Either direction: orderly close with a reason.
     Shutdown { reason: String },
+    /// Dispatcher ↔ shard: control-plane registration handshake. The
+    /// dispatcher opens a control connection and announces the shard's
+    /// placement slot plus its registration epoch; the shard echoes the
+    /// frame back as the acknowledgement. `epoch` increments on every
+    /// re-registration so a stale hello can never be mistaken for a
+    /// fresh one.
+    ShardHello { shard: u32, epoch: u64 },
+    /// Dispatcher → shard (echoed back as the ack): a patient is leased
+    /// to this shard under the given registration epoch. Leases are
+    /// renewed while the session's frames flow and reaped by the
+    /// dispatcher when the shard dies or the session goes silent.
+    Lease { patient: u32, shard: u32, epoch: u64 },
+    /// Dispatcher → client: where a `Subscribe` was placed (shard slot
+    /// and its data-plane address) before the session is proxied through.
+    Route {
+        patient: u32,
+        shard: u32,
+        addr: String,
+    },
 }
 
 impl Frame {
@@ -79,6 +104,9 @@ impl Frame {
             Frame::Prediction { .. } => KIND_PREDICTION,
             Frame::Heartbeat { .. } => KIND_HEARTBEAT,
             Frame::Shutdown { .. } => KIND_SHUTDOWN,
+            Frame::ShardHello { .. } => KIND_SHARD_HELLO,
+            Frame::Lease { .. } => KIND_LEASE,
+            Frame::Route { .. } => KIND_ROUTE,
         }
     }
 
@@ -89,6 +117,9 @@ impl Frame {
             Frame::Prediction { .. } => "Prediction",
             Frame::Heartbeat { .. } => "Heartbeat",
             Frame::Shutdown { .. } => "Shutdown",
+            Frame::ShardHello { .. } => "ShardHello",
+            Frame::Lease { .. } => "Lease",
+            Frame::Route { .. } => "Route",
         }
     }
 
@@ -123,6 +154,35 @@ impl Frame {
                 let mut p = Vec::with_capacity(4 + reason.len());
                 p.extend_from_slice(&(reason.len() as u32).to_le_bytes());
                 p.extend_from_slice(reason.as_bytes());
+                p
+            }
+            Frame::ShardHello { shard, epoch } => {
+                let mut p = Vec::with_capacity(12);
+                p.extend_from_slice(&shard.to_le_bytes());
+                p.extend_from_slice(&epoch.to_le_bytes());
+                p
+            }
+            Frame::Lease {
+                patient,
+                shard,
+                epoch,
+            } => {
+                let mut p = Vec::with_capacity(16);
+                p.extend_from_slice(&patient.to_le_bytes());
+                p.extend_from_slice(&shard.to_le_bytes());
+                p.extend_from_slice(&epoch.to_le_bytes());
+                p
+            }
+            Frame::Route {
+                patient,
+                shard,
+                addr,
+            } => {
+                let mut p = Vec::with_capacity(12 + addr.len());
+                p.extend_from_slice(&patient.to_le_bytes());
+                p.extend_from_slice(&shard.to_le_bytes());
+                p.extend_from_slice(&(addr.len() as u32).to_le_bytes());
+                p.extend_from_slice(addr.as_bytes());
                 p
             }
         }
@@ -200,6 +260,29 @@ impl Frame {
                     .map_err(|_| err!("Shutdown reason is not UTF-8"))?
                     .to_string();
                 Frame::Shutdown { reason }
+            }
+            KIND_SHARD_HELLO => Frame::ShardHello {
+                shard: r.u32()?,
+                epoch: r.u64()?,
+            },
+            KIND_LEASE => Frame::Lease {
+                patient: r.u32()?,
+                shard: r.u32()?,
+                epoch: r.u64()?,
+            },
+            KIND_ROUTE => {
+                let patient = r.u32()?;
+                let shard = r.u32()?;
+                let len = r.u32()? as usize;
+                let bytes = r.take(len)?;
+                let addr = std::str::from_utf8(bytes)
+                    .map_err(|_| err!("Route addr is not UTF-8"))?
+                    .to_string();
+                Frame::Route {
+                    patient,
+                    shard,
+                    addr,
+                }
             }
             other => bail!("unknown frame kind {other}"),
         };
@@ -434,6 +517,17 @@ mod tests {
             Frame::Heartbeat { seq: 9 },
             Frame::Shutdown {
                 reason: "end of stream".into(),
+            },
+            Frame::ShardHello { shard: 1, epoch: 4 },
+            Frame::Lease {
+                patient: 7,
+                shard: 1,
+                epoch: 4,
+            },
+            Frame::Route {
+                patient: 7,
+                shard: 1,
+                addr: "127.0.0.1:7001".into(),
             },
         ]
     }

@@ -31,6 +31,13 @@ pub struct LoadgenConfig {
     pub sessions: usize,
     /// Worker threads (sessions in flight at once).
     pub concurrency: usize,
+    /// Re-run a session this many times when a fleet dispatcher closes
+    /// it with a "re-leased" `Shutdown` (a shard died mid-stream and its
+    /// patients moved to survivors). The retried attempt replays the
+    /// whole record, and only the final attempt is counted — safe
+    /// because per-window outputs are idempotent and every shard serves
+    /// the same published model version. `0` = fail like any other cut.
+    pub retries: usize,
     pub client: StreamClientConfig,
 }
 
@@ -39,7 +46,40 @@ impl Default for LoadgenConfig {
         LoadgenConfig {
             sessions: 64,
             concurrency: 16,
+            retries: 0,
             client: StreamClientConfig::default(),
+        }
+    }
+}
+
+/// How sessions ended, bucketed for the `shutdown_reasons` histogram in
+/// `loadgen/v1` reports. Buckets are derived from the server's closing
+/// `Shutdown` reason: orderly end-of-stream is `clean`, the staleness
+/// reaper's cut is `stale`, any other reasoned close is
+/// `protocol_error`, and a connection that ended with bare EOF (the
+/// slow-consumer shed path, or a crashed peer) is `shed`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShutdownReasons {
+    pub clean: u64,
+    pub stale: u64,
+    pub shed: u64,
+    pub protocol_error: u64,
+}
+
+impl ShutdownReasons {
+    /// All buckets summed — equals `sessions + failures` on reports
+    /// written by a binary that has the histogram.
+    pub fn total(&self) -> u64 {
+        self.clean + self.stale + self.shed + self.protocol_error
+    }
+
+    /// Bucket one session's closing reason (`None` = bare EOF).
+    fn bucket(&mut self, reason: Option<&str>) {
+        match reason {
+            Some("end of stream") => self.clean += 1,
+            Some(r) if r.starts_with("stale") => self.stale += 1,
+            Some(_) => self.protocol_error += 1,
+            None => self.shed += 1,
         }
     }
 }
@@ -64,6 +104,15 @@ pub struct LoadgenReport {
     /// until any prediction arrives.
     pub p50_latency_s: Option<f64>,
     pub p95_latency_s: Option<f64>,
+    /// Per-session closing-reason histogram. Sums to
+    /// `sessions + failures` on reports written by this binary; all-zero
+    /// on reports from before the field existed (old reports still
+    /// parse — the buckets just default to 0).
+    pub shutdown_reasons: ShutdownReasons,
+    /// Sessions that were re-run after a fleet dispatcher's "re-leased"
+    /// `Shutdown` (shard died mid-stream). Each retry's aborted attempt
+    /// is discarded; only final attempts are counted above.
+    pub retries: u64,
 }
 
 impl LoadgenReport {
@@ -74,7 +123,8 @@ impl LoadgenReport {
         };
         format!(
             "{} sessions ({} failed) | {}/{} windows answered, {} dropped | \
-             {:.0} windows/s | p50 {} p95 {} | {} heartbeats | {:.2} s",
+             {:.0} windows/s | p50 {} p95 {} | {} heartbeats | \
+             ends: {} clean / {} stale / {} shed / {} protocol | {} retries | {:.2} s",
             self.sessions,
             self.failures,
             self.windows,
@@ -84,6 +134,11 @@ impl LoadgenReport {
             lat(self.p50_latency_s),
             lat(self.p95_latency_s),
             self.heartbeats,
+            self.shutdown_reasons.clean,
+            self.shutdown_reasons.stale,
+            self.shutdown_reasons.shed,
+            self.shutdown_reasons.protocol_error,
+            self.retries,
             self.elapsed_s
         )
     }
@@ -98,7 +153,9 @@ impl LoadgenReport {
             "{{\n  \"schema\": \"loadgen/v1\",\n  \"sessions\": {},\n  \"failures\": {},\n  \
              \"windows_sent\": {},\n  \"windows\": {},\n  \"drops\": {},\n  \
              \"heartbeats\": {},\n  \"elapsed_s\": {:.6},\n  \"windows_per_s\": {:.3},\n  \
-             \"p50_latency_s\": {},\n  \"p95_latency_s\": {}\n}}\n",
+             \"p50_latency_s\": {},\n  \"p95_latency_s\": {},\n  \
+             \"shutdown_reasons\": {{\"clean\": {}, \"stale\": {}, \"shed\": {}, \
+             \"protocol_error\": {}}},\n  \"retries\": {}\n}}\n",
             self.sessions,
             self.failures,
             self.windows_sent,
@@ -109,6 +166,11 @@ impl LoadgenReport {
             self.windows_per_s,
             num(self.p50_latency_s),
             num(self.p95_latency_s),
+            self.shutdown_reasons.clean,
+            self.shutdown_reasons.stale,
+            self.shutdown_reasons.shed,
+            self.shutdown_reasons.protocol_error,
+            self.retries,
         )
     }
 }
@@ -132,6 +194,24 @@ pub fn parse_loadgen_json(text: &str) -> crate::Result<LoadgenReport> {
             "windows_per_s" => report.windows_per_s = s.value()?.unwrap_or(0.0),
             "p50_latency_s" => report.p50_latency_s = s.value()?,
             "p95_latency_s" => report.p95_latency_s = s.value()?,
+            "shutdown_reasons" => {
+                let buckets = &mut report.shutdown_reasons;
+                s.object(|s, bucket| {
+                    match bucket {
+                        "clean" => buckets.clean = s.value()?.unwrap_or(0.0) as u64,
+                        "stale" => buckets.stale = s.value()?.unwrap_or(0.0) as u64,
+                        "shed" => buckets.shed = s.value()?.unwrap_or(0.0) as u64,
+                        "protocol_error" => {
+                            buckets.protocol_error = s.value()?.unwrap_or(0.0) as u64
+                        }
+                        _ => {
+                            s.value()?;
+                        }
+                    }
+                    Ok(())
+                })?;
+            }
+            "retries" => report.retries = s.value()?.unwrap_or(0.0) as u64,
             _ => {
                 s.value()?; // forward-compatible: skip unknown fields
             }
@@ -182,6 +262,8 @@ pub fn run(
                 let mut windows_sent = 0u64;
                 let mut windows = 0u64;
                 let mut heartbeats = 0u64;
+                let mut retries = 0u64;
+                let mut reasons = ShutdownReasons::default();
                 let mut latencies = Vec::new();
                 loop {
                     let i = next.fetch_add(1, Relaxed);
@@ -189,8 +271,27 @@ pub fn run(
                         break;
                     }
                     let (patient, samples) = &records[i % records.len()];
-                    let outcome = connect()
-                        .and_then(|conn| stream_record(conn, *patient, samples, &cfg.client));
+                    let mut attempts_left = cfg.retries;
+                    let outcome = loop {
+                        let outcome = connect()
+                            .and_then(|conn| stream_record(conn, *patient, samples, &cfg.client));
+                        // A dispatcher cutting a session because its
+                        // shard died closes with a "re-leased" reason;
+                        // the re-run replays the whole record against
+                        // the survivor and the aborted attempt is
+                        // discarded (idempotent per-window outputs).
+                        if attempts_left > 0
+                            && matches!(&outcome, Ok(o) if o
+                                .shutdown_reason
+                                .as_deref()
+                                .is_some_and(|r| r.contains("re-leased")))
+                        {
+                            attempts_left -= 1;
+                            retries += 1;
+                            continue;
+                        }
+                        break outcome;
+                    };
                     match outcome {
                         Ok(o) => {
                             // Orderly end = the server's final Shutdown
@@ -200,12 +301,19 @@ pub fn run(
                             } else {
                                 failed += 1;
                             }
+                            reasons.bucket(o.shutdown_reason.as_deref());
                             windows_sent += o.windows_sent;
                             windows += o.predictions.len() as u64;
                             heartbeats += o.heartbeats;
                             latencies.extend(o.latencies);
                         }
-                        Err(_) => failed += 1,
+                        Err(_) => {
+                            // Couldn't connect or the stream collapsed
+                            // without any server close: bucket with the
+                            // bare-EOF sheds.
+                            failed += 1;
+                            reasons.bucket(None);
+                        }
                     }
                 }
                 let mut agg = agg.lock().expect("loadgen aggregate lock");
@@ -214,6 +322,11 @@ pub fn run(
                 agg.0.windows_sent += windows_sent;
                 agg.0.windows += windows;
                 agg.0.heartbeats += heartbeats;
+                agg.0.retries += retries;
+                agg.0.shutdown_reasons.clean += reasons.clean;
+                agg.0.shutdown_reasons.stale += reasons.stale;
+                agg.0.shutdown_reasons.shed += reasons.shed;
+                agg.0.shutdown_reasons.protocol_error += reasons.protocol_error;
                 agg.1.extend(latencies);
             });
         }
@@ -251,6 +364,13 @@ mod tests {
             windows_per_s: 705.6,
             p50_latency_s: Some(0.0021),
             p95_latency_s: Some(0.0134),
+            shutdown_reasons: ShutdownReasons {
+                clean: 64,
+                stale: 0,
+                shed: 1,
+                protocol_error: 0,
+            },
+            retries: 2,
         };
         let parsed = parse_loadgen_json(&report.to_json()).unwrap();
         assert_eq!(parsed.sessions, 64);
@@ -263,6 +383,40 @@ mod tests {
         assert!((parsed.windows_per_s - 705.6).abs() < 1e-6);
         assert!((parsed.p50_latency_s.unwrap() - 0.0021).abs() < 1e-12);
         assert!((parsed.p95_latency_s.unwrap() - 0.0134).abs() < 1e-12);
+        assert_eq!(parsed.shutdown_reasons, report.shutdown_reasons);
+        assert_eq!(parsed.shutdown_reasons.total(), 65);
+        assert_eq!(parsed.retries, 2);
+    }
+
+    #[test]
+    fn old_reports_without_the_histogram_still_parse() {
+        // A loadgen/v1 document from before `shutdown_reasons` /
+        // `retries` existed: the new fields default to zero and nothing
+        // else shifts.
+        let text = "{\n  \"schema\": \"loadgen/v1\",\n  \"sessions\": 64,\n  \
+                    \"failures\": 0,\n  \"windows_sent\": 1792,\n  \"windows\": 1792,\n  \
+                    \"drops\": 0,\n  \"heartbeats\": 0,\n  \"elapsed_s\": 2.0,\n  \
+                    \"windows_per_s\": 896.0,\n  \"p50_latency_s\": 0.002,\n  \
+                    \"p95_latency_s\": 0.010\n}\n";
+        let parsed = parse_loadgen_json(text).unwrap();
+        assert_eq!(parsed.sessions, 64);
+        assert_eq!(parsed.shutdown_reasons, ShutdownReasons::default());
+        assert_eq!(parsed.retries, 0);
+    }
+
+    #[test]
+    fn shutdown_reasons_bucket_by_closing_reason() {
+        let mut reasons = ShutdownReasons::default();
+        reasons.bucket(Some("end of stream"));
+        reasons.bucket(Some("stale: no frames within the 5s staleness deadline"));
+        reasons.bucket(Some("Samples before Subscribe"));
+        reasons.bucket(Some("shard 0 lost; patient 7 will be re-leased to a surviving shard"));
+        reasons.bucket(None);
+        assert_eq!(reasons.clean, 1);
+        assert_eq!(reasons.stale, 1);
+        assert_eq!(reasons.protocol_error, 2);
+        assert_eq!(reasons.shed, 1);
+        assert_eq!(reasons.total(), 5);
     }
 
     #[test]
@@ -302,5 +456,26 @@ mod tests {
         assert_eq!(percentile(&sorted, 0.95), Some(95.0));
         assert_eq!(percentile(&[], 0.95), None);
         assert_eq!(percentile(&[7.0], 0.95), Some(7.0));
+    }
+
+    #[test]
+    fn percentile_edge_cases_never_panic() {
+        // Empty input: every quantile is None.
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile(&[], q), None);
+        }
+        // Single sample: every quantile is that sample.
+        for q in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(percentile(&[3.25], q), Some(3.25));
+        }
+        // Two samples: the midpoint rounds to the upper sample, the
+        // extremes clamp in range (index stays within bounds).
+        assert_eq!(percentile(&[1.0, 2.0], 0.0), Some(1.0));
+        assert_eq!(percentile(&[1.0, 2.0], 0.5), Some(2.0));
+        assert_eq!(percentile(&[1.0, 2.0], 1.0), Some(2.0));
+        // Out-of-range quantiles clamp instead of indexing past the
+        // slice.
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 1.5), Some(3.0));
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], -0.5), Some(1.0));
     }
 }

@@ -1,0 +1,333 @@
+//! Sharded-serving suite: the fleet dispatcher must be a *transparent*
+//! control plane over the wire shards.
+//!
+//! The pinning contract: a client streaming a patient through the
+//! dispatcher receives exactly the predictions the in-process
+//! coordinator computes — window for window, label for label — no
+//! matter which shard placement picks, because every shard serves the
+//! same published model.
+//!
+//! The rebalance contract (the tentpole's acceptance bar): kill a shard
+//! mid-stream and its patients re-lease to survivors; the cut session
+//! ends with a reasoned "re-leased" `Shutdown`, and a replay through
+//! the dispatcher resumes from the shared model state and produces the
+//! full prediction stream window-for-window — zero lost windows, zero
+//! duplicates in the final accounting.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use sparse_hdc_ieeg::config::SystemConfig;
+use sparse_hdc_ieeg::coordinator::fleet::{
+    effective_place, Connector, FleetConfig, FleetDispatcher,
+};
+use sparse_hdc_ieeg::coordinator::registry::ModelRegistry;
+use sparse_hdc_ieeg::coordinator::server::{Backend, Coordinator, StreamSpec};
+use sparse_hdc_ieeg::coordinator::wire::{WireConfig, WireServer};
+use sparse_hdc_ieeg::data::metrics::WindowPrediction;
+use sparse_hdc_ieeg::data::synth::SynthPatient;
+use sparse_hdc_ieeg::err;
+use sparse_hdc_ieeg::hdc::model::ModelBundle;
+use sparse_hdc_ieeg::params::{CHANNELS, FRAMES_PER_PREDICTION};
+use sparse_hdc_ieeg::testkit::tiny_trained_patient;
+use sparse_hdc_ieeg::transport::client::{stream_record, StreamClientConfig, WirePrediction};
+use sparse_hdc_ieeg::transport::frame::{write_frame, Frame, ReadOutcome};
+use sparse_hdc_ieeg::transport::loadgen::{self, LoadgenConfig};
+use sparse_hdc_ieeg::transport::memory::{MemoryConnector, MemoryTransport};
+
+/// In-process ground truth for one patient's streaming record.
+fn in_process_predictions(
+    pid: u32,
+    patient: &SynthPatient,
+    bundle: &ModelBundle,
+) -> Vec<WindowPrediction> {
+    let report = Coordinator::new(SystemConfig::default(), Backend::Native)
+        .run(vec![StreamSpec {
+            session_id: 1,
+            patient_id: pid,
+            record: patient.records[1].clone(),
+            bundle: bundle.clone(),
+        }])
+        .expect("in-process baseline run");
+    report.sessions[0].predictions.clone()
+}
+
+/// Window-for-window equality against the in-process baseline. Because
+/// the baseline has each window index exactly once, a pass here is also
+/// the zero-lost / zero-duplicate check.
+fn assert_pinned(
+    tag: &str,
+    wire: &[WirePrediction],
+    baseline: &[WindowPrediction],
+    version: u64,
+) {
+    assert_eq!(wire.len(), baseline.len(), "{tag}: prediction count");
+    for (w, b) in wire.iter().zip(baseline) {
+        assert_eq!(w.window as usize, b.idx, "{tag}: window order");
+        assert_eq!(w.is_ictal, b.is_ictal, "{tag}: label for window {}", b.idx);
+        assert_eq!(w.margin, b.margin, "{tag}: margin for window {}", b.idx);
+        assert_eq!(w.model_version, version, "{tag}: model version for window {}", b.idx);
+    }
+}
+
+/// Start one wire shard (slot `slot`) publishing every fixture's model —
+/// the full-model-set invariant that makes re-leasing safe.
+fn start_shard(
+    slot: u32,
+    fixtures: &[(u32, SynthPatient, ModelBundle)],
+) -> (WireServer, MemoryConnector) {
+    let registry = Arc::new(ModelRegistry::new());
+    for (pid, _, bundle) in fixtures {
+        registry.ensure(*pid, bundle.clone());
+    }
+    let (transport, connector) = MemoryTransport::new();
+    let mut cfg = WireConfig::default();
+    cfg.shard = Some(slot);
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        cfg,
+    )
+    .unwrap();
+    (server, connector)
+}
+
+/// Start a dispatcher over in-memory transports: shard slot K dials
+/// through the connector registered under address `shard<K>`.
+fn start_dispatcher(
+    shard_connectors: Vec<MemoryConnector>,
+    overrides: HashMap<u32, u32>,
+) -> (FleetDispatcher, MemoryConnector) {
+    let n = shard_connectors.len();
+    let shards: Vec<String> = (0..n).map(|slot| format!("shard{slot}")).collect();
+    let map: Mutex<HashMap<String, MemoryConnector>> = Mutex::new(
+        shards
+            .iter()
+            .cloned()
+            .zip(shard_connectors)
+            .collect(),
+    );
+    let connect: Connector = Arc::new(move |addr: &str| {
+        let guard = map.lock().map_err(|_| err!("connector map poisoned"))?;
+        guard
+            .get(addr)
+            .ok_or_else(|| err!("unknown shard address {addr}"))?
+            .connect()
+    });
+    let cfg = FleetConfig {
+        shards,
+        overrides,
+        lease: Duration::from_secs(10),
+        reap_tick: Duration::from_millis(100),
+        heartbeat: Duration::from_millis(100),
+        staleness: Duration::from_secs(5),
+    };
+    let (transport, clients) = MemoryTransport::new();
+    let dispatcher = FleetDispatcher::start(Box::new(transport), connect, cfg).unwrap();
+    dispatcher.wait_live(n, Duration::from_secs(10)).unwrap();
+    (dispatcher, clients)
+}
+
+#[test]
+fn routed_sessions_pin_to_in_process_and_announce_placement() {
+    let fixtures: Vec<_> = [81u32, 82]
+        .into_iter()
+        .map(|pid| {
+            let (patient, bundle) = tiny_trained_patient(pid);
+            (pid, patient, bundle)
+        })
+        .collect();
+    let (shard0, c0) = start_shard(0, &fixtures);
+    let (shard1, c1) = start_shard(1, &fixtures);
+    // Explicit placement: 81 → shard 0, 82 → shard 1.
+    let overrides = HashMap::from([(81u32, 0u32), (82, 1)]);
+    let (dispatcher, clients) = start_dispatcher(vec![c0, c1], overrides.clone());
+
+    for (pid, patient, bundle) in &fixtures {
+        let conn = clients.connect().unwrap();
+        let outcome = stream_record(
+            conn,
+            *pid,
+            &patient.records[1].samples,
+            &StreamClientConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(
+            outcome.shutdown_reason.as_deref(),
+            Some("end of stream"),
+            "patient {pid}"
+        );
+        assert!(outcome.send_error.is_none(), "patient {pid}: {:?}", outcome.send_error);
+        assert_eq!(outcome.dropped(), 0, "patient {pid}");
+        // The Route frame announces the placement the override table
+        // dictates, with the slot's data-plane address.
+        let expected = effective_place(*pid, 2, &overrides);
+        assert_eq!(
+            outcome.routed,
+            Some((expected, format!("shard{expected}"))),
+            "patient {pid}"
+        );
+        assert_eq!(dispatcher.leases().current(*pid), Some(expected), "patient {pid}");
+        let baseline = in_process_predictions(*pid, patient, bundle);
+        assert_pinned(
+            &format!("patient {pid}"),
+            &outcome.predictions,
+            &baseline,
+            bundle.version,
+        );
+    }
+
+    let metrics = dispatcher.metrics();
+    assert_eq!(metrics.sessions_routed.load(Relaxed), 2, "{}", metrics.summary());
+    assert_eq!(metrics.routes_sent.load(Relaxed), 2, "{}", metrics.summary());
+    assert_eq!(metrics.rebalances.load(Relaxed), 0, "{}", metrics.summary());
+    assert_eq!(metrics.leases_granted.load(Relaxed), 2, "{}", metrics.summary());
+    assert_eq!(metrics.shards_live.load(Relaxed), 2, "{}", metrics.summary());
+
+    dispatcher.shutdown().unwrap();
+    // Both shards saw a registration and an orderly data session.
+    let m0 = shard0.shutdown().unwrap();
+    let m1 = shard1.shutdown().unwrap();
+    assert!(m0.control_hellos.load(Relaxed) >= 1, "{}", m0.summary());
+    assert!(m1.control_hellos.load(Relaxed) >= 1, "{}", m1.summary());
+    assert_eq!(m0.sessions_finished.load(Relaxed), 1, "{}", m0.summary());
+    assert_eq!(m1.sessions_finished.load(Relaxed), 1, "{}", m1.summary());
+}
+
+#[test]
+fn dead_shard_patients_re_lease_to_survivors_and_the_replay_pins() {
+    let (patient, bundle) = tiny_trained_patient(91);
+    let fixtures = vec![(91u32, patient, bundle)];
+    let (shard0, c0) = start_shard(0, &fixtures);
+    let (shard1, c1) = start_shard(1, &fixtures);
+    // Pin patient 91 to shard 0 so the kill below is deterministic.
+    let (dispatcher, clients) = start_dispatcher(vec![c0, c1], HashMap::from([(91u32, 0u32)]));
+    let (_, patient, bundle) = &fixtures[0];
+    let samples = &patient.records[1].samples;
+
+    // Session 1: subscribe through the dispatcher and stream a 3-window
+    // prefix; wait until at least one prediction proves the session is
+    // flowing through shard 0.
+    let conn = clients.connect().unwrap();
+    let (mut reader, mut writer, _peer) = conn.split();
+    reader
+        .get_mut()
+        .set_read_timeout(Some(Duration::from_millis(25)))
+        .unwrap();
+    write_frame(&mut writer, &Frame::Subscribe { patient: 91 }).unwrap();
+    let prefix = &samples[..CHANNELS * FRAMES_PER_PREDICTION * 3];
+    write_frame(
+        &mut writer,
+        &Frame::Samples {
+            seq: 0,
+            samples: prefix.to_vec(),
+        },
+    )
+    .unwrap();
+    let mut routed = None;
+    let mut early_predictions = 0usize;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while early_predictions == 0 {
+        assert!(Instant::now() < deadline, "no prediction through the dispatcher");
+        match reader.read().unwrap() {
+            ReadOutcome::Frame(Frame::Route { shard, addr, .. }) => routed = Some((shard, addr)),
+            ReadOutcome::Frame(Frame::Prediction { .. }) => early_predictions += 1,
+            ReadOutcome::Frame(Frame::Shutdown { reason }) => {
+                panic!("session closed before the kill: {reason}")
+            }
+            ReadOutcome::Frame(_) | ReadOutcome::Idle => {}
+            ReadOutcome::Eof => panic!("EOF before the kill"),
+        }
+    }
+    assert_eq!(routed, Some((0, "shard0".to_string())), "pinned placement");
+
+    // Kill shard 0 mid-session. The dispatcher's proxy sees the data
+    // connection drop and closes the client with the re-lease reason.
+    drop(shard0);
+    let reason = loop {
+        assert!(Instant::now() < deadline, "no Shutdown after the shard kill");
+        match reader.read() {
+            Ok(ReadOutcome::Frame(Frame::Shutdown { reason })) => break reason,
+            Ok(ReadOutcome::Frame(_)) | Ok(ReadOutcome::Idle) => {}
+            Ok(ReadOutcome::Eof) | Err(_) => {
+                panic!("connection dropped without the reasoned re-lease Shutdown")
+            }
+        }
+    };
+    assert!(
+        reason.contains("re-leased"),
+        "cut session must name the re-lease: {reason}"
+    );
+    drop(writer);
+    drop(reader);
+
+    // Session 2: replay the whole record through the dispatcher. The
+    // patient re-leases to the survivor and the replay produces the full
+    // prediction stream — every window exactly once, pinned against the
+    // in-process baseline (idempotent windows + the same published
+    // model version on every shard).
+    let conn = clients.connect().unwrap();
+    let outcome =
+        stream_record(conn, 91, samples, &StreamClientConfig::default()).unwrap();
+    assert_eq!(outcome.shutdown_reason.as_deref(), Some("end of stream"));
+    assert!(outcome.send_error.is_none(), "{:?}", outcome.send_error);
+    assert_eq!(outcome.dropped(), 0);
+    assert_eq!(outcome.routed, Some((1, "shard1".to_string())), "re-lease target");
+    let baseline = in_process_predictions(91, patient, bundle);
+    assert_pinned("replay", &outcome.predictions, &baseline, bundle.version);
+
+    assert_eq!(dispatcher.leases().current(91), Some(1));
+    let metrics = dispatcher.metrics();
+    assert_eq!(metrics.rebalances.load(Relaxed), 1, "{}", metrics.summary());
+    assert!(metrics.shards_dead.load(Relaxed) >= 1, "{}", metrics.summary());
+    assert_eq!(metrics.sessions_routed.load(Relaxed), 2, "{}", metrics.summary());
+
+    dispatcher.shutdown().unwrap();
+    shard1.shutdown().unwrap();
+}
+
+#[test]
+fn loadgen_through_the_dispatcher_is_clean() {
+    let fixtures: Vec<_> = [84u32, 85]
+        .into_iter()
+        .map(|pid| {
+            let (patient, bundle) = tiny_trained_patient(pid);
+            (pid, patient, bundle)
+        })
+        .collect();
+    let (shard0, c0) = start_shard(0, &fixtures);
+    let (shard1, c1) = start_shard(1, &fixtures);
+    // No overrides: exercise the hash placement end to end.
+    let (dispatcher, clients) = start_dispatcher(vec![c0, c1], HashMap::new());
+
+    let records: Vec<(u32, Vec<f32>)> = fixtures
+        .iter()
+        .map(|(pid, patient, _)| (*pid, patient.records[1].samples.clone()))
+        .collect();
+    let cfg = LoadgenConfig {
+        sessions: 6,
+        concurrency: 3,
+        ..Default::default()
+    };
+    let report = loadgen::run(&|| clients.connect(), &records, &cfg).unwrap();
+
+    assert_eq!(report.failures, 0, "{}", report.summary());
+    assert_eq!(report.drops, 0, "{}", report.summary());
+    assert_eq!(report.sessions, 6, "{}", report.summary());
+    // Every session's closing reason lands in the histogram's clean
+    // bucket; the buckets account for every session.
+    assert_eq!(report.shutdown_reasons.clean, 6, "{}", report.summary());
+    assert_eq!(report.shutdown_reasons.total(), 6, "{}", report.summary());
+    assert_eq!(report.retries, 0, "{}", report.summary());
+
+    let metrics = dispatcher.metrics();
+    assert_eq!(metrics.sessions_routed.load(Relaxed), 6, "{}", metrics.summary());
+    assert_eq!(metrics.rebalances.load(Relaxed), 0, "{}", metrics.summary());
+    dispatcher.shutdown().unwrap();
+    shard0.shutdown().unwrap();
+    shard1.shutdown().unwrap();
+}

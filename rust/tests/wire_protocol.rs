@@ -35,6 +35,25 @@ fn exemplars() -> Vec<Frame> {
         Frame::Shutdown {
             reason: String::new(),
         },
+        Frame::ShardHello {
+            shard: 3,
+            epoch: u64::MAX,
+        },
+        Frame::Lease {
+            patient: 0xDEAD_BEEF,
+            shard: 1,
+            epoch: 42,
+        },
+        Frame::Route {
+            patient: 9,
+            shard: 0,
+            addr: "127.0.0.1:7001".to_string(),
+        },
+        Frame::Route {
+            patient: 9,
+            shard: 0,
+            addr: String::new(),
+        },
     ]
 }
 

@@ -363,6 +363,77 @@ fn silent_session_gets_heartbeats_then_a_stale_disconnect() {
     assert_eq!(metrics.stale_disconnects.load(Relaxed), 1, "{}", metrics.summary());
 }
 
+#[test]
+fn reconnecting_client_resubscribes_and_resumes_cleanly() {
+    // The reconnect contract: sessions are per-connection. A client that
+    // loses its connection mid-stream and dials back in re-`Subscribe`s
+    // the same patient and starts a fresh sequence from seq 0 — the
+    // server replays the full record with pinned predictions, exactly as
+    // if the first attempt never happened. A reconnect that instead
+    // tries to resume mid-sequence is closed with a reasoned `Shutdown`
+    // (never silence, never corrupted windows). This is the behaviour
+    // the fleet dispatcher's re-lease path builds on.
+    let (patient, bundle) = tiny_trained_patient(71);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.ensure(71, bundle.clone());
+    let (transport, connector) = MemoryTransport::new();
+    let server = WireServer::start(
+        Box::new(transport),
+        &Backend::Native,
+        &SystemConfig::default(),
+        registry,
+        WireConfig::default(),
+    )
+    .unwrap();
+    let samples = patient.records[1].samples.clone();
+
+    // Attempt 1: subscribe, stream a 3-window prefix, then vanish
+    // (connection dropped without a closing Shutdown — a client crash).
+    let conn = connector.connect().unwrap();
+    let (reader, mut writer, _peer) = conn.split();
+    write_frame(&mut writer, &Frame::Subscribe { patient: 71 }).unwrap();
+    let prefix = &samples[..CHANNELS * FRAMES_PER_PREDICTION * 3];
+    write_frame(
+        &mut writer,
+        &Frame::Samples {
+            seq: 0,
+            samples: prefix.to_vec(),
+        },
+    )
+    .unwrap();
+    drop(writer);
+    drop(reader);
+
+    // Attempt 2: reconnect, re-Subscribe the same patient, stream the
+    // whole record from seq 0 — orderly end, pinned window-for-window.
+    let conn = connector.connect().unwrap();
+    let outcome = stream_record(conn, 71, &samples, &StreamClientConfig::default()).unwrap();
+    assert_eq!(outcome.shutdown_reason.as_deref(), Some("end of stream"));
+    assert!(outcome.send_error.is_none(), "{:?}", outcome.send_error);
+    assert_eq!(outcome.dropped(), 0);
+    let baseline = in_process_predictions(71, &patient, &bundle);
+    assert_pinned("reconnect", &outcome.predictions, &baseline, bundle.version);
+
+    // A reconnect that tries to *continue* the old sequence instead of
+    // restarting gets the reasoned seq-gap Shutdown.
+    let r = expect_shutdown(
+        connector.connect().unwrap(),
+        vec![
+            Frame::Subscribe { patient: 71 },
+            Frame::Samples {
+                seq: 3,
+                samples: vec![0.0f32; CHANNELS],
+            },
+        ],
+    );
+    assert!(r.contains("seq 3, expected 0"), "{r}");
+
+    let metrics = server.shutdown().unwrap();
+    assert_eq!(metrics.sessions_started.load(Relaxed), 3, "{}", metrics.summary());
+    assert_eq!(metrics.sessions_finished.load(Relaxed), 1, "{}", metrics.summary());
+    assert_eq!(metrics.protocol_errors.load(Relaxed), 1, "{}", metrics.summary());
+}
+
 /// Send `frames`, then read until the server's reasoned `Shutdown`.
 fn expect_shutdown(conn: Duplex, frames: Vec<Frame>) -> String {
     let (mut reader, mut writer, _peer) = conn.split();

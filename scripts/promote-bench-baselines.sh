@@ -39,22 +39,28 @@ promote BENCH_encoder
 promote BENCH_am
 promote BENCH_registry
 
-# Wire-job loadgen report (sessions > 0 distinguishes a real report from
-# the committed stub).
-loadgen_current="$src/loadgen.current.json"
-if [[ -f "$loadgen_current" ]]; then
-    if ! grep -q '"schema": "loadgen/v1"' "$loadgen_current"; then
-        echo "refuse: $loadgen_current does not look like a loadgen/v1 report" >&2
+# Loadgen reports (sessions > 0 distinguishes a real report from the
+# committed stub): the wire job's single-process report and the fleet
+# job's 2-shard dispatcher report.
+promote_loadgen() {
+    local current="$src/$1.current.json" baseline="$root/$2.json"
+    if [[ ! -f "$current" ]]; then
+        echo "skip: $current not found" >&2
+        return
+    fi
+    if ! grep -q '"schema": "loadgen/v1"' "$current"; then
+        echo "refuse: $current does not look like a loadgen/v1 report" >&2
         exit 1
     fi
-    if grep -Eq '"sessions": 0[,}[:space:]]' "$loadgen_current"; then
-        echo "refuse: $loadgen_current is itself a stub (0 sessions)" >&2
+    if grep -Eq '"sessions": 0[,}[:space:]]' "$current"; then
+        echo "refuse: $current is itself a stub (0 sessions)" >&2
         exit 1
     fi
-    cp "$loadgen_current" "$root/LOADGEN_wire.json"
-    echo "promoted $loadgen_current -> $root/LOADGEN_wire.json"
-else
-    echo "skip: $loadgen_current not found" >&2
-fi
+    cp "$current" "$baseline"
+    echo "promoted $current -> $baseline"
+}
 
-echo "done — review with: git diff BENCH_encoder.json BENCH_am.json BENCH_registry.json LOADGEN_wire.json"
+promote_loadgen loadgen LOADGEN_wire
+promote_loadgen loadgen_fleet LOADGEN_fleet
+
+echo "done — review with: git diff BENCH_encoder.json BENCH_am.json BENCH_registry.json LOADGEN_wire.json LOADGEN_fleet.json"
