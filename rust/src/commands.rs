@@ -253,8 +253,12 @@ pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         records.len(),
         cfg.concurrency.min(cfg.sessions)
     );
+    // Bound client writes the same way the client bounds reads: a
+    // server that wedges mid-stream errors the session instead of
+    // hanging a worker forever.
+    let write_timeout = cfg.client.silence_deadline;
     let report = loadgen::run(
-        &|| sparse_hdc_ieeg::transport::tcp::TcpTransport::connect(&addr),
+        &|| sparse_hdc_ieeg::transport::tcp::TcpTransport::connect(&addr, Some(write_timeout)),
         &records,
         &cfg,
     )?;
@@ -405,7 +409,12 @@ pub fn dispatch(args: &Args) -> sparse_hdc_ieeg::Result<()> {
     let n_shards = shards.len();
     let cfg = fleet::FleetConfig::from_system(&system, shards)?;
     let transport = TcpTransport::bind(&listen)?;
-    let connect: fleet::Connector = Arc::new(|addr: &str| TcpTransport::connect(addr));
+    // Dialed shard connections (control + proxied data) get a write
+    // timeout equal to the staleness deadline, so a wedged shard fails
+    // the monitor's heartbeat send instead of blocking it forever.
+    let write_timeout = cfg.staleness;
+    let connect: fleet::Connector =
+        Arc::new(move |addr: &str| TcpTransport::connect(addr, Some(write_timeout)));
     let dispatcher = fleet::FleetDispatcher::start(Box::new(transport), connect, cfg)?;
     dispatcher.wait_live(n_shards, Duration::from_secs(wait_s.max(1)))?;
     println!("dispatch: {n_shards} shards registered and live");

@@ -13,16 +13,20 @@
 //!   re-leasing a patient to any survivor safe.
 //! * **leasing** — each routed session grants (or renews) a lease
 //!   `patient → shard` in the [`LeaseTable`]. Leases are renewed by
-//!   every upstream frame and reaped by a background thread once they
-//!   outlive their TTL without renewal, so a crashed proxy session can
-//!   never pin a patient to a shard forever.
+//!   every proxied frame in either direction and reaped by a background
+//!   thread once they outlive their TTL without renewal, so a crashed
+//!   proxy session can never pin a patient to a shard forever.
 //! * **shard health** — one monitor thread per shard keeps a control
 //!   connection registered via `ShardHello` (epoch-stamped, echoed by
 //!   the shard as the ack), heartbeats through it, and declares the
 //!   shard dead when the connection drops or goes silent. Death flips
 //!   the slot's live flag; the affected leases re-lease lazily — the
 //!   next `Subscribe` for such a patient lands on a surviving shard and
-//!   is counted as a rebalance.
+//!   is counted as a rebalance. The control plane owns the verdict: a
+//!   data-path failure (shed session, transient dial error) only
+//!   *reports* death, and the monitor re-verifies with an immediate
+//!   fresh registration — a healthy shard returns to placement within
+//!   one handshake instead of being removed forever.
 //! * **data path** — the dispatcher proxies at frame granularity: it
 //!   reads the client's `Subscribe`, places it, answers with a `Route`
 //!   frame naming the shard, forwards the `Subscribe`, then pumps frames
@@ -42,7 +46,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::SystemConfig;
 use crate::coordinator::metrics::FleetMetrics;
-use crate::transport::frame::{Frame, ReadOutcome};
+use crate::transport::frame::{close, Frame, ReadOutcome};
 use crate::transport::{Duplex, Transport};
 use crate::{ensure, err};
 
@@ -532,18 +536,30 @@ impl Drop for FleetDispatcher {
 /// Keep one shard registered: dial, `ShardHello`, await the echo ack,
 /// then heartbeat / relay lease grants / watch for silence. Any failure
 /// marks the shard dead and redials after a backoff.
+///
+/// The control plane **owns** liveness. Proxy sessions may flip the
+/// alive flag on a data-path failure (shed, transient dial error, shard
+/// crash), but that report is a suspicion, not a verdict: the monitor
+/// observes the flag every tick and re-verifies with an immediate fresh
+/// registration handshake. A healthy shard is back in placement within
+/// one round-trip; a genuinely dead one fails the redial and stays out.
 fn monitor_loop(inner: &FleetInner, slot: usize) {
     let addr = inner.shards[slot].addr.clone();
+    // True while a data-path report is being re-verified: skip the
+    // redial backoff so a healthy shard's absence is one handshake long.
+    let mut recovering = false;
     while !inner.stop.load(SeqCst) {
         let mut conn = match (inner.connect)(&addr) {
             Ok(c) => c,
             Err(_) => {
                 inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+                recovering = false;
                 sleep_responsive(inner, REDIAL_BACKOFF);
                 continue;
             }
         };
         if conn.set_read_timeout(Some(READ_TICK)).is_err() {
+            recovering = false;
             sleep_responsive(inner, REDIAL_BACKOFF);
             continue;
         }
@@ -554,6 +570,7 @@ fn monitor_loop(inner: &FleetInner, slot: usize) {
         };
         if conn.send(&hello).is_err() || !await_hello_ack(inner, &mut conn, slot as u32, epoch) {
             inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
+            recovering = false;
             sleep_responsive(inner, REDIAL_BACKOFF);
             continue;
         }
@@ -561,25 +578,39 @@ fn monitor_loop(inner: &FleetInner, slot: usize) {
         if let Ok(mut guard) = inner.shards[slot].control_tx.lock() {
             *guard = Some(tx);
         }
+        if recovering {
+            recovering = false;
+            inner.metrics.shards_recovered.fetch_add(1, Relaxed);
+        }
         inner.mark_alive(slot, epoch);
 
         let mut last_rx = Instant::now();
         let mut last_hb = Instant::now();
         let mut hb_seq = 0u64;
-        let why = loop {
+        let why = 'control: loop {
             if inner.stop.load(SeqCst) {
-                break "dispatcher stopping";
+                break 'control "dispatcher stopping";
             }
-            // Relay queued lease grants onto the control connection.
+            // A proxy session reported a data-path failure and flipped
+            // the alive flag: re-verify via a fresh registration right
+            // away instead of trusting (or ignoring) the report.
+            if !inner.shards[slot].alive.load(SeqCst) {
+                recovering = true;
+                break 'control "data-path failure reported; re-verifying registration";
+            }
+            // Relay queued lease grants onto the control connection. A
+            // failed write is a dead control connection — surface it
+            // now rather than dropping the frame and limping on to the
+            // next heartbeat.
             while let Ok(frame) = rx.try_recv() {
                 if conn.send(&frame).is_err() {
-                    break;
+                    break 'control "control lease write failed";
                 }
             }
             if last_hb.elapsed() >= inner.cfg.heartbeat {
                 hb_seq += 1;
                 if conn.send(&Frame::Heartbeat { seq: hb_seq }).is_err() {
-                    break "control heartbeat write failed";
+                    break 'control "control heartbeat write failed";
                 }
                 last_hb = Instant::now();
             }
@@ -587,18 +618,20 @@ fn monitor_loop(inner: &FleetInner, slot: usize) {
                 Ok(ReadOutcome::Frame(_)) => last_rx = Instant::now(),
                 Ok(ReadOutcome::Idle) => {
                     if last_rx.elapsed() >= inner.cfg.staleness {
-                        break "control connection stale";
+                        break 'control "control connection stale";
                     }
                 }
-                Ok(ReadOutcome::Eof) => break "control connection closed",
-                Err(_) => break "control connection error",
+                Ok(ReadOutcome::Eof) => break 'control "control connection closed",
+                Err(_) => break 'control "control connection error",
             }
         };
         inner.mark_dead(slot, why);
         if inner.stop.load(SeqCst) {
             return;
         }
-        sleep_responsive(inner, REDIAL_BACKOFF);
+        if !recovering {
+            sleep_responsive(inner, REDIAL_BACKOFF);
+        }
     }
 }
 
@@ -656,7 +689,7 @@ fn proxy_session(inner: &Arc<FleetInner>, mut client: Duplex) {
     let patient = loop {
         if inner.stop.load(SeqCst) || Instant::now() >= deadline {
             let _ = client.send(&Frame::Shutdown {
-                reason: "no Subscribe within the staleness deadline".into(),
+                reason: close::stale("no Subscribe within the staleness deadline"),
             });
             return;
         }
@@ -686,9 +719,9 @@ fn proxy_session(inner: &Arc<FleetInner>, mut client: Duplex) {
             inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
             inner.mark_dead(slot as usize, "data dial failed");
             let _ = client.send(&Frame::Shutdown {
-                reason: format!(
-                    "shard {slot} unreachable; patient {patient} will be re-leased"
-                ),
+                reason: close::released(format!(
+                    "shard {slot} unreachable; patient {patient} moves to a survivor"
+                )),
             });
             return;
         }
@@ -711,7 +744,9 @@ fn proxy_session(inner: &Arc<FleetInner>, mut client: Duplex) {
         inner.metrics.shard_conn_errors.fetch_add(1, Relaxed);
         inner.mark_dead(slot as usize, "Subscribe forward failed");
         let _ = client.send(&Frame::Shutdown {
-            reason: format!("shard {slot} lost; patient {patient} will be re-leased"),
+            reason: close::released(format!(
+                "shard {slot} lost; patient {patient} moves to a survivor"
+            )),
         });
         return;
     }
@@ -738,9 +773,14 @@ fn proxy_session(inner: &Arc<FleetInner>, mut client: Duplex) {
                     }
                     match reader.read() {
                         Ok(ReadOutcome::Frame(frame)) => {
+                            // Downstream flow renews the lease too: a
+                            // drain phase (client done sending, shard
+                            // still streaming predictions) must not let
+                            // the reaper cut an active session's lease.
+                            inner.leases.renew(patient, inner.cfg.lease);
                             let last = matches!(frame, Frame::Shutdown { .. });
                             if let Frame::Shutdown { reason } = &frame {
-                                if reason == "end of stream" {
+                                if reason == close::END_OF_STREAM {
                                     inner.metrics.leases_released.fetch_add(1, Relaxed);
                                 }
                             }
@@ -763,10 +803,10 @@ fn proxy_session(inner: &Arc<FleetInner>, mut client: Duplex) {
                                 let _ = crate::transport::frame::write_frame(
                                     &mut client_writer,
                                     &Frame::Shutdown {
-                                        reason: format!(
-                                            "shard {slot} lost; patient {patient} will be \
-                                             re-leased to a surviving shard"
-                                        ),
+                                        reason: close::released(format!(
+                                            "shard {slot} lost; patient {patient} moves \
+                                             to a surviving shard"
+                                        )),
                                     },
                                 );
                             }

@@ -367,6 +367,10 @@ pub struct FleetMetrics {
     pub shards_live: std::sync::atomic::AtomicU64,
     /// Shards declared dead (control connection lost or dial failed).
     pub shards_dead: std::sync::atomic::AtomicU64,
+    /// Shards restored to placement after a data-path failure report:
+    /// the monitor's fresh registration handshake proved the shard was
+    /// still healthy (self-heal, not a new shard).
+    pub shards_recovered: std::sync::atomic::AtomicU64,
     /// Frames proxied client → shard.
     pub frames_upstream: std::sync::atomic::AtomicU64,
     /// Frames proxied shard → client.
@@ -380,7 +384,7 @@ impl FleetMetrics {
         use std::sync::atomic::Ordering::Relaxed;
         format!(
             "clients {} | sessions routed {} | routes {} | leases {} granted, {} renewed, \
-             {} expired, {} released | rebalances {} | shards {} live, {} dead | \
+             {} expired, {} released | rebalances {} | shards {} live, {} dead, {} recovered | \
              frames {} up, {} down | shard errors {}",
             self.client_connections.load(Relaxed),
             self.sessions_routed.load(Relaxed),
@@ -392,6 +396,7 @@ impl FleetMetrics {
             self.rebalances.load(Relaxed),
             self.shards_live.load(Relaxed),
             self.shards_dead.load(Relaxed),
+            self.shards_recovered.load(Relaxed),
             self.frames_upstream.load(Relaxed),
             self.frames_downstream.load(Relaxed),
             self.shard_conn_errors.load(Relaxed),

@@ -46,7 +46,7 @@ use crate::err;
 use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL};
 use crate::runtime::engine_pool::{EngineHost, Job, JobSender};
 use crate::runtime::WindowOutput;
-use crate::transport::frame::{Frame, FrameReader, ReadOutcome};
+use crate::transport::frame::{close, Frame, FrameReader, ReadOutcome};
 use crate::transport::{Transport, WireRead, WireWrite};
 
 /// Reader-side poll tick: how often a blocked read wakes to check stop /
@@ -146,7 +146,7 @@ impl ConnShared {
             && !self.finished.swap(true, SeqCst)
         {
             let _ = self.out.try_send(Frame::Shutdown {
-                reason: "end of stream".into(),
+                reason: close::END_OF_STREAM.into(),
             });
             return true;
         }
@@ -372,10 +372,10 @@ impl ConnectionActor {
                     if !control && last_rx.elapsed() >= self.cfg.staleness {
                         self.metrics.stale_disconnects.fetch_add(1, Relaxed);
                         let _ = shared.out.try_send(Frame::Shutdown {
-                            reason: format!(
-                                "stale: no frames within the {:?} staleness deadline",
+                            reason: close::stale(format!(
+                                "no frames within the {:?} staleness deadline",
                                 self.cfg.staleness
-                            ),
+                            )),
                         });
                         shared.closed.store(true, SeqCst);
                         return sid;

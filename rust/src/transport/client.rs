@@ -19,7 +19,9 @@ use std::time::{Duration, Instant};
 
 use crate::ensure;
 use crate::params::{CHANNELS, FRAMES_PER_PREDICTION};
-use crate::transport::frame::{write_frame, Frame, FrameReader, ReadOutcome, MAX_SAMPLES_PER_FRAME};
+use crate::transport::frame::{
+    close, write_frame, Frame, FrameReader, ReadOutcome, MAX_SAMPLES_PER_FRAME,
+};
 use crate::transport::{Duplex, WireRead, WireWrite};
 
 /// Client-side streaming knobs.
@@ -131,7 +133,7 @@ pub fn stream_record(
         write_frame(
             &mut writer,
             &Frame::Shutdown {
-                reason: "end of stream".into(),
+                reason: close::END_OF_STREAM.into(),
             },
         )?;
         Ok(())

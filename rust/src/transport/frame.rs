@@ -291,6 +291,58 @@ impl Frame {
     }
 }
 
+/// Shared close-reason vocabulary for [`Frame::Shutdown`].
+///
+/// Reason strings stay human-readable, but their *class* is machine-
+/// readable by prefix: every producer (the wire server's reaper, the
+/// fleet dispatcher's re-lease path) builds reasons through these
+/// helpers, and every consumer (the loadgen `shutdown_reasons`
+/// histogram, the client's replay-on-rebalance logic) goes through
+/// [`close::classify`] — so a wording tweak in the detail text can never
+/// silently reclassify sessions.
+pub mod close {
+    /// Orderly end-of-stream (sent by both sides).
+    pub const END_OF_STREAM: &str = "end of stream";
+    /// Prefix of staleness closes (the reaper's cut, or a dispatcher
+    /// giving up on a client that never subscribed).
+    pub const STALE_PREFIX: &str = "stale";
+    /// Prefix of fleet re-lease closes: the session's shard was lost
+    /// mid-stream and the patient moves to a survivor on replay.
+    pub const RELEASED_PREFIX: &str = "re-leased";
+
+    /// Build a staleness reason (`"stale: <detail>"`).
+    pub fn stale(detail: impl std::fmt::Display) -> String {
+        format!("{STALE_PREFIX}: {detail}")
+    }
+
+    /// Build a re-lease reason (`"re-leased: <detail>"`).
+    pub fn released(detail: impl std::fmt::Display) -> String {
+        format!("{RELEASED_PREFIX}: {detail}")
+    }
+
+    /// Machine-readable class of a session's closing reason (`None` =
+    /// the connection ended with bare EOF, the shed signature).
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub enum Class {
+        Clean,
+        Stale,
+        Rebalanced,
+        Shed,
+        ProtocolError,
+    }
+
+    /// Classify a closing reason into its histogram bucket.
+    pub fn classify(reason: Option<&str>) -> Class {
+        match reason {
+            None => Class::Shed,
+            Some(END_OF_STREAM) => Class::Clean,
+            Some(r) if r.starts_with(STALE_PREFIX) => Class::Stale,
+            Some(r) if r.starts_with(RELEASED_PREFIX) => Class::Rebalanced,
+            Some(_) => Class::ProtocolError,
+        }
+    }
+}
+
 /// Write one frame and flush it onto the wire.
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> crate::Result<()> {
     w.write_all(&frame.to_bytes())
@@ -625,6 +677,22 @@ mod tests {
         let mut d = FrameDecoder::new();
         d.extend(&bytes);
         assert!(d.next_frame().is_err());
+    }
+
+    #[test]
+    fn close_reasons_classify_by_prefix_not_wording() {
+        use close::{classify, Class};
+        assert_eq!(classify(Some(close::END_OF_STREAM)), Class::Clean);
+        assert_eq!(classify(Some(&close::stale("no frames for 5 s"))), Class::Stale);
+        assert_eq!(
+            classify(Some(&close::released("shard 0 lost; patient 7 moves on"))),
+            Class::Rebalanced
+        );
+        // Detail wording is free to change without reclassifying.
+        assert_eq!(classify(Some("stale: totally different detail")), Class::Stale);
+        assert_eq!(classify(Some("re-leased: another wording")), Class::Rebalanced);
+        assert_eq!(classify(Some("Samples before Subscribe")), Class::ProtocolError);
+        assert_eq!(classify(None), Class::Shed);
     }
 
     #[test]

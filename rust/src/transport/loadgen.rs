@@ -22,6 +22,7 @@ use std::time::{Duration, Instant};
 use crate::benchkit::JsonScanner;
 use crate::ensure;
 use crate::transport::client::{stream_record, StreamClientConfig};
+use crate::transport::frame::close;
 use crate::transport::Duplex;
 
 /// Load-run shape.
@@ -53,34 +54,52 @@ impl Default for LoadgenConfig {
 }
 
 /// How sessions ended, bucketed for the `shutdown_reasons` histogram in
-/// `loadgen/v1` reports. Buckets are derived from the server's closing
-/// `Shutdown` reason: orderly end-of-stream is `clean`, the staleness
-/// reaper's cut is `stale`, any other reasoned close is
-/// `protocol_error`, and a connection that ended with bare EOF (the
-/// slow-consumer shed path, or a crashed peer) is `shed`.
+/// `loadgen/v1` reports. Buckets follow the machine-readable close
+/// classes of [`close::classify`] — the shared vocabulary every
+/// `Shutdown` producer builds reasons with — so a wording change in a
+/// reason's detail text can never silently reclassify sessions:
+/// orderly end-of-stream is `clean`, the staleness reaper's cut is
+/// `stale`, a fleet re-lease close (shard lost mid-stream, retries
+/// exhausted) is `rebalanced`, any other reasoned close is
+/// `protocol_error`, a connection that ended with bare EOF (the
+/// slow-consumer shed path, or a crashed peer) is `shed`, and a dial
+/// that never produced a connection at all is `connect_error`.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ShutdownReasons {
     pub clean: u64,
     pub stale: u64,
     pub shed: u64,
+    pub rebalanced: u64,
     pub protocol_error: u64,
+    pub connect_error: u64,
 }
 
 impl ShutdownReasons {
     /// All buckets summed — equals `sessions + failures` on reports
     /// written by a binary that has the histogram.
     pub fn total(&self) -> u64 {
-        self.clean + self.stale + self.shed + self.protocol_error
+        self.clean
+            + self.stale
+            + self.shed
+            + self.rebalanced
+            + self.protocol_error
+            + self.connect_error
     }
 
     /// Bucket one session's closing reason (`None` = bare EOF).
     fn bucket(&mut self, reason: Option<&str>) {
-        match reason {
-            Some("end of stream") => self.clean += 1,
-            Some(r) if r.starts_with("stale") => self.stale += 1,
-            Some(_) => self.protocol_error += 1,
-            None => self.shed += 1,
+        match close::classify(reason) {
+            close::Class::Clean => self.clean += 1,
+            close::Class::Stale => self.stale += 1,
+            close::Class::Shed => self.shed += 1,
+            close::Class::Rebalanced => self.rebalanced += 1,
+            close::Class::ProtocolError => self.protocol_error += 1,
         }
+    }
+
+    /// The dial itself failed: no connection, no server close.
+    fn connect_failure(&mut self) {
+        self.connect_error += 1;
     }
 }
 
@@ -124,7 +143,8 @@ impl LoadgenReport {
         format!(
             "{} sessions ({} failed) | {}/{} windows answered, {} dropped | \
              {:.0} windows/s | p50 {} p95 {} | {} heartbeats | \
-             ends: {} clean / {} stale / {} shed / {} protocol | {} retries | {:.2} s",
+             ends: {} clean / {} stale / {} shed / {} rebalanced / {} protocol / \
+             {} connect | {} retries | {:.2} s",
             self.sessions,
             self.failures,
             self.windows,
@@ -137,7 +157,9 @@ impl LoadgenReport {
             self.shutdown_reasons.clean,
             self.shutdown_reasons.stale,
             self.shutdown_reasons.shed,
+            self.shutdown_reasons.rebalanced,
             self.shutdown_reasons.protocol_error,
+            self.shutdown_reasons.connect_error,
             self.retries,
             self.elapsed_s
         )
@@ -155,7 +177,8 @@ impl LoadgenReport {
              \"heartbeats\": {},\n  \"elapsed_s\": {:.6},\n  \"windows_per_s\": {:.3},\n  \
              \"p50_latency_s\": {},\n  \"p95_latency_s\": {},\n  \
              \"shutdown_reasons\": {{\"clean\": {}, \"stale\": {}, \"shed\": {}, \
-             \"protocol_error\": {}}},\n  \"retries\": {}\n}}\n",
+             \"rebalanced\": {}, \"protocol_error\": {}, \"connect_error\": {}}},\n  \
+             \"retries\": {}\n}}\n",
             self.sessions,
             self.failures,
             self.windows_sent,
@@ -169,7 +192,9 @@ impl LoadgenReport {
             self.shutdown_reasons.clean,
             self.shutdown_reasons.stale,
             self.shutdown_reasons.shed,
+            self.shutdown_reasons.rebalanced,
             self.shutdown_reasons.protocol_error,
+            self.shutdown_reasons.connect_error,
             self.retries,
         )
     }
@@ -201,8 +226,12 @@ pub fn parse_loadgen_json(text: &str) -> crate::Result<LoadgenReport> {
                         "clean" => buckets.clean = s.value()?.unwrap_or(0.0) as u64,
                         "stale" => buckets.stale = s.value()?.unwrap_or(0.0) as u64,
                         "shed" => buckets.shed = s.value()?.unwrap_or(0.0) as u64,
+                        "rebalanced" => buckets.rebalanced = s.value()?.unwrap_or(0.0) as u64,
                         "protocol_error" => {
                             buckets.protocol_error = s.value()?.unwrap_or(0.0) as u64
+                        }
+                        "connect_error" => {
+                            buckets.connect_error = s.value()?.unwrap_or(0.0) as u64
                         }
                         _ => {
                             s.value()?;
@@ -272,19 +301,25 @@ pub fn run(
                     }
                     let (patient, samples) = &records[i % records.len()];
                     let mut attempts_left = cfg.retries;
+                    // `None` = the dial itself failed (its own bucket);
+                    // `Some(Err)` = the stream collapsed without any
+                    // server close (bucketed with the bare-EOF sheds).
                     let outcome = loop {
-                        let outcome = connect()
-                            .and_then(|conn| stream_record(conn, *patient, samples, &cfg.client));
+                        let outcome = match connect() {
+                            Ok(conn) => {
+                                Some(stream_record(conn, *patient, samples, &cfg.client))
+                            }
+                            Err(_) => None,
+                        };
                         // A dispatcher cutting a session because its
-                        // shard died closes with a "re-leased" reason;
-                        // the re-run replays the whole record against
-                        // the survivor and the aborted attempt is
-                        // discarded (idempotent per-window outputs).
+                        // shard died closes with a re-lease reason; the
+                        // re-run replays the whole record against the
+                        // survivor and the aborted attempt is discarded
+                        // (idempotent per-window outputs).
                         if attempts_left > 0
-                            && matches!(&outcome, Ok(o) if o
-                                .shutdown_reason
-                                .as_deref()
-                                .is_some_and(|r| r.contains("re-leased")))
+                            && matches!(&outcome, Some(Ok(o)) if close::classify(
+                                o.shutdown_reason.as_deref()
+                            ) == close::Class::Rebalanced)
                         {
                             attempts_left -= 1;
                             retries += 1;
@@ -293,7 +328,7 @@ pub fn run(
                         break outcome;
                     };
                     match outcome {
-                        Ok(o) => {
+                        Some(Ok(o)) => {
                             // Orderly end = the server's final Shutdown
                             // with no mid-stream write failure.
                             if o.shutdown_reason.is_some() && o.send_error.is_none() {
@@ -307,12 +342,13 @@ pub fn run(
                             heartbeats += o.heartbeats;
                             latencies.extend(o.latencies);
                         }
-                        Err(_) => {
-                            // Couldn't connect or the stream collapsed
-                            // without any server close: bucket with the
-                            // bare-EOF sheds.
+                        Some(Err(_)) => {
                             failed += 1;
                             reasons.bucket(None);
+                        }
+                        None => {
+                            failed += 1;
+                            reasons.connect_failure();
                         }
                     }
                 }
@@ -326,7 +362,9 @@ pub fn run(
                 agg.0.shutdown_reasons.clean += reasons.clean;
                 agg.0.shutdown_reasons.stale += reasons.stale;
                 agg.0.shutdown_reasons.shed += reasons.shed;
+                agg.0.shutdown_reasons.rebalanced += reasons.rebalanced;
                 agg.0.shutdown_reasons.protocol_error += reasons.protocol_error;
+                agg.0.shutdown_reasons.connect_error += reasons.connect_error;
                 agg.1.extend(latencies);
             });
         }
@@ -368,7 +406,9 @@ mod tests {
                 clean: 64,
                 stale: 0,
                 shed: 1,
+                rebalanced: 2,
                 protocol_error: 0,
+                connect_error: 3,
             },
             retries: 2,
         };
@@ -384,7 +424,7 @@ mod tests {
         assert!((parsed.p50_latency_s.unwrap() - 0.0021).abs() < 1e-12);
         assert!((parsed.p95_latency_s.unwrap() - 0.0134).abs() < 1e-12);
         assert_eq!(parsed.shutdown_reasons, report.shutdown_reasons);
-        assert_eq!(parsed.shutdown_reasons.total(), 65);
+        assert_eq!(parsed.shutdown_reasons.total(), 70);
         assert_eq!(parsed.retries, 2);
     }
 
@@ -405,18 +445,23 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_reasons_bucket_by_closing_reason() {
+    fn shutdown_reasons_bucket_by_close_class() {
         let mut reasons = ShutdownReasons::default();
-        reasons.bucket(Some("end of stream"));
-        reasons.bucket(Some("stale: no frames within the 5s staleness deadline"));
+        reasons.bucket(Some(close::END_OF_STREAM));
+        reasons.bucket(Some(&close::stale("no frames within the 5s staleness deadline")));
         reasons.bucket(Some("Samples before Subscribe"));
-        reasons.bucket(Some("shard 0 lost; patient 7 will be re-leased to a surviving shard"));
+        reasons.bucket(Some(&close::released(
+            "shard 0 lost; patient 7 moves to a surviving shard",
+        )));
         reasons.bucket(None);
+        reasons.connect_failure();
         assert_eq!(reasons.clean, 1);
         assert_eq!(reasons.stale, 1);
-        assert_eq!(reasons.protocol_error, 2);
+        assert_eq!(reasons.protocol_error, 1);
+        assert_eq!(reasons.rebalanced, 1);
         assert_eq!(reasons.shed, 1);
-        assert_eq!(reasons.total(), 5);
+        assert_eq!(reasons.connect_error, 1);
+        assert_eq!(reasons.total(), 6);
     }
 
     #[test]

@@ -73,9 +73,19 @@ impl TcpTransport {
         })
     }
 
-    /// Dial a server.
-    pub fn connect(addr: &str) -> crate::Result<Duplex> {
+    /// Dial a server. `write_timeout` bounds how long a send may stall
+    /// on a peer that stopped draining — the [`WireWrite`] contract
+    /// holds for dialed streams exactly as it does for accepted ones.
+    /// Long-lived connections (fleet control / proxy data paths) pass
+    /// their staleness deadline; `None` leaves writes unbounded and is
+    /// only appropriate for short-lived test dials.
+    pub fn connect(addr: &str, write_timeout: Option<Duration>) -> crate::Result<Duplex> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        if write_timeout.is_some() {
+            stream
+                .set_write_timeout(write_timeout)
+                .map_err(|e| err!("set write timeout on {addr}: {e}"))?;
+        }
         duplex_from_stream(stream, addr.to_string())
     }
 }
@@ -138,7 +148,7 @@ mod tests {
         let mut t = TcpTransport::bind("127.0.0.1:0").unwrap();
         let addr = t.local_addr();
         let dialer = std::thread::spawn(move || {
-            let mut c = TcpTransport::connect(&addr).unwrap();
+            let mut c = TcpTransport::connect(&addr, Some(Duration::from_secs(5))).unwrap();
             c.send(&Frame::Subscribe { patient: 11 }).unwrap();
             match c.recv().unwrap() {
                 ReadOutcome::Frame(Frame::Heartbeat { seq }) => seq,

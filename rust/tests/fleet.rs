@@ -15,6 +15,7 @@
 //! duplicates in the final accounting.
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
 use std::sync::atomic::Ordering::Relaxed;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -287,6 +288,86 @@ fn dead_shard_patients_re_lease_to_survivors_and_the_replay_pins() {
     assert_eq!(metrics.sessions_routed.load(Relaxed), 2, "{}", metrics.summary());
 
     dispatcher.shutdown().unwrap();
+    shard1.shutdown().unwrap();
+}
+
+#[test]
+fn transient_data_path_failure_heals_without_losing_the_shard() {
+    let (patient, bundle) = tiny_trained_patient(93);
+    let fixtures = vec![(93u32, patient, bundle)];
+    let (shard0, c0) = start_shard(0, &fixtures);
+    let (shard1, c1) = start_shard(1, &fixtures);
+
+    // Connector that drops exactly one dial to shard 0 on demand — a
+    // transient data-path fault; the shard itself never goes away.
+    let fail_next = Arc::new(AtomicBool::new(false));
+    let map: Mutex<HashMap<String, MemoryConnector>> = Mutex::new(HashMap::from([
+        ("shard0".to_string(), c0),
+        ("shard1".to_string(), c1),
+    ]));
+    let fail = fail_next.clone();
+    let connect: Connector = Arc::new(move |addr: &str| {
+        if addr == "shard0" && fail.swap(false, Relaxed) {
+            return Err(err!("injected transient dial failure"));
+        }
+        let guard = map.lock().map_err(|_| err!("connector map poisoned"))?;
+        guard
+            .get(addr)
+            .ok_or_else(|| err!("unknown shard address {addr}"))?
+            .connect()
+    });
+    let cfg = FleetConfig {
+        shards: vec!["shard0".to_string(), "shard1".to_string()],
+        overrides: HashMap::from([(93u32, 0u32)]),
+        lease: Duration::from_secs(10),
+        reap_tick: Duration::from_millis(100),
+        heartbeat: Duration::from_millis(100),
+        staleness: Duration::from_secs(5),
+    };
+    let (transport, clients) = MemoryTransport::new();
+    let dispatcher = FleetDispatcher::start(Box::new(transport), connect, cfg).unwrap();
+    dispatcher.wait_live(2, Duration::from_secs(10)).unwrap();
+    let (_, patient, bundle) = &fixtures[0];
+    let samples = &patient.records[1].samples;
+
+    // Inject the fault and open a session: the proxy's data dial fails,
+    // the client is cut with a reasoned re-lease Shutdown, and the
+    // failure is *reported* — shard 0 drops out of placement.
+    fail_next.store(true, Relaxed);
+    let conn = clients.connect().unwrap();
+    let outcome =
+        stream_record(conn, 93, samples, &StreamClientConfig::default()).unwrap();
+    let reason = outcome.shutdown_reason.as_deref().unwrap_or("");
+    assert!(reason.contains("re-leased"), "cut session names the re-lease: {reason}");
+    assert_eq!(outcome.routed, None, "no Route before the failed dial");
+
+    // The monitor re-verifies the report with a fresh registration
+    // handshake; the healthy shard is back in placement without waiting
+    // out a redial backoff.
+    dispatcher.wait_live(2, Duration::from_secs(10)).unwrap();
+    let metrics = dispatcher.metrics();
+    assert!(metrics.shards_recovered.load(Relaxed) >= 1, "{}", metrics.summary());
+    assert!(metrics.shards_dead.load(Relaxed) >= 1, "{}", metrics.summary());
+
+    // Replay: the lease still points at shard 0, which is live again —
+    // the session routes straight back with no rebalance, and the
+    // stream pins against the in-process baseline.
+    let conn = clients.connect().unwrap();
+    let outcome =
+        stream_record(conn, 93, samples, &StreamClientConfig::default()).unwrap();
+    assert_eq!(outcome.shutdown_reason.as_deref(), Some("end of stream"));
+    assert!(outcome.send_error.is_none(), "{:?}", outcome.send_error);
+    assert_eq!(outcome.dropped(), 0);
+    assert_eq!(outcome.routed, Some((0, "shard0".to_string())), "healed placement");
+    let baseline = in_process_predictions(93, patient, bundle);
+    assert_pinned("healed replay", &outcome.predictions, &baseline, bundle.version);
+    assert_eq!(dispatcher.leases().current(93), Some(0));
+    assert_eq!(metrics.rebalances.load(Relaxed), 0, "{}", metrics.summary());
+
+    dispatcher.shutdown().unwrap();
+    // Shard 0 saw the original registration plus the re-verification.
+    let m0 = shard0.shutdown().unwrap();
+    assert!(m0.control_hellos.load(Relaxed) >= 2, "{}", m0.summary());
     shard1.shutdown().unwrap();
 }
 

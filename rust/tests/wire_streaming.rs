@@ -150,7 +150,7 @@ fn tcp_wire_predictions_pin_to_in_process() {
     .unwrap();
     let addr = server.local_addr().to_string();
 
-    let conn = TcpTransport::connect(&addr).unwrap();
+    let conn = TcpTransport::connect(&addr, Some(Duration::from_secs(5))).unwrap();
     let outcome = stream_record(
         conn,
         21,
