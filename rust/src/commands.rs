@@ -188,12 +188,18 @@ pub fn bench_speedup(args: &Args) -> sparse_hdc_ieeg::Result<()> {
 
 /// `repro loadgen --addr HOST:PORT --data DIR [--patients LIST]
 /// [--sessions N] [--concurrency N] [--record K] [--chunk N]
-/// [--retries N] [--report FILE] [--allow-drops]`
+/// [--retries N] [--report FILE] [--allow-drops]
+/// [--hostile SPEC --seed N]`
 ///
 /// `--retries` re-runs sessions a fleet dispatcher cut with a
 /// "re-leased" `Shutdown` (shard died mid-stream); only the final
 /// attempt counts, so a rebalance under load still reports
 /// every-window-answered-exactly-once.
+///
+/// `--hostile dropout,drift` wraps every session's record in the
+/// testkit's fault injectors (see `testkit::hostile` for the
+/// vocabulary), each session re-keyed off `--seed` so two same-seed
+/// runs stream bit-identical corruption — the CI chaos leg diffs them.
 ///
 /// Replay patient records as concurrent wire sessions against a
 /// `repro serve --listen` server and report throughput / latency /
@@ -212,6 +218,8 @@ pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         "retries",
         "report",
         "allow-drops",
+        "hostile",
+        "seed",
     ])?;
     let addr = args.require("addr")?.to_string();
     let data = PathBuf::from(args.require("data")?);
@@ -233,6 +241,11 @@ pub fn loadgen(args: &Args) -> sparse_hdc_ieeg::Result<()> {
         ..Default::default()
     };
     cfg.client.chunk_samples = args.get_parse("chunk", cfg.client.chunk_samples)?;
+    if let Some(spec) = args.get("hostile") {
+        let seed: u64 = args.get_parse("seed", 0u64)?;
+        cfg.hostile = Some(sparse_hdc_ieeg::testkit::hostile::HostileStream::parse(spec, seed)?);
+        println!("loadgen: hostile streams [{spec}], seed {seed}");
+    }
 
     // Same record the server replays in-process mode (`--record`,
     // default 1), so wire results stay comparable run-to-run.

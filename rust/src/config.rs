@@ -220,6 +220,11 @@ pub struct SystemConfig {
     /// Retrains allowed per patient per serve run
     /// (`[model] max_retrains`; 0 = unlimited).
     pub retrain_max: u64,
+    /// Labelled serving windows retained per patient for feedback
+    /// retraining (`[model] feedback_window`, CLI `--feedback-window`;
+    /// 0 disables the feedback loop). A triggered retrain prefers a
+    /// full feedback ring over the retained training record.
+    pub feedback_window: usize,
     /// Decoded associative-memory planes kept resident at once
     /// (`[model] cache_planes`, CLI `--cache-planes`; 0 = unbounded).
     /// Bounds serve-side model memory: planes past the budget are
@@ -278,6 +283,7 @@ impl Default for SystemConfig {
             retrain_fa_window: 64,
             retrain_cooldown: 512,
             retrain_max: 1,
+            feedback_window: 0,
             cache_planes: 0,
             max_versions_per_patient: 0,
             listen: None,
@@ -340,6 +346,7 @@ impl SystemConfig {
         cfg.retrain_fa_window = file.get_parse("model.fa_window", cfg.retrain_fa_window)?;
         cfg.retrain_cooldown = file.get_parse("model.retrain_cooldown", cfg.retrain_cooldown)?;
         cfg.retrain_max = file.get_parse("model.max_retrains", cfg.retrain_max)?;
+        cfg.feedback_window = file.get_parse("model.feedback_window", cfg.feedback_window)?;
         cfg.cache_planes = file.get_parse("model.cache_planes", cfg.cache_planes)?;
         cfg.max_versions_per_patient = file.get_parse(
             "model.max_versions_per_patient",
@@ -390,6 +397,7 @@ fa_rate = 0.15
 fa_window = 32
 retrain_cooldown = 128
 max_retrains = 4
+feedback_window = 48
 cache_planes = 2
 max_versions_per_patient = 6
 
@@ -435,6 +443,7 @@ reap_ms = 250
         assert_eq!(cfg.retrain_fa_window, 32);
         assert_eq!(cfg.retrain_cooldown, 128);
         assert_eq!(cfg.retrain_max, 4);
+        assert_eq!(cfg.feedback_window, 48);
         assert_eq!(cfg.cache_planes, 2);
         assert_eq!(cfg.max_versions_per_patient, 6);
         assert_eq!(cfg.listen.as_deref(), Some("127.0.0.1:7070"));
@@ -489,6 +498,7 @@ reap_ms = 250
         assert_eq!(cfg.retrain_epochs, 0);
         assert_eq!(cfg.retrain_fa_window, 64);
         assert_eq!(cfg.retrain_max, 1);
+        assert_eq!(cfg.feedback_window, 0);
         assert_eq!(cfg.cache_planes, 0);
         assert_eq!(cfg.max_versions_per_patient, 0);
         assert_eq!(cfg.listen, None);

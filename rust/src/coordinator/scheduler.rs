@@ -22,7 +22,7 @@
 //! ([`RetrainScheduler::foreground`]) runs it inline for deterministic
 //! end-to-end tests.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -30,6 +30,7 @@ use crate::coordinator::metrics::FalseAlarmRate;
 use crate::coordinator::registry::{ModelRegistry, ModelStore};
 use crate::data::synth::Record;
 use crate::pipeline::{self, RetrainOptions};
+use crate::transport::frame::PatientStatus;
 
 /// When and how to retrain a patient's model.
 #[derive(Clone, Debug)]
@@ -91,6 +92,16 @@ impl PatientWatch {
         self.est.rate()
     }
 
+    /// False alarms currently inside the estimator window (telemetry).
+    pub fn fa_hits(&self) -> u64 {
+        self.est.false_alarms()
+    }
+
+    /// Outcomes currently inside the estimator window (telemetry).
+    pub fn fa_seen(&self) -> u64 {
+        self.est.len() as u64
+    }
+
     /// Feed one window outcome; returns `true` when this outcome crosses
     /// the retrain trigger. On a trigger the estimator is cleared and
     /// the cooldown starts; outcomes during the cooldown are *not* fed
@@ -128,6 +139,20 @@ pub struct RetrainScheduler {
     /// epoch loop classifies against). A patient without one can trigger
     /// but not retrain — reported, not fatal.
     train: BTreeMap<u32, Record>,
+    /// Feedback capture budget (`[model] feedback_window`): how many
+    /// labelled serving windows are retained per patient. 0 disables the
+    /// feedback path — every retrain falls back to the retained record.
+    feedback_window: usize,
+    /// Per-patient ring of ground-truthed serving windows, oldest first:
+    /// `(frame-major window codes, ictal)`. A trigger retrains from this
+    /// ring when it is full ([`pipeline::retrain_bundle_from_windows`]),
+    /// so v+1 reflects what the stream looks like *now*.
+    feedback: Mutex<BTreeMap<u32, VecDeque<(Vec<u8>, bool)>>>,
+    /// Models actually published by the retrain loop, per patient.
+    /// Distinct from [`PatientWatch::retrains`] (triggers): a trigger can
+    /// skip (no base model, in flight) or its publish can fail. Shared
+    /// with background jobs, which increment on success.
+    published: Arc<Mutex<BTreeMap<u32, u64>>>,
     background: bool,
     watches: Mutex<BTreeMap<u32, PatientWatch>>,
     /// (patient, 1-based window index) of every trigger, in order.
@@ -159,6 +184,9 @@ impl RetrainScheduler {
             registry,
             store,
             train,
+            feedback_window: 0,
+            feedback: Mutex::new(BTreeMap::new()),
+            published: Arc::new(Mutex::new(BTreeMap::new())),
             max_versions: 0,
             background: true,
             watches: Mutex::new(BTreeMap::new()),
@@ -183,6 +211,14 @@ impl RetrainScheduler {
     /// (tests pin hot-swap boundaries through this).
     pub fn foreground(mut self) -> Self {
         self.background = false;
+        self
+    }
+
+    /// Retain up to `windows` labelled serving windows per patient and
+    /// prefer retraining from that ring once it is full (0 disables the
+    /// feedback path).
+    pub fn with_feedback_window(mut self, windows: usize) -> Self {
+        self.feedback_window = windows;
         self
     }
 
@@ -225,13 +261,82 @@ impl RetrainScheduler {
             .unwrap_or(0)
     }
 
-    fn launch(&self, patient_id: u32) {
-        let Some(record) = self.train.get(&patient_id).cloned() else {
-            Self::lock(&self.messages).push(format!(
-                "patient {patient_id}: retrain triggered but no training record was \
-                 retained — skipped"
-            ));
+    /// Models actually published by the retrain loop for one patient.
+    pub fn published_retrains(&self, patient_id: u32) -> u64 {
+        Self::lock(&self.published)
+            .get(&patient_id)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Stash one ground-truthed serving window for a patient's feedback
+    /// ring (oldest falls off past the budget). No-op when the feedback
+    /// path is disabled.
+    pub fn record_feedback(&self, patient_id: u32, codes: Vec<u8>, ictal: bool) {
+        if self.feedback_window == 0 {
             return;
+        }
+        let mut feedback = Self::lock(&self.feedback);
+        let ring = feedback.entry(patient_id).or_default();
+        if ring.len() >= self.feedback_window {
+            ring.pop_front();
+        }
+        ring.push_back((codes, ictal));
+    }
+
+    /// Labelled serving windows currently retained for a patient.
+    pub fn feedback_depth(&self, patient_id: u32) -> usize {
+        Self::lock(&self.feedback)
+            .get(&patient_id)
+            .map(|r| r.len())
+            .unwrap_or(0)
+    }
+
+    /// Per-patient telemetry snapshot (ascending patient id) — the
+    /// payload of a `StatusReport` wire frame and `serve --status`.
+    pub fn status(&self) -> Vec<PatientStatus> {
+        let watches = Self::lock(&self.watches);
+        let feedback = Self::lock(&self.feedback);
+        let published = Self::lock(&self.published);
+        let mut patients: BTreeSet<u32> = watches.keys().copied().collect();
+        patients.extend(feedback.keys().copied());
+        patients
+            .into_iter()
+            .map(|patient| {
+                let watch = watches.get(&patient);
+                PatientStatus {
+                    patient,
+                    fa_hits: watch.map(|w| w.fa_hits()).unwrap_or(0) as u32,
+                    fa_seen: watch.map(|w| w.fa_seen()).unwrap_or(0) as u32,
+                    retrains: published.get(&patient).copied().unwrap_or(0) as u32,
+                    triggers: watch.map(|w| w.retrains).unwrap_or(0) as u32,
+                    feedback_depth: feedback.get(&patient).map(|r| r.len()).unwrap_or(0) as u32,
+                }
+            })
+            .collect()
+    }
+
+    fn launch(&self, patient_id: u32) {
+        // A full feedback ring wins over the retained record: the ring is
+        // what the patient's stream looks like *now*. A partial ring is
+        // not enough signal — fall back to the record until it fills.
+        let feedback: Option<Vec<(Vec<u8>, bool)>> = {
+            let rings = Self::lock(&self.feedback);
+            rings.get(&patient_id).and_then(|ring| {
+                (self.feedback_window > 0 && ring.len() >= self.feedback_window)
+                    .then(|| ring.iter().cloned().collect())
+            })
+        };
+        let source = match (feedback, self.train.get(&patient_id).cloned()) {
+            (Some(windows), _) => RetrainSource::Feedback(windows),
+            (None, Some(record)) => RetrainSource::Record(record),
+            (None, None) => {
+                Self::lock(&self.messages).push(format!(
+                    "patient {patient_id}: retrain triggered but the feedback ring is not \
+                     full and no training record was retained — skipped"
+                ));
+                return;
+            }
         };
         let Some(current) = self.registry.current(patient_id) else {
             Self::lock(&self.messages).push(format!(
@@ -253,16 +358,20 @@ impl RetrainScheduler {
         let epochs = self.policy.epochs;
         let max_versions = self.max_versions;
         let in_flight = self.in_flight.clone();
+        let published = self.published.clone();
         let job = move || {
-            let msg = retrain_job(
+            let (msg, ok) = retrain_job(
                 &registry,
                 store.as_deref(),
                 patient_id,
                 base,
-                &record,
+                &source,
                 epochs,
                 max_versions,
             );
+            if ok {
+                *Self::lock(&published).entry(patient_id).or_insert(0) += 1;
+            }
             Self::lock(&in_flight).remove(&patient_id);
             msg
         };
@@ -290,29 +399,48 @@ impl RetrainScheduler {
     }
 }
 
+/// What a triggered retrain trains on: the retained training record, or
+/// a full ring of labelled serving windows from the feedback loop.
+enum RetrainSource {
+    Record(Record),
+    Feedback(Vec<(Vec<u8>, bool)>),
+}
+
 /// One triggered retrain, start to finish: derive v+1 (incrementally
 /// when the bundle carries counter planes), persist it, prune the store
-/// to the version budget, publish it.
+/// to the version budget, publish it. Returns the outcome message and
+/// whether the new version was actually published.
 fn retrain_job(
     registry: &ModelRegistry,
     store: Option<&ModelStore>,
     patient_id: u32,
     base: crate::hdc::model::ModelBundle,
-    record: &Record,
+    source: &RetrainSource,
     epochs: usize,
     max_versions: usize,
-) -> String {
+) -> (String, bool) {
     let opts = RetrainOptions {
         max_epochs: epochs,
         ..Default::default()
     };
-    let (mut next, report) = pipeline::retrain_bundle(&base, record, &opts);
+    let ((mut next, report), material) = match source {
+        RetrainSource::Record(record) => {
+            (pipeline::retrain_bundle(&base, record, &opts), "record".to_string())
+        }
+        RetrainSource::Feedback(windows) => (
+            pipeline::retrain_bundle_from_windows(&base, windows, &opts),
+            format!("{} feedback window(s)", windows.len()),
+        ),
+    };
     next.provenance.patient_id = patient_id;
     let version = next.version;
     let mut pruned = 0usize;
     if let Some(store) = store {
         if let Err(e) = store.save(&next) {
-            return format!("patient {patient_id}: persist of v{version} failed: {e:#}");
+            return (
+                format!("patient {patient_id}: persist of v{version} failed: {e:#}"),
+                false,
+            );
         }
         if max_versions > 0 {
             // The base version may still be serving in-flight jobs until
@@ -320,8 +448,11 @@ fn retrain_job(
             match store.prune(patient_id, max_versions, &[base.version, version]) {
                 Ok(paths) => pruned = paths.len(),
                 Err(e) => {
-                    return format!(
-                        "patient {patient_id}: store prune after v{version} failed: {e:#}"
+                    return (
+                        format!(
+                            "patient {patient_id}: store prune after v{version} failed: {e:#}"
+                        ),
+                        false,
                     )
                 }
             }
@@ -333,12 +464,18 @@ fn retrain_job(
         String::new()
     };
     match registry.publish(patient_id, next) {
-        Ok(_) => format!(
-            "patient {patient_id}: published model v{version} \
-             (training-window errors {} -> {}){gc}",
-            report.initial_errors, report.best_errors
+        Ok(_) => (
+            format!(
+                "patient {patient_id}: published model v{version} from {material} \
+                 (training-window errors {} -> {}){gc}",
+                report.initial_errors, report.best_errors
+            ),
+            true,
         ),
-        Err(e) => format!("patient {patient_id}: publish of v{version} skipped: {e:#}"),
+        Err(e) => (
+            format!("patient {patient_id}: publish of v{version} skipped: {e:#}"),
+            false,
+        ),
     }
 }
 
@@ -406,6 +543,79 @@ mod tests {
         assert!(!w.observe(&p, true), "estimator refilling after clear");
         assert!(w.observe(&p, true));
         assert_eq!(w.retrains, 2);
+    }
+
+    /// Hand-traced pin of the cooldown boundary, outcome by outcome,
+    /// against [`PatientWatch::observe`]'s doc comment ("outcomes during
+    /// the cooldown are *not* fed to the estimator"). The trace AGREES
+    /// with the implementation — the decrement happens before the
+    /// estimator push, so exactly `cooldown` outcomes are swallowed and
+    /// the very next outcome is the first fed to the cleared estimator.
+    ///
+    /// Trace for fa_window=2, fa_rate=1.0, cooldown=3, unlimited budget:
+    ///   w1  push(T)            len 1, not full          → no fire
+    ///   w2  push(T)            full, rate 1.0 ≥ 1.0     → FIRE, clear, cd=3
+    ///   w3  cd 3→2, swallowed                           → no fire
+    ///   w4  cd 2→1, swallowed                           → no fire
+    ///   w5  cd 1→0, swallowed  (3rd and last swallowed) → no fire
+    ///   w6  push(T)            len 1, not full          → no fire
+    ///   w7  push(T)            full, rate 1.0           → FIRE at window 7
+    /// An off-by-one in either direction moves the second fire to 6 or 8.
+    #[test]
+    fn cooldown_boundary_hand_trace() {
+        let p = policy(2, 1.0, 3, 0);
+        let mut w = PatientWatch::new(&p);
+        assert!(!w.observe(&p, true), "w1: estimator filling");
+        assert!(w.observe(&p, true), "w2: first fire");
+        assert!(!w.observe(&p, true), "w3: swallowed (cooldown 3→2)");
+        assert!(!w.observe(&p, true), "w4: swallowed (cooldown 2→1)");
+        assert!(!w.observe(&p, true), "w5: swallowed (cooldown 1→0)");
+        assert_eq!(w.fa_seen(), 0, "w5 was swallowed, not fed post-clear");
+        assert!(!w.observe(&p, true), "w6: fed — estimator refilling");
+        assert_eq!(w.fa_seen(), 1, "w6 was fed to the estimator");
+        assert!(w.observe(&p, true), "w7: second fire, not 6 or 8");
+        assert_eq!(w.windows_seen, 7);
+        assert_eq!(w.retrains, 2);
+    }
+
+    #[test]
+    fn feedback_ring_is_bounded_and_reported_in_status() {
+        let registry = Arc::new(ModelRegistry::new());
+        let sched = RetrainScheduler::new(
+            policy(4, 0.5, 100, 1),
+            registry,
+            None,
+            BTreeMap::new(),
+        )
+        .foreground()
+        .with_feedback_window(3);
+        for i in 0..5u8 {
+            sched.record_feedback(9, vec![i; 4], i % 2 == 0);
+        }
+        assert_eq!(sched.feedback_depth(9), 3, "oldest two fell off");
+        sched.record_feedback(2, vec![0; 4], false);
+        sched.observe(9, true);
+        sched.observe(9, false);
+
+        let status = sched.status();
+        let patients: Vec<u32> = status.iter().map(|s| s.patient).collect();
+        assert_eq!(patients, vec![2, 9], "ascending patient order");
+        let p9 = &status[1];
+        assert_eq!((p9.fa_hits, p9.fa_seen), (1, 2));
+        assert_eq!((p9.retrains, p9.triggers), (0, 0));
+        assert_eq!(p9.feedback_depth, 3);
+        assert_eq!(status[0].feedback_depth, 1);
+    }
+
+    #[test]
+    fn feedback_disabled_scheduler_retains_nothing() {
+        let registry = Arc::new(ModelRegistry::new());
+        let sched =
+            RetrainScheduler::new(policy(4, 0.5, 100, 1), registry, None, BTreeMap::new())
+                .foreground();
+        sched.record_feedback(1, vec![0; 4], true);
+        assert_eq!(sched.feedback_depth(1), 0);
+        assert!(sched.status().is_empty());
     }
 
     #[test]

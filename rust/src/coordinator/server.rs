@@ -147,8 +147,18 @@ pub struct Coordinator {
     /// False-alarm-driven retrain scheduler. When set, every completed
     /// window's outcome (prediction vs the record annotation) is fed to
     /// it, and triggered retrains publish into the run's registry —
-    /// sessions hot-swap the result at their next micro-batch.
+    /// sessions hot-swap the result at their next micro-batch. Sessions
+    /// additionally retain completed windows' codes (bounded by
+    /// `[model] feedback_window`) and hand each, with its ground truth,
+    /// to the scheduler's feedback ring at outcome time.
     pub scheduler: Option<Arc<RetrainScheduler>>,
+    /// Label-noise injector on the feedback path
+    /// ([`crate::testkit::hostile`]): when set, the ground truth fed to
+    /// the outcome stream and the feedback ring is flipped per the
+    /// injector's seed-keyed coin — the annotation used for *scoring*
+    /// ([`evaluate_record`]) is untouched. The chaos testkit's hook for
+    /// "label noise below the policy floor never triggers".
+    pub hostile_labels: Option<crate::testkit::hostile::HostileStream>,
 }
 
 impl Coordinator {
@@ -161,6 +171,7 @@ impl Coordinator {
             realtime: false,
             batch_windows,
             scheduler: None,
+            hostile_labels: None,
         }
     }
 
@@ -228,6 +239,9 @@ impl Coordinator {
             let mut session =
                 Session::new(s.session_id, s.patient_id, model, self.system.alarm_consecutive);
             session.set_batch_windows(self.batch_windows);
+            if self.scheduler.is_some() {
+                session.set_feedback_window(self.system.feedback_window);
+            }
             router.add_session(session);
             cursors.push(Cursor {
                 session_id: s.session_id,
@@ -397,15 +411,24 @@ impl Coordinator {
                         // annotation and feed the outcome stream: a
                         // false positive here is a false alarm to the
                         // retrain scheduler's sliding estimator.
-                        let truth = records
+                        let mut truth = records
                             .get(&c.tag)
                             .map(|r| window_label(r, seq as usize))
                             .unwrap_or(false);
+                        if let Some(hostile) = &self.hostile_labels {
+                            truth = hostile.corrupt_label(seq, truth);
+                        }
                         let false_positive = is_ictal && !truth;
                         metrics.false_positives += false_positive as u64;
                         session.record_outcome(false_positive);
                         let patient_id = session.patient_id;
                         if let Some(scheduler) = &self.scheduler {
+                            // Feedback before observe: a trigger at this
+                            // very window already sees this window's
+                            // labelled codes in the ring.
+                            if let Some(codes) = session.take_feedback(seq) {
+                                scheduler.record_feedback(patient_id, codes, truth);
+                            }
                             if scheduler.observe(patient_id, false_positive) {
                                 metrics.retrains_triggered += 1;
                             }
@@ -490,10 +513,40 @@ fn deploy_saved_bundle(path: &str, system: &mut SystemConfig) -> crate::Result<M
     Ok(bundle)
 }
 
+/// Dial a running wire server, send a `Status` query and print the
+/// `StatusReport` as scrapeable `status:` lines (`serve --status ADDR`;
+/// CI and `repro loadgen` grep these).
+fn print_status(addr: &str) -> crate::Result<()> {
+    let conn =
+        crate::transport::tcp::TcpTransport::connect(addr, Some(Duration::from_secs(5)))?;
+    let report = crate::transport::client::query_status(
+        conn,
+        &crate::transport::client::StreamClientConfig::default(),
+    )?;
+    println!(
+        "status: plane cache hits={} misses={} evictions={} redecodes={}",
+        report.cache_hits, report.cache_misses, report.cache_evictions, report.cache_redecodes
+    );
+    let (mut retrains, mut triggers) = (0u64, 0u64);
+    for p in &report.patients {
+        retrains += p.retrains as u64;
+        triggers += p.triggers as u64;
+        println!(
+            "status: patient {} fa={}/{} retrains={} triggers={} feedback={}",
+            p.patient, p.fa_hits, p.fa_seen, p.retrains, p.triggers, p.feedback_depth
+        );
+    }
+    println!(
+        "status: total retrains={retrains} triggers={triggers} patients={}",
+        report.patients.len()
+    );
+    Ok(())
+}
+
 /// `repro serve --data DIR [--patients LIST] [--model FILE]
 /// [--models-dir DIR] [--retrain-epochs N] [--retrain-fa-rate R]
-/// [--use-pjrt] [--realtime] [--config FILE] [--record K]
-/// [--listen ADDR] [--shard-of K/N]`
+/// [--feedback-window N] [--use-pjrt] [--realtime] [--config FILE]
+/// [--record K] [--listen ADDR] [--shard-of K/N] | serve --status ADDR`
 pub fn serve_command(args: &Args) -> crate::Result<()> {
     args.check_known(&[
         "data",
@@ -509,12 +562,18 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         "models-dir",
         "retrain-epochs",
         "retrain-fa-rate",
+        "feedback-window",
         "cache-planes",
         "max-model-versions",
         "listen",
         "shard-of",
         "kernels",
+        "status",
     ])?;
+    // Telemetry query mode: scrape a running server and exit.
+    if let Some(addr) = args.get("status") {
+        return print_status(addr);
+    }
     let data = PathBuf::from(args.require("data")?);
     let mut system = match args.get("config") {
         Some(path) => SystemConfig::from_file(&ConfigFile::load(std::path::Path::new(path))?)?,
@@ -539,6 +598,9 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
     let record_idx: usize = args.get_parse("record", 1usize)?;
     let retrain_epochs: usize = args.get_parse("retrain-epochs", system.retrain_epochs)?;
     let retrain_fa_rate: f64 = args.get_parse("retrain-fa-rate", system.retrain_fa_rate)?;
+    // Feedback capture budget: labelled serving windows retained per
+    // patient; a triggered retrain prefers a full ring over the record.
+    system.feedback_window = args.get_parse("feedback-window", system.feedback_window)?;
     // Model-memory knobs: a plane budget bounds decoded associative
     // memories resident at once (0 = unbounded), and a version budget
     // garbage-collects stale bundle files at publish time (0 = keep all).
@@ -707,14 +769,44 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         });
     }
 
+    // False-alarm-driven retraining: sessions feed per-window outcomes
+    // into the scheduler's sliding estimator, and a crossed trigger
+    // launches a background incremental retrain — from a full feedback
+    // ring of labelled serving windows when one exists, else resumed
+    // from the bundle's counter planes against the retained record —
+    // that persists + publishes v+1 mid-stream through the hot-swap
+    // path. Built before the wire/in-process fork: both serving planes
+    // drive the same scheduler.
+    let scheduler = if retrain_epochs > 0 {
+        Some(Arc::new(
+            RetrainScheduler::new(
+                RetrainPolicy {
+                    epochs: retrain_epochs,
+                    fa_window: system.retrain_fa_window,
+                    fa_rate: retrain_fa_rate,
+                    cooldown: system.retrain_cooldown,
+                    max_retrains: system.retrain_max,
+                },
+                registry.clone(),
+                store.clone(),
+                train_records,
+            )
+            .with_max_versions(max_model_versions)
+            .with_feedback_window(system.feedback_window),
+        ))
+    } else {
+        None
+    };
+
     // Wire mode: `--listen ADDR` (or `[server] listen`) serves the
     // published models over framed TCP instead of replaying the local
     // records in-process. Setup above is identical — same training /
     // store recovery / registry publish — so a wire client streaming a
     // record sees window-for-window the same predictions the in-process
-    // replay would produce. Retrain scheduling is an in-process-replay
-    // feature (it needs the annotation alongside the stream) and is not
-    // started here.
+    // replay would produce. With `--retrain-epochs`, the dispatcher
+    // ground-truths completions against the served record's annotation
+    // (clients are expected to stream that record, possibly corrupted),
+    // feeds the scheduler, and answers `Status` telemetry queries.
     let listen = args
         .get("listen")
         .map(str::to_string)
@@ -739,9 +831,24 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
             wire_cfg.shard = Some(slot);
             println!("shard: slot {slot} of {count}");
         }
+        let retrain_ctx = scheduler.clone().map(|scheduler| {
+            Arc::new(crate::coordinator::wire::RetrainContext {
+                scheduler,
+                records: streams
+                    .iter()
+                    .map(|s| (s.patient_id, s.record.clone()))
+                    .collect(),
+            })
+        });
         let transport = crate::transport::tcp::TcpTransport::bind(&addr)?;
-        let server =
-            crate::coordinator::wire::WireServer::start(Box::new(transport), &backend, &system, registry, wire_cfg)?;
+        let server = crate::coordinator::wire::WireServer::start_with_retrain(
+            Box::new(transport),
+            &backend,
+            &system,
+            registry,
+            wire_cfg,
+            retrain_ctx,
+        )?;
         // CI greps a redirected log for this line before pointing the
         // load generator at the port — flush past the block buffering.
         println!("listening on {}", server.local_addr());
@@ -749,31 +856,6 @@ pub fn serve_command(args: &Args) -> crate::Result<()> {
         std::io::stdout().flush()?;
         return server.run();
     }
-
-    // False-alarm-driven retraining: sessions feed per-window outcomes
-    // into the scheduler's sliding estimator, and a crossed trigger
-    // launches a background incremental retrain (resumed from the
-    // bundle's counter planes) that persists + publishes v+1 mid-stream
-    // through the hot-swap path.
-    let scheduler = if retrain_epochs > 0 {
-        Some(Arc::new(
-            RetrainScheduler::new(
-                RetrainPolicy {
-                    epochs: retrain_epochs,
-                    fa_window: system.retrain_fa_window,
-                    fa_rate: retrain_fa_rate,
-                    cooldown: system.retrain_cooldown,
-                    max_retrains: system.retrain_max,
-                },
-                registry.clone(),
-                store.clone(),
-                train_records,
-            )
-            .with_max_versions(max_model_versions),
-        ))
-    } else {
-        None
-    };
 
     let backend = if system.use_pjrt {
         Backend::Pjrt {
@@ -1029,6 +1111,76 @@ mod tests {
         // engine runs on its own thread) — but the stream must end on a
         // version the registry actually published.
         assert!(report.sessions[0].model_version <= 2);
+    }
+
+    /// Closing the feedback loop: with `[model] feedback_window` set, the
+    /// session's labelled serving windows reach the scheduler's ring, and
+    /// a trigger whose ring is full retrains from feedback — not from the
+    /// retained record. The publish message names its material.
+    #[test]
+    fn scheduler_prefers_full_feedback_ring() {
+        use crate::coordinator::scheduler::{RetrainPolicy, RetrainScheduler};
+
+        let synth = SynthConfig {
+            records_per_patient: 2,
+            pre_s: 8.0,
+            ictal_s: 4.0,
+            post_s: 2.0,
+            ..Default::default()
+        };
+        let p = SynthPatient::generate(&synth, 6);
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = SparseEncoder::new(Variant::Optimized, cfg.clone());
+        let mut bundle = pipeline::train_on_record(&mut enc, &p.records[0], &cfg);
+        bundle.provenance.patient_id = 6;
+
+        let registry = Arc::new(ModelRegistry::new());
+        let mut train = std::collections::BTreeMap::new();
+        train.insert(6, p.records[0].clone());
+        let scheduler = Arc::new(
+            RetrainScheduler::new(
+                RetrainPolicy {
+                    epochs: 2,
+                    fa_window: 4,
+                    fa_rate: 0.0,
+                    cooldown: 10_000,
+                    max_retrains: 1,
+                },
+                registry.clone(),
+                None,
+                train,
+            )
+            .with_feedback_window(4)
+            .foreground(),
+        );
+        let mut system = SystemConfig::default();
+        system.feedback_window = 4;
+        let mut coordinator = Coordinator::new(system, Backend::Native);
+        coordinator.scheduler = Some(scheduler.clone());
+        coordinator
+            .run_with_registry(
+                vec![StreamSpec {
+                    session_id: 1,
+                    patient_id: 6,
+                    record: p.records[1].clone(),
+                    bundle,
+                }],
+                &registry,
+                |_| {},
+            )
+            .unwrap();
+
+        // Window 4's feedback lands in the ring *before* its outcome is
+        // observed, so the ring is full (4/4) at the trigger.
+        assert_eq!(scheduler.triggers(), vec![(6, 4)]);
+        assert_eq!(registry.current(6).unwrap().version(), 2);
+        let msgs = scheduler.join();
+        assert_eq!(msgs.len(), 1);
+        assert!(
+            msgs[0].contains("from 4 feedback window(s)"),
+            "retrain material should be the feedback ring: {}",
+            msgs[0]
+        );
     }
 
     /// Satellite contract for the default build: `Backend::Pjrt` must fail

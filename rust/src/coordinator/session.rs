@@ -61,6 +61,13 @@ pub struct Session {
     pub detector: Detector,
     /// Collected predictions (for offline scoring after the stream ends).
     pub predictions: Vec<WindowPrediction>,
+    /// Feedback capture budget (`[model] feedback_window`): how many
+    /// completed serving windows' codes are retained while they await
+    /// their ground-truth label. 0 disables capture.
+    feedback_window: usize,
+    /// Completed windows awaiting their outcome, oldest first:
+    /// `(window seq, FRAMES_PER_PREDICTION * CHANNELS codes)`.
+    pending_feedback: std::collections::VecDeque<(u64, Vec<u8>)>,
 }
 
 impl Session {
@@ -81,6 +88,8 @@ impl Session {
             false_positives: 0,
             detector: Detector::new(consecutive),
             predictions: Vec::new(),
+            feedback_window: 0,
+            pending_feedback: std::collections::VecDeque::new(),
         }
     }
 
@@ -149,6 +158,15 @@ impl Session {
             self.batch_seq0 = self.next_seq;
         }
         self.batch.extend_from_slice(&self.window);
+        // Retain the window for the feedback loop until its outcome is
+        // ground-truthed (bounded: oldest unlabelled window falls off).
+        if self.feedback_window > 0 {
+            if self.pending_feedback.len() >= self.feedback_window {
+                self.pending_feedback.pop_front();
+            }
+            self.pending_feedback
+                .push_back((self.next_seq, self.window.clone()));
+        }
         self.window.clear();
         self.frames_in_window = 0;
         self.next_seq += 1;
@@ -225,6 +243,38 @@ impl Session {
         self.false_positives += false_positive as u64;
     }
 
+    /// Set the feedback capture budget (`[model] feedback_window`;
+    /// 0 disables capture). Takes effect from the next completed window.
+    pub fn set_feedback_window(&mut self, windows: usize) {
+        self.feedback_window = windows;
+    }
+
+    /// Claim the retained codes of window `seq` for the feedback loop
+    /// (outcome time). Entries older than `seq` are discarded — their
+    /// outcome was never attributed (e.g. a failed batch) and outcomes
+    /// arrive in window order, so they can never be claimed later.
+    /// `None` when the window was not retained (capture disabled, or it
+    /// fell off the bounded buffer).
+    pub fn take_feedback(&mut self, seq: u64) -> Option<Vec<u8>> {
+        while let Some((s, _)) = self.pending_feedback.front() {
+            if *s < seq {
+                self.pending_feedback.pop_front();
+            } else if *s == seq {
+                return self.pending_feedback.pop_front().map(|(_, codes)| codes);
+            } else {
+                return None;
+            }
+        }
+        None
+    }
+
+    /// Move every retained window out of the session (the wire path:
+    /// the reader actor drains at submit time and hands the entries to
+    /// the dispatcher, which owns outcome attribution).
+    pub fn drain_feedback(&mut self) -> Vec<(u64, Vec<u8>)> {
+        self.pending_feedback.drain(..).collect()
+    }
+
     /// Windows emitted so far.
     pub fn windows(&self) -> u64 {
         self.next_seq
@@ -241,6 +291,7 @@ impl Session {
         self.detector.reset();
         self.predictions.clear();
         self.false_positives = 0;
+        self.pending_feedback.clear();
     }
 }
 
@@ -305,6 +356,38 @@ mod tests {
         assert_eq!(e.window_idx, 1);
         assert_eq!(s.predictions.len(), 2);
         assert!(s.predictions[1].is_ictal);
+    }
+
+    #[test]
+    fn feedback_ring_retains_bounded_labelled_windows() {
+        let mut s = session();
+        s.set_feedback_window(2);
+        let sample = [0f32; CHANNELS];
+        for _ in 0..FRAMES_PER_PREDICTION * 4 {
+            s.push_sample(&sample);
+        }
+        // Bounded at 2: windows 0 and 1 fell off, 2 and 3 remain.
+        assert_eq!(s.take_feedback(0), None);
+        let codes = s.take_feedback(2).expect("window 2 retained");
+        assert_eq!(codes.len(), FRAMES_PER_PREDICTION * CHANNELS);
+        // Claiming 3 after 2 works; re-claiming 2 does not.
+        assert!(s.take_feedback(3).is_some());
+        assert!(s.take_feedback(3).is_none());
+
+        // Claiming a later window discards the skipped ones.
+        for _ in 0..FRAMES_PER_PREDICTION * 2 {
+            s.push_sample(&sample);
+        }
+        assert!(s.take_feedback(5).is_some());
+        assert!(s.take_feedback(4).is_none(), "window 4 was discarded by the seek");
+
+        // Capture disabled: nothing retained.
+        let mut off = session();
+        for _ in 0..FRAMES_PER_PREDICTION {
+            off.push_sample(&sample);
+        }
+        assert!(off.take_feedback(0).is_none());
+        assert!(off.drain_feedback().is_empty());
     }
 
     #[test]

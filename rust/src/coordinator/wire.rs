@@ -30,7 +30,7 @@
 //! exact window order, and the outputs pin window-for-window against
 //! [`crate::coordinator::server::Coordinator`]'s in-process replay.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed, Ordering::SeqCst};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::{Arc, Mutex};
@@ -40,8 +40,11 @@ use std::time::{Duration, Instant};
 use crate::config::SystemConfig;
 use crate::coordinator::metrics::WireMetrics;
 use crate::coordinator::registry::ModelRegistry;
+use crate::coordinator::scheduler::RetrainScheduler;
 use crate::coordinator::server::{spawn_host, Backend};
 use crate::coordinator::session::{ReadyBatch, Session};
+use crate::data::metrics::window_label;
+use crate::data::synth::Record;
 use crate::err;
 use crate::params::{CLASS_ICTAL, CLASS_INTERICTAL};
 use crate::runtime::engine_pool::{EngineHost, Job, JobSender};
@@ -81,6 +84,10 @@ pub struct WireConfig {
     /// mis-addressed shard. `None` = standalone server, any hello is
     /// acknowledged as addressed.
     pub shard: Option<u32>,
+    /// Labelled serving windows retained per session for feedback
+    /// retraining (`[model] feedback_window`; 0 disables capture). Only
+    /// consulted when the server carries a [`RetrainContext`].
+    pub feedback_window: usize,
 }
 
 impl WireConfig {
@@ -93,8 +100,18 @@ impl WireConfig {
             engine_queue: system.queue_depth.max(1),
             alarm_consecutive: system.alarm_consecutive,
             shard: None,
+            feedback_window: system.feedback_window,
         }
     }
+}
+
+/// Everything the wire server needs to close the retrain loop: the
+/// policy-driven scheduler plus per-patient annotated records for
+/// ground-truthing served windows (the same
+/// [`window_label`] rule every other layer uses).
+pub struct RetrainContext {
+    pub scheduler: Arc<RetrainScheduler>,
+    pub records: BTreeMap<u32, Record>,
 }
 
 impl Default for WireConfig {
@@ -121,6 +138,15 @@ struct ConnShared {
     finished: AtomicBool,
     /// Torn down (shed / stale / error): every thread exits ASAP.
     closed: AtomicBool,
+    /// Subscribed patient + 1 (0 = no data session) — lets the
+    /// dispatcher ground-truth completions without touching the session.
+    patient: AtomicU64,
+    /// Completed windows' retained codes awaiting their outcome, oldest
+    /// first (`(window seq, codes)`), drained from the session at submit
+    /// time and claimed by the dispatcher at completion time. Bounded:
+    /// the session ring caps what enters, the dispatcher pops in window
+    /// order as completions land.
+    feedback: Mutex<VecDeque<(u64, Vec<u8>)>>,
 }
 
 impl ConnShared {
@@ -132,7 +158,26 @@ impl ConnShared {
             draining: AtomicBool::new(false),
             finished: AtomicBool::new(false),
             closed: AtomicBool::new(false),
+            patient: AtomicU64::new(0),
+            feedback: Mutex::new(VecDeque::new()),
         }
+    }
+
+    /// Claim the retained codes of window `seq` (dispatcher side).
+    /// Earlier windows still queued were never ground-truthed (their
+    /// batch failed) — discarded in passing.
+    fn claim_feedback(&self, seq: u64) -> Option<Vec<u8>> {
+        let mut pending = self.feedback.lock().ok()?;
+        while let Some((s, _)) = pending.front() {
+            if *s < seq {
+                pending.pop_front();
+            } else if *s == seq {
+                return pending.pop_front().map(|(_, codes)| codes);
+            } else {
+                return None;
+            }
+        }
+        None
     }
 
     /// Once the client has drained (end-of-stream received and every
@@ -172,11 +217,27 @@ impl WireServer {
     /// encoding with `system.classifier`) and owned by the dispatcher
     /// thread. Returns once the accept loop is live.
     pub fn start(
+        transport: Box<dyn Transport>,
+        backend: &Backend,
+        system: &SystemConfig,
+        registry: Arc<ModelRegistry>,
+        cfg: WireConfig,
+    ) -> crate::Result<WireServer> {
+        WireServer::start_with_retrain(transport, backend, system, registry, cfg, None)
+    }
+
+    /// [`WireServer::start`] plus the closed retrain loop: with a
+    /// [`RetrainContext`], served windows are ground-truthed at
+    /// completion time, outcomes feed the scheduler's per-patient
+    /// false-alarm watches, retained window codes feed its feedback
+    /// rings, and `Status` queries report the whole loop.
+    pub fn start_with_retrain(
         mut transport: Box<dyn Transport>,
         backend: &Backend,
         system: &SystemConfig,
         registry: Arc<ModelRegistry>,
         cfg: WireConfig,
+        retrain: Option<Arc<RetrainContext>>,
     ) -> crate::Result<WireServer> {
         transport.set_write_timeout(Some(cfg.staleness));
         let addr = transport.local_addr();
@@ -191,9 +252,10 @@ impl WireServer {
         let dispatch_handle = {
             let (conns, metrics, outstanding, stop) =
                 (conns.clone(), metrics.clone(), outstanding.clone(), stop.clone());
+            let retrain = retrain.clone();
             std::thread::Builder::new()
                 .name("wire-dispatch".into())
-                .spawn(move || dispatch_loop(host, conns, metrics, outstanding, stop))?
+                .spawn(move || dispatch_loop(host, conns, metrics, outstanding, stop, retrain))?
         };
 
         let accept_handle = {
@@ -216,6 +278,7 @@ impl WireServer {
                                     next_session: next_session.clone(),
                                     stop: stop.clone(),
                                     cfg: cfg.clone(),
+                                    retrain: retrain.clone(),
                                 };
                                 actors.push(
                                     std::thread::Builder::new()
@@ -306,6 +369,7 @@ struct ConnectionActor {
     next_session: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     cfg: WireConfig,
+    retrain: Option<Arc<RetrainContext>>,
 }
 
 impl ConnectionActor {
@@ -412,6 +476,10 @@ impl ConnectionActor {
                             let mut s =
                                 Session::new(sid, patient, model, self.cfg.alarm_consecutive);
                             s.set_batch_windows(self.cfg.batch_windows);
+                            if self.retrain.is_some() {
+                                s.set_feedback_window(self.cfg.feedback_window);
+                                shared.patient.store(patient as u64 + 1, SeqCst);
+                            }
                             session = Some(s);
                             if let Ok(mut map) = self.conns.lock() {
                                 map.insert(sid, shared.clone());
@@ -525,6 +593,30 @@ impl ConnectionActor {
                             );
                             return sid;
                         }
+                        Frame::Status => {
+                            // Telemetry query — allowed on any connection
+                            // (data, control, or a bare dial) at any time.
+                            let stats = self.registry.plane_cache().stats();
+                            let patients = self
+                                .retrain
+                                .as_ref()
+                                .map(|ctx| ctx.scheduler.status())
+                                .unwrap_or_default();
+                            let _ = shared.out.try_send(Frame::StatusReport {
+                                cache_hits: stats.hits,
+                                cache_misses: stats.misses,
+                                cache_evictions: stats.evictions,
+                                cache_redecodes: stats.redecodes,
+                                patients,
+                            });
+                        }
+                        Frame::StatusReport { .. } => {
+                            self.protocol_error(
+                                shared,
+                                "client sent a server-side StatusReport frame".into(),
+                            );
+                            return sid;
+                        }
                     }
                 }
             }
@@ -539,6 +631,17 @@ impl ConnectionActor {
         batches: &mut Vec<ReadyBatch>,
         shared: &ConnShared,
     ) -> crate::Result<()> {
+        // Hand the session's retained window codes to the dispatcher,
+        // which owns outcome attribution (the session itself is never
+        // touched off the reader thread).
+        if self.retrain.is_some() {
+            let drained = session.drain_feedback();
+            if !drained.is_empty() {
+                if let Ok(mut pending) = shared.feedback.lock() {
+                    pending.extend(drained);
+                }
+            }
+        }
         for b in batches.drain(..) {
             // Hot-swap exactly like the in-process path: refresh at
             // batch-creation time; in-flight jobs keep their own Arc.
@@ -640,6 +743,7 @@ fn dispatch_loop(
     metrics: Arc<WireMetrics>,
     outstanding: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
+    retrain: Option<Arc<RetrainContext>>,
 ) {
     loop {
         match host.completions.recv_timeout(DISPATCH_TICK) {
@@ -661,11 +765,32 @@ fn dispatch_loop(
                 match &c.outputs {
                     Ok(outs) => {
                         for (k, out) in outs.iter().enumerate() {
+                            let seq = c.seq + k as u64;
+                            // Close the retrain loop on every scored
+                            // window (even past a shed — the window was
+                            // served, its outcome indicts the model).
+                            if let Some(ctx) = &retrain {
+                                let tagged = shared.patient.load(SeqCst);
+                                if tagged > 0 {
+                                    let patient = (tagged - 1) as u32;
+                                    let truth = ctx
+                                        .records
+                                        .get(&patient)
+                                        .map(|r| window_label(r, seq as usize))
+                                        .unwrap_or(false);
+                                    let is_ictal =
+                                        out.scores[CLASS_ICTAL] > out.scores[CLASS_INTERICTAL];
+                                    if let Some(codes) = shared.claim_feedback(seq) {
+                                        ctx.scheduler.record_feedback(patient, codes, truth);
+                                    }
+                                    ctx.scheduler.observe(patient, is_ictal && !truth);
+                                }
+                            }
                             if shed {
                                 metrics.predictions_dropped.fetch_add(1, Relaxed);
                                 continue;
                             }
-                            let frame = prediction_frame(c.seq + k as u64, c.version, out);
+                            let frame = prediction_frame(seq, c.version, out);
                             if shared.out.try_send(frame).is_err() {
                                 // Full (slow consumer) or writer gone:
                                 // either way this consumer is done.

@@ -70,10 +70,13 @@ data / model:
   detect    --data DIR --patient ID [--variant V] [--max-density D]
   serve     --data DIR [--config FILE] [--patients LIST] [--model FILE]
             [--models-dir DIR] [--retrain-epochs N] [--retrain-fa-rate R]
+            [--feedback-window N]  retrain from the last N labelled serving windows
             [--use-pjrt] [--realtime] [--batch N] [--chunk N]
             [--kernels SET]     pin the compute kernel set (scalar|avx2|neon|auto)
             [--listen ADDR]     serve framed TCP instead of in-process replay
             [--shard-of K/N]    declare this server shard K of an N-shard fleet
+  serve     --status HOST:PORT  scrape a wire server's telemetry (FA rates,
+            retrains, drift triggers, feedback depth, plane-cache stats)
   dispatch  --shards ADDR,ADDR[,...] [--listen ADDR] [--place "P=S,..."]
             [--lease-ms N] [--reap-ms N] [--wait-shards-s N] [--config FILE]
             fleet dispatcher: place patients across shards, lease + re-lease
@@ -95,6 +98,8 @@ tooling:
   loadgen   --addr HOST:PORT --data DIR [--patients LIST] [--sessions N]
             [--concurrency N] [--record K] [--chunk N] [--retries N]
             [--report FILE] [--allow-drops]
+            [--hostile SPEC --seed N]  fault-inject every stream (spec items:
+            dropout, stuck, drift, label-noise, jitter — comma-separated)
             replay concurrent wire sessions, report loadgen/v1
   loadgen-diff <current.json> <baseline.json> [--threshold FRAC]
             compare two loadgen/v1 reports (stub baseline = error)

@@ -315,6 +315,85 @@ pub fn retrain_bundle(
     (next, report)
 }
 
+/// Like [`retrain_bundle`], but the training material is a set of
+/// labelled *serving* windows captured by the feedback loop
+/// ([`crate::coordinator::session::Session`]'s bounded retention ring)
+/// instead of a retained record: each entry is one prediction window's
+/// frame-major LBP codes (`FRAMES_PER_PREDICTION * CHANNELS` bytes) plus
+/// its ground-truth label. Each window is encoded independently — encoder
+/// state reset at the window boundary, exactly how the serving engine
+/// scores it — so the retrain optimises the same queries the model is
+/// judged on. Counter-plane resumption applies as in [`retrain_bundle`];
+/// `opts.max_density` is ignored (a threshold re-tune needs a raw record,
+/// and re-tuning would invalidate the stored codes anyway).
+pub fn retrain_bundle_from_windows(
+    bundle: &ModelBundle,
+    windows: &[(Vec<u8>, bool)],
+    opts: &RetrainOptions,
+) -> (ModelBundle, OnlineReport) {
+    let cfg = bundle.config.clone();
+    let mut encoder = SparseEncoder::new(bundle.variant, cfg.clone());
+    let mut queries: Vec<(Hv, bool)> = Vec::with_capacity(windows.len());
+    for (codes, ictal) in windows {
+        encoder.reset();
+        let mut query = None;
+        for chunk in codes.chunks_exact(crate::params::CHANNELS) {
+            let mut frame: Frame = [0u8; crate::params::CHANNELS];
+            frame.copy_from_slice(chunk);
+            query = encoder.push_frame(&frame).or(query);
+        }
+        if let Some(q) = query {
+            queries.push((q, *ictal));
+        }
+    }
+    let (mut trainer, incremental) = match &bundle.counters {
+        Some(planes) if bundle.variant.is_sparse() => {
+            let mut trainer =
+                OnlineTrainer::from_counters(bundle.variant, cfg.train_density, planes);
+            for (q, ictal) in queries {
+                trainer.attach(q, ictal);
+            }
+            (trainer, true)
+        }
+        _ => {
+            let mut trainer = OnlineTrainer::new(bundle.variant, cfg.train_density);
+            for (q, ictal) in queries {
+                trainer.absorb(q, ictal);
+            }
+            (trainer, false)
+        }
+    };
+    let (am, report) = trainer.run(&OnlineConfig {
+        max_epochs: opts.max_epochs,
+        subtract: opts.subtract,
+    });
+    let per_class = trainer.windows_per_class();
+    let counters = Some(trainer.counters());
+    let next = ModelBundle {
+        version: bundle.next_version(),
+        variant: bundle.variant,
+        config: cfg,
+        am,
+        provenance: Provenance {
+            patient_id: bundle.provenance.patient_id,
+            epochs: report.epochs.len() as u32,
+            parent_version: bundle.version,
+            train_windows: [per_class[0] as u64, per_class[1] as u64],
+            note: format!(
+                "feedback retrain ({}) on {} serving window(s): \
+                 training-window errors {} -> {} over {} epoch(s)",
+                if incremental { "resumed from counter planes" } else { "seeded from scratch" },
+                windows.len(),
+                report.initial_errors,
+                report.best_errors,
+                report.epochs.len()
+            ),
+        },
+        counters,
+    };
+    (next, report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -430,6 +509,40 @@ mod tests {
             online_trainer_for_record(Variant::Optimized, &cfg, patient.train_record());
         assert_eq!(trainer.errors(&next.am), report.best_errors);
         assert_eq!(trainer.errors(&bundle.am), report.initial_errors);
+    }
+
+    #[test]
+    fn retrain_from_windows_matches_window_semantics_and_bumps_version() {
+        let patient = test_patient();
+        let cfg = ClassifierConfig::optimized();
+        let mut enc = crate::hdc::classifier::make_encoder(Variant::Optimized, cfg.clone());
+        let bundle = train_on_record(enc.as_mut(), patient.train_record(), &cfg);
+
+        // Slice the record into the same frame-major per-window code
+        // buffers a serving session retains, with majority labels —
+        // the feedback ring's exact shape.
+        let frames: Vec<(Frame, bool)> = record_frames(patient.train_record()).collect();
+        let per_window = crate::params::FRAMES_PER_PREDICTION;
+        let windows: Vec<(Vec<u8>, bool)> = frames
+            .chunks_exact(per_window)
+            .map(|w| {
+                let codes: Vec<u8> = w.iter().flat_map(|(f, _)| f.iter().copied()).collect();
+                let ictal = w.iter().filter(|(_, i)| *i).count() * 2 > per_window;
+                (codes, ictal)
+            })
+            .collect();
+        assert!(!windows.is_empty());
+
+        let (next, report) = retrain_bundle_from_windows(&bundle, &windows, &Default::default());
+        assert_eq!(next.version, 2);
+        assert_eq!(next.provenance.parent_version, 1);
+        assert!(report.best_errors <= report.initial_errors);
+        assert!(next.counters.is_some(), "feedback retrain persists planes");
+        // Incremental resume attaches the feedback windows to the epoch
+        // loop without re-counting them into the planes, so the window
+        // census carries over from the base bundle unchanged.
+        assert_eq!(next.provenance.train_windows, bundle.provenance.train_windows);
+        assert!(next.provenance.note.contains("feedback retrain"), "{}", next.provenance.note);
     }
 
     #[test]

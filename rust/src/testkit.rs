@@ -146,8 +146,8 @@ pub fn tiny_trained_patient(
 /// small (≤ 4 multichannel samples) so byte-level corruption sweeps stay
 /// fast; the codec's size limits have their own directed tests.
 pub fn wire_frame(g: &mut Gen) -> crate::transport::frame::Frame {
-    use crate::transport::frame::Frame;
-    match g.usize_below(8) {
+    use crate::transport::frame::{Frame, PatientStatus};
+    match g.usize_below(10) {
         0 => Frame::Subscribe {
             patient: g.u64() as u32,
         },
@@ -189,6 +189,32 @@ pub fn wire_frame(g: &mut Gen) -> crate::transport::frame::Frame {
                 _ => "[::1]:65535".to_string(),
             },
         },
+        7 => Frame::Status,
+        8 => {
+            // Entries ascend strictly by patient id and keep
+            // fa_hits ≤ fa_seen — the invariants the decoder enforces.
+            let n = g.range(0, 3);
+            let mut patient = g.u64() as u32 & 0xFFFF;
+            let patients = g.vec(n, |g| {
+                patient += 1 + (g.usize_below(9) as u32);
+                let fa_seen = g.usize_below(100) as u32;
+                PatientStatus {
+                    patient,
+                    fa_hits: g.usize_below(fa_seen as usize + 1) as u32,
+                    fa_seen,
+                    retrains: g.usize_below(4) as u32,
+                    triggers: g.usize_below(4) as u32,
+                    feedback_depth: g.usize_below(64) as u32,
+                }
+            });
+            Frame::StatusReport {
+                cache_hits: g.u64(),
+                cache_misses: g.u64(),
+                cache_evictions: g.u64(),
+                cache_redecodes: g.u64(),
+                patients,
+            }
+        }
         _ => Frame::Shutdown {
             reason: match g.usize_below(3) {
                 0 => String::new(),
@@ -258,6 +284,234 @@ pub fn planted_false_alarm_stream(total: usize, burst_start: usize, burst_len: u
         .collect()
 }
 
+/// Deterministic, seed-keyed fault injection for sample streams.
+///
+/// Every corruption an injector applies is a pure function of
+/// `(seed, injector position, stream contents)` — no ambient randomness,
+/// no time — so two runs with the same seed produce bit-identical
+/// hostile streams (and therefore bit-identical prediction streams, the
+/// reproducibility contract `tests/hostile_streams.rs` and the CI chaos
+/// job pin). Injectors compose in declaration order; each derives its
+/// own RNG stream from the master seed and its position, so adding an
+/// injector never perturbs the ones before it.
+pub mod hostile {
+    use crate::params::CHANNELS;
+    use crate::rng::{hash_chain, Xoshiro256};
+    use crate::{bail, ensure};
+
+    /// One composable corruption.
+    #[derive(Clone, Debug, PartialEq)]
+    pub enum Injector {
+        /// Electrode dropout: each channel independently suffers one
+        /// dead span of `span_frames` samples with probability `rate`,
+        /// either zeroed (lead lifted) or stuck at the last good value
+        /// (frozen ADC) when `stuck` is set.
+        Dropout {
+            rate: f64,
+            span_frames: usize,
+            stuck: bool,
+        },
+        /// Amplitude drift: a linear gain ramp over all channels, from
+        /// 1.0 at `start_frame` to `gain` at the end of the stream —
+        /// the inter-session signal change of Pale et al., compressed
+        /// into one record so it can force `RetrainPolicy` triggers.
+        Drift { start_frame: usize, gain: f32 },
+        /// Label noise in the feedback path: each window's ground-truth
+        /// label flips with probability `p` before it reaches the
+        /// retrain loop (sample bytes are untouched).
+        LabelNoise { p: f64 },
+        /// Sample jitter at the chunk boundary: with probability `p`,
+        /// the multichannel frames on either side of each
+        /// `chunk_frames` boundary swap places (a reordered wire chunk).
+        Jitter { chunk_frames: usize, p: f64 },
+    }
+
+    impl Injector {
+        /// Parse one `name[=param]` spec item (the `--hostile` CLI
+        /// vocabulary) into an injector with calibrated defaults.
+        fn parse(name: &str) -> crate::Result<Injector> {
+            Ok(match name.trim() {
+                "dropout" => Injector::Dropout {
+                    rate: 0.25,
+                    span_frames: 64,
+                    stuck: false,
+                },
+                "stuck" => Injector::Dropout {
+                    rate: 0.25,
+                    span_frames: 64,
+                    stuck: true,
+                },
+                "drift" => Injector::Drift {
+                    start_frame: 0,
+                    gain: 6.0,
+                },
+                "label-noise" => Injector::LabelNoise { p: 0.05 },
+                "jitter" => Injector::Jitter {
+                    chunk_frames: 256,
+                    p: 0.5,
+                },
+                other => bail!(
+                    "unknown hostile injector {other:?} \
+                     (known: dropout, stuck, drift, label-noise, jitter)"
+                ),
+            })
+        }
+
+        fn corrupt(&self, seed: u64, samples: &mut [f32]) {
+            let frames = samples.len() / CHANNELS;
+            match self {
+                Injector::Dropout {
+                    rate,
+                    span_frames,
+                    stuck,
+                } => {
+                    let mut rng = Xoshiro256::new(seed);
+                    for c in 0..CHANNELS {
+                        // Draw both decisions unconditionally so each
+                        // channel's corruption is independent of the
+                        // spans the channels before it drew.
+                        let hit = rng.next_bool(*rate);
+                        let len = (*span_frames).min(frames);
+                        if frames == 0 || len == 0 {
+                            continue;
+                        }
+                        let start = rng.next_below((frames - len + 1) as u64) as usize;
+                        if !hit {
+                            continue;
+                        }
+                        let held = if *stuck && start > 0 {
+                            samples[(start - 1) * CHANNELS + c]
+                        } else {
+                            0.0
+                        };
+                        for t in start..start + len {
+                            samples[t * CHANNELS + c] = held;
+                        }
+                    }
+                }
+                Injector::Drift { start_frame, gain } => {
+                    if frames <= *start_frame {
+                        return;
+                    }
+                    let span = (frames - start_frame) as f32;
+                    for t in *start_frame..frames {
+                        let g = 1.0 + (gain - 1.0) * ((t - start_frame) as f32 + 1.0) / span;
+                        for s in &mut samples[t * CHANNELS..(t + 1) * CHANNELS] {
+                            *s *= g;
+                        }
+                    }
+                }
+                Injector::Jitter { chunk_frames, p } => {
+                    if *chunk_frames == 0 {
+                        return;
+                    }
+                    let mut rng = Xoshiro256::new(seed);
+                    let mut k = *chunk_frames;
+                    while k < frames {
+                        if rng.next_bool(*p) {
+                            for c in 0..CHANNELS {
+                                samples.swap((k - 1) * CHANNELS + c, k * CHANNELS + c);
+                            }
+                        }
+                        k += chunk_frames;
+                    }
+                }
+                Injector::LabelNoise { .. } => {}
+            }
+        }
+
+        fn corrupt_label(&self, seed: u64, window: u64, label: bool) -> bool {
+            match self {
+                Injector::LabelNoise { p } => {
+                    // Keyed per window, not drawn from a running stream:
+                    // the flip decision for window w is identical no
+                    // matter how many windows were observed before it.
+                    let mut rng = Xoshiro256::new(hash_chain(seed, &[window]));
+                    if rng.next_bool(*p) {
+                        !label
+                    } else {
+                        label
+                    }
+                }
+                _ => label,
+            }
+        }
+    }
+
+    /// A seed-keyed stack of injectors wrapping one sample stream.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct HostileStream {
+        pub seed: u64,
+        pub injectors: Vec<Injector>,
+    }
+
+    impl HostileStream {
+        pub fn new(seed: u64) -> Self {
+            HostileStream {
+                seed,
+                injectors: Vec::new(),
+            }
+        }
+
+        /// Append an injector (applied after the ones already present).
+        pub fn with(mut self, injector: Injector) -> Self {
+            self.injectors.push(injector);
+            self
+        }
+
+        /// Parse a comma-separated `--hostile` spec (`"dropout,drift"`).
+        pub fn parse(spec: &str, seed: u64) -> crate::Result<Self> {
+            let mut hostile = HostileStream::new(seed);
+            for name in spec.split(',').filter(|s| !s.trim().is_empty()) {
+                hostile.injectors.push(Injector::parse(name)?);
+            }
+            ensure!(
+                !hostile.injectors.is_empty(),
+                "hostile spec {spec:?} names no injectors"
+            );
+            Ok(hostile)
+        }
+
+        /// The per-injector RNG seed: master seed chained with the
+        /// injector's position.
+        fn injector_seed(&self, index: usize) -> u64 {
+            hash_chain(self.seed, &[index as u64])
+        }
+
+        /// Apply every sample-path injector, in order, to a whole
+        /// time-major stream. Idempotent inputs are not assumed — call
+        /// once per stream.
+        pub fn corrupt(&self, samples: &mut [f32]) {
+            debug_assert_eq!(samples.len() % CHANNELS, 0);
+            for (i, inj) in self.injectors.iter().enumerate() {
+                inj.corrupt(self.injector_seed(i), samples);
+            }
+        }
+
+        /// Pass a window's ground-truth label through the feedback-path
+        /// injectors (only `LabelNoise` touches it).
+        pub fn corrupt_label(&self, window: u64, label: bool) -> bool {
+            let mut label = label;
+            for (i, inj) in self.injectors.iter().enumerate() {
+                label = inj.corrupt_label(self.injector_seed(i), window, label);
+            }
+            label
+        }
+
+        /// True when no injector is configured (the stream is clean).
+        pub fn is_empty(&self) -> bool {
+            self.injectors.is_empty()
+        }
+    }
+
+    /// Derive the per-session hostile seed loadgen uses: every session
+    /// index gets its own reproducible corruption stream from one
+    /// `--seed`.
+    pub fn session_seed(master: u64, session: u64) -> u64 {
+        hash_chain(master, &[0x5E55_1011, session])
+    }
+}
+
 /// Run `cases` property cases. Each case gets a [`Gen`] derived from the
 /// master seed; panics are caught, annotated with the reproducing seed and
 /// re-raised.
@@ -321,6 +575,72 @@ mod tests {
     #[should_panic(expected = "does not fit")]
     fn planted_stream_rejects_overflowing_burst() {
         planted_false_alarm_stream(8, 6, 4);
+    }
+
+    #[test]
+    fn hostile_injectors_are_seed_deterministic() {
+        use hostile::{HostileStream, Injector};
+        let mut g = Gen::new(42);
+        let clean: Vec<f32> = g.vec(512 * CHANNELS, |g| g.f64() as f32 - 0.5);
+        let h = HostileStream::parse("dropout,drift,jitter", 7).unwrap();
+        let mut a = clean.clone();
+        let mut b = clean.clone();
+        h.corrupt(&mut a);
+        h.corrupt(&mut b);
+        assert_eq!(a.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                   b.iter().map(|s| s.to_bits()).collect::<Vec<_>>());
+        assert_ne!(a.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                   clean.iter().map(|s| s.to_bits()).collect::<Vec<_>>());
+        // A different seed corrupts differently.
+        let mut c = clean.clone();
+        HostileStream::parse("dropout,drift,jitter", 8).unwrap().corrupt(&mut c);
+        assert_ne!(a.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                   c.iter().map(|s| s.to_bits()).collect::<Vec<_>>());
+
+        // Appending an injector never perturbs the ones before it: the
+        // dropout spans of "dropout" and "dropout,drift" coincide.
+        let solo = HostileStream::new(7).with(Injector::Dropout {
+            rate: 1.0,
+            span_frames: 16,
+            stuck: false,
+        });
+        let stacked = solo.clone().with(Injector::Drift {
+            start_frame: 1 << 30, // past the end: drift is a no-op
+            gain: 3.0,
+        });
+        let mut x = clean.clone();
+        let mut y = clean.clone();
+        solo.corrupt(&mut x);
+        stacked.corrupt(&mut y);
+        assert_eq!(x.iter().map(|s| s.to_bits()).collect::<Vec<_>>(),
+                   y.iter().map(|s| s.to_bits()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn hostile_label_noise_is_per_window_and_sample_silent() {
+        use hostile::HostileStream;
+        let h = HostileStream::parse("label-noise", 11).unwrap();
+        // Samples pass through untouched.
+        let mut g = Gen::new(1);
+        let clean: Vec<f32> = g.vec(64 * CHANNELS, |g| g.f64() as f32);
+        let mut s = clean.clone();
+        h.corrupt(&mut s);
+        assert_eq!(s.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                   clean.iter().map(|x| x.to_bits()).collect::<Vec<_>>());
+        // The flip decision for a window is a pure function of
+        // (seed, window), independent of observation order.
+        let forward: Vec<bool> = (0..200).map(|w| h.corrupt_label(w, false)).collect();
+        let backward: Vec<bool> = (0..200).rev().map(|w| h.corrupt_label(w, false)).collect();
+        assert_eq!(forward, backward.into_iter().rev().collect::<Vec<_>>());
+        assert!(forward.iter().any(|&b| b), "p=0.05 over 200 windows should flip some");
+        assert!(forward.iter().filter(|&&b| b).count() < 40, "flip rate far above p");
+    }
+
+    #[test]
+    fn hostile_parse_rejects_unknown_and_empty() {
+        assert!(hostile::HostileStream::parse("dropout,warp", 1).is_err());
+        assert!(hostile::HostileStream::parse(" , ", 1).is_err());
+        assert!(hostile::HostileStream::parse("stuck", 1).is_ok());
     }
 
     #[test]

@@ -153,6 +153,70 @@ pub fn stream_record(
     Ok(outcome)
 }
 
+/// One `StatusReport` frame, as received: the server's plane-cache
+/// counters plus a per-patient serving/retraining snapshot.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatusSnapshot {
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub cache_redecodes: u64,
+    pub patients: Vec<crate::transport::frame::PatientStatus>,
+}
+
+/// Send a `Status` query over `conn` and block for the `StatusReport`.
+///
+/// Heartbeats are tolerated while waiting (a status connection is just
+/// another wire connection and gets keepalives like any other); any
+/// other frame, a server `Shutdown`, or silence past the deadline is an
+/// error — telemetry is strictly one request, one reply.
+pub fn query_status(conn: Duplex, cfg: &StreamClientConfig) -> crate::Result<StatusSnapshot> {
+    let (mut reader, mut writer, _peer) = conn.split();
+    reader.get_mut().set_read_timeout(Some(cfg.read_timeout))?;
+    write_frame(&mut writer, &Frame::Status)?;
+    let mut last_frame = Instant::now();
+    loop {
+        match reader.read()? {
+            ReadOutcome::Idle => {
+                ensure!(
+                    last_frame.elapsed() < cfg.silence_deadline,
+                    "server went silent for {:?} awaiting a status report",
+                    cfg.silence_deadline
+                );
+            }
+            ReadOutcome::Eof => crate::bail!("server closed the connection before replying to Status"),
+            ReadOutcome::Frame(frame) => {
+                last_frame = Instant::now();
+                match frame {
+                    Frame::StatusReport {
+                        cache_hits,
+                        cache_misses,
+                        cache_evictions,
+                        cache_redecodes,
+                        patients,
+                    } => {
+                        return Ok(StatusSnapshot {
+                            cache_hits,
+                            cache_misses,
+                            cache_evictions,
+                            cache_redecodes,
+                            patients,
+                        })
+                    }
+                    Frame::Heartbeat { .. } => {}
+                    Frame::Shutdown { reason } => {
+                        crate::bail!("server closed the status connection: {reason}")
+                    }
+                    other => crate::bail!(
+                        "server answered Status with an unexpected frame: {}",
+                        other.kind_name()
+                    ),
+                }
+            }
+        }
+    }
+}
+
 fn read_predictions(
     mut reader: FrameReader<Box<dyn WireRead>>,
     marks: Receiver<Instant>,
@@ -210,11 +274,16 @@ fn read_predictions(
                     Frame::Route { shard, addr, .. } => {
                         outcome.routed = Some((shard, addr));
                     }
+                    // Status telemetry is strictly request/reply — a
+                    // report the client never asked for is a protocol
+                    // violation, same as any other out-of-role frame.
                     Frame::Subscribe { .. }
                     | Frame::Samples { .. }
                     | Frame::ShardHello { .. }
-                    | Frame::Lease { .. } => {
-                        crate::bail!("server sent a client-side frame: {}", frame.kind_name())
+                    | Frame::Lease { .. }
+                    | Frame::Status
+                    | Frame::StatusReport { .. } => {
+                        crate::bail!("server sent an unexpected frame: {}", frame.kind_name())
                     }
                 }
             }

@@ -21,6 +21,8 @@
 //! | 6    | `ShardHello` | `shard u32, epoch u64`                            |
 //! | 7    | `Lease`      | `patient u32, shard u32, epoch u64`               |
 //! | 8    | `Route`      | `patient u32, shard u32, len u32, len bytes addr` |
+//! | 9    | `Status`     | (empty)                                           |
+//! | 10   | `StatusReport` | `4×u64 plane-cache counters, n u32, n×(patient u32, fa_hits u32, fa_seen u32, retrains u32, triggers u32, feedback_depth u32)` |
 //!
 //! Streams are reassembled by [`FrameDecoder`], which accepts arbitrary
 //! byte chunks (TCP segments, pipe writes) and yields whole frames —
@@ -52,6 +54,30 @@ const KIND_SHUTDOWN: u8 = 5;
 const KIND_SHARD_HELLO: u8 = 6;
 const KIND_LEASE: u8 = 7;
 const KIND_ROUTE: u8 = 8;
+const KIND_STATUS: u8 = 9;
+const KIND_STATUS_REPORT: u8 = 10;
+
+/// One patient's retrain-loop telemetry inside a [`Frame::StatusReport`].
+///
+/// The FA rate travels as the exact estimator fraction (`fa_hits` false
+/// alarms over the `fa_seen` outcomes currently in the sliding window)
+/// instead of a float, so two same-seed runs serialize bit-identically
+/// and the decoder can reject impossible payloads (`fa_hits > fa_seen`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PatientStatus {
+    pub patient: u32,
+    /// False alarms currently inside the FA-rate estimator window.
+    pub fa_hits: u32,
+    /// Outcomes currently inside the FA-rate estimator window.
+    pub fa_seen: u32,
+    /// Models published by the retrain loop for this patient.
+    pub retrains: u32,
+    /// Times the drift watch fired (≥ `retrains`: a trigger without a
+    /// training source publishes nothing).
+    pub triggers: u32,
+    /// Labelled serving windows retained in the feedback ring.
+    pub feedback_depth: u32,
+}
 
 /// One protocol frame (either direction; the server only accepts
 /// client-side kinds and vice versa — direction is policed by the
@@ -94,6 +120,20 @@ pub enum Frame {
         shard: u32,
         addr: String,
     },
+    /// Client → server: ask for the serving plane's telemetry snapshot.
+    /// Allowed on any connection (a scraper need not subscribe first).
+    Status,
+    /// Server → client: the telemetry snapshot — plane-cache counters
+    /// plus one [`PatientStatus`] entry per patient the retrain loop is
+    /// watching (sorted by patient id, so same-state reports serialize
+    /// bit-identically).
+    StatusReport {
+        cache_hits: u64,
+        cache_misses: u64,
+        cache_evictions: u64,
+        cache_redecodes: u64,
+        patients: Vec<PatientStatus>,
+    },
 }
 
 impl Frame {
@@ -107,6 +147,8 @@ impl Frame {
             Frame::ShardHello { .. } => KIND_SHARD_HELLO,
             Frame::Lease { .. } => KIND_LEASE,
             Frame::Route { .. } => KIND_ROUTE,
+            Frame::Status => KIND_STATUS,
+            Frame::StatusReport { .. } => KIND_STATUS_REPORT,
         }
     }
 
@@ -120,6 +162,8 @@ impl Frame {
             Frame::ShardHello { .. } => "ShardHello",
             Frame::Lease { .. } => "Lease",
             Frame::Route { .. } => "Route",
+            Frame::Status => "Status",
+            Frame::StatusReport { .. } => "StatusReport",
         }
     }
 
@@ -183,6 +227,30 @@ impl Frame {
                 p.extend_from_slice(&shard.to_le_bytes());
                 p.extend_from_slice(&(addr.len() as u32).to_le_bytes());
                 p.extend_from_slice(addr.as_bytes());
+                p
+            }
+            Frame::Status => Vec::new(),
+            Frame::StatusReport {
+                cache_hits,
+                cache_misses,
+                cache_evictions,
+                cache_redecodes,
+                patients,
+            } => {
+                let mut p = Vec::with_capacity(36 + patients.len() * 24);
+                p.extend_from_slice(&cache_hits.to_le_bytes());
+                p.extend_from_slice(&cache_misses.to_le_bytes());
+                p.extend_from_slice(&cache_evictions.to_le_bytes());
+                p.extend_from_slice(&cache_redecodes.to_le_bytes());
+                p.extend_from_slice(&(patients.len() as u32).to_le_bytes());
+                for s in patients {
+                    p.extend_from_slice(&s.patient.to_le_bytes());
+                    p.extend_from_slice(&s.fa_hits.to_le_bytes());
+                    p.extend_from_slice(&s.fa_seen.to_le_bytes());
+                    p.extend_from_slice(&s.retrains.to_le_bytes());
+                    p.extend_from_slice(&s.triggers.to_le_bytes());
+                    p.extend_from_slice(&s.feedback_depth.to_le_bytes());
+                }
                 p
             }
         }
@@ -282,6 +350,50 @@ impl Frame {
                     patient,
                     shard,
                     addr,
+                }
+            }
+            KIND_STATUS => Frame::Status,
+            KIND_STATUS_REPORT => {
+                let cache_hits = r.u64()?;
+                let cache_misses = r.u64()?;
+                let cache_evictions = r.u64()?;
+                let cache_redecodes = r.u64()?;
+                let n = r.u32()? as usize;
+                // No pre-allocation from the claimed count: each entry
+                // consumes 24 payload bytes, so a lying `n` fails on the
+                // first bounds-checked read instead of sizing a Vec.
+                let mut patients = Vec::new();
+                let mut prev: Option<u32> = None;
+                for _ in 0..n {
+                    let s = PatientStatus {
+                        patient: r.u32()?,
+                        fa_hits: r.u32()?,
+                        fa_seen: r.u32()?,
+                        retrains: r.u32()?,
+                        triggers: r.u32()?,
+                        feedback_depth: r.u32()?,
+                    };
+                    ensure!(
+                        s.fa_hits <= s.fa_seen,
+                        "StatusReport patient {}: {} false alarms over {} outcomes",
+                        s.patient,
+                        s.fa_hits,
+                        s.fa_seen
+                    );
+                    ensure!(
+                        prev.map_or(true, |p| p < s.patient),
+                        "StatusReport patients are not strictly ascending at {}",
+                        s.patient
+                    );
+                    prev = Some(s.patient);
+                    patients.push(s);
+                }
+                Frame::StatusReport {
+                    cache_hits,
+                    cache_misses,
+                    cache_evictions,
+                    cache_redecodes,
+                    patients,
                 }
             }
             other => bail!("unknown frame kind {other}"),
@@ -581,6 +693,31 @@ mod tests {
                 shard: 1,
                 addr: "127.0.0.1:7001".into(),
             },
+            Frame::Status,
+            Frame::StatusReport {
+                cache_hits: 100,
+                cache_misses: 7,
+                cache_evictions: 3,
+                cache_redecodes: 2,
+                patients: vec![
+                    PatientStatus {
+                        patient: 5,
+                        fa_hits: 2,
+                        fa_seen: 64,
+                        retrains: 1,
+                        triggers: 1,
+                        feedback_depth: 16,
+                    },
+                    PatientStatus {
+                        patient: 7,
+                        fa_hits: 0,
+                        fa_seen: 0,
+                        retrains: 0,
+                        triggers: 0,
+                        feedback_depth: 0,
+                    },
+                ],
+            },
         ]
     }
 
@@ -671,6 +808,69 @@ mod tests {
     }
 
     #[test]
+    fn status_report_rejects_impossible_entries() {
+        let f = Frame::StatusReport {
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+            cache_redecodes: 0,
+            patients: vec![PatientStatus {
+                patient: 3,
+                fa_hits: 1,
+                fa_seen: 8,
+                retrains: 0,
+                triggers: 0,
+                feedback_depth: 0,
+            }],
+        };
+        // fa_hits > fa_seen is impossible for a sliding-window estimator.
+        let mut bytes = f.to_bytes();
+        let hits_at = HEADER_LEN + 36 + 4;
+        bytes[hits_at..hits_at + 4].copy_from_slice(&9u32.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        let err = format!("{:#}", d.next_frame().unwrap_err());
+        assert!(err.contains("false alarms"), "{err}");
+
+        // A patient count larger than the carried entries is truncation.
+        let mut bytes = f.to_bytes();
+        bytes[HEADER_LEN + 32..HEADER_LEN + 36].copy_from_slice(&2u32.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        assert!(d.next_frame().is_err());
+
+        // Entries must be strictly ascending by patient id.
+        let dup = Frame::StatusReport {
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+            cache_redecodes: 0,
+            patients: vec![
+                PatientStatus {
+                    patient: 3,
+                    fa_hits: 0,
+                    fa_seen: 0,
+                    retrains: 0,
+                    triggers: 0,
+                    feedback_depth: 0,
+                },
+                PatientStatus {
+                    patient: 3,
+                    fa_hits: 0,
+                    fa_seen: 0,
+                    retrains: 0,
+                    triggers: 0,
+                    feedback_depth: 0,
+                },
+            ],
+        };
+        let mut d = FrameDecoder::new();
+        d.extend(&dup.to_bytes());
+        let err = format!("{:#}", d.next_frame().unwrap_err());
+        assert!(err.contains("ascending"), "{err}");
+    }
+
+    #[test]
     fn unknown_kind_rejected() {
         let mut bytes = Frame::Heartbeat { seq: 1 }.to_bytes();
         bytes[5] = 99;
@@ -692,6 +892,85 @@ mod tests {
         assert_eq!(classify(Some("stale: totally different detail")), Class::Stale);
         assert_eq!(classify(Some("re-leased: another wording")), Class::Rebalanced);
         assert_eq!(classify(Some("Samples before Subscribe")), Class::ProtocolError);
+        assert_eq!(classify(None), Class::Shed);
+    }
+
+    /// Every `Shutdown` reason string the codebase actually produces —
+    /// wire.rs's connection actor, fleet.rs's dispatcher, client.rs's
+    /// orderly close — lands in its intended histogram bucket. A new
+    /// producer (or a reworded one) that classifies differently should
+    /// change this inventory deliberately, not by accident.
+    #[test]
+    fn every_produced_shutdown_reason_classifies_to_its_intended_class() {
+        use close::{classify, Class};
+        // (producer's literal reason, intended class)
+        let inventory: &[(String, Class)] = &[
+            // Both sides' orderly end (wire.rs maybe_finish, client.rs
+            // stream_record's closing frame).
+            (close::END_OF_STREAM.into(), Class::Clean),
+            // wire.rs: the staleness reaper's cut.
+            (
+                close::stale(format!(
+                    "no frames within the {:?} staleness deadline",
+                    std::time::Duration::from_secs(5)
+                )),
+                Class::Stale,
+            ),
+            // fleet.rs: a dialed client that never subscribed.
+            (
+                close::stale("no Subscribe within the staleness deadline"),
+                Class::Stale,
+            ),
+            // fleet.rs: mid-stream shard loss, all three wordings.
+            (
+                close::released("shard 1 unreachable; patient 7 moves to a survivor"),
+                Class::Rebalanced,
+            ),
+            (
+                close::released("shard 1 lost; patient 7 moves to a survivor"),
+                Class::Rebalanced,
+            ),
+            (
+                close::released("shard 1 lost; patient 7 moves to a surviving shard"),
+                Class::Rebalanced,
+            ),
+            // wire.rs protocol_error reasons, verbatim.
+            ("protocol error: payload truncated".into(), Class::ProtocolError),
+            ("Subscribe on a control connection".into(), Class::ProtocolError),
+            ("duplicate Subscribe".into(), Class::ProtocolError),
+            ("no model published for patient 9".into(), Class::ProtocolError),
+            ("Samples before Subscribe".into(), Class::ProtocolError),
+            ("Samples seq 3, expected 2".into(), Class::ProtocolError),
+            (
+                "client sent a server-side Prediction frame".into(),
+                Class::ProtocolError,
+            ),
+            ("ShardHello on a data connection".into(), Class::ProtocolError),
+            (
+                "ShardHello for shard 2, this server is shard 0".into(),
+                Class::ProtocolError,
+            ),
+            ("Lease on a data connection".into(), Class::ProtocolError),
+            (
+                "client sent a dispatcher-side Route frame".into(),
+                Class::ProtocolError,
+            ),
+            (
+                "client sent a server-side StatusReport frame".into(),
+                Class::ProtocolError,
+            ),
+            // fleet.rs dispatcher rejections.
+            ("expected Subscribe, got Samples".into(), Class::ProtocolError),
+            ("no live shard for patient 7".into(), Class::ProtocolError),
+        ];
+        for (reason, want) in inventory {
+            assert_eq!(
+                classify(Some(reason)),
+                *want,
+                "reason {reason:?} classified off-bucket"
+            );
+        }
+        // The shed signature is the *absence* of a reason: bare EOF.
         assert_eq!(classify(None), Class::Shed);
     }
 

@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::benchkit::JsonScanner;
 use crate::ensure;
+use crate::testkit::hostile;
 use crate::transport::client::{stream_record, StreamClientConfig};
 use crate::transport::frame::close;
 use crate::transport::Duplex;
@@ -39,6 +40,12 @@ pub struct LoadgenConfig {
     /// because per-window outputs are idempotent and every shard serves
     /// the same published model version. `0` = fail like any other cut.
     pub retries: usize,
+    /// Hostile-stream fault injection (`--hostile dropout,drift
+    /// --seed N`): each session corrupts its own clone of the record
+    /// with these injectors, re-keyed per session index from the master
+    /// seed ([`hostile::session_seed`]) — two same-seed runs replay
+    /// bit-identical corruption. `None` = clean streams.
+    pub hostile: Option<hostile::HostileStream>,
     pub client: StreamClientConfig,
 }
 
@@ -48,6 +55,7 @@ impl Default for LoadgenConfig {
             sessions: 64,
             concurrency: 16,
             retries: 0,
+            hostile: None,
             client: StreamClientConfig::default(),
         }
     }
@@ -300,6 +308,20 @@ pub fn run(
                         break;
                     }
                     let (patient, samples) = &records[i % records.len()];
+                    // Hostile runs corrupt a per-session clone, keyed by
+                    // session index off the master seed: retries of the
+                    // same session replay the identical corruption, and
+                    // two same-seed runs are bit-identical end to end.
+                    let corrupted: Option<Vec<f32>> = cfg.hostile.as_ref().map(|h| {
+                        let mut samples = samples.clone();
+                        let session = hostile::HostileStream {
+                            seed: hostile::session_seed(h.seed, i as u64),
+                            injectors: h.injectors.clone(),
+                        };
+                        session.corrupt(&mut samples);
+                        samples
+                    });
+                    let samples = corrupted.as_ref().unwrap_or(samples);
                     let mut attempts_left = cfg.retries;
                     // `None` = the dial itself failed (its own bucket);
                     // `Some(Err)` = the stream collapsed without any

@@ -344,6 +344,43 @@ fn prop_spatial_density_bounded_query_monotone() {
 }
 
 #[test]
+fn prop_false_alarm_rate_matches_naive_oracle() {
+    use sparse_hdc_ieeg::coordinator::metrics::FalseAlarmRate;
+    // The O(1) sliding ring vs recompute-from-scratch over the retained
+    // outcome Vec, through randomized push/clear sequences that cross
+    // the full() boundary and wrap the ring several times over.
+    property("FalseAlarmRate ring == naive tail recount", 200, |g| {
+        let capacity = g.range(1, 9);
+        let mut est = FalseAlarmRate::new(capacity);
+        let mut oracle: Vec<bool> = Vec::new();
+        let ops = g.range(1, 4 * capacity + 20);
+        for i in 0..ops {
+            if g.bool(0.1) {
+                est.clear();
+                oracle.clear();
+            } else {
+                let fa = g.bool(0.4);
+                est.push(fa);
+                oracle.push(fa);
+            }
+            let start = oracle.len().saturating_sub(capacity);
+            let tail = &oracle[start..];
+            let hits = tail.iter().filter(|&&b| b).count();
+            assert_eq!(est.len(), tail.len(), "len after op {i} (cap {capacity})");
+            assert_eq!(est.false_alarms(), hits, "hits after op {i} (cap {capacity})");
+            assert_eq!(est.full(), tail.len() == capacity, "full after op {i}");
+            assert_eq!(est.capacity(), capacity);
+            let expect = if tail.is_empty() {
+                0.0
+            } else {
+                hits as f64 / tail.len() as f64
+            };
+            assert!((est.rate() - expect).abs() < 1e-12, "rate after op {i}");
+        }
+    });
+}
+
+#[test]
 fn prop_hv_bitops_identities() {
     property("boolean algebra on HVs", 200, |g| {
         let a = g.hv_half();

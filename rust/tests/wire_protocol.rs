@@ -7,7 +7,7 @@
 use sparse_hdc_ieeg::params::CHANNELS;
 use sparse_hdc_ieeg::testkit::{property, wire_frame, Gen, TrickleReader};
 use sparse_hdc_ieeg::transport::frame::{
-    Frame, FrameDecoder, FrameReader, ReadOutcome, HEADER_LEN, MAX_PAYLOAD,
+    Frame, FrameDecoder, FrameReader, PatientStatus, ReadOutcome, HEADER_LEN, MAX_PAYLOAD,
 };
 
 /// One representative of every frame kind, with non-trivial payloads.
@@ -53,6 +53,38 @@ fn exemplars() -> Vec<Frame> {
             patient: 9,
             shard: 0,
             addr: String::new(),
+        },
+        Frame::Status,
+        Frame::StatusReport {
+            cache_hits: u64::MAX,
+            cache_misses: 1,
+            cache_evictions: 0,
+            cache_redecodes: 7,
+            patients: vec![
+                PatientStatus {
+                    patient: 2,
+                    fa_hits: 3,
+                    fa_seen: 48,
+                    retrains: 1,
+                    triggers: 2,
+                    feedback_depth: 48,
+                },
+                PatientStatus {
+                    patient: 0xDEAD_BEEF,
+                    fa_hits: 0,
+                    fa_seen: 0,
+                    retrains: 0,
+                    triggers: 0,
+                    feedback_depth: 0,
+                },
+            ],
+        },
+        Frame::StatusReport {
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+            cache_redecodes: 0,
+            patients: Vec::new(),
         },
     ]
 }
@@ -157,6 +189,70 @@ fn flipped_length_bytes_never_oversize_the_buffer() {
                 Ok(Some(_)) => panic!("corrupt length decoded a frame"),
             }
         }
+    }
+}
+
+/// The model-lifecycle fuzz idiom (several seeded flips per offset,
+/// Err-or-valid, an accepted frame must round-trip), applied to the new
+/// telemetry frames specifically: their payloads carry semantic
+/// invariants (fa_hits ≤ fa_seen, strictly ascending patients) that the
+/// generic sweep above only exercises with one flip per bit.
+#[test]
+fn status_frames_survive_multi_flip_fuzz_and_reject_trailing_bytes() {
+    use sparse_hdc_ieeg::rng::Xoshiro256;
+    let frames: Vec<Frame> = exemplars()
+        .into_iter()
+        .filter(|f| matches!(f, Frame::Status | Frame::StatusReport { .. }))
+        .collect();
+    assert_eq!(frames.len(), 3, "both telemetry kinds must be in the exemplars");
+    let mut rng = Xoshiro256::new(0x57A7_0510);
+    for frame in &frames {
+        let clean = frame.to_bytes();
+        let mut survived = 0usize;
+        for offset in 0..clean.len() {
+            for _ in 0..4 {
+                let mask = (rng.next_below(255) + 1) as u8;
+                let mut bytes = clean.clone();
+                bytes[offset] ^= mask;
+                let mut d = FrameDecoder::new();
+                d.extend(&bytes);
+                match d.next_frame() {
+                    Ok(Some(f)) => {
+                        survived += 1;
+                        // An accepted mutant is a real frame: it must
+                        // re-encode and re-decode to itself.
+                        let mut d2 = FrameDecoder::new();
+                        d2.extend(&f.to_bytes());
+                        assert_eq!(d2.next_frame().unwrap(), Some(f));
+                    }
+                    Ok(None) | Err(_) => {}
+                }
+            }
+        }
+        // Flips in the cache counters / fa payload values must survive
+        // as valid (different) frames — an all-rejecting decoder would
+        // also pass the panic check. Status has no payload to mutate
+        // into validity, so only reports assert survivors.
+        if matches!(frame, Frame::StatusReport { patients, .. } if !patients.is_empty()) {
+            assert!(survived > 0, "no flip of a StatusReport ever stayed valid");
+        }
+    }
+
+    // Trailing payload bytes: grow the payload by one garbage byte and
+    // patch the header length to cover it — total decode must reject the
+    // slack, not silently ignore it.
+    for frame in &frames {
+        let mut bytes = frame.to_bytes();
+        bytes.push(0xAA);
+        let len = (bytes.len() - HEADER_LEN) as u32;
+        bytes[6..10].copy_from_slice(&len.to_le_bytes());
+        let mut d = FrameDecoder::new();
+        d.extend(&bytes);
+        assert!(
+            d.next_frame().is_err(),
+            "{} accepted a trailing payload byte",
+            frame.kind_name()
+        );
     }
 }
 
